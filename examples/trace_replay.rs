@@ -1,0 +1,101 @@
+//! Trace replay: the Fig-10 experiment as a standalone application —
+//! generate the FB-2010-profile file population, store it with Azure LRC,
+//! crash a node, and replay degraded reads with and without the §V-C
+//! file-level optimization.
+//!
+//! ```text
+//! cargo run --release --example trace_replay [-- --quick]
+//! ```
+
+use cp_lrc::cluster::degraded::ReadMode;
+use cp_lrc::cluster::{Cluster, ClusterConfig};
+use cp_lrc::codes::SchemeKind;
+use cp_lrc::prng::Prng;
+use cp_lrc::trace::{self, SizeClass};
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let cfg = trace::TraceConfig {
+        n_files: if quick { 25 } else { 100 },
+        max_size: if quick { 2 * 1024 * 1024 } else { 30 * 1024 * 1024 },
+        ..Default::default()
+    };
+    let block = if quick { 512 * 1024 } else { 16 * 1024 * 1024 };
+    println!(
+        "== trace replay: {} files (5 KB..{} MB), Azure LRC (6,2,2), {} KiB blocks ==\n",
+        cfg.n_files,
+        cfg.max_size / (1024 * 1024),
+        block / 1024
+    );
+
+    let files = trace::generate(&cfg);
+    let mut c = Cluster::new(ClusterConfig {
+        num_datanodes: 14,
+        gbps: 1.0,
+        latency_s: 0.002,
+        block_size: block,
+        kind: SchemeKind::AzureLrc,
+        k: 6,
+        r: 2,
+        p: 2,
+        ..Default::default()
+    });
+    let mut rng = Prng::new(3);
+    let ids: Vec<_> = files
+        .iter()
+        .map(|f| {
+            let mut content = vec![0u8; f.size];
+            rng.fill(&mut content);
+            c.put_file(content)
+        })
+        .collect();
+    c.seal_stripe();
+    println!(
+        "stored {} files in {} stripes; metadata footprint {:.1} KiB\n",
+        files.len(),
+        c.meta.stripes.len(),
+        c.meta.footprint_bytes() as f64 / 1024.0
+    );
+
+    c.fail_node(0);
+    let ops = trace::read_ops(&files, 1, 11);
+    let mut sums: std::collections::HashMap<SizeClass, (f64, f64, usize)> = Default::default();
+    let mut checked = 0;
+    for &i in &ops {
+        let base = c.degraded_read(ids[i], ReadMode::BlockLevel)?;
+        let opt = c.degraded_read(ids[i], ReadMode::FileLevelDedup)?;
+        assert_eq!(base.bytes, opt.bytes);
+        checked += 1;
+        let e = sums.entry(SizeClass::of(files[i].size)).or_default();
+        e.0 += base.time_s * 1000.0;
+        e.1 += opt.time_s * 1000.0;
+        e.2 += 1;
+    }
+    println!("replayed {checked} reads (data verified on every one)\n");
+    println!("{:<16} {:>6} {:>16} {:>16} {:>8}", "class", "reads", "block-level(ms)", "file-level(ms)", "gain");
+    let (mut tb, mut to, mut tn) = (0.0, 0.0, 0usize);
+    for class in [SizeClass::Small, SizeClass::Medium, SizeClass::Large] {
+        if let Some(&(b, o, n)) = sums.get(&class) {
+            println!(
+                "{:<16} {:>6} {:>16.1} {:>16.1} {:>7.1}%",
+                class.label(),
+                n,
+                b / n as f64,
+                o / n as f64,
+                (1.0 - o / b) * 100.0
+            );
+            tb += b;
+            to += o;
+            tn += n;
+        }
+    }
+    println!(
+        "{:<16} {:>6} {:>16.1} {:>16.1} {:>7.1}%",
+        "all",
+        tn,
+        tb / tn as f64,
+        to / tn as f64,
+        (1.0 - to / tb) * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,59 @@
+"""Static performance analysis for the L1 kernel (§Perf, DESIGN.md §3):
+VMEM footprint per grid step, HLO op census of the lowered module, and
+the double-buffering feasibility check for the real-TPU estimate.
+
+Usage: python -m compile.analyze [--envelope R K B]
+"""
+
+import argparse
+import re
+from collections import Counter
+
+from .aot import ENVELOPES, to_hlo_text
+from .kernels import vmem_footprint_bytes
+from .model import encode_lowered
+
+VMEM_BYTES = 16 * 1024 * 1024  # one TPU core's VMEM
+
+
+def op_census(hlo_text: str) -> Counter:
+    """Count HLO opcodes in the module's entry + nested computations."""
+    ops = Counter()
+    for line in hlo_text.splitlines():
+        m = re.match(r"\s*(?:ROOT\s+)?[%\w.\-]+\s*=\s*[^ ]+\s+([a-z0-9\-]+)\(", line)
+        if m:
+            ops[m.group(1)] += 1
+    return ops
+
+
+def analyze(r, k, b, tile=32768):
+    text = to_hlo_text(encode_lowered(r, k, b))
+    fp = vmem_footprint_bytes(r, k, min(tile, b))
+    ops = op_census(text)
+    print(f"== envelope r{r}_k{k}_b{b} (tile {min(tile, b)}) ==")
+    print(f"HLO text: {len(text)} chars; entry layout u8[{r},{k}] x u8[{k},{b}] -> u8[{r},{b}]")
+    print(f"VMEM working set / grid step: {fp / 1024 / 1024:.2f} MiB "
+          f"({fp / VMEM_BYTES * 100:.1f}% of 16 MiB)")
+    db = fp + k * min(tile, b)  # + one in-flight streamed tile
+    print(f"with double-buffered data tile: {db / 1024 / 1024:.2f} MiB "
+          f"-> double buffering {'FITS' if db < VMEM_BYTES else 'DOES NOT FIT'}")
+    interesting = {o: c for o, c in ops.items()
+                   if o in ("gather", "while", "xor", "fusion", "dynamic-update-slice",
+                            "dynamic-slice", "broadcast", "constant")}
+    print(f"HLO op census (selected): {interesting}")
+    gathers = ops.get("gather", 0)
+    print(f"gathers per module: {gathers} (roofline driver on both CPU-interpret and TPU-VPU)")
+    print()
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--envelope", nargs=3, type=int, metavar=("R", "K", "B"))
+    args = ap.parse_args()
+    envs = [tuple(args.envelope)] if args.envelope else ENVELOPES
+    for (r, k, b) in envs:
+        analyze(r, k, b)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""AOT pipeline: lower the L2 graph to HLO *text* artifacts for the Rust
+PJRT runtime.
+
+HLO text -- NOT ``lowered.compile()`` / serialized HloModuleProto -- is the
+interchange format: jax >= 0.5 emits protos with 64-bit instruction ids
+which the xla crate's xla_extension 0.5.1 rejects (``proto.id() <=
+INT_MAX``); the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Artifact naming: ``gf_matmul_r{R}_k{K}_b{B}.hlo.txt`` -- the Rust runtime
+parses the envelope from the file name (rust/src/runtime/mod.rs). Two
+envelopes cover the paper's P1-P8 (max k = 96, max r+p = 9); blocks wider
+than B are sharded by the runtime, smaller shapes are zero-padded (a zero
+GF coefficient contributes nothing).
+"""
+
+import argparse
+import hashlib
+import os
+import sys
+
+from jax._src.lib import xla_client as xc
+
+from .model import encode_lowered
+
+#: (R, K, B) envelopes to ship. B is the byte-axis shard width.
+ENVELOPES = [
+    (4, 32, 65536),   # narrow stripes (P1, P2, P5): r+p <= 4, k <= 32
+    (12, 128, 65536), # wide stripes (P3..P8): r+p <= 9, k <= 96
+]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # ``as_hlo_text()`` ELIDES large constants ("constant({...})"), which
+    # silently zeroes the embedded GF log/exp tables after the text
+    # round-trip -- print with print_large_constants instead.
+    opts = xc._xla.HloPrintOptions.short_parsable()
+    opts.print_large_constants = True
+    return comp.get_hlo_module().to_string(opts)
+
+
+def build(outdir: str, envelopes=None, verbose=True) -> list:
+    os.makedirs(outdir, exist_ok=True)
+    written = []
+    for (r, k, b) in envelopes or ENVELOPES:
+        text = to_hlo_text(encode_lowered(r, k, b))
+        name = f"gf_matmul_r{r}_k{k}_b{b}.hlo.txt"
+        path = os.path.join(outdir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:12]
+        written.append((path, len(text), digest))
+        if verbose:
+            print(f"wrote {path}: {len(text)} chars, sha256 {digest}")
+    return written
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    args = ap.parse_args()
+    build(args.out)
+
+
+if __name__ == "__main__":
+    main()

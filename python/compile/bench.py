@@ -1,0 +1,67 @@
+"""Micro-benchmarks for the L1 kernel under interpret-mode CPU (§Perf).
+
+Reports GiB/s for the Pallas kernel, the jnp reference, and (for context)
+numpy memcpy — the practical ceiling on this path. Usage:
+
+    python -m compile.bench [--quick]
+"""
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from .kernels import gf_matmul, gf_matmul_ref
+
+
+def _bench(fn, *args, reps=20):
+    out = fn(*args)
+    out.block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / reps
+
+
+def run(shapes, reps):
+    rng = np.random.default_rng(0)
+    for (r, k, b) in shapes:
+        coeff = rng.integers(0, 256, (r, k), np.uint8)
+        data = rng.integers(0, 256, (k, b), np.uint8)
+        bytes_in = k * b
+
+        jk = jax.jit(lambda c, d: gf_matmul(c, d))
+        jr = jax.jit(lambda c, d: gf_matmul_ref(c, d))
+        tk = _bench(jk, coeff, data, reps=reps)
+        tr = _bench(jr, coeff, data, reps=reps)
+
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            _ = data.copy()
+        tm = (time.perf_counter() - t0) / reps
+
+        gib = bytes_in / 2**30
+        print(
+            f"(r={r:>3}, k={k:>3}, b={b:>6}):  pallas {gib/tk:6.3f} GiB/s   "
+            f"jnp-ref {gib/tr:6.3f} GiB/s   memcpy {gib/tm:7.2f} GiB/s   "
+            f"(kernel/ref ratio {tr/tk:4.2f}x)"
+        )
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    shapes = [(4, 32, 65536)] if args.quick else [
+        (4, 24, 65536),
+        (4, 32, 65536),
+        (12, 96, 65536),
+        (12, 128, 65536),
+    ]
+    run(shapes, reps=10 if args.quick else 20)
+
+
+if __name__ == "__main__":
+    main()

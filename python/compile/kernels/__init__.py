@@ -1,0 +1,4 @@
+"""L1 Pallas kernels: the GF(2^8) matmul hot-spot plus its oracles."""
+
+from .gf_matmul import gf_matmul, gf_tables, vmem_footprint_bytes  # noqa: F401
+from .ref import gf_matmul_np, gf_matmul_ref, gf_mul_np  # noqa: F401

@@ -1,0 +1,138 @@
+"""L1 — the GF(2^8) matrix-multiply hot-spot as a Pallas kernel.
+
+The stripe codec's encode (parity generation) and decode (inverted-matrix
+combine) are both ``out[R,B] = sum_k coeff[R,k] * data[k,B]`` over
+GF(2^8): multiplication via log/antilog tables, accumulation via XOR.
+
+Hardware adaptation (DESIGN.md §3): the paper's prototype leans on
+Jerasure's SIMD table lookups on x86. On a TPU-shaped memory hierarchy we
+instead tile the byte axis with ``BlockSpec`` so each grid step streams a
+``(K, TB)`` data tile HBM→VMEM while the (tiny) coefficient matrix and the
+log/exp tables stay VMEM-resident, and the inner ``fori_loop`` performs
+the K-step gather+XOR reduction per tile. GF(2^8) multiplication is not
+an MXU primitive, so the roofline here is the gather/VPU path, not the
+systolic array — see EXPERIMENTS.md §Perf for the footprint analysis.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers the kernel to plain HLO, which is
+exactly what the Rust runtime loads (see the repo-root README).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.experimental import pallas as pl
+
+# ---------------------------------------------------------------- tables
+
+#: Primitive polynomial x^8 + x^4 + x^3 + x^2 + 1 — same field as the
+#: Rust substrate (rust/src/gf/tables.rs) and Jerasure w=8.
+POLY = 0x11D
+
+
+@functools.lru_cache(maxsize=None)
+def _tables():
+    exp = np.zeros(510, dtype=np.uint8)
+    log = np.zeros(256, dtype=np.int32)
+    x = 1
+    for i in range(255):
+        exp[i] = x
+        log[x] = i
+        x <<= 1
+        if x & 0x100:
+            x ^= POLY
+    exp[255:510] = exp[0:255]
+    return log, exp
+
+
+def gf_tables():
+    """(log[256] int32, exp[510] uint8) numpy tables for GF(2^8)."""
+    return _tables()
+
+
+@functools.lru_cache(maxsize=None)
+def _mul_table_flat():
+    """Flat 64 KiB product table MUL[a*256+b] = a⊗b (§Perf optimization:
+    one gather per (k, element) instead of two log gathers + a zero mask —
+    measured +32% over the log/exp kernel under interpret-mode CPU)."""
+    log, exp = _tables()
+    a = np.arange(256)
+    la = log[a]
+    tab = exp[(la[:, None] + la[None, :]) % 255].astype(np.uint8)
+    tab[0, :] = 0
+    tab[:, 0] = 0
+    return tab.reshape(-1)
+
+
+# ---------------------------------------------------------------- kernel
+
+
+def _gf_matmul_kernel(coeff_ref, data_ref, mul_ref, out_ref, *, k):
+    """One grid step: out tile (R, TB) = GF-matmul(coeff (R,K), data tile).
+
+    The flat product table arrives as a VMEM-resident input; the
+    K-reduction is a ``fori_loop`` with one gather per step, so the live
+    working set is one (R, TB) tile plus the 64 KiB table — small enough
+    to double-buffer on real hardware. (§Perf iteration log: log/exp pair
+    of gathers → single flat-table gather, +32% under interpret-mode.)
+    """
+    coeff = coeff_ref[...]  # (R, K) u8
+    data = data_ref[...]  # (K, TB) u8
+    mul_tab = mul_ref[...]  # (65536,) u8
+    r_dim = coeff.shape[0]
+    tb = data.shape[1]
+
+    def body(i, acc):
+        idx = coeff[:, i].astype(jnp.int32)[:, None] * 256
+        idx = idx + data[i, :].astype(jnp.int32)[None, :]
+        return acc ^ mul_tab[idx]
+
+    out_ref[...] = lax.fori_loop(0, k, body, jnp.zeros((r_dim, tb), jnp.uint8))
+
+
+def gf_matmul(coeff, data, *, tile_b=None):
+    """``out[R,B] = Σ_k coeff[R,k] ⊗ data[k,B]`` over GF(2^8), via Pallas.
+
+    Args:
+      coeff: (R, K) uint8 coefficient matrix.
+      data:  (K, B) uint8 payload (columns are byte positions).
+      tile_b: byte-axis tile width (defaults to min(B, 8192); must divide B).
+
+    Returns:
+      (R, B) uint8.
+    """
+    r_dim, k = coeff.shape
+    k2, b = data.shape
+    assert k == k2, f"coeff K={k} vs data K={k2}"
+    if tile_b is None:
+        tile_b = min(b, 32768)
+    assert b % tile_b == 0, f"tile_b={tile_b} must divide B={b}"
+    mul_tab = jnp.asarray(_mul_table_flat())
+
+    grid = (b // tile_b,)
+    return pl.pallas_call(
+        functools.partial(_gf_matmul_kernel, k=k),
+        out_shape=jax.ShapeDtypeStruct((r_dim, b), jnp.uint8),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((r_dim, k), lambda i: (0, 0)),  # coeff: resident
+            pl.BlockSpec((k, tile_b), lambda i: (0, i)),  # data: streamed
+            pl.BlockSpec((65536,), lambda i: (0,)),  # product table: resident
+        ],
+        out_specs=pl.BlockSpec((r_dim, tile_b), lambda i: (0, i)),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(coeff, data, mul_tab)
+
+
+def vmem_footprint_bytes(r_dim, k, tile_b):
+    """Estimated VMEM working set per grid step (see §Perf): coefficient
+    matrix + the 64 KiB product table + one data tile + one out tile +
+    the (R,TB) accumulator and int32 index temporary of the loop body."""
+    tables = 65536
+    resident = r_dim * k + tables
+    stream = k * tile_b + r_dim * tile_b
+    temps = r_dim * tile_b + 4 * r_dim * tile_b  # u8 acc + i32 idx
+    return resident + stream + temps

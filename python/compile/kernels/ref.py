@@ -1,0 +1,63 @@
+"""Pure-jnp (and pure-numpy) oracles for the GF(2^8) matmul kernel.
+
+Three independent implementations keep each other honest:
+
+* :func:`gf_matmul_ref` -- vectorized jnp, same log/exp tables;
+* :func:`gf_mul_np` / :func:`gf_matmul_np` -- bitwise "schoolbook"
+  carry-less multiply in numpy, no tables at all (the ground truth the
+  tables themselves are validated against);
+* the Pallas kernel under test (``gf_matmul.gf_matmul``).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from .gf_matmul import POLY, gf_tables
+
+
+def gf_matmul_ref(coeff, data):
+    """Vectorized jnp reference: identical semantics to the kernel."""
+    log_np, exp_np = gf_tables()
+    log_tab = jnp.asarray(log_np)
+    exp_tab = jnp.asarray(exp_np)
+    coeff = jnp.asarray(coeff, jnp.uint8)
+    data = jnp.asarray(data, jnp.uint8)
+    lc = log_tab[coeff.astype(jnp.int32)]  # (R, K)
+    ld = log_tab[data.astype(jnp.int32)]  # (K, B)
+    prod = exp_tab[lc[:, :, None] + ld[None, :, :]]  # (R, K, B)
+    nz = (coeff[:, :, None] != 0) & (data[None, :, :] != 0)
+    prod = jnp.where(nz, prod, jnp.uint8(0))
+    # XOR-reduce over K
+    out = prod[:, 0, :]
+    for i in range(1, prod.shape[1]):
+        out = out ^ prod[:, i, :]
+    return out
+
+
+def gf_mul_np(a, b):
+    """Carry-less multiply mod POLY, elementwise over uint8 arrays."""
+    a = np.asarray(a, dtype=np.uint16)
+    b = np.asarray(b, dtype=np.uint16)
+    a, b = np.broadcast_arrays(a, b)
+    a = a.copy()
+    b = b.copy()
+    r = np.zeros_like(a)
+    for _ in range(8):
+        r ^= np.where(b & 1, a, np.uint16(0))
+        hi = a & 0x80
+        a = (a << 1) & 0xFF
+        a = a ^ np.where(hi, np.uint16(POLY & 0xFF), np.uint16(0))
+        b >>= 1
+    return r.astype(np.uint8)
+
+
+def gf_matmul_np(coeff, data):
+    """Schoolbook GF matmul in numpy (slow; ground truth)."""
+    coeff = np.asarray(coeff, dtype=np.uint8)
+    data = np.asarray(data, dtype=np.uint8)
+    r_dim, k = coeff.shape
+    _, b = data.shape
+    out = np.zeros((r_dim, b), dtype=np.uint8)
+    for i in range(k):
+        out ^= gf_mul_np(coeff[:, i][:, None], data[i, :][None, :])
+    return out

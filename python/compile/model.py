@@ -1,0 +1,90 @@
+"""L2 -- the stripe-codec compute graph in JAX, calling the L1 kernel.
+
+The paper's compute hot-spot is the stripe codec: parity generation on
+the write path (SS V-B encoding) and erasure-decoding combine on the repair
+path. Both are one GF(2^8) matrix multiplication:
+
+* encode:  ``parities[R,B] = P[R,K] (x) data[K,B]``  (P = parity rows of
+  the scheme's generator matrix, shipped from Rust at call time);
+* decode:  ``lost[R,B]   = W[R,K] (x) survivors[K,B]`` (W = the inverted
+  surviving-generator weights the Rust coordinator computes per plan).
+
+Because the coefficient matrix is a *runtime input*, one AOT artifact per
+shape envelope serves every scheme, every parameter set, and both paths --
+that is what keeps Python entirely off the request path.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import gf_matmul
+
+
+def encode_fn(coeff, data):
+    """The jitted graph the AOT pipeline lowers (tuple output -- the Rust
+    loader unwraps a 1-tuple; see /opt/xla-example/load_hlo)."""
+    return (gf_matmul(coeff, data),)
+
+
+def encode_lowered(r_dim, k, b):
+    """Lower ``encode_fn`` for a concrete (R, K, B) envelope."""
+    coeff = jax.ShapeDtypeStruct((r_dim, k), jnp.uint8)
+    data = jax.ShapeDtypeStruct((k, b), jnp.uint8)
+    return jax.jit(encode_fn).lower(coeff, data)
+
+
+def stripe_roundtrip(gen_rows, data, erase, keep):
+    """Test-path helper (never AOT'd): encode a stripe with generator rows
+    ``gen_rows`` (n x k), erase ``erase`` blocks, decode them back from the
+    ``keep`` survivors via matrix inversion over GF(2^8) -- all in terms of
+    the same kernel, proving encode/decode compose.
+
+    Returns:
+      (stripe, reconstructed) -- (n, B) and (len(erase), B) uint8 arrays.
+    """
+    import numpy as np
+
+    from .kernels import gf_matmul_np
+    from .kernels.ref import gf_mul_np
+
+    gen = np.asarray(gen_rows, np.uint8)
+    stripe = gf_matmul_np(gen, np.asarray(data, np.uint8))  # (n, B)
+
+    sub = gen[keep, :]  # (k, k)
+    inv = gf_inv_np(sub)
+    # weights for each erased block: row_e . inv
+    w = gf_matmul_np(gen[erase, :], inv)  # (len(erase), k)
+    rec = gf_matmul(jnp.asarray(w), jnp.asarray(stripe[keep, :]))
+    return stripe, np.asarray(rec)
+
+
+def gf_inv_np(m):
+    """Gauss-Jordan inversion over GF(2^8) in numpy (test-path only)."""
+    import numpy as np
+
+    from .kernels.gf_matmul import gf_tables
+    from .kernels.ref import gf_mul_np
+
+    log, exp = gf_tables()
+
+    def inv_scalar(x):
+        assert x != 0
+        return exp[(255 - log[x]) % 255]
+
+    n = m.shape[0]
+    a = m.astype(np.uint8).copy()
+    b = np.eye(n, dtype=np.uint8)
+    for col in range(n):
+        piv = next(r for r in range(col, n) if a[r, col] != 0)
+        if piv != col:
+            a[[col, piv]] = a[[piv, col]]
+            b[[col, piv]] = b[[piv, col]]
+        d = inv_scalar(a[col, col])
+        a[col] = gf_mul_np(a[col], d)
+        b[col] = gf_mul_np(b[col], d)
+        for r in range(n):
+            if r != col and a[r, col] != 0:
+                f = a[r, col]
+                a[r] = a[r] ^ gf_mul_np(a[col], f)
+                b[r] = b[r] ^ gf_mul_np(b[col], f)
+    return b

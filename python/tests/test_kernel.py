@@ -1,0 +1,138 @@
+"""L1 correctness: the Pallas GF(2^8) matmul kernel vs two independent
+oracles (vectorized jnp with the same tables; table-free numpy bitwise
+multiply), with hypothesis sweeping shapes and contents."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    gf_matmul,
+    gf_matmul_np,
+    gf_matmul_ref,
+    gf_mul_np,
+    gf_tables,
+    vmem_footprint_bytes,
+)
+
+
+def rand(shape, seed, nonzero=False):
+    rng = np.random.default_rng(seed)
+    lo = 1 if nonzero else 0
+    return rng.integers(lo, 256, shape, dtype=np.uint8)
+
+
+# ------------------------------------------------------------- tables
+
+def test_tables_match_bitwise_multiply():
+    log, exp = gf_tables()
+    a = np.arange(256, dtype=np.uint8)
+    for b in [1, 2, 3, 29, 255]:
+        via_tables = np.where(
+            (a != 0) & (b != 0),
+            exp[log[a] + log[np.uint8(b)]],
+            0,
+        ).astype(np.uint8)
+        assert (via_tables == gf_mul_np(a, b)).all()
+
+
+def test_exp_table_doubled():
+    _, exp = gf_tables()
+    assert (exp[255:510] == exp[0:255]).all()
+
+
+def test_gf_mul_np_field_axioms_sampled():
+    rng = np.random.default_rng(7)
+    a = rng.integers(0, 256, 4096, dtype=np.uint8)
+    b = rng.integers(0, 256, 4096, dtype=np.uint8)
+    c = rng.integers(0, 256, 4096, dtype=np.uint8)
+    assert (gf_mul_np(a, b) == gf_mul_np(b, a)).all()
+    assert (gf_mul_np(gf_mul_np(a, b), c) == gf_mul_np(a, gf_mul_np(b, c))).all()
+    assert (gf_mul_np(a, np.uint8(1)) == a).all()
+    # distributivity over XOR
+    assert (gf_mul_np(a, b ^ c) == (gf_mul_np(a, b) ^ gf_mul_np(a, c))).all()
+
+
+# ------------------------------------------------------------- kernel
+
+@pytest.mark.parametrize(
+    "r,k,b,tile",
+    [
+        (1, 1, 8, 8),
+        (2, 4, 256, 128),
+        (4, 24, 1024, 256),
+        (4, 32, 8192, None),
+        (12, 96, 4096, 1024),
+        (9, 96, 2048, None),
+    ],
+)
+def test_kernel_matches_oracles(r, k, b, tile):
+    coeff = rand((r, k), seed=r * 100 + k)
+    data = rand((k, b), seed=k * 7 + b)
+    out = np.asarray(gf_matmul(coeff, data, tile_b=tile))
+    assert (out == np.asarray(gf_matmul_ref(coeff, data))).all()
+    assert (out == gf_matmul_np(coeff, data)).all()
+
+
+def test_kernel_zero_coeff_rows_give_zero():
+    coeff = np.zeros((3, 8), np.uint8)
+    data = rand((8, 512), seed=1)
+    assert (np.asarray(gf_matmul(coeff, data)) == 0).all()
+
+
+def test_kernel_identity_coeff_passthrough():
+    k = 8
+    coeff = np.eye(k, dtype=np.uint8)
+    data = rand((k, 256), seed=2)
+    assert (np.asarray(gf_matmul(coeff, data)) == data).all()
+
+
+def test_kernel_linearity():
+    # gf_matmul(c, x ^ y) == gf_matmul(c, x) ^ gf_matmul(c, y)
+    coeff = rand((4, 8), seed=3)
+    x = rand((8, 512), seed=4)
+    y = rand((8, 512), seed=5)
+    lhs = np.asarray(gf_matmul(coeff, x ^ y))
+    rhs = np.asarray(gf_matmul(coeff, x)) ^ np.asarray(gf_matmul(coeff, y))
+    assert (lhs == rhs).all()
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    r=st.integers(1, 8),
+    k=st.integers(1, 32),
+    tiles=st.integers(1, 4),
+    tile=st.sampled_from([16, 64, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_hypothesis_sweep(r, k, tiles, tile, seed):
+    b = tiles * tile
+    coeff = rand((r, k), seed=seed)
+    data = rand((k, b), seed=seed ^ 0xFFFF)
+    out = np.asarray(gf_matmul(coeff, data, tile_b=tile))
+    assert (out == gf_matmul_np(coeff, data)).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_kernel_cauchy_coefficients(seed):
+    # the coefficients the codec actually uses: Cauchy rows
+    log, exp = gf_tables()
+
+    def inv(x):
+        return exp[(255 - log[x]) % 255]
+
+    k, r = 6, 2
+    coeff = np.zeros((r, k), np.uint8)
+    for j in range(r):
+        for i in range(k):
+            coeff[j, i] = inv(i ^ (k + j))
+    data = rand((k, 1024), seed=seed)
+    assert (np.asarray(gf_matmul(coeff, data)) == gf_matmul_np(coeff, data)).all()
+
+
+def test_vmem_footprint_within_budget():
+    # The wide envelope's working set must fit a TPU core's ~16 MiB VMEM
+    # with room for double buffering (DESIGN.md §Hardware-Adaptation).
+    fp = vmem_footprint_bytes(12, 128, 8192)
+    assert fp < 4 * 1024 * 1024, f"footprint {fp} too large for double-buffering"

@@ -1,0 +1,11 @@
+//! Regenerates Figures 7 and 8 (single-node repair time / throughput vs
+//! block size, 64 KB–16 MB, P5).
+
+use cp_lrc::experiments;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    experiments::figure7(quick);
+    println!();
+    experiments::figure8(quick);
+}

@@ -1,0 +1,11 @@
+//! Regenerates Figures 6 and 9 (single-/two-node repair time, P1–P8).
+//! Pass `--quick` for the reduced sweep.
+
+use cp_lrc::experiments;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    experiments::figure6(quick);
+    println!();
+    experiments::figure9(quick);
+}

@@ -1,0 +1,9 @@
+//! Regenerates Figure 10 (file-level repair optimization, FB-2010-profile
+//! trace).
+
+use cp_lrc::experiments;
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    experiments::figure10(quick);
+}

@@ -1,0 +1,82 @@
+//! Hot-path micro-benchmarks: GF slice kernels, stripe encode (native vs
+//! PJRT artifact), decode inversion. These are the L3 kernels the §Perf
+//! pass optimizes.
+
+use cp_lrc::bench_harness::Bench;
+use cp_lrc::codec::{native_gf_matmul, StripeCodec};
+use cp_lrc::codes::{Scheme, SchemeKind};
+use cp_lrc::gf::{self, GfMatrix};
+use cp_lrc::prng::Prng;
+use cp_lrc::runtime::Runtime;
+
+fn main() {
+    let b = Bench::default();
+    let mut rng = Prng::new(0xB3);
+
+    // --- raw slice kernels ------------------------------------------------
+    const N: usize = 1 << 20; // 1 MiB blocks
+    let src = rng.bytes(N);
+    let mut dst = rng.bytes(N);
+    b.run_throughput("gf/xor_slice/1MiB", N, || {
+        gf::xor_slice(&mut dst, &src);
+    });
+    b.run_throughput("gf/mul_acc_slice/1MiB", N, || {
+        gf::mul_acc_slice(0x53, &src, &mut dst);
+    });
+    let mut out = vec![0u8; N];
+    b.run_throughput("gf/mul_slice/1MiB", N, || {
+        gf::mul_slice(0x53, &src, &mut out);
+    });
+
+    // --- stripe encode ----------------------------------------------------
+    for &(kind, k, r, p) in &[
+        (SchemeKind::CpAzure, 24usize, 2usize, 2usize),
+        (SchemeKind::CpUniform, 24, 2, 2),
+        (SchemeKind::AzureLrc, 24, 2, 2),
+        (SchemeKind::CpAzure, 96, 5, 4),
+    ] {
+        let codec = StripeCodec::new(Scheme::new(kind, k, r, p));
+        let bs = 256 * 1024;
+        let data: Vec<Vec<u8>> = (0..k).map(|_| rng.bytes(bs)).collect();
+        b.run_throughput(
+            &format!("encode/native/{}-k{}/256KiB", kind.name().replace(' ', "_"), k),
+            k * bs,
+            || codec.encode(&data),
+        );
+    }
+
+    // --- PJRT artifact vs native -------------------------------------------
+    match Runtime::load_dir(&Runtime::default_dir()) {
+        Ok(rt) if !rt.execs.is_empty() => {
+            let k = 24;
+            let exec = rt.best_fit(4, k).expect("artifact fits (4,24)");
+            let mut coeff = GfMatrix::zeros(4, k);
+            for i in 0..4 {
+                for j in 0..k {
+                    coeff.set(i, j, rng.u8());
+                }
+            }
+            let bs = 256 * 1024;
+            let data: Vec<Vec<u8>> = (0..k).map(|_| rng.bytes(bs)).collect();
+            b.run_throughput("encode/pjrt/r4-k24/256KiB", k * bs, || {
+                exec.run(&coeff, &data).unwrap()
+            });
+            b.run_throughput("encode/native-matmul/r4-k24/256KiB", k * bs, || {
+                native_gf_matmul(&coeff, &data)
+            });
+        }
+        _ => eprintln!("(skipping PJRT benches: run `make artifacts` first)"),
+    }
+
+    // --- decode -------------------------------------------------------------
+    let codec = StripeCodec::new(Scheme::new(SchemeKind::CpAzure, 24, 2, 2));
+    let bs = 256 * 1024;
+    let data: Vec<Vec<u8>> = (0..24).map(|_| rng.bytes(bs)).collect();
+    let stripe = codec.encode_stripe(&data);
+    let mut blocks: Vec<Option<Vec<u8>>> = stripe.into_iter().map(Some).collect();
+    blocks[0] = None;
+    blocks[13] = None;
+    b.run_throughput("decode/global-2-erasures/(24,2,2)/256KiB", 24 * bs, || {
+        codec.decode(&blocks, &[0, 13]).unwrap()
+    });
+}

@@ -1,0 +1,23 @@
+//! Micro-benchmarks for the network simulator's event loop (it sits on
+//! the timing path of every figure experiment).
+
+use cp_lrc::bench_harness::Bench;
+use cp_lrc::netsim::{Flow, NetSim};
+use cp_lrc::prng::Prng;
+
+fn main() {
+    let b = Bench::default();
+    let mut rng = Prng::new(0x9e7);
+    for &n_flows in &[8usize, 64, 512] {
+        let sim = NetSim::homogeneous(32, 1.0, 0.001);
+        let flows: Vec<Flow> = (0..n_flows)
+            .map(|_| Flow {
+                src: 1 + rng.below(31),
+                dst: 0,
+                bytes: (rng.below(64) as u64 + 1) * 1024 * 1024,
+                start: rng.f64() * 0.01,
+            })
+            .collect();
+        b.run(&format!("netsim/fan-in/{n_flows}-flows"), || sim.run(&flows));
+    }
+}

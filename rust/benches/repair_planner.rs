@@ -1,0 +1,39 @@
+//! Micro-benchmarks for the coordinator's planning hot paths: single- and
+//! two-node repair planning, decodability checks, plan execution.
+
+use cp_lrc::bench_harness::Bench;
+use cp_lrc::codec::StripeCodec;
+use cp_lrc::codes::{Scheme, SchemeKind};
+use cp_lrc::prng::Prng;
+use cp_lrc::repair;
+
+fn main() {
+    let b = Bench::default();
+    let mut rng = Prng::new(0x1A9);
+
+    for &(k, r, p) in &[(24usize, 2usize, 2usize), (96, 5, 4)] {
+        for kind in [SchemeKind::AzureLrc, SchemeKind::CpAzure, SchemeKind::CpUniform] {
+            let s = Scheme::new(kind, k, r, p);
+            let name = kind.name().replace(' ', "_");
+            b.run(&format!("plan/single/{name}-({k},{r},{p})"), || {
+                repair::plan_single(&s, 0)
+            });
+            b.run(&format!("plan/pair/{name}-({k},{r},{p})"), || {
+                repair::plan(&s, &[0, 1]).unwrap()
+            });
+            b.run(&format!("recoverable/{name}-({k},{r},{p})"), || s.recoverable(&[0, 1, 2]));
+        }
+    }
+
+    // plan execution end-to-end (small blocks; network excluded)
+    let codec = StripeCodec::new(Scheme::new(SchemeKind::CpAzure, 24, 2, 2));
+    let data: Vec<Vec<u8>> = (0..24).map(|_| rng.bytes(64 * 1024)).collect();
+    let stripe = codec.encode_stripe(&data);
+    let plan = repair::plan(&codec.scheme, &[0, 26]).unwrap();
+    let mut blocks: Vec<Option<Vec<u8>>> = stripe.into_iter().map(Some).collect();
+    blocks[0] = None;
+    blocks[26] = None;
+    b.run_throughput("execute/d1+l1/(24,2,2)/64KiB", 13 * 64 * 1024, || {
+        repair::execute(&codec, &plan, &blocks).unwrap()
+    });
+}

@@ -1,0 +1,25 @@
+//! Regenerates Tables I, III, IV, V (repair-cost metrics) and times the
+//! metric computations themselves. `cargo bench --bench table_metrics`.
+
+use cp_lrc::bench_harness::Bench;
+use cp_lrc::codes::{Scheme, SchemeKind};
+use cp_lrc::{experiments, metrics};
+
+fn main() {
+    experiments::table1();
+    println!();
+    experiments::table3();
+    experiments::table4();
+    println!();
+    experiments::table5();
+    println!();
+
+    // Timing: the pair enumeration is the analytic hot path (O(n²) plans).
+    let b = Bench::default();
+    for &(k, r, p) in &[(6usize, 2usize, 2usize), (24, 2, 2), (96, 5, 4)] {
+        let s = Scheme::new(SchemeKind::CpUniform, k, r, p);
+        b.run(&format!("metrics/pair_stats/cp-uniform-({k},{r},{p})"), || {
+            metrics::pair_stats(&s)
+        });
+    }
+}

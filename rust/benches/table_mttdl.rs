@@ -1,0 +1,24 @@
+//! Regenerates Table VI (MTTDL) and times the reliability solver.
+
+use cp_lrc::bench_harness::Bench;
+use cp_lrc::codes::{Scheme, SchemeKind};
+use cp_lrc::reliability::{self, ReliabilityParams};
+use cp_lrc::experiments;
+
+fn main() {
+    experiments::table6();
+    println!();
+
+    let b = Bench::default();
+    let params = ReliabilityParams::default();
+    for &(k, r, p) in &[(6usize, 2usize, 2usize), (24, 2, 2)] {
+        let s = Scheme::new(SchemeKind::CpAzure, k, r, p);
+        b.run(&format!("reliability/mttdl/cp-azure-({k},{r},{p})"), || {
+            reliability::mttdl(&s, &params, 1)
+        });
+    }
+    let s = Scheme::new(SchemeKind::CpUniform, 96, 5, 4);
+    b.run("reliability/census/cp-uniform-(96,5,4)/f=6", || {
+        reliability::undecodable_fraction(&s, 6, &params, 3)
+    });
+}

@@ -1,0 +1,215 @@
+//! Criterion-style micro-benchmark harness (the offline toolchain has no
+//! criterion). Used by every `cargo bench` target (`harness = false`).
+//!
+//! * adaptive iteration count targeting a fixed measurement window,
+//! * warmup, median/mean/min/p95 over sample batches,
+//! * throughput reporting,
+//! * `--filter substring` and `--quick` CLI flags,
+//! * plain-text table helpers shared by the table/figure regenerators.
+
+use std::time::{Duration, Instant};
+
+/// One measured statistic set, all in nanoseconds per iteration.
+#[derive(Clone, Copy, Debug)]
+pub struct Stats {
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub min_ns: f64,
+    pub p95_ns: f64,
+    pub iters: u64,
+}
+
+/// Benchmark runner configuration.
+pub struct Bench {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub samples: usize,
+    filter: Option<String>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::from_args(std::env::args().skip(1))
+    }
+}
+
+impl Bench {
+    /// Parse `--filter <s>` / `--quick` from an argument stream. Unknown
+    /// flags (e.g. cargo's `--bench`) are ignored.
+    pub fn from_args(args: impl Iterator<Item = String>) -> Self {
+        let mut b = Self {
+            warmup: Duration::from_millis(300),
+            measure: Duration::from_millis(1200),
+            samples: 20,
+            filter: None,
+        };
+        let mut args = args.peekable();
+        while let Some(a) = args.next() {
+            match a.as_str() {
+                "--filter" => b.filter = args.next(),
+                "--quick" => {
+                    b.warmup = Duration::from_millis(50);
+                    b.measure = Duration::from_millis(200);
+                    b.samples = 8;
+                }
+                _ => {}
+            }
+        }
+        b
+    }
+
+    fn enabled(&self, name: &str) -> bool {
+        self.filter.as_deref().map_or(true, |f| name.contains(f))
+    }
+
+    /// Measure `f`, printing a criterion-like line. Returns stats (or
+    /// `None` when filtered out).
+    pub fn run<R>(&self, name: &str, mut f: impl FnMut() -> R) -> Option<Stats> {
+        if !self.enabled(name) {
+            return None;
+        }
+        // Warmup + calibration.
+        let cal_start = Instant::now();
+        let mut cal_iters: u64 = 0;
+        while cal_start.elapsed() < self.warmup {
+            std::hint::black_box(f());
+            cal_iters += 1;
+        }
+        let per_iter = self.warmup.as_secs_f64() / cal_iters.max(1) as f64;
+        let batch = ((self.measure.as_secs_f64() / self.samples as f64 / per_iter).ceil() as u64)
+            .max(1);
+
+        let mut samples_ns: Vec<f64> = Vec::with_capacity(self.samples);
+        let mut total_iters = 0u64;
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            for _ in 0..batch {
+                std::hint::black_box(f());
+            }
+            samples_ns.push(t.elapsed().as_nanos() as f64 / batch as f64);
+            total_iters += batch;
+        }
+        samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let stats = Stats {
+            mean_ns: samples_ns.iter().sum::<f64>() / samples_ns.len() as f64,
+            median_ns: samples_ns[samples_ns.len() / 2],
+            min_ns: samples_ns[0],
+            p95_ns: samples_ns[((samples_ns.len() as f64 * 0.95) as usize).min(samples_ns.len() - 1)],
+            iters: total_iters,
+        };
+        println!(
+            "{:<52} time: [{} {} {}]  ({} iters)",
+            name,
+            fmt_ns(stats.min_ns),
+            fmt_ns(stats.median_ns),
+            fmt_ns(stats.p95_ns),
+            stats.iters
+        );
+        Some(stats)
+    }
+
+    /// Like [`run`] but also reports throughput for `bytes` processed per
+    /// iteration.
+    pub fn run_throughput<R>(
+        &self,
+        name: &str,
+        bytes: usize,
+        f: impl FnMut() -> R,
+    ) -> Option<Stats> {
+        let stats = self.run(name, f)?;
+        let gibps = bytes as f64 / (stats.median_ns / 1e9) / (1024.0 * 1024.0 * 1024.0);
+        println!("{:<52} thrpt: {:.3} GiB/s", "", gibps);
+        Some(stats)
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Plain-text table printer used by all table/figure regenerators so the
+/// output mirrors the paper's row/column structure.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Self { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "column count mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                if i == 0 {
+                    s.push_str(&format!("{:<w$}", c, w = widths[i]));
+                } else {
+                    s.push_str(&format!("  {:>w$}", c, w = widths[i]));
+                }
+            }
+            s
+        };
+        println!("{}", line(&self.header));
+        println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        for row in &self.rows {
+            println!("{}", line(row));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_ns_ranges() {
+        assert!(fmt_ns(12.0).ends_with("ns"));
+        assert!(fmt_ns(12_000.0).ends_with("µs"));
+        assert!(fmt_ns(12_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(2e9).ends_with('s'));
+    }
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let b = Bench::from_args(["--quick".to_string()].into_iter());
+        let s = b.run("noop", || 1 + 1).unwrap();
+        assert!(s.iters > 0);
+        assert!(s.median_ns >= 0.0);
+    }
+
+    #[test]
+    fn filter_skips() {
+        let b =
+            Bench::from_args(["--filter".to_string(), "xyz".to_string(), "--quick".to_string()].into_iter());
+        assert!(b.run("abc", || ()).is_none());
+        assert!(b.run("has_xyz_inside", || ()).is_some());
+    }
+
+    #[test]
+    fn table_prints_without_panic() {
+        let mut t = Table::new(&["scheme", "ADRC"]);
+        t.row(vec!["Azure".into(), "3.00".into()]);
+        t.print();
+    }
+}

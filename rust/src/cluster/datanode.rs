@@ -1,0 +1,455 @@
+//! Datanode: one storage server. Two transports, one behaviour:
+//!
+//! * **Channel** — the datanode runs as a thread spoken to over an mpsc
+//!   RPC channel (default for experiments: deterministic, fast, and the
+//!   *timing* of the figures comes from the netsim, not the transport);
+//! * **TCP** — the same server loop behind a real `TcpListener` speaking
+//!   the [`super::wire`] protocol, as the paper's prototype does across
+//!   ECS instances. `TcpNodeClient` gives the identical call surface.
+//!
+//! Storage is pluggable ([`super::store::BlockStore`]): in-memory or
+//! one-file-per-block on disk. A node whose liveness flag is cleared
+//! refuses all traffic, emulating a crashed server; its store survives,
+//! emulating an intact disk.
+
+use super::metadata::BlockKey;
+use super::store::{make_store, BlockStore, StoreKind};
+use super::wire::{self, Frame};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// RPC request to a datanode.
+#[derive(Debug)]
+pub enum Request {
+    Put { key: BlockKey, data: Vec<u8> },
+    Get { key: BlockKey },
+    GetSegment { key: BlockKey, off: usize, len: usize },
+    Delete { key: BlockKey },
+    /// Number of blocks stored (introspection).
+    Count,
+    /// Liveness probe (used by the failure detector).
+    Ping,
+    Shutdown,
+}
+
+/// RPC response.
+#[derive(Debug, PartialEq, Eq)]
+pub enum Response {
+    Ok,
+    Data(Vec<u8>),
+    Count(usize),
+    NotFound,
+    /// Node is down (liveness flag cleared).
+    Unavailable,
+}
+
+/// Shared server state: execute one request against the store.
+fn serve_one(
+    store: &mut dyn BlockStore,
+    alive: &AtomicBool,
+    bytes_out: &AtomicU64,
+    req: Request,
+) -> Response {
+    if !alive.load(Ordering::SeqCst) {
+        return Response::Unavailable;
+    }
+    match req {
+        Request::Put { key, data } => match store.put(key, data) {
+            Ok(()) => Response::Ok,
+            Err(_) => Response::Unavailable,
+        },
+        Request::Get { key } => match store.get(key) {
+            Ok(Some(d)) => {
+                bytes_out.fetch_add(d.len() as u64, Ordering::Relaxed);
+                Response::Data(d)
+            }
+            _ => Response::NotFound,
+        },
+        Request::GetSegment { key, off, len } => match store.get_segment(key, off, len) {
+            Ok(Some(d)) => {
+                bytes_out.fetch_add(d.len() as u64, Ordering::Relaxed);
+                Response::Data(d)
+            }
+            _ => Response::NotFound,
+        },
+        Request::Delete { key } => {
+            let _ = store.delete(key);
+            Response::Ok
+        }
+        Request::Count => Response::Count(store.len()),
+        Request::Ping => Response::Ok,
+        Request::Shutdown => unreachable!("handled by the loop"),
+    }
+}
+
+type Envelope = (Request, Sender<Response>);
+
+/// Client handle to a channel-transport datanode thread.
+pub struct DataNodeHandle {
+    pub id: usize,
+    tx: Sender<Envelope>,
+    alive: Arc<AtomicBool>,
+    /// Bytes served since start (egress accounting for experiments).
+    bytes_out: Arc<AtomicU64>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl DataNodeHandle {
+    /// Spawn a datanode thread with an in-memory store.
+    pub fn spawn(id: usize) -> Self {
+        Self::spawn_with(id, &StoreKind::Mem)
+    }
+
+    /// Spawn a datanode thread with the given storage backend.
+    pub fn spawn_with(id: usize, store_kind: &StoreKind) -> Self {
+        let (tx, rx) = channel::<Envelope>();
+        let alive = Arc::new(AtomicBool::new(true));
+        let bytes_out = Arc::new(AtomicU64::new(0));
+        let alive2 = alive.clone();
+        let bytes2 = bytes_out.clone();
+        let mut store = make_store(store_kind, id);
+        let join = std::thread::Builder::new()
+            .name(format!("datanode-{id}"))
+            .spawn(move || {
+                while let Ok((req, reply)) = rx.recv() {
+                    if matches!(req, Request::Shutdown) {
+                        let _ = reply.send(Response::Ok);
+                        break;
+                    }
+                    let _ = reply.send(serve_one(store.as_mut(), &alive2, &bytes2, req));
+                }
+            })
+            .expect("spawn datanode thread");
+        Self { id, tx, alive, bytes_out, join: Some(join) }
+    }
+
+    /// Synchronous RPC.
+    pub fn call(&self, req: Request) -> Response {
+        let (rtx, rrx) = channel();
+        if self.tx.send((req, rtx)).is_err() {
+            return Response::Unavailable;
+        }
+        rrx.recv().unwrap_or(Response::Unavailable)
+    }
+
+    pub fn put(&self, key: BlockKey, data: Vec<u8>) -> bool {
+        matches!(self.call(Request::Put { key, data }), Response::Ok)
+    }
+
+    pub fn get(&self, key: BlockKey) -> Option<Vec<u8>> {
+        match self.call(Request::Get { key }) {
+            Response::Data(d) => Some(d),
+            _ => None,
+        }
+    }
+
+    pub fn get_segment(&self, key: BlockKey, off: usize, len: usize) -> Option<Vec<u8>> {
+        match self.call(Request::GetSegment { key, off, len }) {
+            Response::Data(d) => Some(d),
+            _ => None,
+        }
+    }
+
+    pub fn ping(&self) -> bool {
+        matches!(self.call(Request::Ping), Response::Ok)
+    }
+
+    /// Crash / restore the node (liveness flag, checked per request).
+    pub fn set_alive(&self, alive: bool) {
+        self.alive.store(alive, Ordering::SeqCst);
+    }
+
+    pub fn is_alive(&self) -> bool {
+        self.alive.load(Ordering::SeqCst)
+    }
+
+    pub fn bytes_served(&self) -> u64 {
+        self.bytes_out.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for DataNodeHandle {
+    fn drop(&mut self) {
+        let (rtx, _rrx) = channel();
+        let _ = self.tx.send((Request::Shutdown, rtx));
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+// ----------------------------------------------------------------- TCP
+
+/// A datanode server bound to a TCP port, speaking the wire protocol.
+pub struct TcpDataNode {
+    pub id: usize,
+    pub addr: std::net::SocketAddr,
+    alive: Arc<AtomicBool>,
+    shutdown: Arc<AtomicBool>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl TcpDataNode {
+    /// Bind to an ephemeral localhost port and serve until shutdown.
+    pub fn serve(id: usize, store_kind: &StoreKind) -> std::io::Result<Self> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?;
+        let alive = Arc::new(AtomicBool::new(true));
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let alive2 = alive.clone();
+        let shutdown2 = shutdown.clone();
+        let mut store = make_store(store_kind, id);
+        let bytes_out = Arc::new(AtomicU64::new(0));
+        let join = std::thread::Builder::new()
+            .name(format!("tcp-datanode-{id}"))
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if shutdown2.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let Ok(mut conn) = conn else { continue };
+                    let done = handle_conn(
+                        &mut conn,
+                        store.as_mut(),
+                        &alive2,
+                        &bytes_out,
+                        &shutdown2,
+                    );
+                    if done {
+                        break;
+                    }
+                }
+            })
+            .expect("spawn tcp datanode");
+        Ok(Self { id, addr, alive, shutdown, join: Some(join) })
+    }
+
+    pub fn set_alive(&self, alive: bool) {
+        self.alive.store(alive, Ordering::SeqCst);
+    }
+}
+
+/// Serve one connection; returns true when a shutdown frame arrived.
+fn handle_conn(
+    conn: &mut TcpStream,
+    store: &mut dyn BlockStore,
+    alive: &AtomicBool,
+    bytes_out: &AtomicU64,
+    shutdown: &AtomicBool,
+) -> bool {
+    loop {
+        let frame = match Frame::read_from(conn) {
+            Ok(Some(f)) => f,
+            _ => return false, // disconnect
+        };
+        if frame.op == wire::OP_SHUTDOWN {
+            shutdown.store(true, Ordering::SeqCst);
+            let _ = Frame::new(wire::RESP_OK).write_to(conn);
+            return true;
+        }
+        let req = match frame.op {
+            wire::OP_PUT => Request::Put { key: frame.key, data: frame.payload },
+            wire::OP_GET => Request::Get { key: frame.key },
+            wire::OP_GET_SEGMENT => Request::GetSegment {
+                key: frame.key,
+                off: frame.off as usize,
+                len: frame.len as usize,
+            },
+            wire::OP_DELETE => Request::Delete { key: frame.key },
+            wire::OP_COUNT => Request::Count,
+            wire::OP_PING => Request::Ping,
+            _ => {
+                let _ = Frame::new(wire::RESP_UNAVAILABLE).write_to(conn);
+                continue;
+            }
+        };
+        let resp = serve_one(store, alive, bytes_out, req);
+        let out = match resp {
+            Response::Ok => Frame::new(wire::RESP_OK),
+            Response::Data(d) => Frame::new(wire::RESP_DATA).with_payload(d),
+            Response::Count(c) => Frame::new(wire::RESP_COUNT).with_range(c as u64, 0),
+            Response::NotFound => Frame::new(wire::RESP_NOT_FOUND),
+            Response::Unavailable => Frame::new(wire::RESP_UNAVAILABLE),
+        };
+        if out.write_to(conn).is_err() {
+            return false;
+        }
+    }
+}
+
+impl Drop for TcpDataNode {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        // poke the listener loose
+        if let Ok(mut s) = TcpStream::connect(self.addr) {
+            let _ = Frame::new(wire::OP_SHUTDOWN).write_to(&mut s);
+            let _ = Frame::read_from(&mut s);
+        }
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Client to a TCP datanode with the same call surface as
+/// [`DataNodeHandle`]. Keeps one connection, reconnecting on error.
+pub struct TcpNodeClient {
+    pub addr: std::net::SocketAddr,
+    conn: std::sync::Mutex<Option<TcpStream>>,
+}
+
+impl TcpNodeClient {
+    pub fn connect(addr: std::net::SocketAddr) -> Self {
+        Self { addr, conn: std::sync::Mutex::new(None) }
+    }
+
+    fn rpc(&self, frame: Frame) -> Option<Frame> {
+        let mut guard = self.conn.lock().unwrap();
+        for _attempt in 0..2 {
+            if guard.is_none() {
+                *guard = TcpStream::connect(self.addr).ok();
+            }
+            let Some(conn) = guard.as_mut() else { return None };
+            if frame.write_to(conn).is_ok() {
+                if let Ok(Some(resp)) = Frame::read_from(conn) {
+                    return Some(resp);
+                }
+            }
+            *guard = None; // drop broken connection, retry once
+        }
+        None
+    }
+
+    pub fn put(&self, key: BlockKey, data: Vec<u8>) -> bool {
+        self.rpc(Frame::new(wire::OP_PUT).with_key(key).with_payload(data))
+            .is_some_and(|r| r.op == wire::RESP_OK)
+    }
+
+    pub fn get(&self, key: BlockKey) -> Option<Vec<u8>> {
+        let r = self.rpc(Frame::new(wire::OP_GET).with_key(key))?;
+        (r.op == wire::RESP_DATA).then_some(r.payload)
+    }
+
+    pub fn get_segment(&self, key: BlockKey, off: usize, len: usize) -> Option<Vec<u8>> {
+        let r = self.rpc(
+            Frame::new(wire::OP_GET_SEGMENT).with_key(key).with_range(off as u64, len as u64),
+        )?;
+        (r.op == wire::RESP_DATA).then_some(r.payload)
+    }
+
+    pub fn ping(&self) -> bool {
+        self.rpc(Frame::new(wire::OP_PING)).is_some_and(|r| r.op == wire::RESP_OK)
+    }
+
+    pub fn count(&self) -> Option<usize> {
+        let r = self.rpc(Frame::new(wire::OP_COUNT))?;
+        (r.op == wire::RESP_COUNT).then_some(r.off as usize)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(i: u32) -> BlockKey {
+        BlockKey { stripe: 1, index: i }
+    }
+
+    #[test]
+    fn put_get_roundtrip() {
+        let n = DataNodeHandle::spawn(0);
+        assert!(n.put(key(0), vec![1, 2, 3, 4]));
+        assert_eq!(n.get(key(0)), Some(vec![1, 2, 3, 4]));
+        assert_eq!(n.get(key(1)), None);
+    }
+
+    #[test]
+    fn segment_reads() {
+        let n = DataNodeHandle::spawn(1);
+        n.put(key(0), (0..100u8).collect());
+        assert_eq!(n.get_segment(key(0), 10, 5), Some(vec![10, 11, 12, 13, 14]));
+        assert_eq!(n.get_segment(key(0), 98, 5), None);
+    }
+
+    #[test]
+    fn crashed_node_refuses_traffic_then_recovers() {
+        let n = DataNodeHandle::spawn(2);
+        n.put(key(3), vec![9]);
+        n.set_alive(false);
+        assert_eq!(n.call(Request::Get { key: key(3) }), Response::Unavailable);
+        assert!(!n.ping());
+        assert!(!n.put(key(4), vec![1]));
+        n.set_alive(true);
+        assert!(n.ping());
+        // data survives the "crash" (disk intact)
+        assert_eq!(n.get(key(3)), Some(vec![9]));
+    }
+
+    #[test]
+    fn egress_accounting() {
+        let n = DataNodeHandle::spawn(3);
+        n.put(key(0), vec![0u8; 1000]);
+        n.get(key(0));
+        n.get_segment(key(0), 0, 10);
+        assert_eq!(n.bytes_served(), 1010);
+    }
+
+    #[test]
+    fn count_and_delete() {
+        let n = DataNodeHandle::spawn(4);
+        n.put(key(0), vec![1]);
+        n.put(key(1), vec![2]);
+        assert_eq!(n.call(Request::Count), Response::Count(2));
+        n.call(Request::Delete { key: key(0) });
+        assert_eq!(n.call(Request::Count), Response::Count(1));
+    }
+
+    #[test]
+    fn disk_backed_datanode() {
+        let dir = std::env::temp_dir().join(format!("cp-lrc-dn-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        {
+            let n = DataNodeHandle::spawn_with(9, &StoreKind::Disk(dir.clone()));
+            n.put(key(0), vec![5; 100]);
+            assert_eq!(n.get(key(0)), Some(vec![5; 100]));
+        }
+        // a fresh datanode over the same directory sees the block
+        let n = DataNodeHandle::spawn_with(9, &StoreKind::Disk(dir.clone()));
+        assert_eq!(n.get(key(0)), Some(vec![5; 100]));
+        drop(n);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn tcp_datanode_end_to_end() {
+        let server = TcpDataNode::serve(0, &StoreKind::Mem).unwrap();
+        let client = TcpNodeClient::connect(server.addr);
+        assert!(client.ping());
+        let data: Vec<u8> = (0..200u8).cycle().take(50_000).collect();
+        assert!(client.put(key(0), data.clone()));
+        assert_eq!(client.get(key(0)), Some(data.clone()));
+        assert_eq!(client.get_segment(key(0), 1000, 16), Some(data[1000..1016].to_vec()));
+        assert_eq!(client.count(), Some(1));
+        assert_eq!(client.get(key(5)), None);
+        // crash semantics over TCP
+        server.set_alive(false);
+        assert!(!client.ping());
+        assert_eq!(client.get(key(0)), None);
+        server.set_alive(true);
+        assert_eq!(client.get(key(0)), Some(data));
+    }
+
+    #[test]
+    fn tcp_client_reconnects() {
+        let server = TcpDataNode::serve(1, &StoreKind::Mem).unwrap();
+        let c1 = TcpNodeClient::connect(server.addr);
+        assert!(c1.put(key(0), vec![1, 2, 3]));
+        // a second client (fresh connection) sees the same store
+        let c2 = TcpNodeClient::connect(server.addr);
+        drop(c1); // server moves to next connection
+        assert_eq!(c2.get(key(0)), Some(vec![1, 2, 3]));
+    }
+}

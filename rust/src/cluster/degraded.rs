@@ -1,0 +1,355 @@
+//! File-level degraded reads (§V-C, Fig 5): when a requested file touches
+//! failed blocks, reconstruct only the *file-aligned segments* instead of
+//! whole blocks, and skip re-reading surviving-file bytes that double as
+//! decode inputs ("repeated-read elimination", Fig 5(c)).
+//!
+//! GF arithmetic is bytewise, so any equation or decode combination that
+//! reconstructs a whole block also reconstructs any byte range of it from
+//! the same range of its inputs — that is what makes segment-level repair
+//! sound.
+
+use super::metadata::{BlockKey, FileId};
+use super::{Cluster, PROXY};
+use crate::netsim::Flow;
+use crate::repair;
+use std::collections::BTreeMap;
+
+/// Degraded-read strategy knob (Fig 10 compares the first and the last).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReadMode {
+    /// Conventional: fetch whole blocks for decode and for file data.
+    BlockLevel,
+    /// §V-C: fetch only file-aligned segments of decode sources.
+    FileLevel,
+    /// FileLevel + repeated-read elimination (Fig 5(c)).
+    FileLevelDedup,
+}
+
+/// Outcome of a (possibly degraded) read.
+#[derive(Clone, Debug)]
+pub struct ReadReport {
+    pub bytes: Vec<u8>,
+    /// Simulated latency, seconds.
+    pub time_s: f64,
+    /// Total bytes moved over the network.
+    pub bytes_read: u64,
+    pub degraded: bool,
+}
+
+impl Cluster {
+    /// Read `file`, transparently reconstructing any segments that live on
+    /// failed nodes (§V-B decoding workflow, steps 1–5).
+    pub fn degraded_read(&self, file: FileId, mode: ReadMode) -> anyhow::Result<ReadReport> {
+        let obj = self
+            .meta
+            .objects
+            .get(&file)
+            .ok_or_else(|| anyhow::anyhow!("unknown file {file}"))?;
+        let stripe = self
+            .meta
+            .stripes
+            .get(&obj.stripe_id)
+            .ok_or_else(|| anyhow::anyhow!("unknown stripe"))?;
+        let scheme = self.scheme();
+        let failed = self.meta.failed_blocks(stripe);
+
+        let mut out = vec![0u8; obj.size];
+        // (src_node, bytes) per transfer, for the netsim.
+        let mut transfers: Vec<(usize, u64)> = Vec::new();
+        let mut bytes_read = 0u64;
+        // Cache of fetched (block, range) segments for dedup; keyed by
+        // block, holds (off, data) of the single coalesced range we read.
+        let mut seg_cache: BTreeMap<usize, (usize, Vec<u8>)> = BTreeMap::new();
+        let mut degraded = false;
+
+        // Pass 1: surviving extents — read them directly (file-aligned).
+        for e in &obj.extents {
+            let b = e.block_index as usize;
+            if failed.contains(&b) {
+                continue;
+            }
+            let nid = stripe.block_nodes[b];
+            let key = BlockKey { stripe: obj.stripe_id, index: e.block_index };
+            let seg = match mode {
+                ReadMode::BlockLevel => {
+                    let whole = self.nodes[nid]
+                        .get(key)
+                        .ok_or_else(|| anyhow::anyhow!("block {b} unavailable"))?;
+                    transfers.push((nid, whole.len() as u64));
+                    bytes_read += whole.len() as u64;
+                    let seg = whole[e.block_off..e.block_off + e.len].to_vec();
+                    seg_cache.insert(b, (0, whole));
+                    seg
+                }
+                ReadMode::FileLevel | ReadMode::FileLevelDedup => {
+                    let seg = self.nodes[nid]
+                        .get_segment(key, e.block_off, e.len)
+                        .ok_or_else(|| anyhow::anyhow!("segment of block {b} unavailable"))?;
+                    transfers.push((nid, e.len as u64));
+                    bytes_read += e.len as u64;
+                    seg_cache.insert(b, (e.block_off, seg.clone()));
+                    seg
+                }
+            };
+            out[e.file_off..e.file_off + e.len].copy_from_slice(&seg);
+        }
+
+        // Pass 2: extents on failed blocks — plan a repair, fetch only the
+        // needed ranges of the plan's sources, reconstruct the segment.
+        let failed_extents: Vec<_> = obj
+            .extents
+            .iter()
+            .filter(|e| failed.contains(&(e.block_index as usize)))
+            .collect();
+        if !failed_extents.is_empty() {
+            degraded = true;
+            let targets: Vec<usize> =
+                failed_extents.iter().map(|e| e.block_index as usize).collect();
+            // One plan covers all failed blocks the file touches (the
+            // multi-node degraded read of Fig 5(b)).
+            let mut uniq = targets.clone();
+            uniq.sort_unstable();
+            uniq.dedup();
+            // The plan must treat EVERY failed block as erased (they are
+            // unavailable as inputs) even if the file only touches some.
+            let plan = repair::plan(scheme, &failed)
+                .ok_or_else(|| anyhow::anyhow!("failure pattern unrecoverable"))?;
+            let fetch = plan.fetch_set(scheme);
+
+            for e in &failed_extents {
+                let b = e.block_index as usize;
+                let (lo, len) = (e.block_off, e.len);
+                // Fetch the [lo, lo+len) range of every plan source.
+                let mut ranges: BTreeMap<usize, Vec<u8>> = BTreeMap::new();
+                for &src in fetch.iter() {
+                    let nid = stripe.block_nodes[src];
+                    let key = BlockKey { stripe: obj.stripe_id, index: src as u32 };
+                    let seg = match mode {
+                        ReadMode::BlockLevel => {
+                            let whole = if let Some((0, w)) = seg_cache.get(&src) {
+                                w.clone() // already fetched whole block
+                            } else {
+                                let w = self.nodes[nid]
+                                    .get(key)
+                                    .ok_or_else(|| anyhow::anyhow!("block {src} gone"))?;
+                                transfers.push((nid, w.len() as u64));
+                                bytes_read += w.len() as u64;
+                                seg_cache.insert(src, (0, w.clone()));
+                                w
+                            };
+                            whole[lo..lo + len].to_vec()
+                        }
+                        ReadMode::FileLevel => {
+                            let seg = self.nodes[nid]
+                                .get_segment(key, lo, len)
+                                .ok_or_else(|| anyhow::anyhow!("segment gone"))?;
+                            transfers.push((nid, len as u64));
+                            bytes_read += len as u64;
+                            seg
+                        }
+                        ReadMode::FileLevelDedup => {
+                            // Repeated-read elimination: reuse overlap with
+                            // segments already fetched for this file.
+                            if let Some((coff, cdata)) = seg_cache.get(&src) {
+                                if *coff <= lo && lo + len <= coff + cdata.len() {
+                                    cdata[lo - coff..lo - coff + len].to_vec()
+                                } else {
+                                    // partial overlap: fetch only the missing bytes
+                                    let (mlo, mhi) = missing_range(*coff, cdata.len(), lo, len);
+                                    let fetched = self.nodes[nid]
+                                        .get_segment(key, mlo, mhi - mlo)
+                                        .ok_or_else(|| anyhow::anyhow!("segment gone"))?;
+                                    transfers.push((nid, (mhi - mlo) as u64));
+                                    bytes_read += (mhi - mlo) as u64;
+                                    splice_range(*coff, cdata, mlo, &fetched, lo, len)
+                                }
+                            } else {
+                                let seg = self.nodes[nid]
+                                    .get_segment(key, lo, len)
+                                    .ok_or_else(|| anyhow::anyhow!("segment gone"))?;
+                                transfers.push((nid, len as u64));
+                                bytes_read += len as u64;
+                                seg_cache.insert(src, (lo, seg.clone()));
+                                seg
+                            }
+                        }
+                    };
+                    ranges.insert(src, seg);
+                }
+                // Reconstruct the segment: run the plan over range-sized
+                // pseudo-blocks.
+                let mut blocks: Vec<Option<Vec<u8>>> = vec![None; scheme.n()];
+                for (src, seg) in &ranges {
+                    blocks[*src] = Some(seg.clone());
+                }
+                let rec = repair::execute(&self.codec, &plan, &blocks)?;
+                let pos = plan.erased.iter().position(|&x| x == b).expect("planned block");
+                out[e.file_off..e.file_off + e.len].copy_from_slice(&rec[pos]);
+            }
+        }
+
+        let flows: Vec<Flow> = transfers
+            .iter()
+            .map(|&(nid, bytes)| Flow { src: super::net_id(nid), dst: PROXY, bytes, start: 0.0 })
+            .collect();
+        let (_, time_s) = self.net.run(&flows);
+        Ok(ReadReport { bytes: out, time_s, bytes_read, degraded })
+    }
+}
+
+/// The sub-range of `[lo, lo+len)` not covered by the cached range
+/// `[coff, coff+clen)`; assumes partial overlap on one side.
+fn missing_range(coff: usize, clen: usize, lo: usize, len: usize) -> (usize, usize) {
+    let chi = coff + clen;
+    let hi = lo + len;
+    if lo < coff {
+        (lo, coff.min(hi))
+    } else {
+        (chi.max(lo), hi)
+    }
+}
+
+/// Assemble `[lo, lo+len)` out of the cached range and the fetched range.
+fn splice_range(
+    coff: usize,
+    cdata: &[u8],
+    mlo: usize,
+    fetched: &[u8],
+    lo: usize,
+    len: usize,
+) -> Vec<u8> {
+    let mut out = vec![0u8; len];
+    for i in 0..len {
+        let pos = lo + i;
+        if pos >= coff && pos < coff + cdata.len() {
+            out[i] = cdata[pos - coff];
+        } else {
+            debug_assert!(pos >= mlo && pos < mlo + fetched.len());
+            out[i] = fetched[pos - mlo];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Cluster, ClusterConfig};
+    use crate::codes::SchemeKind;
+    use crate::prng::Prng;
+
+    fn cluster() -> Cluster {
+        Cluster::new(ClusterConfig {
+            num_datanodes: 12,
+            gbps: 1.0,
+            latency_s: 0.001,
+            block_size: 4096,
+            kind: SchemeKind::AzureLrc,
+            k: 6,
+            r: 2,
+            p: 2,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn degraded_read_reconstructs_correctly_all_modes() {
+        let mut rng = Prng::new(10);
+        for mode in [ReadMode::BlockLevel, ReadMode::FileLevel, ReadMode::FileLevelDedup] {
+            let mut c = cluster();
+            // files of assorted sizes, some spanning block boundaries
+            let files: Vec<Vec<u8>> =
+                [300, 5000, 100, 9000, 4096].iter().map(|&s| rng.bytes(s)).collect();
+            let ids: Vec<_> = files.iter().map(|f| c.put_file(f.clone())).collect();
+            let sid = c.seal_stripe().unwrap();
+            // fail the node holding D1
+            let victim = c.meta.stripes[&sid].block_nodes[0];
+            c.fail_node(victim);
+            for (id, content) in ids.iter().zip(files.iter()) {
+                let rep = c.degraded_read(*id, mode).unwrap();
+                assert_eq!(&rep.bytes, content, "{mode:?} file {id}");
+            }
+        }
+    }
+
+    #[test]
+    fn file_level_reads_fewer_bytes_than_block_level() {
+        let mut rng = Prng::new(11);
+        let mut c = cluster();
+        let content = rng.bytes(600); // small file inside one 4 KiB block
+        let id = c.put_file(content);
+        let sid = c.seal_stripe().unwrap();
+        let victim = c.meta.stripes[&sid].block_nodes[0];
+        c.fail_node(victim);
+        let blk = c.degraded_read(id, ReadMode::BlockLevel).unwrap();
+        let fl = c.degraded_read(id, ReadMode::FileLevel).unwrap();
+        assert!(blk.degraded && fl.degraded);
+        assert!(
+            fl.bytes_read < blk.bytes_read / 4,
+            "file-level {} vs block-level {}",
+            fl.bytes_read,
+            blk.bytes_read
+        );
+        assert!(fl.time_s < blk.time_s);
+    }
+
+    #[test]
+    fn dedup_eliminates_repeated_reads_for_spanning_files() {
+        // Fig 5(c): a file spanning D1 (failed) and D2; the decode segment
+        // from D2 overlaps the file's own D2 bytes.
+        let mut rng = Prng::new(12);
+        let mut c = cluster();
+        let content = rng.bytes(6000); // spans blocks 0 and 1 (4096 B each)
+        let id = c.put_file(content.clone());
+        let sid = c.seal_stripe().unwrap();
+        let victim = c.meta.stripes[&sid].block_nodes[0];
+        c.fail_node(victim);
+        let fl = c.degraded_read(id, ReadMode::FileLevel).unwrap();
+        let dd = c.degraded_read(id, ReadMode::FileLevelDedup).unwrap();
+        assert_eq!(fl.bytes, content);
+        assert_eq!(dd.bytes, content);
+        assert!(
+            dd.bytes_read < fl.bytes_read,
+            "dedup {} !< plain {}",
+            dd.bytes_read,
+            fl.bytes_read
+        );
+    }
+
+    #[test]
+    fn two_failed_blocks_degraded_read() {
+        // Fig 5(b): file spans two failed blocks.
+        let mut rng = Prng::new(13);
+        let mut c = cluster();
+        let content = rng.bytes(10_000); // spans blocks 0,1,2
+        let id = c.put_file(content.clone());
+        let sid = c.seal_stripe().unwrap();
+        let v0 = c.meta.stripes[&sid].block_nodes[1];
+        let v1 = c.meta.stripes[&sid].block_nodes[2];
+        c.fail_node(v0);
+        c.fail_node(v1);
+        for mode in [ReadMode::BlockLevel, ReadMode::FileLevel, ReadMode::FileLevelDedup] {
+            let rep = c.degraded_read(id, mode).unwrap();
+            assert_eq!(rep.bytes, content, "{mode:?}");
+            assert!(rep.degraded);
+        }
+    }
+
+    #[test]
+    fn missing_range_math() {
+        assert_eq!(missing_range(100, 50, 80, 40), (80, 100)); // left overhang
+        assert_eq!(missing_range(100, 50, 120, 60), (150, 180)); // right overhang
+    }
+
+    #[test]
+    fn non_degraded_read_reports_not_degraded() {
+        let mut rng = Prng::new(14);
+        let mut c = cluster();
+        let content = rng.bytes(1000);
+        let id = c.put_file(content.clone());
+        c.seal_stripe().unwrap();
+        let rep = c.degraded_read(id, ReadMode::FileLevel).unwrap();
+        assert!(!rep.degraded);
+        assert_eq!(rep.bytes, content);
+    }
+}

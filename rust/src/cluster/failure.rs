@@ -1,0 +1,128 @@
+//! Failure detection (§V-B "repair triggering"): the coordinator probes
+//! datanodes with liveness pings; a node missing `threshold` consecutive
+//! probes is declared failed and its stripes are queued for repair.
+//!
+//! Detection latency — `threshold × probe interval` — is exactly the
+//! `detect_*` term of the reliability model (`reliability::
+//! ReliabilityParams`), tying the prototype and the Markov chain to the
+//! same mechanism.
+
+use super::Cluster;
+
+/// Sweep-based failure detector driven by the caller (deterministic —
+/// experiments advance it explicitly rather than with a wall-clock
+/// timer thread).
+#[derive(Clone, Debug)]
+pub struct FailureDetector {
+    /// Consecutive missed probes per node.
+    missed: Vec<u32>,
+    /// Probes missed before a node is declared failed.
+    pub threshold: u32,
+    /// Probe interval in (virtual) seconds — reported, not slept.
+    pub interval_s: f64,
+    /// Total sweeps performed.
+    pub sweeps: u64,
+}
+
+/// Outcome of one probe sweep.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SweepReport {
+    /// Nodes newly declared failed this sweep.
+    pub newly_failed: Vec<usize>,
+    /// Nodes that answered again after being marked failed.
+    pub recovered: Vec<usize>,
+    /// Virtual detection latency attributed to each new failure.
+    pub detection_latency_s: f64,
+}
+
+impl FailureDetector {
+    pub fn new(num_nodes: usize, threshold: u32, interval_s: f64) -> Self {
+        Self { missed: vec![0; num_nodes], threshold, interval_s, sweeps: 0 }
+    }
+
+    /// Probe every datanode once and update the coordinator's node index.
+    pub fn sweep(&mut self, cluster: &mut Cluster) -> SweepReport {
+        self.sweeps += 1;
+        let mut report = SweepReport {
+            detection_latency_s: self.threshold as f64 * self.interval_s,
+            ..Default::default()
+        };
+        for id in 0..cluster.nodes.len() {
+            let ok = cluster.nodes[id].ping();
+            if ok {
+                if self.missed[id] >= self.threshold && !cluster.meta.nodes[id].alive {
+                    report.recovered.push(id);
+                    cluster.meta.nodes[id].alive = true;
+                }
+                self.missed[id] = 0;
+            } else {
+                self.missed[id] += 1;
+                if self.missed[id] == self.threshold {
+                    report.newly_failed.push(id);
+                    cluster.meta.nodes[id].alive = false;
+                }
+            }
+        }
+        report
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Cluster, ClusterConfig};
+    use crate::codes::SchemeKind;
+
+    fn cluster() -> Cluster {
+        Cluster::new(ClusterConfig {
+            num_datanodes: 12,
+            block_size: 1024,
+            kind: SchemeKind::CpAzure,
+            k: 6,
+            r: 2,
+            p: 2,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn detects_after_threshold_sweeps() {
+        let mut c = cluster();
+        let mut fd = FailureDetector::new(12, 3, 5.0);
+        // healthy sweeps: nothing reported
+        assert_eq!(fd.sweep(&mut c).newly_failed, Vec::<usize>::new());
+        // crash node 4 silently (bypass coordinator metadata)
+        c.nodes[4].set_alive(false);
+        assert!(fd.sweep(&mut c).newly_failed.is_empty()); // 1 miss
+        assert!(fd.sweep(&mut c).newly_failed.is_empty()); // 2 misses
+        let rep = fd.sweep(&mut c); // 3rd miss → declared
+        assert_eq!(rep.newly_failed, vec![4]);
+        assert!(!c.meta.nodes[4].alive);
+        assert!((rep.detection_latency_s - 15.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn recovery_detected() {
+        let mut c = cluster();
+        let mut fd = FailureDetector::new(12, 1, 1.0);
+        c.nodes[2].set_alive(false);
+        assert_eq!(fd.sweep(&mut c).newly_failed, vec![2]);
+        c.nodes[2].set_alive(true);
+        let rep = fd.sweep(&mut c);
+        assert_eq!(rep.recovered, vec![2]);
+        assert!(c.meta.nodes[2].alive);
+    }
+
+    #[test]
+    fn flapping_node_not_declared() {
+        let mut c = cluster();
+        let mut fd = FailureDetector::new(12, 3, 1.0);
+        for _ in 0..5 {
+            c.nodes[7].set_alive(false);
+            fd.sweep(&mut c);
+            c.nodes[7].set_alive(true);
+            fd.sweep(&mut c); // resets the miss counter
+        }
+        assert!(c.meta.nodes[7].alive);
+    }
+}

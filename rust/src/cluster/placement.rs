@@ -1,0 +1,130 @@
+//! Stripe placement policies: which datanode hosts each of a stripe's n
+//! blocks. The paper's testbed spreads datanodes across three zones
+//! (§VI-B1); [`PlacementPolicy::ZoneSpread`] reproduces that structure.
+
+use crate::prng::Prng;
+
+/// How blocks map to datanodes. All policies return n *distinct* nodes.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum PlacementPolicy {
+    /// `(stripe_id * n + block) % num_nodes` with collision skipping.
+    RoundRobin,
+    /// Seeded random permutation per stripe.
+    Random(u64),
+    /// Nodes are striped across `zones` zones; consecutive blocks rotate
+    /// zones so each zone holds ⌈n/zones⌉ blocks at most (the Alibaba
+    /// Zones I/J/K/L layout).
+    ZoneSpread { zones: usize },
+}
+
+impl PlacementPolicy {
+    /// Choose hosts for one stripe. Panics if `n > num_nodes`.
+    pub fn place(&self, stripe_id: u64, n: usize, num_nodes: usize) -> Vec<usize> {
+        assert!(n <= num_nodes, "stripe width {n} exceeds cluster size {num_nodes}");
+        match self {
+            PlacementPolicy::RoundRobin => {
+                let mut used = vec![false; num_nodes];
+                let mut out = Vec::with_capacity(n);
+                let mut at = (stripe_id as usize * n) % num_nodes;
+                while out.len() < n {
+                    if !used[at] {
+                        used[at] = true;
+                        out.push(at);
+                    }
+                    at = (at + 1) % num_nodes;
+                }
+                out
+            }
+            PlacementPolicy::Random(seed) => {
+                let mut rng = Prng::new(seed ^ stripe_id.wrapping_mul(0x9E3779B97F4A7C15));
+                rng.distinct(num_nodes, n)
+            }
+            PlacementPolicy::ZoneSpread { zones } => {
+                let z = (*zones).max(1);
+                // node i belongs to zone i % z; fill by rotating zones,
+                // taking the next unused node of each zone.
+                let mut next_in_zone: Vec<usize> = (0..z).collect(); // node id candidates
+                let mut out = Vec::with_capacity(n);
+                let mut zone = (stripe_id as usize) % z;
+                while out.len() < n {
+                    // next node of `zone`: ids zone, zone+z, zone+2z, ...
+                    let cand = next_in_zone[zone];
+                    if cand < num_nodes {
+                        out.push(cand);
+                        next_in_zone[zone] = cand + z;
+                    } else if next_in_zone.iter().all(|&c| c >= num_nodes) {
+                        panic!("not enough nodes across zones");
+                    }
+                    zone = (zone + 1) % z;
+                }
+                out
+            }
+        }
+    }
+}
+
+/// Zone of a node under the ZoneSpread convention.
+pub fn zone_of(node: usize, zones: usize) -> usize {
+    node % zones.max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_distinct(v: &[usize], num_nodes: usize) {
+        let mut s = v.to_vec();
+        s.sort_unstable();
+        s.dedup();
+        assert_eq!(s.len(), v.len(), "{v:?}");
+        assert!(v.iter().all(|&x| x < num_nodes));
+    }
+
+    #[test]
+    fn round_robin_distinct_and_rotating() {
+        let p = PlacementPolicy::RoundRobin;
+        for sid in 0..10u64 {
+            let v = p.place(sid, 10, 15);
+            assert_distinct(&v, 15);
+        }
+        // stripes start at different offsets
+        assert_ne!(p.place(0, 10, 15)[0], p.place(1, 10, 15)[0]);
+    }
+
+    #[test]
+    fn random_distinct_and_deterministic() {
+        let p = PlacementPolicy::Random(7);
+        let a = p.place(3, 8, 20);
+        let b = p.place(3, 8, 20);
+        assert_eq!(a, b);
+        assert_distinct(&a, 20);
+        assert_ne!(a, p.place(4, 8, 20));
+    }
+
+    #[test]
+    fn zone_spread_balances_zones() {
+        let p = PlacementPolicy::ZoneSpread { zones: 3 };
+        let v = p.place(0, 10, 30);
+        assert_distinct(&v, 30);
+        let mut per_zone = [0usize; 3];
+        for &node in &v {
+            per_zone[zone_of(node, 3)] += 1;
+        }
+        let max = per_zone.iter().max().unwrap();
+        let min = per_zone.iter().min().unwrap();
+        assert!(max - min <= 1, "unbalanced zones: {per_zone:?}");
+    }
+
+    #[test]
+    fn zone_spread_full_cluster() {
+        let p = PlacementPolicy::ZoneSpread { zones: 3 };
+        let v = p.place(1, 15, 15);
+        assert_distinct(&v, 15);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds cluster size")]
+    fn too_wide_panics() {
+        PlacementPolicy::RoundRobin.place(0, 10, 5);
+    }
+}

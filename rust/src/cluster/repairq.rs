@@ -1,0 +1,171 @@
+//! Background repair queue: orders pending stripe repairs by risk.
+//!
+//! Stripes closer to their tolerance limit repair first (the exposure
+//! window drives MTTDL — §II-B); ties break by failure count then
+//! arrival order. This is the coordinator-side policy glue between the
+//! failure detector and the proxy's repair executor.
+
+use super::metadata::StripeId;
+use super::{Cluster, RepairReport};
+use std::collections::BinaryHeap;
+
+/// One queued repair job.
+#[derive(Clone, Debug, PartialEq, Eq)]
+struct Job {
+    /// tolerance − failures (lower = riskier = served first).
+    margin: isize,
+    failures: usize,
+    seq: u64,
+    stripe: StripeId,
+    blocks: Vec<usize>,
+}
+
+impl Ord for Job {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // BinaryHeap is a max-heap: riskier jobs must compare GREATER.
+        other
+            .margin
+            .cmp(&self.margin)
+            .then(self.failures.cmp(&other.failures))
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+impl PartialOrd for Job {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Priority repair queue.
+#[derive(Debug, Default)]
+pub struct RepairQueue {
+    heap: BinaryHeap<Job>,
+    seq: u64,
+}
+
+impl RepairQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Scan the coordinator metadata for degraded stripes and enqueue
+    /// them (idempotent per call: clears and rebuilds the queue).
+    pub fn scan(&mut self, cluster: &Cluster) {
+        self.heap.clear();
+        let tol = cluster.scheme().guaranteed_tolerance as isize;
+        let mut sids: Vec<StripeId> = cluster.meta.stripes.keys().copied().collect();
+        sids.sort_unstable();
+        for sid in sids {
+            let stripe = &cluster.meta.stripes[&sid];
+            let failed = cluster.meta.failed_blocks(stripe);
+            if failed.is_empty() {
+                continue;
+            }
+            self.seq += 1;
+            self.heap.push(Job {
+                margin: tol - failed.len() as isize,
+                failures: failed.len(),
+                seq: self.seq,
+                stripe: sid,
+                blocks: failed,
+            });
+        }
+    }
+
+    /// Pop and execute the riskiest pending job. `Ok(None)` if idle.
+    pub fn run_one(&mut self, cluster: &mut Cluster) -> anyhow::Result<Option<RepairReport>> {
+        let Some(job) = self.heap.pop() else { return Ok(None) };
+        let report = cluster.repair_stripe(job.stripe, &job.blocks)?;
+        Ok(Some(report))
+    }
+
+    /// Drain the whole queue; returns reports in execution order.
+    pub fn drain(&mut self, cluster: &mut Cluster) -> anyhow::Result<Vec<RepairReport>> {
+        let mut out = Vec::new();
+        while let Some(rep) = self.run_one(cluster)? {
+            out.push(rep);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Cluster, ClusterConfig};
+    use crate::codes::SchemeKind;
+
+    fn cluster(stripes: usize) -> Cluster {
+        let mut c = Cluster::new(ClusterConfig {
+            num_datanodes: 14,
+            block_size: 1024,
+            kind: SchemeKind::CpAzure,
+            k: 6,
+            r: 2,
+            p: 2,
+            ..Default::default()
+        });
+        c.fill_random_stripes(stripes, 0x77);
+        c
+    }
+
+    #[test]
+    fn riskier_stripe_repairs_first() {
+        let mut c = cluster(3);
+        // stripe 1 loses two blocks, stripes 0 and 2 lose one each
+        let s1 = c.meta.stripes[&1].block_nodes[0];
+        let s1b = c.meta.stripes[&1].block_nodes[3];
+        let s0 = c.meta.stripes[&0].block_nodes[1];
+        for v in [s1, s1b, s0] {
+            c.fail_node(v);
+        }
+        let mut q = RepairQueue::new();
+        q.scan(&c);
+        // queue covers every degraded stripe in the cluster
+        assert!(q.len() >= 2);
+        let first = q.run_one(&mut c).unwrap().unwrap();
+        assert_eq!(first.stripe, 1, "two-failure stripe must repair first");
+        let rest = q.drain(&mut c).unwrap();
+        assert!(!rest.is_empty());
+        // everything clean afterwards
+        for v in [s1, s1b, s0] {
+            c.restore_node(v);
+        }
+        for sid in 0..3u64 {
+            assert!(c.scrub_stripe(sid).unwrap());
+        }
+    }
+
+    #[test]
+    fn empty_queue_is_idle() {
+        let mut c = cluster(1);
+        let mut q = RepairQueue::new();
+        q.scan(&c);
+        assert!(q.is_empty());
+        assert!(q.run_one(&mut c).unwrap().is_none());
+    }
+
+    #[test]
+    fn rescan_is_idempotent() {
+        let mut c = cluster(2);
+        let v = c.meta.stripes[&0].block_nodes[0];
+        c.fail_node(v);
+        let mut q = RepairQueue::new();
+        q.scan(&c);
+        let n1 = q.len();
+        q.scan(&c);
+        assert_eq!(q.len(), n1);
+        q.drain(&mut c).unwrap();
+        q.scan(&c);
+        assert!(q.is_empty(), "repaired stripes must not requeue");
+    }
+}

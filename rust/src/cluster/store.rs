@@ -1,0 +1,232 @@
+//! Block storage backends for datanodes (§V-A: "data nodes store data
+//! and parity blocks").
+//!
+//! * [`MemStore`] — in-memory map; default for experiments (the figures
+//!   measure network transfer under the netsim, not disk).
+//! * [`DiskStore`] — one file per block under a node-local directory;
+//!   persists across datanode "crashes" the way a real disk does.
+
+use super::metadata::BlockKey;
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+/// Minimal storage interface a datanode thread drives.
+pub trait BlockStore: Send {
+    fn put(&mut self, key: BlockKey, data: Vec<u8>) -> std::io::Result<()>;
+    fn get(&self, key: BlockKey) -> std::io::Result<Option<Vec<u8>>>;
+    /// Read `[off, off+len)` of a block; `None` if absent or out of range.
+    fn get_segment(&self, key: BlockKey, off: usize, len: usize)
+        -> std::io::Result<Option<Vec<u8>>>;
+    fn delete(&mut self, key: BlockKey) -> std::io::Result<()>;
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Storage backend selector for [`super::ClusterConfig`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum StoreKind {
+    Mem,
+    /// Root directory; each datanode gets `<root>/node-<id>/`.
+    Disk(PathBuf),
+}
+
+/// In-memory store.
+#[derive(Default)]
+pub struct MemStore {
+    blocks: HashMap<BlockKey, Vec<u8>>,
+}
+
+impl BlockStore for MemStore {
+    fn put(&mut self, key: BlockKey, data: Vec<u8>) -> std::io::Result<()> {
+        self.blocks.insert(key, data);
+        Ok(())
+    }
+
+    fn get(&self, key: BlockKey) -> std::io::Result<Option<Vec<u8>>> {
+        Ok(self.blocks.get(&key).cloned())
+    }
+
+    fn get_segment(
+        &self,
+        key: BlockKey,
+        off: usize,
+        len: usize,
+    ) -> std::io::Result<Option<Vec<u8>>> {
+        Ok(self
+            .blocks
+            .get(&key)
+            .filter(|d| off + len <= d.len())
+            .map(|d| d[off..off + len].to_vec()))
+    }
+
+    fn delete(&mut self, key: BlockKey) -> std::io::Result<()> {
+        self.blocks.remove(&key);
+        Ok(())
+    }
+
+    fn len(&self) -> usize {
+        self.blocks.len()
+    }
+}
+
+/// One-file-per-block disk store.
+pub struct DiskStore {
+    dir: PathBuf,
+    /// Index of present blocks (avoids directory scans on the hot path).
+    index: HashMap<BlockKey, usize>, // value = block length
+}
+
+impl DiskStore {
+    pub fn open(dir: PathBuf) -> std::io::Result<Self> {
+        std::fs::create_dir_all(&dir)?;
+        let mut index = HashMap::new();
+        for entry in std::fs::read_dir(&dir)? {
+            let entry = entry?;
+            if let Some(key) = Self::parse_name(&entry.file_name().to_string_lossy()) {
+                index.insert(key, entry.metadata()?.len() as usize);
+            }
+        }
+        Ok(Self { dir, index })
+    }
+
+    fn file_name(key: BlockKey) -> String {
+        format!("{:016x}_{:08x}.blk", key.stripe, key.index)
+    }
+
+    fn parse_name(name: &str) -> Option<BlockKey> {
+        let stem = name.strip_suffix(".blk")?;
+        let (s, i) = stem.split_once('_')?;
+        Some(BlockKey {
+            stripe: u64::from_str_radix(s, 16).ok()?,
+            index: u32::from_str_radix(i, 16).ok()?,
+        })
+    }
+
+    fn path(&self, key: BlockKey) -> PathBuf {
+        self.dir.join(Self::file_name(key))
+    }
+}
+
+impl BlockStore for DiskStore {
+    fn put(&mut self, key: BlockKey, data: Vec<u8>) -> std::io::Result<()> {
+        // write-then-rename for crash atomicity
+        let tmp = self.dir.join(format!(".tmp-{}", Self::file_name(key)));
+        std::fs::write(&tmp, &data)?;
+        std::fs::rename(&tmp, self.path(key))?;
+        self.index.insert(key, data.len());
+        Ok(())
+    }
+
+    fn get(&self, key: BlockKey) -> std::io::Result<Option<Vec<u8>>> {
+        if !self.index.contains_key(&key) {
+            return Ok(None);
+        }
+        Ok(Some(std::fs::read(self.path(key))?))
+    }
+
+    fn get_segment(
+        &self,
+        key: BlockKey,
+        off: usize,
+        len: usize,
+    ) -> std::io::Result<Option<Vec<u8>>> {
+        use std::io::{Read, Seek, SeekFrom};
+        let Some(&blen) = self.index.get(&key) else { return Ok(None) };
+        if off + len > blen {
+            return Ok(None);
+        }
+        let mut f = std::fs::File::open(self.path(key))?;
+        f.seek(SeekFrom::Start(off as u64))?;
+        let mut buf = vec![0u8; len];
+        f.read_exact(&mut buf)?;
+        Ok(Some(buf))
+    }
+
+    fn delete(&mut self, key: BlockKey) -> std::io::Result<()> {
+        if self.index.remove(&key).is_some() {
+            let _ = std::fs::remove_file(self.path(key));
+        }
+        Ok(())
+    }
+
+    fn len(&self) -> usize {
+        self.index.len()
+    }
+}
+
+/// Construct a store for datanode `id` under the configured kind.
+pub fn make_store(kind: &StoreKind, id: usize) -> Box<dyn BlockStore> {
+    match kind {
+        StoreKind::Mem => Box::new(MemStore::default()),
+        StoreKind::Disk(root) => Box::new(
+            DiskStore::open(root.join(format!("node-{id}"))).expect("open disk store"),
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Prng;
+
+    fn key(i: u32) -> BlockKey {
+        BlockKey { stripe: 7, index: i }
+    }
+
+    fn exercise(store: &mut dyn BlockStore) {
+        let mut rng = Prng::new(3);
+        let data = rng.bytes(5000);
+        store.put(key(0), data.clone()).unwrap();
+        assert_eq!(store.get(key(0)).unwrap().unwrap(), data);
+        assert_eq!(store.get(key(1)).unwrap(), None);
+        assert_eq!(
+            store.get_segment(key(0), 100, 50).unwrap().unwrap(),
+            &data[100..150]
+        );
+        assert_eq!(store.get_segment(key(0), 4990, 50).unwrap(), None);
+        assert_eq!(store.len(), 1);
+        store.delete(key(0)).unwrap();
+        assert_eq!(store.len(), 0);
+        assert_eq!(store.get(key(0)).unwrap(), None);
+    }
+
+    #[test]
+    fn mem_store_behaviour() {
+        exercise(&mut MemStore::default());
+    }
+
+    #[test]
+    fn disk_store_behaviour() {
+        let dir = std::env::temp_dir().join(format!("cp-lrc-store-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        exercise(&mut DiskStore::open(dir.clone()).unwrap());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn disk_store_survives_reopen() {
+        let dir = std::env::temp_dir().join(format!("cp-lrc-reopen-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut rng = Prng::new(4);
+        let data = rng.bytes(1234);
+        {
+            let mut s = DiskStore::open(dir.clone()).unwrap();
+            s.put(key(9), data.clone()).unwrap();
+        }
+        let s = DiskStore::open(dir.clone()).unwrap();
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.get(key(9)).unwrap().unwrap(), data);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn file_name_roundtrip() {
+        let k = BlockKey { stripe: 0xABCDEF, index: 300 };
+        let name = DiskStore::file_name(k);
+        assert_eq!(DiskStore::parse_name(&name), Some(k));
+        assert_eq!(DiskStore::parse_name("garbage.blk"), None);
+        assert_eq!(DiskStore::parse_name("nope"), None);
+    }
+}

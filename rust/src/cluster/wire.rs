@@ -1,0 +1,169 @@
+//! Wire protocol for datanode RPC over TCP (the offline toolchain has no
+//! serde, so framing is hand-rolled): length-prefixed frames with a
+//! 1-byte opcode and fixed-width little-endian fields.
+//!
+//! Frame layout:
+//! ```text
+//! [u32 frame_len][u8 op][u64 stripe][u32 index][u64 off][u64 len][payload…]
+//! ```
+//! Responses reuse the framing with response opcodes. The protocol is
+//! deliberately minimal — exactly what [`super::datanode::Request`] needs.
+
+use super::metadata::BlockKey;
+use std::io::{Read, Write};
+
+pub const OP_PUT: u8 = 1;
+pub const OP_GET: u8 = 2;
+pub const OP_GET_SEGMENT: u8 = 3;
+pub const OP_DELETE: u8 = 4;
+pub const OP_COUNT: u8 = 5;
+pub const OP_PING: u8 = 6;
+pub const OP_SHUTDOWN: u8 = 7;
+
+pub const RESP_OK: u8 = 128;
+pub const RESP_DATA: u8 = 129;
+pub const RESP_COUNT: u8 = 130;
+pub const RESP_NOT_FOUND: u8 = 131;
+pub const RESP_UNAVAILABLE: u8 = 132;
+
+/// A decoded frame (request or response).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Frame {
+    pub op: u8,
+    pub key: BlockKey,
+    pub off: u64,
+    pub len: u64,
+    pub payload: Vec<u8>,
+}
+
+impl Frame {
+    pub fn new(op: u8) -> Self {
+        Self { op, key: BlockKey { stripe: 0, index: 0 }, off: 0, len: 0, payload: Vec::new() }
+    }
+
+    pub fn with_key(mut self, key: BlockKey) -> Self {
+        self.key = key;
+        self
+    }
+
+    pub fn with_range(mut self, off: u64, len: u64) -> Self {
+        self.off = off;
+        self.len = len;
+        self
+    }
+
+    pub fn with_payload(mut self, payload: Vec<u8>) -> Self {
+        self.payload = payload;
+        self
+    }
+
+    /// Serialize into a frame (including the length prefix).
+    pub fn encode(&self) -> Vec<u8> {
+        let body_len = 1 + 8 + 4 + 8 + 8 + self.payload.len();
+        let mut buf = Vec::with_capacity(4 + body_len);
+        buf.extend_from_slice(&(body_len as u32).to_le_bytes());
+        buf.push(self.op);
+        buf.extend_from_slice(&self.key.stripe.to_le_bytes());
+        buf.extend_from_slice(&self.key.index.to_le_bytes());
+        buf.extend_from_slice(&self.off.to_le_bytes());
+        buf.extend_from_slice(&self.len.to_le_bytes());
+        buf.extend_from_slice(&self.payload);
+        buf
+    }
+
+    /// Read one frame from a stream. Returns `None` on clean EOF.
+    pub fn read_from(r: &mut impl Read) -> std::io::Result<Option<Frame>> {
+        let mut lenb = [0u8; 4];
+        match r.read_exact(&mut lenb) {
+            Ok(()) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+            Err(e) => return Err(e),
+        }
+        let body_len = u32::from_le_bytes(lenb) as usize;
+        if body_len < 29 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("frame too short: {body_len}"),
+            ));
+        }
+        let mut body = vec![0u8; body_len];
+        r.read_exact(&mut body)?;
+        let op = body[0];
+        let stripe = u64::from_le_bytes(body[1..9].try_into().unwrap());
+        let index = u32::from_le_bytes(body[9..13].try_into().unwrap());
+        let off = u64::from_le_bytes(body[13..21].try_into().unwrap());
+        let len = u64::from_le_bytes(body[21..29].try_into().unwrap());
+        let payload = body[29..].to_vec();
+        Ok(Some(Frame { op, key: BlockKey { stripe, index }, off, len, payload }))
+    }
+
+    /// Write this frame to a stream.
+    pub fn write_to(&self, w: &mut impl Write) -> std::io::Result<()> {
+        w.write_all(&self.encode())?;
+        w.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Prng;
+
+    fn key() -> BlockKey {
+        BlockKey { stripe: 0xDEAD_BEEF_0123, index: 42 }
+    }
+
+    #[test]
+    fn roundtrip_all_ops() {
+        let mut rng = Prng::new(1);
+        for op in [OP_PUT, OP_GET, OP_GET_SEGMENT, RESP_DATA, RESP_OK] {
+            let f = Frame::new(op)
+                .with_key(key())
+                .with_range(1234, 5678)
+                .with_payload(rng.bytes(100));
+            let bytes = f.encode();
+            let mut cur = std::io::Cursor::new(bytes);
+            let g = Frame::read_from(&mut cur).unwrap().unwrap();
+            assert_eq!(f, g);
+            // stream fully consumed
+            assert!(Frame::read_from(&mut cur).unwrap().is_none());
+        }
+    }
+
+    #[test]
+    fn empty_payload_roundtrip() {
+        let f = Frame::new(OP_PING);
+        let mut cur = std::io::Cursor::new(f.encode());
+        assert_eq!(Frame::read_from(&mut cur).unwrap().unwrap(), f);
+    }
+
+    #[test]
+    fn back_to_back_frames() {
+        let a = Frame::new(OP_GET).with_key(key());
+        let b = Frame::new(RESP_DATA).with_payload(vec![9; 10]);
+        let mut buf = a.encode();
+        buf.extend(b.encode());
+        let mut cur = std::io::Cursor::new(buf);
+        assert_eq!(Frame::read_from(&mut cur).unwrap().unwrap(), a);
+        assert_eq!(Frame::read_from(&mut cur).unwrap().unwrap(), b);
+        assert!(Frame::read_from(&mut cur).unwrap().is_none());
+    }
+
+    #[test]
+    fn short_frame_rejected() {
+        let mut buf = 5u32.to_le_bytes().to_vec();
+        buf.extend_from_slice(&[0u8; 5]);
+        let mut cur = std::io::Cursor::new(buf);
+        assert!(Frame::read_from(&mut cur).is_err());
+    }
+
+    #[test]
+    fn large_payload() {
+        let mut rng = Prng::new(2);
+        let f = Frame::new(OP_PUT).with_key(key()).with_payload(rng.bytes(1 << 20));
+        let mut cur = std::io::Cursor::new(f.encode());
+        let g = Frame::read_from(&mut cur).unwrap().unwrap();
+        assert_eq!(g.payload.len(), 1 << 20);
+        assert_eq!(f, g);
+    }
+}

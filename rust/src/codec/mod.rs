@@ -1,0 +1,267 @@
+//! Stripe codec: turn k data blocks into a full n-block stripe and
+//! reconstruct arbitrary erasures.
+//!
+//! Two encode paths share one semantic:
+//! * **native** — [`crate::gf::mul_acc_slice`] over the generator rows
+//!   (always available, used for odd shapes and as the oracle);
+//! * **PJRT** — the AOT-compiled GF-matmul artifact produced by the
+//!   Python L2/L1 layers, loaded by [`crate::runtime`]; selected when an
+//!   artifact with a compatible (rows, k) envelope is registered.
+//!
+//! Decode is a GF matmul too: select k surviving generator rows, invert,
+//! and combine — so both paths serve decode as well.
+
+use crate::codes::Scheme;
+use crate::gf::{self, GfMatrix};
+use crate::runtime::GfMatmulExec;
+use std::sync::Arc;
+
+/// Encoder/decoder for one scheme. Cheap to clone (shares the scheme).
+#[derive(Clone)]
+pub struct StripeCodec {
+    pub scheme: Arc<Scheme>,
+    /// Optional AOT GF-matmul executable (PJRT path).
+    exec: Option<Arc<GfMatmulExec>>,
+}
+
+impl StripeCodec {
+    pub fn new(scheme: Scheme) -> Self {
+        Self { scheme: Arc::new(scheme), exec: None }
+    }
+
+    /// Attach an AOT-compiled GF matmul; encode/decode use it whenever the
+    /// shape fits its envelope.
+    pub fn with_exec(mut self, exec: Arc<GfMatmulExec>) -> Self {
+        self.exec = Some(exec);
+        self
+    }
+
+    /// Parity-row coefficient matrix ((r+p) × k): generator rows k..n.
+    pub fn parity_matrix(&self) -> GfMatrix {
+        let s = &self.scheme;
+        let rows: Vec<usize> = (s.k..s.n()).collect();
+        s.generator.select_rows(&rows)
+    }
+
+    /// Encode: data blocks (each `block_len` bytes) → the r+p parity
+    /// blocks, in block-index order (G1..Gr, L1..Lp).
+    pub fn encode(&self, data: &[Vec<u8>]) -> Vec<Vec<u8>> {
+        let s = &self.scheme;
+        assert_eq!(data.len(), s.k, "need exactly k data blocks");
+        let coeff = self.parity_matrix();
+        self.gf_matmul(&coeff, data)
+    }
+
+    /// Full stripe = data ++ encode(data).
+    pub fn encode_stripe(&self, data: &[Vec<u8>]) -> Vec<Vec<u8>> {
+        let mut stripe = data.to_vec();
+        stripe.extend(self.encode(data));
+        stripe
+    }
+
+    /// Reconstruct the blocks in `erased` given at least k survivors.
+    /// `blocks[b]` must be `Some` for every surviving block that the
+    /// decoder may read. Returns the reconstructed blocks in `erased`
+    /// order. This is the paper's *global repair* ("decoding", §V-B).
+    pub fn decode(
+        &self,
+        blocks: &[Option<Vec<u8>>],
+        erased: &[usize],
+    ) -> anyhow::Result<Vec<Vec<u8>>> {
+        let s = &self.scheme;
+        let n = s.n();
+        anyhow::ensure!(blocks.len() == n, "expected {n} block slots");
+        let surviving: Vec<usize> = (0..n)
+            .filter(|&b| blocks[b].is_some() && !erased.contains(&b))
+            .collect();
+        anyhow::ensure!(surviving.len() >= s.k, "not enough survivors");
+
+        // Pick k survivors whose generator rows are invertible. Greedy:
+        // take rows in order, extending while rank grows.
+        let chosen = choose_invertible_rows(&s.generator, &surviving, s.k)
+            .ok_or_else(|| anyhow::anyhow!("surviving rows do not span data space"))?;
+        let sub = s.generator.select_rows(&chosen);
+        let inv = sub.inverse().expect("chosen rows are invertible by construction");
+
+        // data_j = Σ_i inv[j][i] * chosen_block_i ; then erased block b =
+        // generator.row(b) · data. Fuse: erased_b = (row_b · inv) · chosen.
+        let mut out = Vec::with_capacity(erased.len());
+        for &e in erased {
+            let row = s.generator.row(e);
+            // w = row · inv (1 × k)
+            let mut w = vec![0u8; s.k];
+            for i in 0..s.k {
+                if row[i] == 0 {
+                    continue;
+                }
+                for j in 0..s.k {
+                    w[j] ^= gf::mul(row[i], inv.get(i, j));
+                }
+            }
+            let srcs: Vec<&[u8]> = chosen
+                .iter()
+                .map(|&b| blocks[b].as_deref().expect("survivor present"))
+                .collect();
+            let mut buf = vec![0u8; srcs.first().map_or(0, |s| s.len())];
+            gf::combine(&w, &srcs, &mut buf);
+            out.push(buf);
+        }
+        Ok(out)
+    }
+
+    /// GF matmul `coeff (m×k) · data (k blocks)` → m blocks, via the PJRT
+    /// artifact when its envelope fits, else the native kernels.
+    pub fn gf_matmul(&self, coeff: &GfMatrix, data: &[Vec<u8>]) -> Vec<Vec<u8>> {
+        if let Some(exec) = &self.exec {
+            if exec.fits(coeff.rows(), coeff.cols()) {
+                return exec
+                    .run(coeff, data)
+                    .expect("PJRT gf_matmul execution failed");
+            }
+        }
+        native_gf_matmul(coeff, data)
+    }
+}
+
+/// Native GF matmul over blocks: `out[m] = Σ_j coeff[m][j] * data[j]`.
+pub fn native_gf_matmul(coeff: &GfMatrix, data: &[Vec<u8>]) -> Vec<Vec<u8>> {
+    assert_eq!(coeff.cols(), data.len());
+    let len = data.first().map_or(0, |d| d.len());
+    (0..coeff.rows())
+        .map(|m| {
+            let mut out = vec![0u8; len];
+            for (j, d) in data.iter().enumerate() {
+                debug_assert_eq!(d.len(), len, "ragged data blocks");
+                gf::mul_acc_slice(coeff.get(m, j), d, &mut out);
+            }
+            out
+        })
+        .collect()
+}
+
+/// Greedily choose `k` of the candidate rows such that the selected
+/// generator submatrix is invertible. Returns `None` if the candidates
+/// don't span the data space.
+pub fn choose_invertible_rows(
+    gen: &GfMatrix,
+    candidates: &[usize],
+    k: usize,
+) -> Option<Vec<usize>> {
+    let mut chosen: Vec<usize> = Vec::with_capacity(k);
+    let mut rank = 0;
+    for &b in candidates {
+        chosen.push(b);
+        let r = gen.select_rows(&chosen).rank();
+        if r > rank {
+            rank = r;
+            if rank == k {
+                return Some(chosen);
+            }
+        } else {
+            chosen.pop();
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codes::SchemeKind;
+    use crate::prng::Prng;
+    use crate::proptest_lite::check;
+
+    fn codec(kind: SchemeKind, k: usize, r: usize, p: usize) -> StripeCodec {
+        StripeCodec::new(Scheme::new(kind, k, r, p))
+    }
+
+    #[test]
+    fn encode_then_decode_identity() {
+        let mut rng = Prng::new(5);
+        for kind in SchemeKind::ALL_LRC {
+            let c = codec(kind, 6, 2, 2);
+            let data: Vec<Vec<u8>> = (0..6).map(|_| rng.bytes(128)).collect();
+            let stripe = c.encode_stripe(&data);
+            assert_eq!(stripe.len(), c.scheme.n());
+            // erase up to guaranteed tolerance, decode, compare
+            let t = c.scheme.guaranteed_tolerance;
+            let erased = rng.distinct(c.scheme.n(), t);
+            let mut blocks: Vec<Option<Vec<u8>>> =
+                stripe.iter().cloned().map(Some).collect();
+            for &e in &erased {
+                blocks[e] = None;
+            }
+            let rec = c.decode(&blocks, &erased).unwrap();
+            for (i, &e) in erased.iter().enumerate() {
+                assert_eq!(rec[i], stripe[e], "{kind:?} block {e}");
+            }
+        }
+    }
+
+    #[test]
+    fn decode_random_patterns_property() {
+        check("decode-random-patterns", 60, 0xDEC0DE, |rng| {
+            let (k, r, p) = crate::PARAMS[rng.below(5)]; // P1..P5 keep it fast
+            let kind = SchemeKind::ALL_LRC[rng.below(6)];
+            let c = codec(kind, k, r, p);
+            let data: Vec<Vec<u8>> = (0..k).map(|_| rng.bytes(64)).collect();
+            let stripe = c.encode_stripe(&data);
+            let f = 1 + rng.below(c.scheme.guaranteed_tolerance);
+            let erased = rng.distinct(c.scheme.n(), f);
+            let mut blocks: Vec<Option<Vec<u8>>> =
+                stripe.iter().cloned().map(Some).collect();
+            for &e in &erased {
+                blocks[e] = None;
+            }
+            let rec = c.decode(&blocks, &erased).map_err(|e| e.to_string())?;
+            for (i, &e) in erased.iter().enumerate() {
+                crate::prop_assert!(rec[i] == stripe[e], "block {e} mismatch");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn decode_data_only_equivalent_to_original() {
+        // Erase ALL parity and some data: decoder must still work as long
+        // as k survivors exist and span.
+        let mut rng = Prng::new(6);
+        let c = codec(SchemeKind::CpAzure, 6, 2, 2);
+        let data: Vec<Vec<u8>> = (0..6).map(|_| rng.bytes(32)).collect();
+        let stripe = c.encode_stripe(&data);
+        // erase D1 and D4; give the decoder everything else
+        let erased = [0usize, 3];
+        let mut blocks: Vec<Option<Vec<u8>>> = stripe.iter().cloned().map(Some).collect();
+        blocks[0] = None;
+        blocks[3] = None;
+        let rec = c.decode(&blocks, &erased).unwrap();
+        assert_eq!(rec[0], stripe[0]);
+        assert_eq!(rec[1], stripe[3]);
+    }
+
+    #[test]
+    fn native_matmul_zero_and_identity_coeffs() {
+        let mut rng = Prng::new(7);
+        let data: Vec<Vec<u8>> = (0..3).map(|_| rng.bytes(16)).collect();
+        let id = GfMatrix::identity(3);
+        let out = native_gf_matmul(&id, &data);
+        assert_eq!(out, data);
+        let z = GfMatrix::zeros(2, 3);
+        let out = native_gf_matmul(&z, &data);
+        assert!(out.iter().all(|b| b.iter().all(|&x| x == 0)));
+    }
+
+    #[test]
+    fn choose_invertible_skips_dependent_rows() {
+        let c = codec(SchemeKind::CpAzure, 6, 2, 2);
+        // survivors: L1, L2, G2 are cascaded (dependent): L1+L2 = G2.
+        // candidates = D2..D6 dropped; use L1,L2,G2,D1,D2,D3 + more
+        let cand = vec![8usize, 9, 7, 0, 1, 2, 3, 4];
+        let chosen = choose_invertible_rows(&c.scheme.generator, &cand, 6).unwrap();
+        assert_eq!(chosen.len(), 6);
+        let sub = c.scheme.generator.select_rows(&chosen);
+        assert!(sub.inverse().is_some());
+        // G2 must have been skipped (dependent on L1+L2)
+        assert!(!chosen.contains(&7));
+    }
+}

@@ -1,0 +1,543 @@
+//! Constructors for every scheme. All global parities are Cauchy rows
+//! (`α_{i,j} = (a_i + b_j)^{-1}`, `a_i = i`, `b_j = k + j`), which makes
+//! the base stripe MDS for every (k, r) we use (k + r ≤ 256). See
+//! DESIGN.md for the Vandermonde→Cauchy substitution note.
+
+use super::{Equation, Scheme, SchemeKind};
+use crate::gf::{self, GfMatrix};
+
+/// Cauchy evaluation points for a (k, r) base stripe.
+fn cauchy_points(k: usize, r: usize) -> (Vec<u8>, Vec<u8>) {
+    assert!(k + r <= 256, "k + r must fit in GF(2^8)");
+    let xs: Vec<u8> = (0..k as u16).map(|i| i as u8).collect();
+    let ys: Vec<u8> = (k as u16..(k + r) as u16).map(|i| i as u8).collect();
+    (xs, ys)
+}
+
+/// α_{i,j} coefficient of data block i in global parity j.
+fn alpha(k: usize, i: usize, j: usize) -> u8 {
+    gf::inv((i as u8) ^ ((k + j) as u8))
+}
+
+/// Base generator: identity over data rows + Cauchy global-parity rows.
+/// Returns an (k + r) × k matrix; callers append local-parity rows.
+fn base_generator(k: usize, r: usize) -> GfMatrix {
+    let (xs, ys) = cauchy_points(k, r);
+    let cauchy = GfMatrix::cauchy(&ys, &xs); // r x k: row j = α_{·,j}
+    let mut g = GfMatrix::zeros(k + r, k);
+    for i in 0..k {
+        g.set(i, i, 1);
+    }
+    for j in 0..r {
+        for i in 0..k {
+            g.set(k + j, i, cauchy.get(j, i));
+        }
+    }
+    g
+}
+
+/// The r global-parity definition equations.
+fn global_equations(k: usize, r: usize) -> Vec<Equation> {
+    (0..r)
+        .map(|j| {
+            let mut terms: Vec<(usize, u8)> = vec![(k + j, 1)];
+            terms.extend((0..k).map(|i| (i, alpha(k, i, j))));
+            Equation { terms, local: false }
+        })
+        .collect()
+}
+
+/// Split `items` into `p` contiguous runs whose sizes differ by at most
+/// one; the *later* groups receive the larger sizes (matches the paper's
+/// (6,2,2) CP-Uniform example where the second group has 4 items).
+fn even_contiguous(items: &[usize], p: usize) -> Vec<Vec<usize>> {
+    assert!(p >= 1 && p <= items.len());
+    let total = items.len();
+    let small = total / p;
+    let n_large = total % p;
+    let mut groups = Vec::with_capacity(p);
+    let mut at = 0;
+    for j in 0..p {
+        let sz = if j < p - n_large { small } else { small + 1 };
+        groups.push(items[at..at + sz].to_vec());
+        at += sz;
+    }
+    groups
+}
+
+/// Append a local-parity row computed as `Σ coeff · row(member)` and the
+/// matching group equation.
+fn push_local_parity(
+    gen: &mut Vec<Vec<u8>>,
+    eqs: &mut Vec<Equation>,
+    members: &[(usize, u8)],
+    k: usize,
+    lp_block: usize,
+) {
+    let mut row = vec![0u8; k];
+    for &(b, c) in members {
+        for (col, v) in row.iter_mut().enumerate() {
+            *v ^= gf::mul(c, gen[b][col]);
+        }
+    }
+    gen.push(row);
+    let mut terms = vec![(lp_block, 1u8)];
+    terms.extend_from_slice(members);
+    eqs.push(Equation { terms, local: true });
+}
+
+/// Assemble a [`Scheme`] from the base generator plus per-group member
+/// lists with coefficients.
+fn assemble(
+    kind: SchemeKind,
+    k: usize,
+    r: usize,
+    member_groups: Vec<Vec<(usize, u8)>>,
+    cascade: bool,
+    guaranteed_tolerance: usize,
+) -> Scheme {
+    let p = member_groups.len();
+    let base = base_generator(k, r);
+    let mut gen: Vec<Vec<u8>> = (0..k + r).map(|b| base.row(b).to_vec()).collect();
+    let mut local_eqs = Vec::new();
+    for (j, members) in member_groups.iter().enumerate() {
+        push_local_parity(&mut gen, &mut local_eqs, members, k, k + r + j);
+    }
+    if cascade {
+        // L1 + ... + Lp + Gr = 0 (eq. (4)/(9)).
+        let mut terms: Vec<(usize, u8)> = (0..p).map(|j| (k + r + j, 1u8)).collect();
+        terms.push((k + r - 1, 1));
+        local_eqs.push(Equation { terms, local: true });
+    }
+    let scheme = Scheme {
+        kind,
+        k,
+        r,
+        p,
+        generator: GfMatrix::from_rows(&gen),
+        local_eqs,
+        global_eqs: global_equations(k, r),
+        groups: member_groups
+            .iter()
+            .map(|g| g.iter().map(|&(b, _)| b).collect())
+            .collect(),
+        guaranteed_tolerance,
+    };
+    debug_assert!(scheme.equations_hold(), "{kind:?} ({k},{r}) equations broken");
+    scheme
+}
+
+/// Plain (k, r) Cauchy-RS MDS stripe — the §IV-B base. No locality.
+pub fn rs(k: usize, r: usize) -> Scheme {
+    assemble(SchemeKind::Rs, k, r, Vec::new(), false, r)
+}
+
+/// Azure LRC (§II-B): p even *data* groups, XOR local parities.
+pub fn azure(k: usize, r: usize, p: usize) -> Scheme {
+    let data: Vec<usize> = (0..k).collect();
+    let groups = even_contiguous(&data, p)
+        .into_iter()
+        .map(|g| g.into_iter().map(|b| (b, 1u8)).collect())
+        .collect();
+    assemble(SchemeKind::AzureLrc, k, r, groups, false, r + 1)
+}
+
+/// Azure LRC+1 (§II-B): a (k, r, p−1) Azure LRC plus one XOR local parity
+/// covering the r global parities.
+pub fn azure_plus1(k: usize, r: usize, p: usize) -> Scheme {
+    assert!(p >= 2, "Azure LRC+1 needs at least one data group plus the parity group");
+    let data: Vec<usize> = (0..k).collect();
+    let mut groups: Vec<Vec<(usize, u8)>> = even_contiguous(&data, p - 1)
+        .into_iter()
+        .map(|g| g.into_iter().map(|b| (b, 1u8)).collect())
+        .collect();
+    groups.push((k..k + r).map(|b| (b, 1u8)).collect());
+    assemble(SchemeKind::AzureLrcPlus1, k, r, groups, false, r + 1)
+}
+
+/// Optimal Cauchy LRC (§II-B): p even data groups; each local parity is
+/// the XOR of its group's data blocks plus the XOR of *all* global
+/// parities, which buys optimal minimum distance r+2 (tolerates r+1).
+pub fn optimal_cauchy(k: usize, r: usize, p: usize) -> Scheme {
+    let data: Vec<usize> = (0..k).collect();
+    let groups = even_contiguous(&data, p)
+        .into_iter()
+        .map(|g| {
+            let mut m: Vec<(usize, u8)> = g.into_iter().map(|b| (b, 1u8)).collect();
+            m.extend((k..k + r).map(|b| (b, 1u8)));
+            m
+        })
+        .collect();
+    assemble(SchemeKind::OptimalCauchy, k, r, groups, false, r + 1)
+}
+
+/// Distribute data contiguously/evenly into p groups, then deal the given
+/// parity blocks round-robin onto the currently-smallest groups. This is
+/// the "uniform" grouping that reproduces Google's balanced localities
+/// (and the paper's Table III Uniform rows — see codes::tests).
+fn uniform_groups(k: usize, p: usize, parities: &[usize]) -> Vec<Vec<usize>> {
+    let data: Vec<usize> = (0..k).collect();
+    let mut groups = even_contiguous(&data, p);
+    for &g in parities {
+        // smallest group; ties broken toward the LAST group, matching the
+        // paper's (6,2,2) CP-Uniform example (G1 lands in group 2).
+        let (j, _) = groups
+            .iter()
+            .enumerate()
+            .min_by_key(|(j, grp)| (grp.len(), p - *j))
+            .unwrap();
+        groups[j].push(g);
+    }
+    groups
+}
+
+/// Uniform Cauchy LRC (§II-B): data and all r globals grouped uniformly,
+/// XOR local parities. Tolerates any r failures (distance r+1).
+pub fn uniform_cauchy(k: usize, r: usize, p: usize) -> Scheme {
+    let parities: Vec<usize> = (k..k + r).collect();
+    let groups = uniform_groups(k, p, &parities)
+        .into_iter()
+        .map(|g| g.into_iter().map(|b| (b, 1u8)).collect())
+        .collect();
+    assemble(SchemeKind::UniformCauchy, k, r, groups, false, r)
+}
+
+/// CP-Azure (§IV-C): even data groups; local parity `Lj` uses the *last
+/// global parity's* coefficients restricted to its group (eq. (6)), so
+/// `L1 + … + Lp = Gr` by construction.
+pub fn cp_azure(k: usize, r: usize, p: usize) -> Scheme {
+    let data: Vec<usize> = (0..k).collect();
+    let groups = even_contiguous(&data, p)
+        .into_iter()
+        .map(|g| g.into_iter().map(|i| (i, alpha(k, i, r - 1))).collect())
+        .collect();
+    assemble(SchemeKind::CpAzure, k, r, groups, true, r)
+}
+
+/// The appendix coefficients for CP-Uniform: nonzero γ̄_i, η̄_j with
+/// `γ̄_i + Σ_j η̄_j α_{i,j} = 0` (Theorem 1), normalized by η̄_r so that
+/// `Gr = Σ γ_i D_i + Σ_{j<r} η_j G_j` (eq. (10)).
+pub fn cp_uniform_coefficients(k: usize, r: usize) -> (Vec<u8>, Vec<u8>) {
+    let (xs, ys) = cauchy_points(k, r);
+    // γ̄_i = Π_z (a_i + b_z)^{-1}
+    let gamma_bar: Vec<u8> = xs
+        .iter()
+        .map(|&a| ys.iter().fold(1u8, |acc, &b| gf::mul(acc, gf::inv(a ^ b))))
+        .collect();
+    // η̄_j = Π_{z≠j} (b_j + b_z)^{-1}
+    let eta_bar: Vec<u8> = (0..r)
+        .map(|j| {
+            (0..r)
+                .filter(|&z| z != j)
+                .fold(1u8, |acc, z| gf::mul(acc, gf::inv(ys[j] ^ ys[z])))
+        })
+        .collect();
+    let last = eta_bar[r - 1];
+    let gamma: Vec<u8> = gamma_bar.iter().map(|&g| gf::div(g, last)).collect();
+    let eta: Vec<u8> = eta_bar[..r - 1].iter().map(|&e| gf::div(e, last)).collect();
+    (gamma, eta)
+}
+
+/// CP-Uniform (§IV-D): the k data blocks and the first r−1 globals are
+/// grouped uniformly; member coefficients come from
+/// [`cp_uniform_coefficients`], so `L1 + … + Lp = Gr` (eq. (9)).
+pub fn cp_uniform(k: usize, r: usize, p: usize) -> Scheme {
+    let (gamma, eta) = cp_uniform_coefficients(k, r);
+    let parities: Vec<usize> = (k..k + r - 1).collect();
+    let groups = uniform_groups(k, p, &parities)
+        .into_iter()
+        .map(|g| {
+            g.into_iter()
+                .map(|b| {
+                    let c = if b < k { gamma[b] } else { eta[b - k] };
+                    (b, c)
+                })
+                .collect()
+        })
+        .collect();
+    assemble(SchemeKind::CpUniform, k, r, groups, true, r)
+}
+
+/// EXTENSION — CP applied atop Azure LRC+1 (§IV-E): p−1 CP-Azure data
+/// groups whose local parities decompose `Gr` (so `L1+…+L(p−1) = Gr`,
+/// cascading), plus one XOR local parity over the r global parities
+/// (Azure LRC+1's parity-group protection).
+pub fn cp_plus1(k: usize, r: usize, p: usize) -> Scheme {
+    assert!(p >= 3, "CP-LRC+1 needs ≥2 data groups plus the parity group");
+    let data: Vec<usize> = (0..k).collect();
+    let mut groups: Vec<Vec<(usize, u8)>> = even_contiguous(&data, p - 1)
+        .into_iter()
+        .map(|g| g.into_iter().map(|i| (i, alpha(k, i, r - 1))).collect())
+        .collect();
+    groups.push((k..k + r).map(|b| (b, 1u8)).collect());
+    let base = base_generator(k, r);
+    let mut gen: Vec<Vec<u8>> = (0..k + r).map(|b| base.row(b).to_vec()).collect();
+    let mut local_eqs = Vec::new();
+    for (j, members) in groups.iter().enumerate() {
+        push_local_parity(&mut gen, &mut local_eqs, members, k, k + r + j);
+    }
+    // cascade over the p−1 DATA-group parities only: Σ L_j = Gr
+    let mut terms: Vec<(usize, u8)> = (0..p - 1).map(|j| (k + r + j, 1u8)).collect();
+    terms.push((k + r - 1, 1));
+    local_eqs.push(Equation { terms, local: true });
+    let scheme = Scheme {
+        kind: SchemeKind::CpPlus1,
+        k,
+        r,
+        p,
+        generator: GfMatrix::from_rows(&gen),
+        local_eqs,
+        global_eqs: global_equations(k, r),
+        groups: groups.iter().map(|g| g.iter().map(|&(b, _)| b).collect()).collect(),
+        guaranteed_tolerance: r,
+    };
+    debug_assert!(scheme.equations_hold());
+    scheme
+}
+
+/// EXTENSION — CP applied atop Optimal Cauchy LRC (§IV-E): local parity
+/// `Lj` carries the `Gr` decomposition over its data group *plus* all
+/// first r−1 global parities with per-group coefficients `c_{j,m}` chosen
+/// nonzero and XOR-cancelling (`Σ_j c_{j,m} = 0`), so the cascade
+/// `ΣLj = Gr` is preserved while every group can repair any `G_m`
+/// locally — the Optimal-style "globals in every group" property.
+pub fn cp_optimal(k: usize, r: usize, p: usize) -> Scheme {
+    assert!(p >= 2 && r >= 2);
+    let data: Vec<usize> = (0..k).collect();
+    let data_groups = even_contiguous(&data, p);
+    // cancelling coefficients: c_{j,m} = x_j for j < p−1 and
+    // c_{p−1,m} = XOR of the others, with x_j distinct nonzero; retry the
+    // base point if the tail coefficient collapses to zero.
+    let mut coeffs = vec![vec![0u8; r - 1]; p];
+    for m in 0..r - 1 {
+        let mut basep = 1u8 + m as u8;
+        loop {
+            let mut tail = 0u8;
+            for (j, row) in coeffs.iter_mut().enumerate().take(p - 1) {
+                let c = gf::pow(basep, j as u32 + 1);
+                row[m] = c;
+                tail ^= c;
+            }
+            if tail != 0 {
+                coeffs[p - 1][m] = tail;
+                break;
+            }
+            basep = basep.wrapping_add(1).max(1);
+        }
+    }
+    let groups: Vec<Vec<(usize, u8)>> = data_groups
+        .iter()
+        .enumerate()
+        .map(|(j, g)| {
+            let mut m: Vec<(usize, u8)> =
+                g.iter().map(|&i| (i, alpha(k, i, r - 1))).collect();
+            m.extend((0..r - 1).map(|gm| (k + gm, coeffs[j][gm])));
+            m
+        })
+        .collect();
+    let mut scheme = assemble(SchemeKind::CpOptimal, k, r, groups, true, r);
+    scheme.guaranteed_tolerance = r;
+    scheme
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn even_contiguous_sizes() {
+        let items: Vec<usize> = (0..7).collect();
+        let g = even_contiguous(&items, 2);
+        assert_eq!(g[0], vec![0, 1, 2]);
+        assert_eq!(g[1], vec![3, 4, 5, 6]);
+        let g = even_contiguous(&(0..20).collect::<Vec<_>>(), 5);
+        assert!(g.iter().all(|x| x.len() == 4));
+    }
+
+    #[test]
+    fn theorem1_appendix_identity() {
+        // γ̄_i + Σ_j η̄_j α_{i,j} = 0, verified numerically for several (k, r).
+        for (k, r) in [(6, 2), (16, 3), (48, 4), (96, 5)] {
+            let (xs, ys) = cauchy_points(k, r);
+            let gamma_bar: Vec<u8> = xs
+                .iter()
+                .map(|&a| ys.iter().fold(1u8, |acc, &b| gf::mul(acc, gf::inv(a ^ b))))
+                .collect();
+            let eta_bar: Vec<u8> = (0..r)
+                .map(|j| {
+                    (0..r)
+                        .filter(|&z| z != j)
+                        .fold(1u8, |acc, z| gf::mul(acc, gf::inv(ys[j] ^ ys[z])))
+                })
+                .collect();
+            for i in 0..k {
+                let mut acc = gamma_bar[i];
+                for j in 0..r {
+                    acc ^= gf::mul(eta_bar[j], alpha(k, i, j));
+                }
+                assert_eq!(acc, 0, "k={k} r={r} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn cp_uniform_eq10_identity() {
+        // Gr = Σ γ_i D_i + Σ_{j<r} η_j G_j as generator rows.
+        for (k, r) in [(6, 2), (24, 2), (48, 4), (96, 5)] {
+            let (gamma, eta) = cp_uniform_coefficients(k, r);
+            assert!(gamma.iter().all(|&c| c != 0));
+            assert!(eta.iter().all(|&c| c != 0));
+            let base = base_generator(k, r);
+            for col in 0..k {
+                let mut acc = 0u8;
+                for i in 0..k {
+                    acc ^= gf::mul(gamma[i], base.get(i, col));
+                }
+                for j in 0..r - 1 {
+                    acc ^= gf::mul(eta[j], base.get(k + j, col));
+                }
+                assert_eq!(acc, base.get(k + r - 1, col), "k={k} r={r} col={col}");
+            }
+        }
+    }
+
+    #[test]
+    fn base_stripe_is_mds() {
+        // any k rows of the (k + r) base generator have rank k
+        for (k, r) in [(6, 2), (10, 3), (12, 4)] {
+            let g = base_generator(k, r);
+            // sample a handful of k-subsets deterministically: drop each
+            // possible set of r rows (choose(k+r, r) is small here).
+            let n = k + r;
+            let mut drop = vec![0usize; r];
+            fn rec(
+                g: &GfMatrix,
+                n: usize,
+                k: usize,
+                drop: &mut Vec<usize>,
+                depth: usize,
+                start: usize,
+            ) {
+                if depth == drop.len() {
+                    let keep: Vec<usize> =
+                        (0..n).filter(|b| !drop.contains(b)).collect();
+                    assert_eq!(g.select_rows(&keep).rank(), k, "drop={drop:?}");
+                    return;
+                }
+                for b in start..n {
+                    drop[depth] = b;
+                    rec(g, n, k, drop, depth + 1, b + 1);
+                }
+            }
+            rec(&g, n, k, &mut drop, 0, 0);
+        }
+    }
+
+    #[test]
+    fn azure_group_sizes_match_paper_examples() {
+        let s = azure(24, 2, 2);
+        assert_eq!(s.groups[0].len(), 12);
+        assert_eq!(s.groups[1].len(), 12);
+        let s = azure_plus1(6, 2, 2);
+        assert_eq!(s.groups.len(), 2);
+        assert_eq!(s.groups[0].len(), 6); // all data in one group
+        assert_eq!(s.groups[1], vec![6, 7]); // G1, G2
+    }
+
+    #[test]
+    fn uniform_grouping_balances_data_and_parity() {
+        // (16,3,2): data split 8/8, globals dealt to smallest → sizes 10/9.
+        let s = uniform_cauchy(16, 3, 2);
+        let mut sizes: Vec<usize> = s.groups.iter().map(|g| g.len()).collect();
+        sizes.sort_unstable();
+        assert_eq!(sizes, vec![9, 10]);
+        // every global parity is in exactly one group
+        let all: Vec<usize> = s.groups.concat();
+        for g in 16..19 {
+            assert_eq!(all.iter().filter(|&&b| b == g).count(), 1);
+        }
+    }
+
+    #[test]
+    fn cp_uniform_groups_match_paper_6_2_2() {
+        let s = cp_uniform(6, 2, 2);
+        // paper Fig 3(c): groups (D1,D2,D3) and (D4,D5,D6,G1)
+        assert_eq!(s.groups[0], vec![0, 1, 2]);
+        assert_eq!(s.groups[1], vec![3, 4, 5, 6]);
+    }
+
+    #[test]
+    fn cp_extensions_cascade_and_tolerance() {
+        // CP-LRC+1 (needs p ≥ 3) and CP-Optimal: equations hold, the
+        // cascade identity holds, and the guaranteed tolerance r is
+        // verified by exhaustive census at small parameters.
+        let plus1 = cp_plus1(8, 3, 3);
+        assert!(plus1.equations_hold());
+        // cascade spans the data-group parities only
+        for c in 0..plus1.k {
+            let mut sum = 0u8;
+            for j in 0..2 {
+                sum ^= plus1.generator.get(plus1.local_parity(j), c);
+            }
+            assert_eq!(sum, plus1.generator.get(plus1.k + plus1.r - 1, c));
+        }
+        let opt = cp_optimal(6, 3, 2);
+        assert!(opt.equations_hold());
+        for c in 0..opt.k {
+            let mut sum = 0u8;
+            for j in 0..opt.p {
+                sum ^= opt.generator.get(opt.local_parity(j), c);
+            }
+            assert_eq!(sum, opt.generator.get(opt.k + opt.r - 1, c));
+        }
+        // exhaustive tolerance census
+        for s in [&plus1, &opt] {
+            let n = s.n();
+            let t = s.guaranteed_tolerance;
+            let mut pat = vec![0usize; t];
+            fn rec(s: &Scheme, n: usize, pat: &mut Vec<usize>, d: usize, start: usize) {
+                if d == pat.len() {
+                    assert!(s.recoverable(pat), "{:?} pattern {:?}", s.kind, pat);
+                    return;
+                }
+                for b in start..n {
+                    pat[d] = b;
+                    rec(s, n, pat, d + 1, b + 1);
+                }
+            }
+            rec(s, n, &mut pat, 0, 0);
+        }
+    }
+
+    #[test]
+    fn cp_optimal_globals_repair_locally() {
+        // the Optimal-style benefit: any first global repairs from one group
+        let s = cp_optimal(6, 3, 2);
+        for m in 0..s.r - 1 {
+            let plan = crate::repair::plan_single(&s, s.k + m);
+            assert!(plan.fully_local(), "G{} should repair locally", m + 1);
+            assert!(plan.cost(s.k) < s.k);
+        }
+        // and all local-parity coefficients for globals are nonzero
+        for j in 0..s.p {
+            for m in 0..s.r - 1 {
+                let eq = &s.local_eqs[j];
+                assert!(eq.coeff(s.k + m).is_some_and(|c| c != 0));
+            }
+        }
+    }
+
+    #[test]
+    fn cp_azure_local_coeffs_are_gr_coeffs() {
+        let s = cp_azure(6, 2, 2);
+        // L1 row must equal α_{1..3, r} on its group, zero elsewhere.
+        for i in 0..3 {
+            assert_eq!(s.generator.get(8, i), alpha(6, i, 1));
+            assert_eq!(s.generator.get(9, i), 0);
+        }
+        for i in 3..6 {
+            assert_eq!(s.generator.get(8, i), 0);
+            assert_eq!(s.generator.get(9, i), alpha(6, i, 1));
+        }
+    }
+}

@@ -1,0 +1,518 @@
+//! Experiment drivers: one function per paper table/figure (§VI).
+//!
+//! Tables I and III–VI are analytic (metrics + reliability modules).
+//! Figures 6–10 run the actual cluster prototype: real bytes move through
+//! datanode threads, transfer times come from the fair-share netsim
+//! (DESIGN.md §2 explains the testbed substitution). Block sizes are
+//! scaled down from the paper's 64 MiB so the full sweep fits one
+//! machine; repair time scales linearly with block size, so the *shape*
+//! (who wins, by what factor) is preserved and reported.
+
+use crate::bench_harness::Table;
+use crate::cluster::degraded::ReadMode;
+use crate::cluster::{Cluster, ClusterConfig};
+use crate::codes::{Scheme, SchemeKind};
+use crate::prng::Prng;
+use crate::trace;
+use crate::{metrics, param_label, reliability, PARAMS};
+
+fn fmt2(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+fn all_kinds() -> [SchemeKind; 6] {
+    SchemeKind::ALL_LRC
+}
+
+/// Table I: ADRC / ARC1 / ARC2 / MTTDL for (6,2,2) and (24,2,2).
+pub fn table1() {
+    println!("Table I: Comparison of Repair and Reliability of Different LRCs\n");
+    let mut t = Table::new(&["Parameters", "Scheme", "ADRC", "ARC1", "ARC2", "MTTDL"]);
+    let params = reliability::ReliabilityParams::default();
+    for &(k, r, p) in &[(6, 2, 2), (24, 2, 2)] {
+        for kind in all_kinds() {
+            let s = Scheme::new(kind, k, r, p);
+            let m = metrics::compute(&s);
+            let mttdl = reliability::mttdl(&s, &params, 1);
+            t.row(vec![
+                format!("({k},{r},{p})"),
+                kind.name().to_string(),
+                fmt2(m.adrc),
+                fmt2(m.arc1),
+                fmt2(m.pair.arc2),
+                format!("{mttdl:.2e}"),
+            ]);
+        }
+    }
+    t.print();
+}
+
+/// Table III: ADRC / ARC1 / ARC2 across P1–P8 for all six schemes.
+pub fn table3() {
+    println!("Table III: theoretical repair costs across LRC constructions\n");
+    for (title, pick) in [
+        ("Average Degraded Read Cost (ADRC)", 0usize),
+        ("Average Single-node Repair Cost (ARC1)", 1),
+        ("Average Two-node Repair Cost (ARC2)", 2),
+    ] {
+        println!("{title}");
+        let mut header = vec!["scheme".to_string()];
+        header.extend((0..8).map(param_label));
+        let mut t = Table::new(&header.iter().map(String::as_str).collect::<Vec<_>>());
+        for kind in all_kinds() {
+            let mut row = vec![kind.name().to_string()];
+            for &(k, r, p) in PARAMS.iter() {
+                let s = Scheme::new(kind, k, r, p);
+                let v = match pick {
+                    0 => metrics::adrc(&s),
+                    1 => metrics::arc1(&s),
+                    _ => metrics::pair_stats(&s).arc2,
+                };
+                row.push(fmt2(v));
+            }
+            t.row(row);
+        }
+        t.print();
+        println!();
+    }
+}
+
+fn portion_table(title: &str, effective: bool) {
+    println!("{title}\n");
+    let mut header = vec!["scheme".to_string()];
+    header.extend((0..8).map(param_label));
+    let mut t = Table::new(&header.iter().map(String::as_str).collect::<Vec<_>>());
+    for kind in all_kinds() {
+        let mut row = vec![kind.name().to_string()];
+        for &(k, r, p) in PARAMS.iter() {
+            let s = Scheme::new(kind, k, r, p);
+            let ps = metrics::pair_stats(&s);
+            let v = if effective { ps.effective_local_portion } else { ps.local_portion };
+            row.push(fmt2(v));
+        }
+        t.row(row);
+    }
+    t.print();
+}
+
+/// Table IV: portion of local repair under two-node failures.
+pub fn table4() {
+    portion_table("Table IV: portion of local repair under two-node failures", false);
+}
+
+/// Table V: portion of *effective* local repair (cost < global).
+pub fn table5() {
+    portion_table("Table V: portion of effective local repair under two-node failures", true);
+}
+
+/// Table VI: MTTDL across P1–P8.
+pub fn table6() {
+    println!("Table VI: MTTDL comparison across LRC constructions\n");
+    let params = reliability::ReliabilityParams::default();
+    let mut header = vec!["scheme".to_string()];
+    header.extend((0..8).map(param_label));
+    let mut t = Table::new(&header.iter().map(String::as_str).collect::<Vec<_>>());
+    for kind in all_kinds() {
+        let mut row = vec![kind.name().to_string()];
+        for &(k, r, p) in PARAMS.iter() {
+            let s = Scheme::new(kind, k, r, p);
+            row.push(format!("{:.2e}", reliability::mttdl(&s, &params, 1)));
+        }
+        t.row(row);
+    }
+    t.print();
+}
+
+/// EXTENSION table (§IV-E): CP applied atop Azure LRC+1 and Optimal
+/// Cauchy, compared against their bases and the paper's two
+/// instantiations, at the p ≥ 3 parameter sets where CP-LRC+1 exists.
+pub fn table_extensions() {
+    println!("Extension: CP atop Azure LRC+1 / Optimal Cauchy (§IV-E generality)\n");
+    let params: Vec<(usize, usize, usize)> =
+        PARAMS.iter().copied().filter(|&(_, _, p)| p >= 3).collect();
+    let mut header = vec!["scheme".to_string()];
+    for &(k, r, p) in &params {
+        header.push(format!("({k},{r},{p}) ARC1"));
+        header.push(format!("({k},{r},{p}) ARC2"));
+    }
+    let mut t = Table::new(&header.iter().map(String::as_str).collect::<Vec<_>>());
+    let kinds = [
+        SchemeKind::AzureLrcPlus1,
+        SchemeKind::CpPlus1,
+        SchemeKind::OptimalCauchy,
+        SchemeKind::CpOptimal,
+        SchemeKind::CpAzure,
+        SchemeKind::CpUniform,
+    ];
+    for kind in kinds {
+        let mut row = vec![kind.name().to_string()];
+        for &(k, r, p) in &params {
+            let s = Scheme::new(kind, k, r, p);
+            row.push(fmt2(metrics::arc1(&s)));
+            row.push(fmt2(metrics::pair_stats(&s).arc2));
+        }
+        t.row(row);
+    }
+    t.print();
+    println!(
+        "\n(CP-LRC+1 keeps the parity-group locality while cascading the data\n\
+         groups; CP-Optimal keeps globals repairable inside every group while\n\
+         preserving ΣLj = Gr — both beat their base constructions.)"
+    );
+}
+
+// ---------------------------------------------------------------- figures
+
+/// Parameters used by the cluster figures.
+pub struct FigureCfg {
+    pub param_idx: Vec<usize>,
+    pub block_size: usize,
+    pub stripes: usize,
+    pub seed: u64,
+}
+
+impl FigureCfg {
+    pub fn standard(quick: bool) -> Self {
+        if quick {
+            Self { param_idx: vec![0, 1, 4], block_size: 256 * 1024, stripes: 1, seed: 42 }
+        } else {
+            Self {
+                param_idx: (0..8).collect(),
+                block_size: 1024 * 1024,
+                stripes: 2,
+                seed: 42,
+            }
+        }
+    }
+}
+
+fn cluster_for(kind: SchemeKind, k: usize, r: usize, p: usize, block_size: usize) -> Cluster {
+    let n = Scheme::new(kind, k, r, p).n();
+    Cluster::new(ClusterConfig {
+        num_datanodes: n + 3,
+        gbps: 1.0,
+        latency_s: 0.002,
+        block_size,
+        kind,
+        k,
+        r,
+        p,
+        ..Default::default()
+    })
+}
+
+/// Mean single-node repair time for one scheme/parameter set: fail each
+/// block position in turn (over all stripes), repair, average (§VI-B1).
+pub fn single_node_repair_time(
+    kind: SchemeKind,
+    k: usize,
+    r: usize,
+    p: usize,
+    block_size: usize,
+    stripes: usize,
+    seed: u64,
+) -> (f64, f64) {
+    let mut c = cluster_for(kind, k, r, p, block_size);
+    let sids = c.fill_random_stripes(stripes, seed);
+    let n = c.scheme().n();
+    let mut times = Vec::new();
+    for &sid in &sids {
+        for b in 0..n {
+            let victim = c.meta.stripes[&sid].block_nodes[b];
+            c.fail_node(victim);
+            let rep = c.repair_stripe(sid, &[b]).expect("repair");
+            times.push(rep.total_s());
+            c.restore_node(victim);
+        }
+    }
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let var = times.iter().map(|t| (t - mean).powi(2)).sum::<f64>() / times.len() as f64;
+    (mean, var.sqrt())
+}
+
+/// Mean two-node repair time: `patterns` random two-block failures per
+/// stripe, identical patterns across schemes (§VI-B4).
+pub fn two_node_repair_time(
+    kind: SchemeKind,
+    k: usize,
+    r: usize,
+    p: usize,
+    block_size: usize,
+    stripes: usize,
+    patterns: usize,
+    seed: u64,
+) -> (f64, f64) {
+    let mut c = cluster_for(kind, k, r, p, block_size);
+    let sids = c.fill_random_stripes(stripes, seed);
+    let n = c.scheme().n();
+    let mut pat_rng = Prng::new(seed ^ 0x2A02);
+    let mut times = Vec::new();
+    for &sid in &sids {
+        for _ in 0..patterns {
+            let pair = pat_rng.distinct(n, 2);
+            let v0 = c.meta.stripes[&sid].block_nodes[pair[0]];
+            let v1 = c.meta.stripes[&sid].block_nodes[pair[1]];
+            c.fail_node(v0);
+            c.fail_node(v1);
+            let rep = c.repair_stripe(sid, &pair).expect("repair");
+            times.push(rep.total_s());
+            c.restore_node(v0);
+            c.restore_node(v1);
+        }
+    }
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let var = times.iter().map(|t| (t - mean).powi(2)).sum::<f64>() / times.len() as f64;
+    (mean, var.sqrt())
+}
+
+/// Figure 6: single-node repair time across P1–P8.
+pub fn figure6(quick: bool) {
+    let cfg = FigureCfg::standard(quick);
+    println!(
+        "Figure 6: single-node repair time (s), block={} KiB, {} stripe(s), 1 Gbps\n",
+        cfg.block_size / 1024,
+        cfg.stripes
+    );
+    let mut header = vec!["scheme".to_string()];
+    header.extend(cfg.param_idx.iter().map(|&i| param_label(i)));
+    let mut t = Table::new(&header.iter().map(String::as_str).collect::<Vec<_>>());
+    let mut best: Vec<(SchemeKind, Vec<f64>)> = Vec::new();
+    for kind in all_kinds() {
+        let mut row = vec![kind.name().to_string()];
+        let mut vals = Vec::new();
+        for &i in &cfg.param_idx {
+            let (k, r, p) = PARAMS[i];
+            let (mean, sd) =
+                single_node_repair_time(kind, k, r, p, cfg.block_size, cfg.stripes, cfg.seed);
+            row.push(format!("{mean:.3}±{sd:.3}"));
+            vals.push(mean);
+        }
+        best.push((kind, vals));
+        t.row(row);
+    }
+    t.print();
+    print_reductions(&best, &cfg.param_idx);
+}
+
+/// Figure 9: two-node repair time across P1–P8.
+pub fn figure9(quick: bool) {
+    let cfg = FigureCfg::standard(quick);
+    let patterns = if quick { 4 } else { 10 };
+    println!(
+        "Figure 9: two-node repair time (s), block={} KiB, {} stripe(s), {} patterns/stripe\n",
+        cfg.block_size / 1024,
+        cfg.stripes,
+        patterns
+    );
+    let mut header = vec!["scheme".to_string()];
+    header.extend(cfg.param_idx.iter().map(|&i| param_label(i)));
+    let mut t = Table::new(&header.iter().map(String::as_str).collect::<Vec<_>>());
+    let mut best: Vec<(SchemeKind, Vec<f64>)> = Vec::new();
+    for kind in all_kinds() {
+        let mut row = vec![kind.name().to_string()];
+        let mut vals = Vec::new();
+        for &i in &cfg.param_idx {
+            let (k, r, p) = PARAMS[i];
+            let (mean, sd) = two_node_repair_time(
+                kind,
+                k,
+                r,
+                p,
+                cfg.block_size,
+                cfg.stripes,
+                patterns,
+                cfg.seed,
+            );
+            row.push(format!("{mean:.3}±{sd:.3}"));
+            vals.push(mean);
+        }
+        best.push((kind, vals));
+        t.row(row);
+    }
+    t.print();
+    print_reductions(&best, &cfg.param_idx);
+}
+
+fn print_reductions(rows: &[(SchemeKind, Vec<f64>)], param_idx: &[usize]) {
+    // headline: max reduction of CP schemes vs each baseline
+    for cp in [SchemeKind::CpAzure, SchemeKind::CpUniform] {
+        let cp_vals = &rows.iter().find(|(k, _)| *k == cp).unwrap().1;
+        let mut max_red: f64 = 0.0;
+        let mut argmax = (SchemeKind::AzureLrc, 0usize);
+        for (kind, vals) in rows {
+            if kind.is_cp() {
+                continue;
+            }
+            for (i, (&b, &c)) in vals.iter().zip(cp_vals.iter()).enumerate() {
+                let red = 1.0 - c / b;
+                if red > max_red {
+                    max_red = red;
+                    argmax = (*kind, param_idx[i]);
+                }
+            }
+        }
+        println!(
+            "{} max repair-time reduction: {:.1}% (vs {} at {})",
+            cp.name(),
+            max_red * 100.0,
+            argmax.0.name(),
+            param_label(argmax.1)
+        );
+    }
+}
+
+/// Block-size sweep used by Figures 7 (time) and 8 (throughput).
+pub fn blocksize_sweep(quick: bool) -> Vec<(usize, Vec<(SchemeKind, f64)>)> {
+    let sizes: Vec<usize> = if quick {
+        vec![64 * 1024, 1024 * 1024]
+    } else {
+        vec![64 * 1024, 256 * 1024, 1024 * 1024, 4 * 1024 * 1024, 16 * 1024 * 1024]
+    };
+    let (k, r, p) = PARAMS[4]; // P5 = (24,2,2), the paper's default
+    let stripes = 1;
+    sizes
+        .into_iter()
+        .map(|bs| {
+            let row: Vec<(SchemeKind, f64)> = all_kinds()
+                .into_iter()
+                .map(|kind| {
+                    let (mean, _) = single_node_repair_time(kind, k, r, p, bs, stripes, 7);
+                    (kind, mean)
+                })
+                .collect();
+            (bs, row)
+        })
+        .collect()
+}
+
+/// Figure 7: single-node repair time vs block size (64 KB – 16 MB), P5.
+pub fn figure7(quick: bool) {
+    println!("Figure 7: single-node repair time (ms) vs block size, (24,2,2), 1 Gbps\n");
+    let sweep = blocksize_sweep(quick);
+    let mut header = vec!["block".to_string()];
+    header.extend(all_kinds().iter().map(|k| k.name().to_string()));
+    let mut t = Table::new(&header.iter().map(String::as_str).collect::<Vec<_>>());
+    for (bs, row) in &sweep {
+        let mut cells = vec![format!("{} KiB", bs / 1024)];
+        cells.extend(row.iter().map(|(_, s)| format!("{:.1}", s * 1000.0)));
+        t.row(cells);
+    }
+    t.print();
+}
+
+/// Figure 8: single-node repair *throughput* (MB/s) vs block size, P5.
+pub fn figure8(quick: bool) {
+    println!("Figure 8: single-node repair throughput (MB/s) vs block size, (24,2,2)\n");
+    let sweep = blocksize_sweep(quick);
+    let mut header = vec!["block".to_string()];
+    header.extend(all_kinds().iter().map(|k| k.name().to_string()));
+    let mut t = Table::new(&header.iter().map(String::as_str).collect::<Vec<_>>());
+    for (bs, row) in &sweep {
+        let mut cells = vec![format!("{} KiB", bs / 1024)];
+        cells.extend(
+            row.iter().map(|(_, s)| format!("{:.1}", *bs as f64 / s / (1000.0 * 1000.0))),
+        );
+        t.row(cells);
+    }
+    t.print();
+}
+
+/// Figure 10: file-level repair optimization under the FB-2010-profile
+/// trace: degraded-read latency, optimized vs block-level, by size class.
+pub fn figure10(quick: bool) {
+    let tcfg = trace::TraceConfig {
+        n_files: if quick { 30 } else { 100 },
+        max_size: if quick { 4 * 1024 * 1024 } else { 30 * 1024 * 1024 },
+        ..Default::default()
+    };
+    let block_size = if quick { 1024 * 1024 } else { 16 * 1024 * 1024 };
+    println!(
+        "Figure 10: degraded read latency (ms), Azure LRC (6,2,2), block={} MiB, {} files\n",
+        block_size / (1024 * 1024),
+        tcfg.n_files
+    );
+    let files = trace::generate(&tcfg);
+    let mut c = Cluster::new(ClusterConfig {
+        num_datanodes: 14,
+        gbps: 1.0,
+        latency_s: 0.002,
+        block_size,
+        kind: SchemeKind::AzureLrc,
+        k: 6,
+        r: 2,
+        p: 2,
+        ..Default::default()
+    });
+    let ids: Vec<_> = {
+        let mut rng = Prng::new(tcfg.seed ^ 1);
+        files
+            .iter()
+            .map(|f| {
+                let mut content = vec![0u8; f.size];
+                rng.fill(&mut content);
+                c.put_file(content)
+            })
+            .collect()
+    };
+    c.seal_stripe();
+    // Fail one node per §VI-B5 and read every file degraded.
+    let victim = 0;
+    c.fail_node(victim);
+
+    use std::collections::HashMap;
+    let mut by_class: HashMap<trace::SizeClass, (f64, f64, usize)> = HashMap::new();
+    let mut tot = (0.0f64, 0.0f64, 0usize);
+    for (f, id) in files.iter().zip(ids.iter()) {
+        let base = c.degraded_read(*id, ReadMode::BlockLevel).expect("read");
+        let opt = c.degraded_read(*id, ReadMode::FileLevelDedup).expect("read");
+        assert_eq!(base.bytes, opt.bytes, "optimized read changed data!");
+        let e = by_class.entry(trace::SizeClass::of(f.size)).or_insert((0.0, 0.0, 0));
+        e.0 += base.time_s;
+        e.1 += opt.time_s;
+        e.2 += 1;
+        tot.0 += base.time_s;
+        tot.1 += opt.time_s;
+        tot.2 += 1;
+    }
+    let mut t = Table::new(&["class", "files", "block-level (ms)", "file-level (ms)", "gain"]);
+    for class in [trace::SizeClass::Small, trace::SizeClass::Medium, trace::SizeClass::Large] {
+        if let Some(&(b, o, n)) = by_class.get(&class) {
+            t.row(vec![
+                class.label().to_string(),
+                n.to_string(),
+                format!("{:.1}", b / n as f64 * 1000.0),
+                format!("{:.1}", o / n as f64 * 1000.0),
+                format!("{:.1}%", (1.0 - o / b) * 100.0),
+            ]);
+        }
+    }
+    t.row(vec![
+        "all".to_string(),
+        tot.2.to_string(),
+        format!("{:.1}", tot.0 / tot.2 as f64 * 1000.0),
+        format!("{:.1}", tot.1 / tot.2 as f64 * 1000.0),
+        format!("{:.1}%", (1.0 - tot.1 / tot.0) * 100.0),
+    ]);
+    t.print();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_node_repair_time_is_positive_and_ordered() {
+        // CP-Azure must beat Azure LRC+1 at P1 even in a tiny run.
+        let (t_cp, _) = single_node_repair_time(SchemeKind::CpAzure, 6, 2, 2, 64 * 1024, 1, 1);
+        let (t_a1, _) =
+            single_node_repair_time(SchemeKind::AzureLrcPlus1, 6, 2, 2, 64 * 1024, 1, 1);
+        assert!(t_cp > 0.0 && t_a1 > 0.0);
+        assert!(t_cp < t_a1, "cp {t_cp} !< azure+1 {t_a1}");
+    }
+
+    #[test]
+    fn two_node_repair_time_runs() {
+        let (t, _) = two_node_repair_time(SchemeKind::CpUniform, 6, 2, 2, 64 * 1024, 1, 3, 2);
+        assert!(t > 0.0);
+    }
+}

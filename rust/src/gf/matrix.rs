@@ -1,0 +1,327 @@
+//! Dense matrices over GF(2^8): the linear-algebra substrate behind
+//! erasure decoding (submatrix inversion), fault-tolerance censuses
+//! (rank checks) and the CP coefficient constructions.
+
+use super::{div, inv, mul};
+
+/// A dense row-major matrix over GF(2^8).
+#[derive(Clone, PartialEq, Eq)]
+pub struct GfMatrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<u8>,
+}
+
+impl std::fmt::Debug for GfMatrix {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "GfMatrix {}x{}", self.rows, self.cols)?;
+        for r in 0..self.rows.min(16) {
+            writeln!(f, "  {:?}", &self.row(r)[..self.cols.min(24)])?;
+        }
+        Ok(())
+    }
+}
+
+impl GfMatrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0; rows * cols] }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m.set(i, i, 1);
+        }
+        m
+    }
+
+    pub fn from_rows(rows: &[Vec<u8>]) -> Self {
+        let r = rows.len();
+        let c = rows.first().map_or(0, |x| x.len());
+        let mut m = Self::zeros(r, c);
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(row.len(), c, "ragged rows");
+            m.data[i * c..(i + 1) * c].copy_from_slice(row);
+        }
+        m
+    }
+
+    /// Cauchy matrix `M[i][j] = 1/(x_i + y_j)`; all `x_i`, `y_j` must be
+    /// pairwise distinct. Every square submatrix of a Cauchy matrix is
+    /// invertible, which is what makes Cauchy-RS MDS.
+    pub fn cauchy(xs: &[u8], ys: &[u8]) -> Self {
+        let mut m = Self::zeros(xs.len(), ys.len());
+        for (i, &x) in xs.iter().enumerate() {
+            for (j, &y) in ys.iter().enumerate() {
+                assert_ne!(x, y, "cauchy points must be distinct");
+                m.set(i, j, inv(x ^ y));
+            }
+        }
+        m
+    }
+
+    #[inline(always)]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline(always)]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline(always)]
+    pub fn get(&self, r: usize, c: usize) -> u8 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline(always)]
+    pub fn set(&mut self, r: usize, c: usize, v: u8) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    #[inline(always)]
+    pub fn row(&self, r: usize) -> &[u8] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn row_mut(&mut self, r: usize) -> &mut [u8] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Select a subset of rows (used to form the "surviving generator").
+    pub fn select_rows(&self, idx: &[usize]) -> Self {
+        let mut m = Self::zeros(idx.len(), self.cols);
+        for (i, &r) in idx.iter().enumerate() {
+            let src = self.row(r).to_vec();
+            m.row_mut(i).copy_from_slice(&src);
+        }
+        m
+    }
+
+    pub fn matmul(&self, rhs: &GfMatrix) -> GfMatrix {
+        assert_eq!(self.cols, rhs.rows, "matmul shape mismatch");
+        let mut out = GfMatrix::zeros(self.rows, rhs.cols);
+        for i in 0..self.rows {
+            for kk in 0..self.cols {
+                let a = self.get(i, kk);
+                if a == 0 {
+                    continue;
+                }
+                for j in 0..rhs.cols {
+                    let v = out.get(i, j) ^ mul(a, rhs.get(kk, j));
+                    out.set(i, j, v);
+                }
+            }
+        }
+        out
+    }
+
+    /// Matrix–vector product.
+    pub fn matvec(&self, v: &[u8]) -> Vec<u8> {
+        assert_eq!(self.cols, v.len());
+        let mut out = vec![0u8; self.rows];
+        for i in 0..self.rows {
+            let mut acc = 0u8;
+            for j in 0..self.cols {
+                acc ^= mul(self.get(i, j), v[j]);
+            }
+            out[i] = acc;
+        }
+        out
+    }
+
+    /// Rank via Gaussian elimination on a working copy.
+    pub fn rank(&self) -> usize {
+        let mut m = self.clone();
+        let mut rank = 0;
+        let mut col = 0;
+        while rank < m.rows && col < m.cols {
+            // find pivot
+            let mut piv = None;
+            for r in rank..m.rows {
+                if m.get(r, col) != 0 {
+                    piv = Some(r);
+                    break;
+                }
+            }
+            let Some(p) = piv else {
+                col += 1;
+                continue;
+            };
+            m.swap_rows(rank, p);
+            let d = m.get(rank, col);
+            for r in 0..m.rows {
+                if r != rank && m.get(r, col) != 0 {
+                    let f = div(m.get(r, col), d);
+                    for c in col..m.cols {
+                        let v = m.get(r, c) ^ mul(f, m.get(rank, c));
+                        m.set(r, c, v);
+                    }
+                }
+            }
+            rank += 1;
+            col += 1;
+        }
+        rank
+    }
+
+    pub fn swap_rows(&mut self, a: usize, b: usize) {
+        if a == b {
+            return;
+        }
+        for c in 0..self.cols {
+            let (x, y) = (self.get(a, c), self.get(b, c));
+            self.set(a, c, y);
+            self.set(b, c, x);
+        }
+    }
+
+    /// Invert a square matrix by Gauss–Jordan. Returns `None` if singular.
+    pub fn inverse(&self) -> Option<GfMatrix> {
+        assert_eq!(self.rows, self.cols, "inverse of non-square matrix");
+        let n = self.rows;
+        let mut a = self.clone();
+        let mut b = GfMatrix::identity(n);
+        for col in 0..n {
+            // pivot
+            let mut piv = None;
+            for r in col..n {
+                if a.get(r, col) != 0 {
+                    piv = Some(r);
+                    break;
+                }
+            }
+            let p = piv?;
+            a.swap_rows(col, p);
+            b.swap_rows(col, p);
+            let d = a.get(col, col);
+            let dinv = inv(d);
+            for c in 0..n {
+                a.set(col, c, mul(a.get(col, c), dinv));
+                b.set(col, c, mul(b.get(col, c), dinv));
+            }
+            for r in 0..n {
+                if r != col {
+                    let f = a.get(r, col);
+                    if f == 0 {
+                        continue;
+                    }
+                    for c in 0..n {
+                        let av = a.get(r, c) ^ mul(f, a.get(col, c));
+                        a.set(r, c, av);
+                        let bv = b.get(r, c) ^ mul(f, b.get(col, c));
+                        b.set(r, c, bv);
+                    }
+                }
+            }
+        }
+        Some(b)
+    }
+
+    /// Solve `self * x = y` for square invertible `self`.
+    pub fn solve(&self, y: &[u8]) -> Option<Vec<u8>> {
+        Some(self.inverse()?.matvec(y))
+    }
+
+    /// Flat row-major bytes (for shipping to the PJRT artifact).
+    pub fn as_bytes(&self) -> &[u8] {
+        &self.data
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Prng;
+
+    fn random_matrix(rng: &mut Prng, n: usize, m: usize) -> GfMatrix {
+        let mut a = GfMatrix::zeros(n, m);
+        for r in 0..n {
+            for c in 0..m {
+                a.set(r, c, rng.u8());
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn identity_inverse() {
+        let i = GfMatrix::identity(7);
+        assert_eq!(i.inverse().unwrap(), i);
+        assert_eq!(i.rank(), 7);
+    }
+
+    #[test]
+    fn inverse_roundtrip_random() {
+        let mut rng = Prng::new(7);
+        let mut inverted = 0;
+        for _ in 0..50 {
+            let n = 1 + (rng.u8() as usize % 12);
+            let a = random_matrix(&mut rng, n, n);
+            if let Some(ai) = a.inverse() {
+                inverted += 1;
+                assert_eq!(a.matmul(&ai), GfMatrix::identity(n));
+                assert_eq!(ai.matmul(&a), GfMatrix::identity(n));
+            } else {
+                assert!(a.rank() < n);
+            }
+        }
+        assert!(inverted > 30, "random GF(256) matrices are mostly invertible");
+    }
+
+    #[test]
+    fn cauchy_every_square_submatrix_invertible() {
+        let xs: Vec<u8> = (0..6).collect();
+        let ys: Vec<u8> = (6..10).collect();
+        let m = GfMatrix::cauchy(&xs, &ys);
+        assert_eq!(m.rank(), 4);
+        // All 2x2 submatrices invertible.
+        for i in 0..6 {
+            for j in i + 1..6 {
+                for a in 0..4 {
+                    for b in a + 1..4 {
+                        let sub = GfMatrix::from_rows(&[
+                            vec![m.get(i, a), m.get(i, b)],
+                            vec![m.get(j, a), m.get(j, b)],
+                        ]);
+                        assert!(sub.inverse().is_some());
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn solve_matches_matvec() {
+        let mut rng = Prng::new(11);
+        for _ in 0..30 {
+            let n = 1 + (rng.u8() as usize % 10);
+            let a = random_matrix(&mut rng, n, n);
+            let x: Vec<u8> = (0..n).map(|_| rng.u8()).collect();
+            let y = a.matvec(&x);
+            if let Some(xs) = a.solve(&y) {
+                assert_eq!(xs, x);
+            }
+        }
+    }
+
+    #[test]
+    fn rank_of_rectangular() {
+        let mut m = GfMatrix::zeros(3, 5);
+        m.row_mut(0).copy_from_slice(&[1, 2, 3, 4, 5]);
+        m.row_mut(1).copy_from_slice(&[2, 4, 6, 8, 10]); // NOT a multiple over GF(256)!
+        m.row_mut(2).copy_from_slice(&[0, 0, 0, 0, 0]);
+        // Over GF(2^8), 2*[1,2,3,4,5] = [2,4,6,8,10] (mul by 2 is xtime; 2*2=4, 2*3=6, 2*4=8, 2*5=10)
+        assert_eq!(m.rank(), 1 + 0 + if mul(2, 5) == 10 { 0 } else { 1 });
+    }
+
+    #[test]
+    fn matmul_associative_sample() {
+        let mut rng = Prng::new(13);
+        let a = random_matrix(&mut rng, 4, 5);
+        let b = random_matrix(&mut rng, 5, 3);
+        let c = random_matrix(&mut rng, 3, 6);
+        assert_eq!(a.matmul(&b).matmul(&c), a.matmul(&b.matmul(&c)));
+    }
+}

@@ -1,0 +1,130 @@
+//! Lazily-built, process-wide GF(2^8) lookup tables.
+//!
+//! Layout:
+//! * `exp[0..510]` — doubled antilog table (`exp[i] = g^i`, g = 0x02) so
+//!   `exp[log a + log b]` never needs a `% 255`.
+//! * `log[1..=255]` — discrete log base g; `log[0]` is a sentinel.
+//! * `inv[1..=255]` — multiplicative inverses.
+//! * `split[c]` — per-coefficient low/high-nibble product tables
+//!   (`lo[x] = c*x`, `hi[x] = c*(x<<4)`, 32 bytes per coefficient); the
+//!   bulk kernels use these so the hot working set is 2×16 B per
+//!   coefficient instead of a 256 B row of the full product table.
+
+use std::sync::OnceLock;
+
+/// Primitive polynomial x^8+x^4+x^3+x^2+1 (same as Jerasure w=8).
+pub const POLY: u16 = 0x11D;
+
+pub struct Tables {
+    pub exp: [u8; 510],
+    pub log: [u8; 256],
+    pub inv: [u8; 256],
+    /// `split[c] = ([c*x for x in 0..16], [c*(x<<4) for x in 0..16])`
+    pub split: Vec<([u8; 16], [u8; 16])>,
+}
+
+fn build() -> Tables {
+    let mut exp = [0u8; 510];
+    let mut log = [0u8; 256];
+    let mut x: u16 = 1;
+    for i in 0..255 {
+        exp[i] = x as u8;
+        log[x as usize] = i as u8;
+        x <<= 1;
+        if x & 0x100 != 0 {
+            x ^= POLY;
+        }
+    }
+    debug_assert_eq!(x, 1, "0x02 must generate the full multiplicative group");
+    for i in 255..510 {
+        exp[i] = exp[i - 255];
+    }
+
+    let mut inv = [0u8; 256];
+    for a in 1..=255usize {
+        // a^-1 = g^(255 - log a)
+        inv[a] = exp[(255 - log[a] as usize) % 255];
+    }
+
+    let mut split = Vec::with_capacity(256);
+    for c in 0..=255u16 {
+        let mut lo = [0u8; 16];
+        let mut hi = [0u8; 16];
+        for x in 0..16u16 {
+            lo[x as usize] = super::mul_slow(c as u8, x as u8);
+            hi[x as usize] = super::mul_slow(c as u8, (x << 4) as u8);
+        }
+        split.push((lo, hi));
+    }
+
+    Tables { exp, log, inv, split }
+}
+
+static TABLES: OnceLock<Tables> = OnceLock::new();
+
+#[inline(always)]
+pub fn get() -> &'static Tables {
+    TABLES.get_or_init(build)
+}
+
+/// The doubled antilog table.
+pub fn exp_table() -> &'static [u8; 510] {
+    &get().exp
+}
+
+/// The log table (`log[0]` is meaningless).
+pub fn log_table() -> &'static [u8; 256] {
+    &get().log
+}
+
+/// The inverse table (`inv[0]` is meaningless).
+pub fn inv_table() -> &'static [u8; 256] {
+    &get().inv
+}
+
+/// Per-coefficient split product tables for the nibble kernels.
+#[inline(always)]
+pub fn mul_table_lo_hi(c: u8) -> (&'static [u8; 16], &'static [u8; 16]) {
+    let s = &get().split[c as usize];
+    (&s.0, &s.1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exp_log_roundtrip() {
+        let t = get();
+        for a in 1..=255u8 {
+            assert_eq!(t.exp[t.log[a as usize] as usize], a);
+        }
+        // exp is 255-periodic and duplicated.
+        for i in 0..255 {
+            assert_eq!(t.exp[i], t.exp[i + 255]);
+        }
+    }
+
+    #[test]
+    fn split_tables_match_mul() {
+        for c in 0..=255u8 {
+            let (lo, hi) = mul_table_lo_hi(c);
+            for x in 0..=255u8 {
+                let v = lo[(x & 0x0f) as usize] ^ hi[(x >> 4) as usize];
+                assert_eq!(v, super::super::mul_slow(c, x));
+            }
+        }
+    }
+
+    #[test]
+    fn generator_order_is_255() {
+        let t = get();
+        // All nonzero elements appear exactly once in exp[0..255].
+        let mut seen = [false; 256];
+        for i in 0..255 {
+            assert!(!seen[t.exp[i] as usize]);
+            seen[t.exp[i] as usize] = true;
+        }
+        assert!(!seen[0]);
+    }
+}

@@ -1,0 +1,383 @@
+//! GF(2^16) — the field for **ultra-wide** stripes.
+//!
+//! GF(2^8) supports at most k + r ≤ 256 distinct Cauchy points; the
+//! wide-stripe systems the paper's introduction cites go beyond that
+//! (Vastdata 150+4, academic deployments with width 1024). This module
+//! provides the w = 16 substrate: log/antilog tables over the primitive
+//! polynomial `x^16 + x^12 + x^3 + x + 1` (0x1100B, Jerasure's default
+//! for w = 16), scalar field ops, bulk symbol kernels over byte buffers
+//! (little-endian u16 symbols), and just enough linear algebra to build
+//! and decode a Cauchy-RS stripe of any width up to 65536.
+//!
+//! See `examples/ultra_wide_w16.rs` for a (200, 4) stripe end to end.
+
+use std::sync::OnceLock;
+
+/// Primitive polynomial for GF(2^16).
+pub const POLY16: u32 = 0x1100B;
+
+pub struct Tables16 {
+    /// `exp[i] = g^i` for i in 0..131070 (doubled, no mod needed).
+    pub exp: Vec<u16>,
+    /// Discrete log; `log[0]` is a sentinel.
+    pub log: Vec<u32>,
+}
+
+fn build() -> Tables16 {
+    let mut exp = vec![0u16; 131070];
+    let mut log = vec![0u32; 65536];
+    let mut x: u32 = 1;
+    for i in 0..65535 {
+        exp[i] = x as u16;
+        log[x as usize] = i as u32;
+        x <<= 1;
+        if x & 0x10000 != 0 {
+            x ^= POLY16;
+        }
+    }
+    debug_assert_eq!(x, 1, "0x02 must generate GF(2^16)*");
+    for i in 65535..131070 {
+        exp[i] = exp[i - 65535];
+    }
+    Tables16 { exp, log }
+}
+
+static TABLES: OnceLock<Tables16> = OnceLock::new();
+
+#[inline(always)]
+pub fn get() -> &'static Tables16 {
+    TABLES.get_or_init(build)
+}
+
+/// Field multiplication.
+#[inline(always)]
+pub fn mul(a: u16, b: u16) -> u16 {
+    if a == 0 || b == 0 {
+        return 0;
+    }
+    let t = get();
+    t.exp[(t.log[a as usize] + t.log[b as usize]) as usize]
+}
+
+/// Multiplicative inverse; panics on zero.
+#[inline(always)]
+pub fn inv(a: u16) -> u16 {
+    assert!(a != 0, "w16::inv(0)");
+    let t = get();
+    t.exp[(65535 - t.log[a as usize]) as usize]
+}
+
+/// Division `a / b`; panics if `b == 0`.
+#[inline(always)]
+pub fn div(a: u16, b: u16) -> u16 {
+    mul(a, inv(b))
+}
+
+/// Schoolbook carry-less multiply mod POLY16 (table cross-check).
+pub const fn mul_slow(mut a: u16, mut b: u16) -> u16 {
+    let mut r: u32 = 0;
+    let mut aa = a as u32;
+    while b != 0 {
+        if b & 1 != 0 {
+            r ^= aa;
+        }
+        aa <<= 1;
+        if aa & 0x10000 != 0 {
+            aa ^= POLY16;
+        }
+        b >>= 1;
+        a = a.wrapping_add(0); // keep const-fn shape simple
+    }
+    r as u16
+}
+
+/// `dst ^= c * src` over little-endian u16 symbols packed in byte
+/// buffers. Lengths must be even and equal.
+pub fn mul_acc_slice16(c: u16, src: &[u8], dst: &mut [u8]) {
+    assert_eq!(src.len(), dst.len());
+    assert_eq!(src.len() % 2, 0, "w16 buffers hold whole symbols");
+    if c == 0 {
+        return;
+    }
+    if c == 1 {
+        super::xor_slice(dst, src);
+        return;
+    }
+    let t = get();
+    let lc = t.log[c as usize];
+    for i in (0..src.len()).step_by(2) {
+        let s = u16::from_le_bytes([src[i], src[i + 1]]);
+        if s == 0 {
+            continue;
+        }
+        let prod = t.exp[(lc + t.log[s as usize]) as usize];
+        let d = u16::from_le_bytes([dst[i], dst[i + 1]]) ^ prod;
+        dst[i..i + 2].copy_from_slice(&d.to_le_bytes());
+    }
+}
+
+/// Dense matrix over GF(2^16) — just enough for Cauchy-RS decode.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Matrix16 {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<u16>,
+}
+
+impl Matrix16 {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0; rows * cols] }
+    }
+
+    pub fn identity(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m.set(i, i, 1);
+        }
+        m
+    }
+
+    /// Cauchy matrix over distinct u16 points.
+    pub fn cauchy(xs: &[u16], ys: &[u16]) -> Self {
+        let mut m = Self::zeros(xs.len(), ys.len());
+        for (i, &x) in xs.iter().enumerate() {
+            for (j, &y) in ys.iter().enumerate() {
+                assert_ne!(x, y);
+                m.set(i, j, inv(x ^ y));
+            }
+        }
+        m
+    }
+
+    #[inline(always)]
+    pub fn get(&self, r: usize, c: usize) -> u16 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline(always)]
+    pub fn set(&mut self, r: usize, c: usize, v: u16) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    pub fn select_rows(&self, idx: &[usize]) -> Self {
+        let mut m = Self::zeros(idx.len(), self.cols);
+        for (i, &r) in idx.iter().enumerate() {
+            for c in 0..self.cols {
+                m.set(i, c, self.get(r, c));
+            }
+        }
+        m
+    }
+
+    /// Gauss–Jordan inversion; `None` if singular.
+    pub fn inverse(&self) -> Option<Matrix16> {
+        assert_eq!(self.rows, self.cols);
+        let n = self.rows;
+        let mut a = self.clone();
+        let mut b = Matrix16::identity(n);
+        for col in 0..n {
+            let piv = (col..n).find(|&r| a.get(r, col) != 0)?;
+            for c in 0..n {
+                let (x, y) = (a.get(col, c), a.get(piv, c));
+                a.set(col, c, y);
+                a.set(piv, c, x);
+                let (x, y) = (b.get(col, c), b.get(piv, c));
+                b.set(col, c, y);
+                b.set(piv, c, x);
+            }
+            let d = inv(a.get(col, col));
+            for c in 0..n {
+                a.set(col, c, mul(a.get(col, c), d));
+                b.set(col, c, mul(b.get(col, c), d));
+            }
+            for r in 0..n {
+                if r != col && a.get(r, col) != 0 {
+                    let f = a.get(r, col);
+                    for c in 0..n {
+                        let av = a.get(r, c) ^ mul(f, a.get(col, c));
+                        a.set(r, c, av);
+                        let bv = b.get(r, c) ^ mul(f, b.get(col, c));
+                        b.set(r, c, bv);
+                    }
+                }
+            }
+        }
+        Some(b)
+    }
+}
+
+/// A systematic ultra-wide (k, r) Cauchy-RS codec over GF(2^16).
+pub struct WideRs16 {
+    pub k: usize,
+    pub r: usize,
+    /// Parity rows (r × k).
+    pub parity: Matrix16,
+}
+
+impl WideRs16 {
+    pub fn new(k: usize, r: usize) -> Self {
+        assert!(k + r <= 65536, "width exceeds GF(2^16)");
+        let xs: Vec<u16> = (0..k as u32).map(|i| i as u16).collect();
+        let ys: Vec<u16> = (k as u32..(k + r) as u32).map(|i| i as u16).collect();
+        Self { k, r, parity: Matrix16::cauchy(&ys, &xs) }
+    }
+
+    /// Encode: k data blocks (even-length byte buffers) → r parities.
+    pub fn encode(&self, data: &[Vec<u8>]) -> Vec<Vec<u8>> {
+        assert_eq!(data.len(), self.k);
+        let len = data[0].len();
+        (0..self.r)
+            .map(|j| {
+                let mut out = vec![0u8; len];
+                for (i, d) in data.iter().enumerate() {
+                    mul_acc_slice16(self.parity.get(j, i), d, &mut out);
+                }
+                out
+            })
+            .collect()
+    }
+
+    /// Reconstruct `erased` (block ids in 0..k+r) from any k survivors.
+    pub fn decode(
+        &self,
+        blocks: &[Option<Vec<u8>>],
+        erased: &[usize],
+    ) -> anyhow::Result<Vec<Vec<u8>>> {
+        let n = self.k + self.r;
+        anyhow::ensure!(blocks.len() == n);
+        // generator rows: identity + parity
+        let gen_row = |b: usize, c: usize| -> u16 {
+            if b < self.k {
+                u16::from(b == c)
+            } else {
+                self.parity.get(b - self.k, c)
+            }
+        };
+        let surviving: Vec<usize> = (0..n)
+            .filter(|&b| blocks[b].is_some() && !erased.contains(&b))
+            .take(self.k)
+            .collect();
+        anyhow::ensure!(surviving.len() == self.k, "not enough survivors");
+        let mut sub = Matrix16::zeros(self.k, self.k);
+        for (i, &b) in surviving.iter().enumerate() {
+            for c in 0..self.k {
+                sub.set(i, c, gen_row(b, c));
+            }
+        }
+        let inv_m = sub
+            .inverse()
+            .ok_or_else(|| anyhow::anyhow!("survivor set not invertible"))?;
+        let len = blocks[surviving[0]].as_ref().unwrap().len();
+        let mut out = Vec::with_capacity(erased.len());
+        for &e in erased {
+            // w = row_e · inv
+            let mut w = vec![0u16; self.k];
+            for i in 0..self.k {
+                let ge = gen_row(e, i);
+                if ge == 0 {
+                    continue;
+                }
+                for j in 0..self.k {
+                    w[j] ^= mul(ge, inv_m.get(i, j));
+                }
+            }
+            let mut buf = vec![0u8; len];
+            for (j, &b) in surviving.iter().enumerate() {
+                mul_acc_slice16(w[j], blocks[b].as_ref().unwrap(), &mut buf);
+            }
+            out.push(buf);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Prng;
+
+    #[test]
+    fn tables_match_slow_multiply_sampled() {
+        let mut rng = Prng::new(0x16);
+        for _ in 0..20_000 {
+            let a = rng.u32() as u16;
+            let b = rng.u32() as u16;
+            assert_eq!(mul(a, b), mul_slow(a, b), "a={a} b={b}");
+        }
+    }
+
+    #[test]
+    fn field_axioms_sampled() {
+        let mut rng = Prng::new(0x17);
+        for _ in 0..10_000 {
+            let (a, b, c) = (rng.u32() as u16, rng.u32() as u16, rng.u32() as u16);
+            assert_eq!(mul(a, b), mul(b, a));
+            assert_eq!(mul(mul(a, b), c), mul(a, mul(b, c)));
+            assert_eq!(mul(a, b ^ c), mul(a, b) ^ mul(a, c));
+            if a != 0 {
+                assert_eq!(mul(a, inv(a)), 1);
+                assert_eq!(div(mul(a, b), a), b);
+            }
+        }
+    }
+
+    #[test]
+    fn mul_acc_slice16_matches_scalar() {
+        let mut rng = Prng::new(0x18);
+        let src = rng.bytes(64);
+        let base = rng.bytes(64);
+        for c in [0u16, 1, 2, 0xABCD] {
+            let mut dst = base.clone();
+            mul_acc_slice16(c, &src, &mut dst);
+            for i in (0..64).step_by(2) {
+                let s = u16::from_le_bytes([src[i], src[i + 1]]);
+                let b = u16::from_le_bytes([base[i], base[i + 1]]);
+                let d = u16::from_le_bytes([dst[i], dst[i + 1]]);
+                assert_eq!(d, b ^ mul(c, s), "c={c} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn matrix16_inverse_roundtrip() {
+        let xs: Vec<u16> = (0..5).collect();
+        let ys: Vec<u16> = (10..15).collect();
+        let m = Matrix16::cauchy(&xs, &ys);
+        let mi = m.inverse().expect("cauchy is invertible");
+        // m * mi == I
+        let mut prod = Matrix16::zeros(5, 5);
+        for i in 0..5 {
+            for j in 0..5 {
+                let mut acc = 0u16;
+                for l in 0..5 {
+                    acc ^= mul(m.get(i, l), mi.get(l, j));
+                }
+                prod.set(i, j, acc);
+            }
+        }
+        assert_eq!(prod, Matrix16::identity(5));
+    }
+
+    #[test]
+    fn wide_rs_roundtrip_300_wide() {
+        // wider than GF(2^8) could ever support
+        let (k, r) = (300, 4);
+        let rs = WideRs16::new(k, r);
+        let mut rng = Prng::new(0x19);
+        let data: Vec<Vec<u8>> = (0..k).map(|_| rng.bytes(128)).collect();
+        let parity = rs.encode(&data);
+        assert_eq!(parity.len(), r);
+        let mut blocks: Vec<Option<Vec<u8>>> =
+            data.iter().chain(parity.iter()).cloned().map(Some).collect();
+        // erase r blocks: two data, two parity
+        let erased = vec![0usize, 150, k, k + 3];
+        for &e in &erased {
+            blocks[e] = None;
+        }
+        let rec = rs.decode(&blocks, &erased).unwrap();
+        assert_eq!(rec[0], data[0]);
+        assert_eq!(rec[1], data[150]);
+        assert_eq!(rec[2], parity[0]);
+        assert_eq!(rec[3], parity[3]);
+    }
+}

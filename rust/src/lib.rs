@@ -1,0 +1,51 @@
+//! # cp-lrc — Cascaded Parity LRCs for wide-stripe erasure-coded storage
+//!
+//! Full reproduction of *"Making Wide Stripes Practical: Cascaded Parity
+//! LRCs for Efficient Repair and High Reliability"* (CS.DC 2025) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the distributed storage prototype of the
+//!   paper's §V (coordinator / proxy / datanodes / client), the code
+//!   constructions of §IV (CP-Azure, CP-Uniform and the four baseline
+//!   LRCs), the repair algorithms, and all of the evaluation substrates
+//!   (repair-cost enumeration, Markov-chain MTTDL, a discrete-event
+//!   network simulator and a trace replayer).
+//! * **L2/L1 (build time, `python/`)** — the GF(2^8) stripe codec as a
+//!   JAX graph whose hot-spot is a Pallas kernel, AOT-lowered to HLO
+//!   text and executed from [`runtime`] via the PJRT CPU client.
+//!
+//! Start with [`codes::Scheme`] (pick a construction and parameters),
+//! [`codec::StripeCodec`] (encode/decode bytes), [`repair`] (plan and
+//! execute repairs), or [`cluster`] (run the full prototype).
+
+pub mod bench_harness;
+pub mod cluster;
+pub mod experiments;
+pub mod codec;
+pub mod codes;
+pub mod gf;
+pub mod metrics;
+pub mod netsim;
+pub mod prng;
+pub mod proptest_lite;
+pub mod reliability;
+pub mod repair;
+pub mod runtime;
+pub mod trace;
+
+/// The paper's evaluation parameter sets P1–P8 (Table II).
+pub const PARAMS: [(usize, usize, usize); 8] = [
+    (6, 2, 2),   // P1
+    (12, 2, 2),  // P2
+    (16, 3, 2),  // P3
+    (20, 3, 5),  // P4
+    (24, 2, 2),  // P5
+    (48, 4, 3),  // P6
+    (72, 4, 4),  // P7
+    (96, 5, 4),  // P8
+];
+
+/// Human label ("P1".."P8") for an index into [`PARAMS`].
+pub fn param_label(i: usize) -> String {
+    format!("P{}", i + 1)
+}

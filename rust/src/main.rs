@@ -1,0 +1,195 @@
+//! `repro` — CLI for regenerating every table and figure of the paper.
+//! See DESIGN.md §5 for the experiment index.
+
+use cp_lrc::codes::SchemeKind;
+use cp_lrc::{metrics, param_label, reliability, PARAMS};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    match cmd {
+        "tables" => {
+            let id = flag_value(&args, "--id").unwrap_or_else(|| "3".into());
+            match id.as_str() {
+                "1" => cp_lrc::experiments::table1(),
+                "3" => cp_lrc::experiments::table3(),
+                "4" => cp_lrc::experiments::table4(),
+                "5" => cp_lrc::experiments::table5(),
+                "6" => cp_lrc::experiments::table6(),
+                "ext" => cp_lrc::experiments::table_extensions(),
+                other => eprintln!("unknown table {other} (have 1,3,4,5,6,ext)"),
+            }
+        }
+        "figure" => {
+            let id = flag_value(&args, "--id").unwrap_or_else(|| "6".into());
+            let quick = args.iter().any(|a| a == "--quick");
+            match id.as_str() {
+                "6" => cp_lrc::experiments::figure6(quick),
+                "7" => cp_lrc::experiments::figure7(quick),
+                "8" => cp_lrc::experiments::figure8(quick),
+                "9" => cp_lrc::experiments::figure9(quick),
+                "10" => cp_lrc::experiments::figure10(quick),
+                other => eprintln!("unknown figure {other} (have 6..10)"),
+            }
+        }
+        "metrics" => {
+            // one-off metrics for a single (scheme, k, r, p)
+            let kind = parse_kind(&flag_value(&args, "--scheme").unwrap_or_default())
+                .unwrap_or(SchemeKind::CpAzure);
+            let k = flag_num(&args, "--k").unwrap_or(24);
+            let r = flag_num(&args, "--r").unwrap_or(2);
+            let p = flag_num(&args, "--p").unwrap_or(2);
+            let s = cp_lrc::codes::Scheme::new(kind, k, r, p);
+            let m = metrics::compute(&s);
+            let mttdl = reliability::mttdl(&s, &reliability::ReliabilityParams::default(), 1);
+            println!("{} ({k},{r},{p}) rate={:.3}", kind.name(), s.rate());
+            println!("  ADRC={:.2} ARC1={:.2} ARC2={:.2}", m.adrc, m.arc1, m.pair.arc2);
+            println!(
+                "  local portion={:.2} effective={:.2} MTTDL={:.2e} years",
+                m.pair.local_portion, m.pair.effective_local_portion, mttdl
+            );
+        }
+        "params" => {
+            for (i, &(k, r, p)) in PARAMS.iter().enumerate() {
+                println!("{}: (k={k}, r={r}, p={p})", param_label(i));
+            }
+        }
+        "cluster" => {
+            // Launcher: bring up the full prototype, ingest a workload,
+            // run a failure-detection → repair-queue cycle, report.
+            let kind = parse_kind(&flag_value(&args, "--scheme").unwrap_or_default())
+                .unwrap_or(SchemeKind::CpAzure);
+            let k = flag_num(&args, "--k").unwrap_or(24);
+            let r = flag_num(&args, "--r").unwrap_or(2);
+            let p = flag_num(&args, "--p").unwrap_or(2);
+            let stripes = flag_num(&args, "--stripes").unwrap_or(3);
+            let block = flag_num(&args, "--block-kib").unwrap_or(512) * 1024;
+            let nodes = flag_num(&args, "--nodes")
+                .unwrap_or(cp_lrc::codes::Scheme::new(kind, k, r, p).n() + 4);
+            let kill = flag_num(&args, "--kill").unwrap_or(1);
+            if let Err(e) = run_cluster(kind, k, r, p, nodes, stripes, block, kill) {
+                eprintln!("cluster run failed: {e:#}");
+                std::process::exit(1);
+            }
+        }
+        _ => {
+            println!("repro — CP-LRC paper reproduction driver");
+            println!("  repro tables --id 1|3|4|5|6     regenerate a paper table");
+            println!("  repro figure --id 6|7|8|9|10 [--quick]  regenerate a figure");
+            println!("  repro metrics --scheme cp-azure --k 24 --r 2 --p 2");
+            println!("  repro cluster [--scheme S --k K --r R --p P --stripes N --block-kib B --nodes M --kill F]");
+            println!("  repro params                    list P1..P8");
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_cluster(
+    kind: SchemeKind,
+    k: usize,
+    r: usize,
+    p: usize,
+    nodes: usize,
+    stripes: usize,
+    block: usize,
+    kill: usize,
+) -> anyhow::Result<()> {
+    use cp_lrc::cluster::failure::FailureDetector;
+    use cp_lrc::cluster::repairq::RepairQueue;
+    use cp_lrc::cluster::{Cluster, ClusterConfig};
+
+    println!(
+        "bringing up {} ({k},{r},{p}): {nodes} datanodes, {stripes} stripes × {} KiB blocks",
+        kind.name(),
+        block / 1024
+    );
+    let mut c = Cluster::new(ClusterConfig {
+        num_datanodes: nodes,
+        block_size: block,
+        kind,
+        k,
+        r,
+        p,
+        ..Default::default()
+    });
+    // Attach PJRT artifacts when present.
+    match cp_lrc::runtime::Runtime::load_dir(&cp_lrc::runtime::Runtime::default_dir()) {
+        Ok(rt) if !rt.execs.is_empty() => {
+            println!("PJRT runtime: {} artifact(s)", rt.execs.len());
+            c = c.with_runtime(&rt);
+        }
+        _ => println!("PJRT runtime: native GF path (run `make artifacts` for the AOT path)"),
+    }
+    let sids = c.fill_random_stripes(stripes, 0xC11);
+    println!(
+        "ingested {} stripes ({} blocks, {:.1} MiB data); metadata {:.1} KiB",
+        sids.len(),
+        sids.len() * c.scheme().n(),
+        (sids.len() * k * block) as f64 / 1024.0 / 1024.0,
+        c.meta.footprint_bytes() as f64 / 1024.0
+    );
+
+    // Kill nodes silently; the detector has to notice.
+    let victims: Vec<usize> = (0..kill.min(c.scheme().guaranteed_tolerance)).collect();
+    for &v in &victims {
+        c.nodes[v].set_alive(false);
+    }
+    println!("killed nodes {victims:?} (silently)");
+    let mut fd = FailureDetector::new(nodes, 3, 5.0);
+    let mut detected = Vec::new();
+    for sweep in 1..=4 {
+        let rep = fd.sweep(&mut c);
+        if !rep.newly_failed.is_empty() {
+            println!(
+                "sweep {sweep}: detected failures {:?} (virtual detection latency {:.0}s)",
+                rep.newly_failed, rep.detection_latency_s
+            );
+            detected.extend(rep.newly_failed);
+        }
+    }
+    anyhow::ensure!(detected == victims, "detector missed failures");
+
+    let mut q = RepairQueue::new();
+    q.scan(&c);
+    println!("repair queue: {} degraded stripes", q.len());
+    let reports = q.drain(&mut c)?;
+    let total: f64 = reports.iter().map(|x| x.total_s()).sum();
+    let bytes: u64 = reports.iter().map(|x| x.bytes_read).sum();
+    println!(
+        "repaired {} stripes: {:.3}s simulated, {:.1} MiB moved, {} local / {} global plans",
+        reports.len(),
+        total,
+        bytes as f64 / 1024.0 / 1024.0,
+        reports.iter().filter(|x| x.local).count(),
+        reports.iter().filter(|x| !x.local).count()
+    );
+    for &v in &victims {
+        c.restore_node(v);
+    }
+    for sid in sids {
+        anyhow::ensure!(c.scrub_stripe(sid)?, "stripe {sid} failed scrub");
+    }
+    println!("all stripes scrub clean ✓");
+    Ok(())
+}
+
+fn flag_value(args: &[String], flag: &str) -> Option<String> {
+    args.iter().position(|a| a == flag).and_then(|i| args.get(i + 1)).cloned()
+}
+
+fn flag_num(args: &[String], flag: &str) -> Option<usize> {
+    flag_value(args, flag).and_then(|v| v.parse().ok())
+}
+
+fn parse_kind(s: &str) -> Option<SchemeKind> {
+    match s.to_ascii_lowercase().as_str() {
+        "rs" => Some(SchemeKind::Rs),
+        "azure" | "azure-lrc" => Some(SchemeKind::AzureLrc),
+        "azure+1" | "azure-plus1" => Some(SchemeKind::AzureLrcPlus1),
+        "optimal" | "optimal-cauchy" => Some(SchemeKind::OptimalCauchy),
+        "uniform" | "uniform-cauchy" => Some(SchemeKind::UniformCauchy),
+        "cp-azure" => Some(SchemeKind::CpAzure),
+        "cp-uniform" => Some(SchemeKind::CpUniform),
+        _ => None,
+    }
+}

@@ -1,0 +1,239 @@
+//! Theoretical repair-cost metrics (§II-B, Tables I & III–V).
+//!
+//! All metrics are *derived* from the repair planner — nothing here is
+//! scheme-specific, so any change to a construction or to the repair
+//! policy is reflected in the tables automatically.
+
+use crate::codes::Scheme;
+use crate::repair;
+
+/// All pairwise statistics computed in one enumeration pass.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PairStats {
+    /// Average two-node repair cost (ARC₂).
+    pub arc2: f64,
+    /// Fraction of two-node failure patterns repaired entirely within
+    /// local repair groups / the cascaded group (Table IV).
+    pub local_portion: f64,
+    /// Fraction where local repair is *strictly cheaper* than global
+    /// repair (Table V).
+    pub effective_local_portion: f64,
+}
+
+/// Average degraded read cost: mean single-repair cost over *data* blocks.
+pub fn adrc(s: &Scheme) -> f64 {
+    let total: usize = (0..s.k).map(|b| repair::plan_single(s, b).cost(s.k)).sum();
+    total as f64 / s.k as f64
+}
+
+/// Average single-node repair cost over *all* blocks (ARC₁).
+pub fn arc1(s: &Scheme) -> f64 {
+    let n = s.n();
+    let total: usize = (0..n).map(|b| repair::plan_single(s, b).cost(s.k)).sum();
+    total as f64 / n as f64
+}
+
+/// Per-block single-repair costs (used by the reliability model and the
+/// cluster's repair planner).
+pub fn single_costs(s: &Scheme) -> Vec<usize> {
+    (0..s.n()).map(|b| repair::plan_single(s, b).cost(s.k)).collect()
+}
+
+/// Enumerate all two-node failure patterns and compute ARC₂ plus the
+/// local/effective-local portions (Tables III, IV, V).
+///
+/// Cost semantics follow §IV: a pattern that peels entirely through
+/// local equations costs the union of its reads (even if that exceeds k —
+/// the paper's Table V discussion explicitly allows local repair to be
+/// *more* expensive than global); any pattern touching a global-parity
+/// definition or requiring decode costs k.
+pub fn pair_stats(s: &Scheme) -> PairStats {
+    let n = s.n();
+    let k = s.k;
+    let mut total_cost = 0usize;
+    let mut local = 0usize;
+    let mut effective = 0usize;
+    let mut pairs = 0usize;
+    for i in 0..n {
+        for j in i + 1..n {
+            pairs += 1;
+            let pl = repair::plan(s, &[i, j])
+                .expect("all two-node patterns are recoverable for r >= 2 schemes");
+            let cost = pl.cost(k);
+            total_cost += cost;
+            if pl.fully_local() {
+                local += 1;
+                if cost < k {
+                    effective += 1;
+                }
+            }
+        }
+    }
+    PairStats {
+        arc2: total_cost as f64 / pairs as f64,
+        local_portion: local as f64 / pairs as f64,
+        effective_local_portion: effective as f64 / pairs as f64,
+    }
+}
+
+/// Convenience bundle for one scheme: everything Tables I/III/IV/V need.
+#[derive(Clone, Debug)]
+pub struct SchemeMetrics {
+    pub adrc: f64,
+    pub arc1: f64,
+    pub pair: PairStats,
+}
+
+pub fn compute(s: &Scheme) -> SchemeMetrics {
+    SchemeMetrics { adrc: adrc(s), arc1: arc1(s), pair: pair_stats(s) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codes::{Scheme, SchemeKind};
+
+    fn s(kind: SchemeKind, k: usize, r: usize, p: usize) -> Scheme {
+        Scheme::new(kind, k, r, p)
+    }
+
+    /// Golden values from paper Table I / Table III (ADRC & ARC₁ columns
+    /// match our cost model exactly; see DESIGN.md for the documented
+    /// ARC₂ deviations).
+    #[test]
+    fn adrc_arc1_match_paper_table_iii() {
+        let cases: &[(SchemeKind, usize, usize, usize, f64, f64)] = &[
+            (SchemeKind::AzureLrc, 6, 2, 2, 3.00, 3.60),
+            (SchemeKind::AzureLrc, 24, 2, 2, 12.00, 12.86),
+            (SchemeKind::AzureLrc, 48, 4, 3, 16.00, 18.33),
+            (SchemeKind::AzureLrcPlus1, 6, 2, 2, 6.00, 4.80),
+            (SchemeKind::AzureLrcPlus1, 48, 4, 3, 24.00, 22.18),
+            (SchemeKind::OptimalCauchy, 6, 2, 2, 5.00, 5.00),
+            (SchemeKind::OptimalCauchy, 20, 3, 5, 7.00, 7.00),
+            (SchemeKind::OptimalCauchy, 48, 4, 3, 20.00, 20.00),
+            (SchemeKind::UniformCauchy, 6, 2, 2, 4.00, 4.00),
+            (SchemeKind::UniformCauchy, 16, 3, 2, 9.50, 9.52),
+            (SchemeKind::UniformCauchy, 20, 3, 5, 4.60, 4.64),
+            (SchemeKind::UniformCauchy, 48, 4, 3, 17.33, 17.35),
+            (SchemeKind::CpAzure, 6, 2, 2, 3.00, 3.00),
+            (SchemeKind::CpAzure, 24, 2, 2, 12.00, 11.36),
+            (SchemeKind::CpAzure, 48, 4, 3, 16.00, 16.80),
+            (SchemeKind::CpUniform, 6, 2, 2, 3.50, 3.10),
+            (SchemeKind::CpUniform, 20, 3, 5, 4.40, 4.46), // paper 4.57; see DESIGN.md (min{g,p} rule)
+            (SchemeKind::CpUniform, 48, 4, 3, 17.00, 15.98),
+        ];
+        for &(kind, k, r, p, want_adrc, want_arc1) in cases {
+            let sc = s(kind, k, r, p);
+            let got_adrc = adrc(&sc);
+            let got_arc1 = arc1(&sc);
+            assert!(
+                (got_adrc - want_adrc).abs() < 0.05,
+                "{kind:?} ({k},{r},{p}) ADRC got {got_adrc:.2} want {want_adrc:.2}"
+            );
+            assert!(
+                (got_arc1 - want_arc1).abs() < 0.05,
+                "{kind:?} ({k},{r},{p}) ARC1 got {got_arc1:.2} want {want_arc1:.2}"
+            );
+        }
+    }
+
+    #[test]
+    fn local_portion_matches_paper_table_iv_p1() {
+        // (6,2,2) column of Table IV. Optimal's paper value (0.62) differs
+        // from our peeling model (documented in DESIGN.md).
+        let cases: &[(SchemeKind, f64)] = &[
+            (SchemeKind::AzureLrc, 0.36),
+            (SchemeKind::AzureLrcPlus1, 0.47),
+            (SchemeKind::UniformCauchy, 0.56),
+            (SchemeKind::CpAzure, 0.67),
+            (SchemeKind::CpUniform, 0.80),
+        ];
+        for &(kind, want) in cases {
+            let got = pair_stats(&s(kind, 6, 2, 2)).local_portion;
+            assert!((got - want).abs() < 0.015, "{kind:?} got {got:.2} want {want:.2}");
+        }
+    }
+
+    #[test]
+    fn effective_local_zero_for_baselines_at_narrow_params() {
+        // Table V: conventional LRCs have ~zero effective local repair at
+        // P1/P2/P3/P5, while CP-LRCs keep 20–55%.
+        for kind in [
+            SchemeKind::AzureLrc,
+            SchemeKind::AzureLrcPlus1,
+            SchemeKind::OptimalCauchy,
+            SchemeKind::UniformCauchy,
+        ] {
+            for &(k, r, p) in &[(6, 2, 2), (24, 2, 2)] {
+                let e = pair_stats(&s(kind, k, r, p)).effective_local_portion;
+                assert!(e < 0.05, "{kind:?} ({k},{r},{p}) effective {e:.2}");
+            }
+        }
+        for kind in [SchemeKind::CpAzure, SchemeKind::CpUniform] {
+            let e = pair_stats(&s(kind, 6, 2, 2)).effective_local_portion;
+            assert!(e > 0.2, "{kind:?} effective {e:.2} too low");
+        }
+    }
+
+    #[test]
+    fn cp_schemes_win_arc1_arc2_across_all_params() {
+        // The paper's headline ordering, stated precisely: each CP scheme
+        // strictly improves on its base construction for both ARC1 and
+        // ARC2 at every parameter set, and CP-Uniform has the smallest
+        // ARC1 overall. (The paper's own Table III shows CP-Azure *not*
+        // in the top two at P4 — Uniform 4.64 < CP-Azure 5.36 — so the
+        // "smallest and second smallest across all parameters" prose is
+        // aspirational even for the authors; we assert the defensible
+        // orderings.)
+        for &(k, r, p) in crate::PARAMS.iter() {
+            let base_azure = s(SchemeKind::AzureLrc, k, r, p);
+            let cp_azure = s(SchemeKind::CpAzure, k, r, p);
+            let base_uni = s(SchemeKind::UniformCauchy, k, r, p);
+            let cp_uni = s(SchemeKind::CpUniform, k, r, p);
+            assert!(
+                arc1(&cp_azure) < arc1(&base_azure),
+                "({k},{r},{p}) CP-Azure ARC1 must beat Azure"
+            );
+            assert!(
+                arc1(&cp_uni) < arc1(&base_uni),
+                "({k},{r},{p}) CP-Uniform ARC1 must beat Uniform"
+            );
+            assert!(
+                pair_stats(&cp_azure).arc2 < pair_stats(&base_azure).arc2,
+                "({k},{r},{p}) CP-Azure ARC2 must beat Azure"
+            );
+            assert!(
+                pair_stats(&cp_uni).arc2 < pair_stats(&base_uni).arc2,
+                "({k},{r},{p}) CP-Uniform ARC2 must beat Uniform"
+            );
+            // The best CP scheme is the best overall on ARC1.
+            let best_cp = arc1(&cp_uni).min(arc1(&cp_azure));
+            let min_other = SchemeKind::ALL_LRC
+                .iter()
+                .filter(|kk| !kk.is_cp())
+                .map(|&kk| arc1(&s(kk, k, r, p)))
+                .fold(f64::INFINITY, f64::min);
+            assert!(
+                best_cp <= min_other + 1e-9,
+                "({k},{r},{p}) best CP ARC1 {best_cp} vs best baseline {min_other}"
+            );
+        }
+    }
+
+    #[test]
+    fn cp_uniform_highest_local_portion_everywhere() {
+        for &(k, r, p) in crate::PARAMS.iter() {
+            let cpu = pair_stats(&s(SchemeKind::CpUniform, k, r, p)).local_portion;
+            for kind in SchemeKind::ALL_LRC {
+                if kind == SchemeKind::CpUniform {
+                    continue;
+                }
+                let other = pair_stats(&s(kind, k, r, p)).local_portion;
+                assert!(
+                    cpu >= other - 1e-9,
+                    "({k},{r},{p}) CP-Uniform {cpu:.3} < {kind:?} {other:.3}"
+                );
+            }
+        }
+    }
+}

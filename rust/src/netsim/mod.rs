@@ -1,0 +1,312 @@
+//! Discrete-event network simulator with max-min fair bandwidth sharing.
+//!
+//! Substitutes for the paper's Alibaba Cloud testbed (DESIGN.md §2): the
+//! repair-time experiments are bandwidth-dominated, so what matters is
+//! contention structure — many datanode→proxy transfers sharing the
+//! proxy's ingress NIC, each also limited by its source's egress NIC.
+//!
+//! The model is the classic *fluid max-min fairness* one: at any instant,
+//! flow rates are the max-min fair allocation subject to per-node ingress
+//! and egress capacities (progressive filling / water-filling). The
+//! simulator advances a virtual clock from flow completion to flow
+//! completion, recomputing the allocation each time. A per-flow fixed
+//! latency models RPC round-trips.
+//!
+//! Time is virtual (f64 seconds): experiments are deterministic and run
+//! in microseconds of wall-clock regardless of simulated transfer sizes.
+
+/// Index of a node in the simulation.
+pub type NodeId = usize;
+
+/// A node's NIC capacities, in bytes/second.
+#[derive(Clone, Copy, Debug)]
+pub struct NodeCaps {
+    pub egress_bps: f64,
+    pub ingress_bps: f64,
+}
+
+impl NodeCaps {
+    /// Symmetric NIC of the given bits-per-second rating.
+    pub fn symmetric_gbps(gbps: f64) -> Self {
+        let bytes = gbps * 1e9 / 8.0;
+        Self { egress_bps: bytes, ingress_bps: bytes }
+    }
+}
+
+/// One transfer request.
+#[derive(Clone, Copy, Debug)]
+pub struct Flow {
+    pub src: NodeId,
+    pub dst: NodeId,
+    pub bytes: u64,
+    /// Virtual time at which the flow becomes active.
+    pub start: f64,
+}
+
+/// Completion record for a flow.
+#[derive(Clone, Copy, Debug)]
+pub struct FlowResult {
+    pub finish: f64,
+}
+
+/// The simulator: a set of nodes with capacities and a per-request
+/// latency charged once per flow.
+#[derive(Clone, Debug)]
+pub struct NetSim {
+    pub nodes: Vec<NodeCaps>,
+    /// Fixed per-flow latency in seconds (request RTT + disk seek model).
+    pub latency_s: f64,
+}
+
+impl NetSim {
+    pub fn new(nodes: Vec<NodeCaps>, latency_s: f64) -> Self {
+        Self { nodes, latency_s }
+    }
+
+    /// Homogeneous cluster of `n` nodes at `gbps` each.
+    pub fn homogeneous(n: usize, gbps: f64, latency_s: f64) -> Self {
+        Self::new(vec![NodeCaps::symmetric_gbps(gbps); n], latency_s)
+    }
+
+    /// Run a set of flows to completion; returns per-flow finish times and
+    /// (as `.1`) the makespan (0.0 when `flows` is empty).
+    pub fn run(&self, flows: &[Flow]) -> (Vec<FlowResult>, f64) {
+        #[derive(Clone, Debug)]
+        struct Active {
+            idx: usize,
+            src: NodeId,
+            dst: NodeId,
+            remaining: f64,
+        }
+        let mut results = vec![FlowResult { finish: 0.0 }; flows.len()];
+        // Latency shifts a flow's start; data then moves under fair share.
+        let mut pending: Vec<(f64, Active)> = flows
+            .iter()
+            .enumerate()
+            .map(|(i, f)| {
+                (
+                    f.start + self.latency_s,
+                    Active { idx: i, src: f.src, dst: f.dst, remaining: f.bytes as f64 },
+                )
+            })
+            .collect();
+        pending.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let mut active: Vec<Active> = Vec::new();
+        let mut now = 0.0f64;
+        let mut makespan = 0.0f64;
+        let mut pi = 0; // next pending index
+
+        loop {
+            // Admit flows that have started.
+            while pi < pending.len() && pending[pi].0 <= now + 1e-12 {
+                active.push(pending[pi].1.clone());
+                pi += 1;
+            }
+            if active.is_empty() {
+                if pi >= pending.len() {
+                    break;
+                }
+                now = pending[pi].0;
+                continue;
+            }
+
+            // Max-min fair rates via progressive filling.
+            let srcs: Vec<NodeId> = active.iter().map(|a| a.src).collect();
+            let dsts: Vec<NodeId> = active.iter().map(|a| a.dst).collect();
+            let rates = self.fair_rates_impl(&srcs, &dsts);
+
+            // Next event: earliest completion or next admission.
+            let mut dt = f64::INFINITY;
+            for (a, &r) in active.iter().zip(rates.iter()) {
+                if r > 0.0 {
+                    dt = dt.min(a.remaining / r);
+                }
+            }
+            if pi < pending.len() {
+                dt = dt.min(pending[pi].0 - now);
+            }
+            assert!(dt.is_finite(), "simulation stalled (zero rates?)");
+            let dt = dt.max(0.0);
+
+            // Advance.
+            now += dt;
+            for (a, &r) in active.iter_mut().zip(rates.iter()) {
+                a.remaining -= r * dt;
+            }
+            // Retire completed flows.
+            let mut i = 0;
+            while i < active.len() {
+                if active[i].remaining <= 1e-6 {
+                    results[active[i].idx].finish = now;
+                    makespan = makespan.max(now);
+                    active.swap_remove(i);
+                } else {
+                    i += 1;
+                }
+            }
+        }
+        (results, makespan)
+    }
+
+    /// Max-min fair allocation for flows given as parallel src/dst arrays
+    /// (two constraint sets: source egress, destination ingress),
+    /// computed by progressive filling.
+    fn fair_rates_impl(&self, srcs: &[NodeId], dsts: &[NodeId]) -> Vec<f64> {
+        let nf = srcs.len();
+        let nn = self.nodes.len();
+        // Link capacities: 0..nn egress, nn..2nn ingress.
+        let mut cap = vec![0.0f64; 2 * nn];
+        for (i, n) in self.nodes.iter().enumerate() {
+            cap[i] = n.egress_bps;
+            cap[nn + i] = n.ingress_bps;
+        }
+        let mut fixed = vec![false; nf];
+        let mut rate = vec![0.0f64; nf];
+        loop {
+            // Count unfixed flows per link.
+            let mut count = vec![0usize; 2 * nn];
+            for f in 0..nf {
+                if !fixed[f] {
+                    count[srcs[f]] += 1;
+                    count[nn + dsts[f]] += 1;
+                }
+            }
+            // Bottleneck link: min cap/count over links with unfixed flows.
+            let mut best: Option<(f64, usize)> = None;
+            for l in 0..2 * nn {
+                if count[l] > 0 {
+                    let share = cap[l] / count[l] as f64;
+                    if best.map_or(true, |(s, _)| share < s) {
+                        best = Some((share, l));
+                    }
+                }
+            }
+            let Some((share, link)) = best else { break };
+            // Fix all unfixed flows through the bottleneck at `share`.
+            for f in 0..nf {
+                if fixed[f] {
+                    continue;
+                }
+                let through = srcs[f] == link || nn + dsts[f] == link;
+                if through {
+                    fixed[f] = true;
+                    rate[f] = share;
+                    cap[srcs[f]] -= share;
+                    cap[nn + dsts[f]] -= share;
+                }
+            }
+            // Numerical hygiene.
+            for c in cap.iter_mut() {
+                if *c < 0.0 {
+                    *c = 0.0;
+                }
+            }
+        }
+        rate
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sim(n: usize) -> NetSim {
+        NetSim::homogeneous(n, 1.0, 0.0) // 1 Gbps, no latency
+    }
+
+    const GBPS: f64 = 1e9 / 8.0;
+
+    #[test]
+    fn single_flow_takes_bytes_over_bandwidth() {
+        let s = sim(2);
+        let (res, makespan) = s.run(&[Flow { src: 0, dst: 1, bytes: GBPS as u64, start: 0.0 }]);
+        assert!((res[0].finish - 1.0).abs() < 1e-6);
+        assert!((makespan - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ingress_bottleneck_serializes_fanin() {
+        // 4 sources → 1 destination: ingress 1 Gbps shared by 4 flows of
+        // 0.25 GB each ⇒ total 1 GB through a 1 Gbps NIC ⇒ 8 s.
+        let s = sim(5);
+        let flows: Vec<Flow> = (0..4)
+            .map(|i| Flow { src: i, dst: 4, bytes: (GBPS / 4.0) as u64, start: 0.0 })
+            .collect();
+        let (_, makespan) = s.run(&flows);
+        assert!((makespan - 1.0).abs() < 1e-6, "makespan={makespan}");
+    }
+
+    #[test]
+    fn independent_flows_run_in_parallel() {
+        let s = sim(4);
+        let flows = vec![
+            Flow { src: 0, dst: 1, bytes: GBPS as u64, start: 0.0 },
+            Flow { src: 2, dst: 3, bytes: GBPS as u64, start: 0.0 },
+        ];
+        let (res, makespan) = s.run(&flows);
+        assert!((makespan - 1.0).abs() < 1e-6);
+        assert!((res[0].finish - 1.0).abs() < 1e-6);
+        assert!((res[1].finish - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fair_share_then_speedup_after_completion() {
+        // Two flows share dst ingress; flow B is half the size, finishes
+        // first at t=1 (rate 0.5), then A gets full rate.
+        let s = sim(3);
+        let flows = vec![
+            Flow { src: 0, dst: 2, bytes: GBPS as u64, start: 0.0 },
+            Flow { src: 1, dst: 2, bytes: (GBPS / 2.0) as u64, start: 0.0 },
+        ];
+        let (res, _) = s.run(&flows);
+        assert!((res[1].finish - 1.0).abs() < 1e-5, "B={}", res[1].finish);
+        assert!((res[0].finish - 1.5).abs() < 1e-5, "A={}", res[0].finish);
+    }
+
+    #[test]
+    fn latency_shifts_completion() {
+        let mut s = sim(2);
+        s.latency_s = 0.25;
+        let (res, _) = s.run(&[Flow { src: 0, dst: 1, bytes: GBPS as u64, start: 0.0 }]);
+        assert!((res[0].finish - 1.25).abs() < 1e-6);
+    }
+
+    #[test]
+    fn staggered_starts() {
+        let s = sim(3);
+        // Flow B starts at t=0.5; both share ingress afterwards.
+        let flows = vec![
+            Flow { src: 0, dst: 2, bytes: GBPS as u64, start: 0.0 },
+            Flow { src: 1, dst: 2, bytes: GBPS as u64, start: 0.5 },
+        ];
+        let (res, makespan) = s.run(&flows);
+        // A: 0.5 s at full rate (0.5 GB done), then shares; A needs 0.5 GB
+        // more at 0.5 rate → done at 1.5. B: 1 GB at 0.5 rate from 0.5 →
+        // has 0.25 GB left when A finishes... A done at 1.5; B transferred
+        // 0.5 GB by then, remaining 0.5 GB at full rate → 2.0.
+        assert!((res[0].finish - 1.5).abs() < 1e-5, "A={}", res[0].finish);
+        assert!((res[1].finish - 2.0).abs() < 1e-5, "B={}", res[1].finish);
+        assert!((makespan - 2.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn conservation_total_bytes() {
+        // makespan >= total bytes into one dst / ingress capacity
+        let s = sim(10);
+        let flows: Vec<Flow> = (0..9)
+            .map(|i| Flow { src: i, dst: 9, bytes: 10_000_000, start: 0.0 })
+            .collect();
+        let (_, makespan) = s.run(&flows);
+        let lower = 9.0 * 10_000_000.0 / GBPS;
+        assert!(makespan >= lower - 1e-6);
+        assert!(makespan <= lower * 1.01 + 1e-6);
+    }
+
+    #[test]
+    fn empty_flow_set() {
+        let s = sim(2);
+        let (res, makespan) = s.run(&[]);
+        assert!(res.is_empty());
+        assert_eq!(makespan, 0.0);
+    }
+}

@@ -1,0 +1,177 @@
+//! Deterministic PRNG substrate (the offline toolchain has no `rand`).
+//!
+//! SplitMix64 seeding + xoshiro256** core — small, fast, and good enough
+//! for workload generation, Monte-Carlo censuses, and property tests.
+//! Everything in this repo that uses randomness takes an explicit seed so
+//! experiments are reproducible run-to-run.
+
+#[derive(Clone, Debug)]
+pub struct Prng {
+    s: [u64; 4],
+}
+
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Prng {
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        Self {
+            s: [
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+            ],
+        }
+    }
+
+    /// xoshiro256** next.
+    #[inline]
+    pub fn u64(&mut self) -> u64 {
+        let result = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    #[inline]
+    pub fn u8(&mut self) -> u8 {
+        (self.u64() >> 56) as u8
+    }
+
+    #[inline]
+    pub fn u32(&mut self) -> u32 {
+        (self.u64() >> 32) as u32
+    }
+
+    /// Uniform in `[0, n)`. Panics if `n == 0`.
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        assert!(n > 0);
+        // Lemire-style rejection-free-enough: fine for our purposes.
+        (self.u64() % n as u64) as usize
+    }
+
+    /// Uniform in `[lo, hi)`.
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi > lo);
+        lo + self.below(hi - lo)
+    }
+
+    /// Uniform float in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Fill a byte buffer.
+    pub fn fill(&mut self, buf: &mut [u8]) {
+        let mut i = 0;
+        while i + 8 <= buf.len() {
+            buf[i..i + 8].copy_from_slice(&self.u64().to_le_bytes());
+            i += 8;
+        }
+        while i < buf.len() {
+            buf[i] = self.u8();
+            i += 1;
+        }
+    }
+
+    pub fn bytes(&mut self, n: usize) -> Vec<u8> {
+        let mut v = vec![0u8; n];
+        self.fill(&mut v);
+        v
+    }
+
+    /// Choose `m` distinct indices from `[0, n)` (Floyd's algorithm).
+    pub fn distinct(&mut self, n: usize, m: usize) -> Vec<usize> {
+        assert!(m <= n);
+        let mut chosen: Vec<usize> = Vec::with_capacity(m);
+        for j in n - m..n {
+            let t = self.below(j + 1);
+            if chosen.contains(&t) {
+                chosen.push(j);
+            } else {
+                chosen.push(t);
+            }
+        }
+        chosen.sort_unstable();
+        chosen
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, v: &mut [T]) {
+        for i in (1..v.len()).rev() {
+            let j = self.below(i + 1);
+            v.swap(i, j);
+        }
+    }
+
+    /// Sample from an exponential distribution with the given rate.
+    pub fn exponential(&mut self, rate: f64) -> f64 {
+        -(1.0 - self.f64()).ln() / rate
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut a = Prng::new(1);
+        let mut b = Prng::new(1);
+        for _ in 0..100 {
+            assert_eq!(a.u64(), b.u64());
+        }
+    }
+
+    #[test]
+    fn distinct_indices_are_distinct_and_in_range() {
+        let mut rng = Prng::new(2);
+        for _ in 0..200 {
+            let n = rng.range(1, 40);
+            let m = rng.below(n + 1);
+            let d = rng.distinct(n, m);
+            assert_eq!(d.len(), m);
+            let mut s = d.clone();
+            s.dedup();
+            assert_eq!(s.len(), m, "duplicates in {d:?}");
+            assert!(d.iter().all(|&x| x < n));
+        }
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut rng = Prng::new(3);
+        let mut sum = 0.0;
+        for _ in 0..10_000 {
+            let x = rng.f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        let mean = sum / 10_000.0;
+        assert!((mean - 0.5).abs() < 0.02, "mean={mean}");
+    }
+
+    #[test]
+    fn below_covers_support() {
+        let mut rng = Prng::new(4);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            seen[rng.below(10)] = true;
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+}

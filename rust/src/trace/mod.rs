@@ -1,0 +1,132 @@
+//! Workload trace substrate for Experiment 4 (Fig 10).
+//!
+//! The paper samples 100 files (5 KB–30 MB) from the FB-2010 MapReduce
+//! trace. The raw trace is not redistributable, so we generate a
+//! synthetic equivalent with the same size profile (log-uniform sizes
+//! spanning the same range — MapReduce file-size distributions are
+//! heavy-tailed, which log-uniform captures) and replay read operations
+//! against the cluster. The experiment's variable of interest is only
+//! file size vs degraded-read latency, which this preserves (DESIGN.md §2).
+
+use crate::prng::Prng;
+
+/// One traced file.
+#[derive(Clone, Debug)]
+pub struct TraceFile {
+    pub name: String,
+    pub size: usize,
+}
+
+/// Size classes as Fig 10 reports them.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SizeClass {
+    /// < 1 MB
+    Small,
+    /// 1–8 MB
+    Medium,
+    /// > 8 MB
+    Large,
+}
+
+impl SizeClass {
+    pub fn of(size: usize) -> SizeClass {
+        const MB: usize = 1024 * 1024;
+        if size < MB {
+            SizeClass::Small
+        } else if size <= 8 * MB {
+            SizeClass::Medium
+        } else {
+            SizeClass::Large
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            SizeClass::Small => "small (<1MB)",
+            SizeClass::Medium => "medium (1-8MB)",
+            SizeClass::Large => "large (>8MB)",
+        }
+    }
+}
+
+/// Trace generation parameters (defaults = paper Experiment 4).
+#[derive(Clone, Debug)]
+pub struct TraceConfig {
+    pub n_files: usize,
+    pub min_size: usize,
+    pub max_size: usize,
+    pub seed: u64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        Self { n_files: 100, min_size: 5 * 1024, max_size: 30 * 1024 * 1024, seed: 0xFB2010 }
+    }
+}
+
+/// Generate the synthetic FB-2010-profile file population.
+pub fn generate(cfg: &TraceConfig) -> Vec<TraceFile> {
+    let mut rng = Prng::new(cfg.seed);
+    let lo = (cfg.min_size as f64).ln();
+    let hi = (cfg.max_size as f64).ln();
+    (0..cfg.n_files)
+        .map(|i| {
+            let size = (lo + (hi - lo) * rng.f64()).exp() as usize;
+            TraceFile { name: format!("fb2010/file-{i:04}"), size: size.clamp(cfg.min_size, cfg.max_size) }
+        })
+        .collect()
+}
+
+/// A replayable read operation stream: each op reads one file; order is
+/// shuffled like interactive analytical workloads.
+pub fn read_ops(files: &[TraceFile], repeats: usize, seed: u64) -> Vec<usize> {
+    let mut rng = Prng::new(seed);
+    let mut ops: Vec<usize> = (0..files.len()).flat_map(|i| std::iter::repeat(i).take(repeats)).collect();
+    rng.shuffle(&mut ops);
+    ops
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generates_requested_population() {
+        let cfg = TraceConfig::default();
+        let files = generate(&cfg);
+        assert_eq!(files.len(), 100);
+        assert!(files.iter().all(|f| f.size >= cfg.min_size && f.size <= cfg.max_size));
+        // should contain all three size classes
+        let classes: std::collections::HashSet<_> =
+            files.iter().map(|f| SizeClass::of(f.size)).collect();
+        assert_eq!(classes.len(), 3, "size profile should span small/medium/large");
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let cfg = TraceConfig::default();
+        let a = generate(&cfg);
+        let b = generate(&cfg);
+        assert_eq!(a.len(), b.len());
+        assert!(a.iter().zip(b.iter()).all(|(x, y)| x.size == y.size));
+    }
+
+    #[test]
+    fn size_class_boundaries() {
+        const MB: usize = 1024 * 1024;
+        assert_eq!(SizeClass::of(5 * 1024), SizeClass::Small);
+        assert_eq!(SizeClass::of(MB - 1), SizeClass::Small);
+        assert_eq!(SizeClass::of(2 * MB), SizeClass::Medium);
+        assert_eq!(SizeClass::of(20 * MB), SizeClass::Large);
+    }
+
+    #[test]
+    fn read_ops_cover_all_files() {
+        let files = generate(&TraceConfig { n_files: 10, ..Default::default() });
+        let ops = read_ops(&files, 3, 1);
+        assert_eq!(ops.len(), 30);
+        for i in 0..10 {
+            assert_eq!(ops.iter().filter(|&&x| x == i).count(), 3);
+        }
+    }
+}

@@ -1,0 +1,137 @@
+//! Integration: the paper's §III/§IV worked examples and §VI claims,
+//! checked end-to-end against the analytic layer and the prototype.
+
+use cp_lrc::cluster::{Cluster, ClusterConfig};
+use cp_lrc::codes::{Scheme, SchemeKind};
+use cp_lrc::{experiments, metrics, repair};
+
+/// §III "Direct demonstration" — Table I repair columns for (6,2,2) and
+/// (24,2,2). (ARC2 tolerances reflect the cost-model notes in DESIGN.md.)
+#[test]
+fn table_i_repair_columns() {
+    let rows: &[(SchemeKind, usize, f64, f64)] = &[
+        (SchemeKind::AzureLrc, 6, 3.00, 3.60),
+        (SchemeKind::AzureLrcPlus1, 6, 6.00, 4.80),
+        (SchemeKind::OptimalCauchy, 6, 5.00, 5.00),
+        (SchemeKind::UniformCauchy, 6, 4.00, 4.00),
+        (SchemeKind::CpAzure, 6, 3.00, 3.00),
+        (SchemeKind::CpUniform, 6, 3.50, 3.10),
+        (SchemeKind::AzureLrc, 24, 12.00, 12.86),
+        (SchemeKind::CpAzure, 24, 12.00, 11.36),
+        (SchemeKind::CpUniform, 24, 12.50, 11.39),
+    ];
+    for &(kind, k, adrc, arc1) in rows {
+        let s = Scheme::new(kind, k, 2, 2);
+        assert!((metrics::adrc(&s) - adrc).abs() < 0.05, "{kind:?} k={k} ADRC");
+        assert!((metrics::arc1(&s) - arc1).abs() < 0.05, "{kind:?} k={k} ARC1");
+    }
+}
+
+/// §III motivation: (24,2,2) CP-Azure cascaded-group repairs cost 2
+/// (L1/L2/G2) vs 12/12/24 in Azure LRC.
+#[test]
+fn cascaded_group_parity_repair_costs() {
+    let cp = Scheme::new(SchemeKind::CpAzure, 24, 2, 2);
+    let az = Scheme::new(SchemeKind::AzureLrc, 24, 2, 2);
+    for b in [26usize, 27, 25] {
+        // L1, L2, G2
+        assert_eq!(repair::plan_single(&cp, b).cost(24), 2, "CP {b}");
+    }
+    assert_eq!(repair::plan_single(&az, 26).cost(24), 12); // L1 = group XOR
+    assert_eq!(repair::plan_single(&az, 25).cost(24), 24); // G2 = all data
+}
+
+/// §VI summary: CP-LRCs reduce baseline ARC1 by "up to 47.5%" and ARC2 by
+/// "up to 19.9%" — verify our maxima land in that neighbourhood.
+#[test]
+fn headline_reduction_factors() {
+    let mut max_arc1_red: f64 = 0.0;
+    let mut max_arc2_red: f64 = 0.0;
+    for &(k, r, p) in cp_lrc::PARAMS.iter() {
+        for cp_kind in [SchemeKind::CpAzure, SchemeKind::CpUniform] {
+            let cp = Scheme::new(cp_kind, k, r, p);
+            let cp1 = metrics::arc1(&cp);
+            let cp2 = metrics::pair_stats(&cp).arc2;
+            for base in [
+                SchemeKind::AzureLrc,
+                SchemeKind::AzureLrcPlus1,
+                SchemeKind::OptimalCauchy,
+                SchemeKind::UniformCauchy,
+            ] {
+                let b = Scheme::new(base, k, r, p);
+                max_arc1_red = max_arc1_red.max(1.0 - cp1 / metrics::arc1(&b));
+                max_arc2_red = max_arc2_red.max(1.0 - cp2 / metrics::pair_stats(&b).arc2);
+            }
+        }
+    }
+    assert!(
+        (0.40..0.60).contains(&max_arc1_red),
+        "max ARC1 reduction {max_arc1_red:.3} (paper: 0.475)"
+    );
+    assert!(
+        (0.15..0.35).contains(&max_arc2_red),
+        "max ARC2 reduction {max_arc2_red:.3} (paper: 0.199)"
+    );
+}
+
+/// §IV-C multi-node examples on real bytes in the prototype.
+#[test]
+fn cp_azure_multinode_examples_in_cluster() {
+    let mut c = Cluster::new(ClusterConfig {
+        num_datanodes: 13,
+        gbps: 1.0,
+        latency_s: 0.001,
+        block_size: 2048,
+        kind: SchemeKind::CpAzure,
+        k: 6,
+        r: 2,
+        p: 2,
+        ..Default::default()
+    });
+    let sid = c.fill_random_stripes(1, 0x60)[0];
+    // (1) D1 & G2 → 4 blocks, local.
+    let (v0, v1) =
+        (c.meta.stripes[&sid].block_nodes[0], c.meta.stripes[&sid].block_nodes[7]);
+    c.fail_node(v0);
+    c.fail_node(v1);
+    let rep = c.repair_stripe(sid, &[0, 7]).unwrap();
+    assert!(rep.local);
+    assert_eq!(rep.blocks_read, 4);
+    c.restore_node(v0);
+    c.restore_node(v1);
+    assert!(c.scrub_stripe(sid).unwrap());
+
+    // (2) D1, D2, L2 → global repair, 6 blocks.
+    let vs: Vec<_> = [0usize, 1, 9]
+        .iter()
+        .map(|&b| c.meta.stripes[&sid].block_nodes[b])
+        .collect();
+    for &v in &vs {
+        c.fail_node(v);
+    }
+    let rep = c.repair_stripe(sid, &[0, 1, 9]).unwrap();
+    assert!(!rep.local);
+    assert_eq!(rep.blocks_read, 6);
+    for v in vs {
+        c.restore_node(v);
+    }
+    assert!(c.scrub_stripe(sid).unwrap());
+}
+
+/// Figure-6/9 style measurement, tiny configuration: CP repair-time means
+/// must beat the Azure-family baselines at P5 semantics (24,2,2).
+#[test]
+fn repair_time_ordering_small_run() {
+    let bs = 128 * 1024;
+    let (cp1, _) = experiments::single_node_repair_time(SchemeKind::CpAzure, 24, 2, 2, bs, 1, 9);
+    let (az1, _) = experiments::single_node_repair_time(SchemeKind::AzureLrc, 24, 2, 2, bs, 1, 9);
+    let (a11, _) =
+        experiments::single_node_repair_time(SchemeKind::AzureLrcPlus1, 24, 2, 2, bs, 1, 9);
+    assert!(cp1 < az1, "cp {cp1} !< azure {az1}");
+    assert!(cp1 < a11, "cp {cp1} !< azure+1 {a11}");
+    // Two-node: enough random patterns to dominate sampling noise (the
+    // analytic ARC2 ratio at (24,2,2) is 21.8/24 ≈ 0.91).
+    let (cp2, _) = experiments::two_node_repair_time(SchemeKind::CpAzure, 24, 2, 2, bs, 1, 40, 9);
+    let (az2, _) = experiments::two_node_repair_time(SchemeKind::AzureLrc, 24, 2, 2, bs, 1, 40, 9);
+    assert!(cp2 < az2, "cp {cp2} !< azure {az2}");
+}

@@ -1,0 +1,190 @@
+//! Cross-module property suite: randomized invariants over arbitrary
+//! parameters (not just P1–P8), using the in-tree proptest-lite driver.
+
+use cp_lrc::codec::StripeCodec;
+use cp_lrc::codes::{Scheme, SchemeKind};
+use cp_lrc::netsim::{Flow, NetSim};
+use cp_lrc::prng::Prng;
+use cp_lrc::proptest_lite::check;
+use cp_lrc::reliability::{self, ReliabilityParams};
+use cp_lrc::{metrics, prop_assert, repair};
+
+/// Draw a random-but-valid (kind, k, r, p) configuration.
+fn arb_scheme(rng: &mut Prng) -> Scheme {
+    let kind = SchemeKind::ALL_LRC[rng.below(6)];
+    let r = 2 + rng.below(4); // 2..=5
+    let p = 2 + rng.below(4); // 2..=5
+    // k: a multiple of p (and of p-1 for LRC+1) in a sane range
+    let unit = match kind {
+        SchemeKind::AzureLrcPlus1 => p - 1,
+        _ => p,
+    };
+    let k = unit * (2 + rng.below(8)); // up to ~40-ish
+    Scheme::new(kind, k.max(unit * 2), r, p)
+}
+
+#[test]
+fn constructions_valid_for_arbitrary_parameters() {
+    check("arb-construction-valid", 120, 0xA11CE, |rng| {
+        let s = arb_scheme(rng);
+        prop_assert!(s.equations_hold(), "{:?} ({},{},{}) equations", s.kind, s.k, s.r, s.p);
+        if s.kind.is_cp() {
+            // cascade identity on generator rows
+            let gr = s.k + s.r - 1;
+            for c in 0..s.k {
+                let mut sum = 0u8;
+                for j in 0..s.p {
+                    sum ^= s.generator.get(s.local_parity(j), c);
+                }
+                prop_assert!(
+                    sum == s.generator.get(gr, c),
+                    "cascade broken at col {c} for {:?} ({},{},{})",
+                    s.kind,
+                    s.k,
+                    s.r,
+                    s.p
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn roundtrip_random_parameters_and_patterns() {
+    check("arb-roundtrip", 60, 0xB0B, |rng| {
+        let s = arb_scheme(rng);
+        let codec = StripeCodec::new(s);
+        let scheme = codec.scheme.clone();
+        let data: Vec<Vec<u8>> = (0..scheme.k).map(|_| rng.bytes(32)).collect();
+        let stripe = codec.encode_stripe(&data);
+        let f = 1 + rng.below(scheme.guaranteed_tolerance);
+        let erased = rng.distinct(scheme.n(), f);
+        let plan = repair::plan(&scheme, &erased)
+            .ok_or_else(|| format!("pattern {erased:?} must be recoverable (f={f})"))?;
+        let mut blocks: Vec<Option<Vec<u8>>> = stripe.iter().cloned().map(Some).collect();
+        for &e in &erased {
+            blocks[e] = None;
+        }
+        let rec = repair::execute(&codec, &plan, &blocks).map_err(|e| e.to_string())?;
+        for (i, &e) in erased.iter().enumerate() {
+            prop_assert!(rec[i] == stripe[e], "block {e} bytes differ");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn adrc_monotone_in_stripe_width() {
+    // §III challenge 1: wider stripes cost more to repair, per scheme.
+    for kind in [SchemeKind::AzureLrc, SchemeKind::CpAzure, SchemeKind::CpUniform] {
+        let mut last = 0.0;
+        for k in [6usize, 12, 24, 48, 96] {
+            let s = Scheme::new(kind, k, 2, 2);
+            let a = metrics::adrc(&s);
+            assert!(a >= last, "{kind:?} ADRC not monotone at k={k}");
+            last = a;
+        }
+    }
+}
+
+#[test]
+fn cp_single_costs_never_worse_than_azure_per_block_class() {
+    check("cp-dominates-azure-blockwise", 40, 0xD0C, |rng| {
+        let p = 2 + rng.below(3);
+        let k = p * (2 + rng.below(6));
+        let r = 2 + rng.below(3);
+        let az = Scheme::new(SchemeKind::AzureLrc, k, r, p);
+        let cp = Scheme::new(SchemeKind::CpAzure, k, r, p);
+        for b in 0..az.n() {
+            let ca = repair::plan_single(&az, b).cost(k);
+            let cc = repair::plan_single(&cp, b).cost(k);
+            prop_assert!(
+                cc <= ca,
+                "block {b} ({}) CP {cc} > Azure {ca} at ({k},{r},{p})",
+                az.block_name(b)
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn netsim_lower_bounds_hold_for_random_flow_sets() {
+    check("netsim-bounds", 60, 0x9E7, |rng| {
+        let nodes = 4 + rng.below(12);
+        let sim = NetSim::homogeneous(nodes, 1.0, 0.0);
+        let gbps = 1e9 / 8.0;
+        let nf = 1 + rng.below(20);
+        let flows: Vec<Flow> = (0..nf)
+            .map(|_| {
+                let src = rng.below(nodes);
+                let mut dst = rng.below(nodes);
+                if dst == src {
+                    dst = (dst + 1) % nodes;
+                }
+                Flow { src, dst, bytes: 1 + rng.below(50_000_000) as u64, start: 0.0 }
+            })
+            .collect();
+        let (results, makespan) = sim.run(&flows);
+        // per-flow: can't beat its own size over the line rate
+        for (f, res) in flows.iter().zip(results.iter()) {
+            let lb = f.bytes as f64 / gbps;
+            prop_assert!(
+                res.finish >= lb - 1e-6,
+                "flow finished faster than line rate: {} < {}",
+                res.finish,
+                lb
+            );
+        }
+        // per-node: total bytes through each NIC bound the makespan
+        for node in 0..nodes {
+            let egress: u64 = flows.iter().filter(|f| f.src == node).map(|f| f.bytes).sum();
+            let ingress: u64 = flows.iter().filter(|f| f.dst == node).map(|f| f.bytes).sum();
+            let lb = (egress.max(ingress)) as f64 / gbps;
+            prop_assert!(
+                makespan >= lb - 1e-6,
+                "makespan {} beats node-{node} NIC bound {}",
+                makespan,
+                lb
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn mttdl_monotone_in_failure_rate() {
+    let mut params = ReliabilityParams::default();
+    params.census_samples = 5_000;
+    let s = Scheme::new(SchemeKind::CpAzure, 12, 2, 2);
+    let mut last = f64::INFINITY;
+    for lambda in [0.1, 0.25, 0.5, 1.0, 2.0] {
+        params.lambda = lambda;
+        let m = reliability::mttdl(&s, &params, 5);
+        assert!(m < last, "MTTDL must fall as λ rises (λ={lambda}: {m:.3e} !< {last:.3e})");
+        last = m;
+    }
+}
+
+#[test]
+fn repair_cost_invariants_random_pairs() {
+    check("pair-cost-invariants", 50, 0xC0DE, |rng| {
+        let s = arb_scheme(rng);
+        let n = s.n();
+        let pair = rng.distinct(n, 2);
+        let plan = repair::plan(&s, &pair).ok_or("pairs must be recoverable for r>=2")?;
+        let cost = plan.cost(s.k);
+        prop_assert!(cost >= 1, "repair needs at least one read");
+        if plan.fully_local() {
+            // local cost bounded by sum of the two cheapest equations
+            prop_assert!(cost <= 2 * (s.k + s.r), "absurd local cost {cost}");
+        } else {
+            prop_assert!(cost == s.k || plan.global_blocks.is_empty(), "global cost must be k");
+        }
+        // fetch_set is executable: contains no erased blocks
+        let fetch = plan.fetch_set(&s);
+        prop_assert!(fetch.iter().all(|b| !pair.contains(b)), "fetch includes erased");
+        Ok(())
+    });
+}
