@@ -62,7 +62,7 @@ fn main() {
                 exec.run(&coeff, &data).unwrap()
             });
             b.run_throughput("encode/native-matmul/r4-k24/256KiB", k * bs, || {
-                native_gf_matmul(&coeff, &data)
+                native_gf_matmul(&coeff, &data).unwrap()
             });
         }
         _ => eprintln!("(skipping PJRT benches: run `make artifacts` first)"),

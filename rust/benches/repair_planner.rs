@@ -1,11 +1,44 @@
-//! Micro-benchmarks for the coordinator's planning hot paths: single- and
-//! two-node repair planning, decodability checks, plan execution.
+//! Micro-benchmarks for the coordinator's planning hot paths — single-
+//! and two-node repair planning, decodability checks — plus the ISSUE 2
+//! headline comparison: **compile-once/execute-many** (the
+//! plan→compile→execute pipeline with a cached [`RepairProgram`] and
+//! reused scratch) vs **plan-per-stripe** (re-planning, re-compiling and
+//! re-allocating for every stripe, as the pre-redesign cluster did).
+//! Results of that comparison are recorded in
+//! `BENCH_repair_program.json` at the workspace root.
 
-use cp_lrc::bench_harness::Bench;
+use cp_lrc::bench_harness::{Bench, Stats};
 use cp_lrc::codec::StripeCodec;
 use cp_lrc::codes::{Scheme, SchemeKind};
 use cp_lrc::prng::Prng;
-use cp_lrc::repair;
+use cp_lrc::repair::{self, RepairProgram, ScratchBuffers, SliceSource};
+
+/// Erased stripe fixture: D1 + L1 (the paper's two-step cascade pattern).
+struct Fixture {
+    codec: StripeCodec,
+    erased: Vec<usize>,
+    blocks: Vec<Option<Vec<u8>>>,
+    bytes: usize,
+}
+
+fn fixture(kind: SchemeKind, k: usize, r: usize, p: usize, block_len: usize, rng: &mut Prng) -> Fixture {
+    let codec = StripeCodec::new(Scheme::new(kind, k, r, p));
+    let erased = vec![0usize, codec.scheme.local_parity(0)];
+    let data: Vec<Vec<u8>> = (0..k).map(|_| rng.bytes(block_len)).collect();
+    let stripe = codec.encode_stripe(&data);
+    let mut blocks: Vec<Option<Vec<u8>>> = stripe.into_iter().map(Some).collect();
+    for &e in &erased {
+        blocks[e] = None;
+    }
+    Fixture { codec, erased, blocks, bytes: block_len }
+}
+
+fn json_stats(s: &Stats) -> String {
+    format!(
+        "{{\"mean_ns\": {:.1}, \"median_ns\": {:.1}, \"min_ns\": {:.1}, \"p95_ns\": {:.1}, \"iters\": {}}}",
+        s.mean_ns, s.median_ns, s.min_ns, s.p95_ns, s.iters
+    )
+}
 
 fn main() {
     let b = Bench::default();
@@ -22,18 +55,75 @@ fn main() {
                 repair::plan(&s, &[0, 1]).unwrap()
             });
             b.run(&format!("recoverable/{name}-({k},{r},{p})"), || s.recoverable(&[0, 1, 2]));
+            b.run(&format!("compile/pair/{name}-({k},{r},{p})"), || {
+                RepairProgram::for_pattern(&s, &[0, 1]).unwrap()
+            });
         }
     }
 
     // plan execution end-to-end (small blocks; network excluded)
-    let codec = StripeCodec::new(Scheme::new(SchemeKind::CpAzure, 24, 2, 2));
-    let data: Vec<Vec<u8>> = (0..24).map(|_| rng.bytes(64 * 1024)).collect();
-    let stripe = codec.encode_stripe(&data);
-    let plan = repair::plan(&codec.scheme, &[0, 26]).unwrap();
-    let mut blocks: Vec<Option<Vec<u8>>> = stripe.into_iter().map(Some).collect();
-    blocks[0] = None;
-    blocks[26] = None;
+    let fx = fixture(SchemeKind::CpAzure, 24, 2, 2, 64 * 1024, &mut rng);
+    let plan = repair::plan(&fx.codec.scheme, &fx.erased).unwrap();
     b.run_throughput("execute/d1+l1/(24,2,2)/64KiB", 13 * 64 * 1024, || {
-        repair::execute(&codec, &plan, &blocks).unwrap()
+        repair::execute(&fx.codec, &plan, &fx.blocks).unwrap()
     });
+
+    // ------------------------------------------------------------------
+    // Compile-once/execute-many vs plan-per-stripe (ISSUE 2 acceptance):
+    // same D1+L1 repair, P2 / P5 / P8. "Per stripe" pays plan + compile
+    // + fresh scratch on every iteration; "execute-only" replays one
+    // compiled program into reused buffers — exactly what the cluster's
+    // PlanCache + scratch pool do across a whole-node repair.
+    // ------------------------------------------------------------------
+    let mut results: Vec<String> = Vec::new();
+    for (label, k, r, p) in [("P2", 12, 2, 2), ("P5", 24, 2, 2), ("P8", 96, 5, 4)] {
+        let fx = fixture(SchemeKind::CpAzure, k, r, p, 64 * 1024, &mut rng);
+        let s = &fx.codec.scheme;
+
+        let per_stripe = b.run(&format!("repair_program/plan_per_stripe/{label}"), || {
+            let plan = repair::plan(s, &fx.erased).unwrap();
+            let program = RepairProgram::compile(s, &plan).unwrap();
+            let mut scratch = ScratchBuffers::new();
+            let mut source = SliceSource::new(&fx.blocks);
+            program.execute(&mut source, &mut scratch).unwrap().len()
+        });
+
+        let program = RepairProgram::for_pattern(s, &fx.erased).unwrap();
+        let mut scratch = ScratchBuffers::new();
+        let execute_only = b.run(&format!("repair_program/execute_only/{label}"), || {
+            let mut source = SliceSource::new(&fx.blocks);
+            program.execute(&mut source, &mut scratch).unwrap().len()
+        });
+
+        if let (Some(ps), Some(eo)) = (per_stripe, execute_only) {
+            let speedup = ps.median_ns / eo.median_ns;
+            println!(
+                "  {label} ({k},{r},{p}): compile-once/execute-many is {speedup:.2}x \
+                 faster than plan-per-stripe"
+            );
+            results.push(format!(
+                "    {{\n      \"params\": \"{label}\", \"k\": {k}, \"r\": {r}, \"p\": {p},\n      \
+                 \"pattern\": \"D1+L1\", \"block_bytes\": {},\n      \
+                 \"plan_per_stripe\": {},\n      \"execute_only\": {},\n      \
+                 \"speedup_median\": {:.3}\n    }}",
+                fx.bytes,
+                json_stats(&ps),
+                json_stats(&eo),
+                speedup
+            ));
+        }
+    }
+
+    if !results.is_empty() {
+        let doc = format!(
+            "{{\n  \"bench\": \"repair_program\",\n  \
+             \"description\": \"compile-once/execute-many vs plan-per-stripe, D1+L1 repair, CP-Azure\",\n  \
+             \"unit\": \"ns per repaired stripe\",\n  \"results\": [\n{}\n  ]\n}}\n",
+            results.join(",\n")
+        );
+        match std::fs::write("BENCH_repair_program.json", &doc) {
+            Ok(()) => println!("wrote BENCH_repair_program.json"),
+            Err(e) => eprintln!("could not write BENCH_repair_program.json: {e}"),
+        }
+    }
 }

@@ -11,7 +11,7 @@
 use super::metadata::{BlockKey, FileId};
 use super::{Cluster, PROXY};
 use crate::netsim::Flow;
-use crate::repair;
+use crate::repair::SliceSource;
 use std::collections::BTreeMap;
 
 /// Degraded-read strategy knob (Fig 10 compares the first and the last).
@@ -103,18 +103,15 @@ impl Cluster {
             .collect();
         if !failed_extents.is_empty() {
             degraded = true;
-            let targets: Vec<usize> =
-                failed_extents.iter().map(|e| e.block_index as usize).collect();
-            // One plan covers all failed blocks the file touches (the
+            // One program covers all failed blocks the file touches (the
             // multi-node degraded read of Fig 5(b)).
-            let mut uniq = targets.clone();
-            uniq.sort_unstable();
-            uniq.dedup();
-            // The plan must treat EVERY failed block as erased (they are
-            // unavailable as inputs) even if the file only touches some.
-            let plan = repair::plan(scheme, &failed)
-                .ok_or_else(|| anyhow::anyhow!("failure pattern unrecoverable"))?;
-            let fetch = plan.fetch_set(scheme);
+            // The program must treat EVERY failed block as erased (they
+            // are unavailable as inputs) even if the file only touches
+            // some. Compiled once per pattern, shared with whole-block
+            // repairs via the cluster's PlanCache.
+            let program =
+                self.programs.lock().unwrap().get_or_compile(scheme, &failed)?;
+            let fetch = program.fetch();
 
             for e in &failed_extents {
                 let b = e.block_index as usize;
@@ -176,15 +173,19 @@ impl Cluster {
                     };
                     ranges.insert(src, seg);
                 }
-                // Reconstruct the segment: run the plan over range-sized
-                // pseudo-blocks.
+                // Reconstruct the segment: replay the compiled program
+                // over range-sized pseudo-blocks (GF math is bytewise, so
+                // a block-level program is also a segment-level program).
                 let mut blocks: Vec<Option<Vec<u8>>> = vec![None; scheme.n()];
-                for (src, seg) in &ranges {
-                    blocks[*src] = Some(seg.clone());
+                for (src, seg) in ranges {
+                    blocks[src] = Some(seg);
                 }
-                let rec = repair::execute(&self.codec, &plan, &blocks)?;
-                let pos = plan.erased.iter().position(|&x| x == b).expect("planned block");
-                out[e.file_off..e.file_off + e.len].copy_from_slice(&rec[pos]);
+                let mut scratch = self.scratch.lock().unwrap();
+                let rec = program.execute(&mut SliceSource::new(&blocks), &mut scratch)?;
+                let pos = program
+                    .output_index(b)
+                    .ok_or_else(|| anyhow::anyhow!("block {b} not in repair program"))?;
+                out[e.file_off..e.file_off + e.len].copy_from_slice(rec[pos]);
             }
         }
 

@@ -20,11 +20,11 @@ use crate::codec::StripeCodec;
 use crate::codes::{Scheme, SchemeKind};
 use crate::netsim::{Flow, NetSim};
 use crate::prng::Prng;
-use crate::repair;
+use crate::repair::{BlockSource, CacheStats, PlanCache, ScratchBuffers};
 use datanode::DataNodeHandle;
 use metadata::{BlockKey, Extent, FileId, Metadata, NodeInfo, ObjectInfo, StripeId, StripeInfo};
 use std::collections::HashMap;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 /// Cluster configuration (defaults = the paper's §VI-B setup).
@@ -109,6 +109,13 @@ pub struct Cluster {
     /// Staged small files waiting to fill a stripe (§V-A).
     staging: Vec<(FileId, Vec<u8>)>,
     staged_bytes: usize,
+    /// Coordinator-side cache of compiled repair programs: one compile
+    /// per `(scheme, erasure pattern)`, replayed across every stripe
+    /// (repairs, degraded reads, scrubs).
+    programs: Mutex<PlanCache>,
+    /// Proxy-side executor scratch, reused across stripes so repair
+    /// loops allocate nothing per step.
+    scratch: Mutex<ScratchBuffers>,
 }
 
 /// netsim node ids: proxy = 0, datanode i = i + 1.
@@ -149,7 +156,14 @@ impl Cluster {
             next_file: 0,
             staging: Vec::new(),
             staged_bytes: 0,
+            programs: Mutex::new(PlanCache::new()),
+            scratch: Mutex::new(ScratchBuffers::new()),
         }
+    }
+
+    /// Hit/miss counters of the compiled-repair-program cache.
+    pub fn plan_cache_stats(&self) -> CacheStats {
+        self.programs.lock().unwrap().stats()
     }
 
     /// Attach the PJRT runtime so encode/decode run through the AOT
@@ -294,9 +308,26 @@ impl Cluster {
         self.nodes[nid].get(BlockKey { stripe: stripe.stripe_id, index: b as u32 })
     }
 
+    /// Netsim-costed [`BlockSource`] over one stripe's datanodes for
+    /// [`crate::repair::RepairProgram::execute`]: blocks are fetched once,
+    /// cached, and every fetch is accounted as a survivor→proxy flow.
+    fn stripe_fetcher<'a>(&'a self, stripe: &'a StripeInfo) -> StripeFetcher<'a> {
+        StripeFetcher {
+            nodes: &self.nodes,
+            stripe,
+            cache: vec![None; stripe.n()],
+            flows: Vec::new(),
+            bytes_read: 0,
+        }
+    }
+
     /// Repair the given failed blocks of one stripe (§V-B decoding
-    /// workflow): plan at the coordinator, fetch from survivors, decode
-    /// at the proxy, write reconstructed blocks to replacement nodes.
+    /// workflow): look up (or compile) the pattern's [`RepairProgram`]
+    /// at the coordinator, fetch the program's read set from survivors,
+    /// execute at the proxy into reused scratch, write reconstructed
+    /// blocks to replacement nodes.
+    ///
+    /// [`RepairProgram`]: crate::repair::RepairProgram
     pub fn repair_stripe(
         &mut self,
         sid: StripeId,
@@ -311,33 +342,34 @@ impl Cluster {
         let scheme = self.scheme().clone();
         anyhow::ensure!(!failed_blocks.is_empty(), "nothing to repair");
 
-        // (2) Metadata retrieval + repair plan from the coordinator.
-        let plan = repair::plan(&scheme, failed_blocks)
-            .ok_or_else(|| anyhow::anyhow!("pattern {failed_blocks:?} unrecoverable"))?;
+        // (2) Metadata retrieval + compiled repair program from the
+        // coordinator (one compile per pattern, cluster-wide).
+        let program = self.programs.lock().unwrap().get_or_compile(&scheme, failed_blocks)?;
 
-        // (3) Data collection from surviving nodes (real bytes, RPC).
-        let fetch = plan.fetch_set(&scheme);
-        let mut blocks: Vec<Option<Vec<u8>>> = vec![None; scheme.n()];
-        let mut flows = Vec::new();
-        let mut bytes_read = 0u64;
-        for &b in fetch.iter() {
-            let data = self
-                .fetch_block(&stripe, b)
-                .ok_or_else(|| anyhow::anyhow!("survivor block {b} unavailable"))?;
-            bytes_read += data.len() as u64;
-            flows.push(Flow {
-                src: net_id(stripe.block_nodes[b]),
-                dst: PROXY,
-                bytes: data.len() as u64,
-                start: 0.0,
-            });
-            blocks[b] = Some(data);
-        }
-        let (_, read_time) = self.net.run(&flows);
+        // (3) Data collection from surviving nodes (real bytes, RPC):
+        // exactly the program's fetch set, charged through the netsim.
+        let fetch: Vec<usize> = program.fetch().iter().copied().collect();
+        let mut source = self.stripe_fetcher(&stripe);
+        source.prefetch(&fetch)?;
+        let (_, read_time) = self.net.run(&source.flows);
+        let bytes_read = source.bytes_read;
 
-        // (4) Failure decoding at the proxy.
+        // (4) Failure decoding at the proxy: replay the program.
         let t0 = Instant::now();
-        let reconstructed = repair::execute(&self.codec, &plan, &blocks)?;
+        let reconstructed: Vec<Vec<u8>> = {
+            let mut scratch = self.scratch.lock().unwrap();
+            let outputs = program.execute(&mut source, &mut scratch)?;
+            failed_blocks
+                .iter()
+                .map(|&b| {
+                    program
+                        .output_index(b)
+                        .map(|i| outputs[i].to_vec())
+                        .ok_or_else(|| anyhow::anyhow!("program lacks output for block {b}"))
+                })
+                .collect::<anyhow::Result<_>>()?
+        };
+        drop(source);
         let decode_cpu_s = t0.elapsed().as_secs_f64();
 
         // (5) Write-back to replacement nodes (live nodes not already
@@ -377,7 +409,7 @@ impl Cluster {
             sim_time_s: read_time + wb_time,
             decode_sim_s: bytes_read as f64 / (self.cfg.decode_gbps * 1e9 / 8.0),
             decode_cpu_s,
-            local: plan.fully_local(),
+            local: program.plan.fully_local(),
         })
     }
 
@@ -396,28 +428,31 @@ impl Cluster {
         Ok(reports)
     }
 
-    /// Verify stripe consistency: every equation of the scheme holds over
-    /// the stored bytes (ops/scrub tool; also used by integration tests).
+    /// Verify stripe consistency (ops/scrub tool; also used by the
+    /// integration tests): reconstruct every parity block from the
+    /// stored data through the shared repair executor and compare with
+    /// the stored parity bytes. Equivalent to checking every equation —
+    /// the scheme's equations hold over the stored bytes iff every
+    /// parity matches its generator row — while exercising exactly the
+    /// plan→compile→execute path (and sharing its [`PlanCache`] entry
+    /// across all scrubbed stripes).
     pub fn scrub_stripe(&self, sid: StripeId) -> anyhow::Result<bool> {
         let stripe = self
             .meta
             .stripes
             .get(&sid)
             .ok_or_else(|| anyhow::anyhow!("unknown stripe {sid}"))?;
-        let scheme = self.scheme();
-        let mut blocks = Vec::with_capacity(scheme.n());
-        for b in 0..scheme.n() {
-            blocks.push(
-                self.fetch_block(stripe, b)
-                    .ok_or_else(|| anyhow::anyhow!("block {b} unavailable"))?,
-            );
-        }
-        for eq in scheme.all_eqs() {
-            let mut acc = vec![0u8; stripe.block_size];
-            for &(b, c) in &eq.terms {
-                crate::gf::mul_acc_slice(c, &blocks[b], &mut acc);
-            }
-            if acc.iter().any(|&x| x != 0) {
+        let scheme = self.scheme().clone();
+        let parities: Vec<usize> = (scheme.k..scheme.n()).collect();
+        let program = self.programs.lock().unwrap().get_or_compile(&scheme, &parities)?;
+        let mut source = self.stripe_fetcher(stripe);
+        let mut scratch = self.scratch.lock().unwrap();
+        let outputs = program.execute(&mut source, &mut scratch)?;
+        for (i, &b) in program.erased().iter().enumerate() {
+            let stored = self
+                .fetch_block(stripe, b)
+                .ok_or_else(|| anyhow::anyhow!("block {b} unavailable"))?;
+            if stored != outputs[i] {
                 return Ok(false);
             }
         }
@@ -435,6 +470,62 @@ impl Cluster {
             sids.push(self.seal_stripe().expect("stripe sealed"));
         }
         sids
+    }
+}
+
+/// [`BlockSource`] over one stripe's datanodes: whole blocks fetched on
+/// demand via the datanode RPC handles, cached for the lifetime of one
+/// repair, with one netsim flow recorded per distinct fetch. Prefetching
+/// the program's fetch set up front (as `repair_stripe` does) charges
+/// the network exactly once for exactly the paper-accounted read set.
+struct StripeFetcher<'a> {
+    nodes: &'a [DataNodeHandle],
+    stripe: &'a StripeInfo,
+    cache: Vec<Option<Vec<u8>>>,
+    flows: Vec<Flow>,
+    bytes_read: u64,
+}
+
+impl StripeFetcher<'_> {
+    fn ensure(&mut self, b: usize) -> anyhow::Result<()> {
+        if self.cache[b].is_none() {
+            let nid = self.stripe.block_nodes[b];
+            let data = self.nodes[nid]
+                .get(BlockKey { stripe: self.stripe.stripe_id, index: b as u32 })
+                .ok_or_else(|| anyhow::anyhow!("survivor block {b} unavailable"))?;
+            self.bytes_read += data.len() as u64;
+            self.flows.push(Flow {
+                src: net_id(nid),
+                dst: PROXY,
+                bytes: data.len() as u64,
+                start: 0.0,
+            });
+            self.cache[b] = Some(data);
+        }
+        Ok(())
+    }
+
+    /// Fetch (and account) every listed block now.
+    fn prefetch(&mut self, blocks: &[usize]) -> anyhow::Result<()> {
+        for &b in blocks {
+            self.ensure(b)?;
+        }
+        Ok(())
+    }
+}
+
+impl BlockSource for StripeFetcher<'_> {
+    fn blocks(&mut self, idx: &[usize]) -> anyhow::Result<Vec<&[u8]>> {
+        for &b in idx {
+            self.ensure(b)?;
+        }
+        idx.iter()
+            .map(|&b| {
+                self.cache[b]
+                    .as_deref()
+                    .ok_or_else(|| anyhow::anyhow!("block {b} missing from fetch cache"))
+            })
+            .collect()
     }
 }
 

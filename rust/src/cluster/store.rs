@@ -156,6 +156,44 @@ impl BlockStore for DiskStore {
     }
 }
 
+/// [`crate::repair::BlockSource`] over a single [`BlockStore`]: lets a
+/// datanode run a [`crate::repair::RepairProgram`] directly against its
+/// local store (local reconstruction / co-located scrub, no proxy hop).
+/// Blocks are read once and cached for the duration of one execution.
+pub struct StoreSource<'a> {
+    store: &'a dyn BlockStore,
+    stripe: u64,
+    cache: HashMap<usize, Vec<u8>>,
+}
+
+impl<'a> StoreSource<'a> {
+    pub fn new(store: &'a dyn BlockStore, stripe: u64) -> Self {
+        Self { store, stripe, cache: HashMap::new() }
+    }
+}
+
+impl crate::repair::BlockSource for StoreSource<'_> {
+    fn blocks(&mut self, idx: &[usize]) -> anyhow::Result<Vec<&[u8]>> {
+        for &b in idx {
+            if !self.cache.contains_key(&b) {
+                let data = self
+                    .store
+                    .get(BlockKey { stripe: self.stripe, index: b as u32 })?
+                    .ok_or_else(|| anyhow::anyhow!("block {b} absent from store"))?;
+                self.cache.insert(b, data);
+            }
+        }
+        idx.iter()
+            .map(|b| {
+                self.cache
+                    .get(b)
+                    .map(Vec::as_slice)
+                    .ok_or_else(|| anyhow::anyhow!("block {b} missing from store cache"))
+            })
+            .collect()
+    }
+}
+
 /// Construct a store for datanode `id` under the configured kind.
 pub fn make_store(kind: &StoreKind, id: usize) -> Box<dyn BlockStore> {
     match kind {
@@ -219,6 +257,28 @@ mod tests {
         assert_eq!(s.len(), 1);
         assert_eq!(s.get(key(9)).unwrap().unwrap(), data);
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn store_source_drives_the_repair_executor() {
+        use crate::codec::StripeCodec;
+        use crate::codes::{Scheme, SchemeKind};
+        use crate::repair::{RepairProgram, ScratchBuffers};
+        let codec = StripeCodec::new(Scheme::new(SchemeKind::CpAzure, 6, 2, 2));
+        let mut rng = Prng::new(9);
+        let data: Vec<Vec<u8>> = (0..6).map(|_| rng.bytes(1024)).collect();
+        let stripe = codec.encode_stripe(&data);
+        let mut store = MemStore::default();
+        for (b, content) in stripe.iter().enumerate() {
+            if b != 0 {
+                store.put(BlockKey { stripe: 3, index: b as u32 }, content.clone()).unwrap();
+            }
+        }
+        let program = RepairProgram::for_pattern(&codec.scheme, &[0]).unwrap();
+        let mut source = StoreSource::new(&store, 3);
+        let mut scratch = ScratchBuffers::new();
+        let out = program.execute(&mut source, &mut scratch).unwrap();
+        assert_eq!(out[0], &stripe[0][..]);
     }
 
     #[test]

@@ -50,6 +50,7 @@ impl StripeCodec {
         assert_eq!(data.len(), s.k, "need exactly k data blocks");
         let coeff = self.parity_matrix();
         self.gf_matmul(&coeff, data)
+            .expect("encode requires k equal-length data blocks")
     }
 
     /// Full stripe = data ++ encode(data).
@@ -62,7 +63,9 @@ impl StripeCodec {
     /// Reconstruct the blocks in `erased` given at least k survivors.
     /// `blocks[b]` must be `Some` for every surviving block that the
     /// decoder may read. Returns the reconstructed blocks in `erased`
-    /// order. This is the paper's *global repair* ("decoding", §V-B).
+    /// order. This is the paper's *global repair* ("decoding", §V-B) and
+    /// the byte-level oracle the compiled
+    /// [`crate::repair::RepairProgram`] path is property-tested against.
     pub fn decode(
         &self,
         blocks: &[Option<Vec<u8>>],
@@ -76,89 +79,153 @@ impl StripeCodec {
             .collect();
         anyhow::ensure!(surviving.len() >= s.k, "not enough survivors");
 
-        // Pick k survivors whose generator rows are invertible. Greedy:
-        // take rows in order, extending while rank grows.
+        // Pick k survivors whose generator rows are invertible, fuse the
+        // inverse into per-erased weight rows, one in-place matmul.
         let chosen = choose_invertible_rows(&s.generator, &surviving, s.k)
             .ok_or_else(|| anyhow::anyhow!("surviving rows do not span data space"))?;
-        let sub = s.generator.select_rows(&chosen);
-        let inv = sub.inverse().expect("chosen rows are invertible by construction");
-
-        // data_j = Σ_i inv[j][i] * chosen_block_i ; then erased block b =
-        // generator.row(b) · data. Fuse: erased_b = (row_b · inv) · chosen.
-        let mut out = Vec::with_capacity(erased.len());
-        for &e in erased {
-            let row = s.generator.row(e);
-            // w = row · inv (1 × k)
-            let mut w = vec![0u8; s.k];
-            for i in 0..s.k {
-                if row[i] == 0 {
-                    continue;
-                }
-                for j in 0..s.k {
-                    w[j] ^= gf::mul(row[i], inv.get(i, j));
-                }
-            }
-            let srcs: Vec<&[u8]> = chosen
-                .iter()
-                .map(|&b| blocks[b].as_deref().expect("survivor present"))
-                .collect();
-            let mut buf = vec![0u8; srcs.first().map_or(0, |s| s.len())];
-            gf::combine(&w, &srcs, &mut buf);
-            out.push(buf);
-        }
+        let weights = decode_weights(s, &chosen, erased)?;
+        let srcs: Vec<&[u8]> = chosen
+            .iter()
+            .map(|&b| blocks[b].as_deref().expect("survivor present"))
+            .collect();
+        let len = srcs.first().map_or(0, |s| s.len());
+        let mut out: Vec<Vec<u8>> = erased.iter().map(|_| vec![0u8; len]).collect();
+        native_gf_matmul_into(&weights, &srcs, &mut out)?;
         Ok(out)
     }
 
     /// GF matmul `coeff (m×k) · data (k blocks)` → m blocks, via the PJRT
-    /// artifact when its envelope fits, else the native kernels.
-    pub fn gf_matmul(&self, coeff: &GfMatrix, data: &[Vec<u8>]) -> Vec<Vec<u8>> {
+    /// artifact when its envelope fits, else the native kernels. Errors
+    /// on ragged input blocks.
+    pub fn gf_matmul(&self, coeff: &GfMatrix, data: &[Vec<u8>]) -> anyhow::Result<Vec<Vec<u8>>> {
         if let Some(exec) = &self.exec {
             if exec.fits(coeff.rows(), coeff.cols()) {
-                return exec
-                    .run(coeff, data)
-                    .expect("PJRT gf_matmul execution failed");
+                return exec.run(coeff, data);
             }
         }
         native_gf_matmul(coeff, data)
     }
 }
 
-/// Native GF matmul over blocks: `out[m] = Σ_j coeff[m][j] * data[j]`.
-pub fn native_gf_matmul(coeff: &GfMatrix, data: &[Vec<u8>]) -> Vec<Vec<u8>> {
-    assert_eq!(coeff.cols(), data.len());
-    let len = data.first().map_or(0, |d| d.len());
-    (0..coeff.rows())
-        .map(|m| {
-            let mut out = vec![0u8; len];
-            for (j, d) in data.iter().enumerate() {
-                debug_assert_eq!(d.len(), len, "ragged data blocks");
-                gf::mul_acc_slice(coeff.get(m, j), d, &mut out);
+/// The fused decode weights: `weights[i] = generator.row(erased[i]) · inv`
+/// where `inv` inverts the generator rows of the `chosen` survivors, so
+/// `erased_i = weights[i] · chosen blocks` in a single combine. This is
+/// the coefficient derivation [`StripeCodec::decode`] performs per call
+/// and [`crate::repair::RepairProgram::compile`] hoists to compile time.
+pub fn decode_weights(
+    scheme: &Scheme,
+    chosen: &[usize],
+    erased: &[usize],
+) -> anyhow::Result<GfMatrix> {
+    let k = scheme.k;
+    anyhow::ensure!(chosen.len() == k, "need exactly k chosen rows");
+    let sub = scheme.generator.select_rows(chosen);
+    let inv = sub
+        .inverse()
+        .ok_or_else(|| anyhow::anyhow!("chosen survivor rows are singular"))?;
+    let mut weights = GfMatrix::zeros(erased.len(), k);
+    for (wi, &e) in erased.iter().enumerate() {
+        let row = scheme.generator.row(e);
+        for i in 0..k {
+            if row[i] == 0 {
+                continue;
             }
-            out
-        })
-        .collect()
+            for j in 0..k {
+                let v = weights.get(wi, j) ^ gf::mul(row[i], inv.get(i, j));
+                weights.set(wi, j, v);
+            }
+        }
+    }
+    Ok(weights)
 }
 
-/// Greedily choose `k` of the candidate rows such that the selected
+/// In-place native GF matmul over borrowed blocks:
+/// `out[m] = Σ_j coeff[m][j] * data[j]`. Output buffers are resized (and
+/// cleared) to the common block length; ragged inputs are a real error in
+/// every build profile — a release build must never combine out-of-step
+/// bytes silently.
+pub fn native_gf_matmul_into(
+    coeff: &GfMatrix,
+    data: &[&[u8]],
+    out: &mut [Vec<u8>],
+) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        coeff.cols() == data.len(),
+        "coeff is {}-wide but {} data blocks given",
+        coeff.cols(),
+        data.len()
+    );
+    anyhow::ensure!(
+        out.len() == coeff.rows(),
+        "coeff has {} rows but {} output buffers given",
+        coeff.rows(),
+        out.len()
+    );
+    let len = data.first().map_or(0, |d| d.len());
+    for (j, d) in data.iter().enumerate() {
+        anyhow::ensure!(d.len() == len, "ragged data blocks: block {j} is {} bytes, expected {len}", d.len());
+    }
+    for (m, o) in out.iter_mut().enumerate() {
+        o.clear();
+        o.resize(len, 0);
+        for (j, d) in data.iter().enumerate() {
+            gf::mul_acc_slice(coeff.get(m, j), d, o);
+        }
+    }
+    Ok(())
+}
+
+/// Allocating wrapper over [`native_gf_matmul_into`]:
+/// `out[m] = Σ_j coeff[m][j] * data[j]`.
+pub fn native_gf_matmul(coeff: &GfMatrix, data: &[Vec<u8>]) -> anyhow::Result<Vec<Vec<u8>>> {
+    let refs: Vec<&[u8]> = data.iter().map(Vec::as_slice).collect();
+    let mut out: Vec<Vec<u8>> = vec![Vec::new(); coeff.rows()];
+    native_gf_matmul_into(coeff, &refs, &mut out)?;
+    Ok(out)
+}
+
+/// Choose `k` of the candidate rows (in order) such that the selected
 /// generator submatrix is invertible. Returns `None` if the candidates
 /// don't span the data space.
+///
+/// Incremental Gaussian elimination: each candidate row is reduced
+/// against the basis accumulated so far and accepted iff a nonzero
+/// residual remains — O(candidates · k²) total, replacing the old
+/// O(candidates · k³) full-`rank()` recompute per candidate. Selection
+/// is unchanged: a row is taken exactly when it increases the rank.
 pub fn choose_invertible_rows(
     gen: &GfMatrix,
     candidates: &[usize],
     k: usize,
 ) -> Option<Vec<usize>> {
     let mut chosen: Vec<usize> = Vec::with_capacity(k);
-    let mut rank = 0;
+    // Eliminated basis rows, each normalized to a leading 1 at `pivots[i]`.
+    let mut basis: Vec<Vec<u8>> = Vec::with_capacity(k);
+    let mut pivots: Vec<usize> = Vec::with_capacity(k);
     for &b in candidates {
-        chosen.push(b);
-        let r = gen.select_rows(&chosen).rank();
-        if r > rank {
-            rank = r;
-            if rank == k {
-                return Some(chosen);
+        let mut row = gen.row(b).to_vec();
+        for (i, &pc) in pivots.iter().enumerate() {
+            let f = row[pc];
+            if f != 0 {
+                for (rj, bj) in row.iter_mut().zip(basis[i].iter()) {
+                    *rj ^= gf::mul(f, *bj);
+                }
             }
-        } else {
-            chosen.pop();
+        }
+        let Some(pc) = row.iter().position(|&x| x != 0) else {
+            continue; // dependent on the rows already chosen
+        };
+        let norm = gf::inv(row[pc]);
+        if norm != 1 {
+            for rj in row.iter_mut() {
+                *rj = gf::mul(norm, *rj);
+            }
+        }
+        pivots.push(pc);
+        basis.push(row);
+        chosen.push(b);
+        if chosen.len() == k {
+            return Some(chosen);
         }
     }
     None
@@ -244,11 +311,20 @@ mod tests {
         let mut rng = Prng::new(7);
         let data: Vec<Vec<u8>> = (0..3).map(|_| rng.bytes(16)).collect();
         let id = GfMatrix::identity(3);
-        let out = native_gf_matmul(&id, &data);
+        let out = native_gf_matmul(&id, &data).unwrap();
         assert_eq!(out, data);
         let z = GfMatrix::zeros(2, 3);
-        let out = native_gf_matmul(&z, &data);
+        let out = native_gf_matmul(&z, &data).unwrap();
         assert!(out.iter().all(|b| b.iter().all(|&x| x == 0)));
+    }
+
+    #[test]
+    fn ragged_blocks_error_in_release_too() {
+        let mut rng = Prng::new(8);
+        let mut data: Vec<Vec<u8>> = (0..3).map(|_| rng.bytes(16)).collect();
+        data[1].truncate(9);
+        let id = GfMatrix::identity(3);
+        assert!(native_gf_matmul(&id, &data).is_err(), "ragged input must be rejected");
     }
 
     #[test]

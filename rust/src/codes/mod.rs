@@ -142,6 +142,18 @@ impl Equation {
     }
 }
 
+/// Compact identity of a scheme: construction + parameters. Two schemes
+/// with equal ids have identical generators and equations (construction
+/// is deterministic), so ids key caches of derived artifacts — notably
+/// [`crate::repair::PlanCache`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct SchemeId {
+    pub kind: SchemeKind,
+    pub k: usize,
+    pub r: usize,
+    pub p: usize,
+}
+
 /// A fully-constructed erasure-coding scheme.
 #[derive(Clone, Debug)]
 pub struct Scheme {
@@ -168,6 +180,11 @@ impl Scheme {
     /// Total stripe width n = k + r + p.
     pub fn n(&self) -> usize {
         self.k + self.r + self.p
+    }
+
+    /// Cache-key identity (see [`SchemeId`]).
+    pub fn id(&self) -> SchemeId {
+        SchemeId { kind: self.kind, k: self.k, r: self.r, p: self.p }
     }
 
     pub fn is_data(&self, b: usize) -> bool {

@@ -7,6 +7,11 @@
 //! scaled down from the paper's 64 MiB so the full sweep fits one
 //! machine; repair time scales linearly with block size, so the *shape*
 //! (who wins, by what factor) is preserved and reported.
+//!
+//! All repair figures execute through the cluster's compiled
+//! plan→compile→execute pipeline ([`crate::repair::RepairProgram`]): the
+//! Figure 6/9 sweeps compile each erasure pattern once per scheme and
+//! replay it across stripes via the cluster [`crate::repair::PlanCache`].
 
 use crate::bench_harness::Table;
 use crate::cluster::degraded::ReadMode;
@@ -225,6 +230,11 @@ pub fn single_node_repair_time(
             c.restore_node(victim);
         }
     }
+    // Compile-once guarantee: n distinct single-block patterns, however
+    // many stripes the sweep replays them over.
+    let stats = c.plan_cache_stats();
+    assert!(stats.misses <= n as u64, "pattern recompiled: {stats:?}");
+    assert!(stripes < 2 || stats.hits > 0, "multi-stripe sweep never hit the cache");
     let mean = times.iter().sum::<f64>() / times.len() as f64;
     let var = times.iter().map(|t| (t - mean).powi(2)).sum::<f64>() / times.len() as f64;
     (mean, var.sqrt())

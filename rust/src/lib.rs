@@ -12,11 +12,33 @@
 //!   network simulator and a trace replayer).
 //! * **L2/L1 (build time, `python/`)** — the GF(2^8) stripe codec as a
 //!   JAX graph whose hot-spot is a Pallas kernel, AOT-lowered to HLO
-//!   text and executed from [`runtime`] via the PJRT CPU client.
+//!   text and executed from [`runtime`] via the PJRT CPU client
+//!   (`pjrt` cargo feature; a bit-identical native stub serves default
+//!   builds).
+//!
+//! ## Repair: one plan → compile → execute pipeline
+//!
+//! Every repair in the crate — whole-block repairs, whole-cluster
+//! [`cluster::Cluster::repair_all`], degraded reads, scrubs, the
+//! Figure 6/9 experiment sweeps — flows through a single three-stage
+//! pipeline:
+//!
+//! ```text
+//! repair::plan(scheme, erased)          — which equations, what cost (§IV)
+//!   └► RepairProgram::compile(...)      — flatten to GF ops, precompute
+//!                                          fused coefficient vectors
+//!        └► program.execute(src, buf)   — replay per stripe: zero-copy
+//!                                          inputs from a BlockSource,
+//!                                          outputs into reused scratch
+//! ```
+//!
+//! Programs depend only on `(scheme, erasure pattern)`, so
+//! [`repair::PlanCache`] compiles each pattern once and replays it
+//! across thousands of stripes.
 //!
 //! Start with [`codes::Scheme`] (pick a construction and parameters),
-//! [`codec::StripeCodec`] (encode/decode bytes), [`repair`] (plan and
-//! execute repairs), or [`cluster`] (run the full prototype).
+//! [`codec::StripeCodec`] (encode/decode bytes), [`repair`] (the repair
+//! pipeline), or [`cluster`] (run the full prototype).
 
 pub mod bench_harness;
 pub mod cluster;

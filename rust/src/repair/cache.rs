@@ -1,0 +1,127 @@
+//! Scheme-level caching of compiled repair programs.
+//!
+//! Repair of a given erasure pattern recurs across thousands of stripes
+//! (whole-node failures erase the *same* block index pattern in every
+//! affected stripe), so the coordinator compiles each
+//! `(scheme, pattern)` once and replays the [`RepairProgram`]
+//! everywhere. Patterns are normalized (sorted, deduplicated) before
+//! lookup so `[26, 0]` and `[0, 26]` share one entry.
+
+use super::program::RepairProgram;
+use crate::codes::{Scheme, SchemeId};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Hit/miss counters for a [`PlanCache`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl CacheStats {
+    /// Fraction of lookups served from cache (0 when never queried).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// Cache of compiled [`RepairProgram`]s keyed by
+/// `(scheme id, normalized erasure pattern)`.
+#[derive(Default)]
+pub struct PlanCache {
+    map: HashMap<(SchemeId, Vec<usize>), Arc<RepairProgram>>,
+    stats: CacheStats,
+}
+
+impl PlanCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fetch the compiled program for `erased` under `scheme`, planning
+    /// and compiling it on first sight. Unrecoverable patterns error and
+    /// are not cached.
+    pub fn get_or_compile(
+        &mut self,
+        scheme: &Scheme,
+        erased: &[usize],
+    ) -> anyhow::Result<Arc<RepairProgram>> {
+        let mut pattern = erased.to_vec();
+        pattern.sort_unstable();
+        pattern.dedup();
+        anyhow::ensure!(!pattern.is_empty(), "empty erasure pattern");
+        let key = (scheme.id(), pattern);
+        if let Some(program) = self.map.get(&key) {
+            self.stats.hits += 1;
+            return Ok(program.clone());
+        }
+        let program = Arc::new(RepairProgram::for_pattern(scheme, &key.1)?);
+        self.stats.misses += 1;
+        self.map.insert(key, program.clone());
+        Ok(program)
+    }
+
+    /// Number of distinct compiled programs held.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+
+    /// Drop all entries (keeps the counters).
+    pub fn clear(&mut self) {
+        self.map.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codes::SchemeKind;
+
+    #[test]
+    fn second_lookup_hits_and_shares_the_program() {
+        let s = Scheme::new(SchemeKind::CpAzure, 12, 2, 2);
+        let mut cache = PlanCache::new();
+        let a = cache.get_or_compile(&s, &[0, 14]).unwrap();
+        let b = cache.get_or_compile(&s, &[14, 0]).unwrap(); // normalized
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 1 });
+        assert_eq!(cache.len(), 1);
+        assert!(cache.stats().hit_rate() > 0.49);
+    }
+
+    #[test]
+    fn distinct_schemes_do_not_collide() {
+        let az = Scheme::new(SchemeKind::AzureLrc, 6, 2, 2);
+        let cp = Scheme::new(SchemeKind::CpAzure, 6, 2, 2);
+        let mut cache = PlanCache::new();
+        let a = cache.get_or_compile(&az, &[0]).unwrap();
+        let b = cache.get_or_compile(&cp, &[0]).unwrap();
+        assert!(!Arc::ptr_eq(&a, &b));
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.stats().misses, 2);
+    }
+
+    #[test]
+    fn unrecoverable_patterns_error_and_are_not_cached() {
+        let s = Scheme::new(SchemeKind::AzureLrc, 6, 2, 2);
+        // 5 failures > r + 1 tolerance: certainly unrecoverable
+        let bad = [0usize, 1, 2, 3, 6];
+        let mut cache = PlanCache::new();
+        assert!(cache.get_or_compile(&s, &bad).is_err());
+        assert!(cache.is_empty());
+    }
+}

@@ -1,23 +1,33 @@
-//! Repair planning and execution (§IV single-/multi-node repair).
+//! Repair of erasure patterns (§IV single-/multi-node repair) as a
+//! three-stage **plan → compile → execute** pipeline:
 //!
-//! The planner implements the paper's **"local-first, global-as-fallback"**
-//! policy as iterative *peeling* over the scheme's equations:
+//! 1. **[`plan`]** (coordinator, per pattern) implements the paper's
+//!    "local-first, global-as-fallback" policy as iterative *peeling*
+//!    over the scheme's equations: repeatedly solve the equation with
+//!    exactly one still-erased member (preferring local equations, then
+//!    fewest new reads — the two-step cascade repair of §IV), falling
+//!    back to global decode when peeling stalls. Cost = distinct *alive*
+//!    blocks fetched (reconstructed blocks are free inputs), matching
+//!    every worked example in §IV (e.g. the (24,2,2) CP-Azure `D1,L1`
+//!    repair costing 13).
+//! 2. **[`RepairProgram::compile`]** (coordinator, once per
+//!    `(scheme, pattern)`) lowers the plan into straight-line GF ops
+//!    with precomputed, fused coefficient vectors — including the
+//!    `row · inv` weights of the global-decode fallback.
+//! 3. **[`RepairProgram::execute`]** (proxy, per stripe) replays the
+//!    ops against any [`BlockSource`] (in-memory stripes, datanode
+//!    stores, netsim-costed cluster fetches) into reusable
+//!    [`ScratchBuffers`] — no planning, no matrix inversions, no
+//!    per-step allocations on the hot path.
 //!
-//! 1. Repeatedly find an equation with exactly one still-erased member
-//!    and schedule solving that member from it (previously reconstructed
-//!    blocks are usable inputs — this is exactly the paper's two-step
-//!    cascade repair, e.g. repair `L1` from the cascaded group, then `D1`
-//!    from `L1`'s group).
-//! 2. When several equations can solve a block, pick the one that adds
-//!    the fewest *new* reads (alive blocks not yet fetched).
-//! 3. If peeling stalls, fall back to **global repair**: fetch k
-//!    surviving blocks and decode; per the paper the cost of that step is
-//!    exactly k (the k blocks chosen for decoding subsume the reads any
-//!    remaining local repairs would have made).
-//!
-//! Cost = number of distinct *alive* blocks fetched (reconstructed blocks
-//! are free inputs), matching every worked example in §IV (e.g. the
-//! (24,2,2) CP-Azure `D1,L1` repair costing 13).
+//! [`PlanCache`] memoizes stage 2 so whole-cluster repairs and the
+//! Figure 6/9 sweeps compile each erasure pattern exactly once.
+
+pub mod cache;
+pub mod program;
+
+pub use cache::{CacheStats, PlanCache};
+pub use program::{BlockSource, RepairProgram, ScratchBuffers, SliceSource};
 
 use crate::codec::StripeCodec;
 use crate::codes::{Equation, Scheme};
@@ -68,21 +78,35 @@ impl RepairPlan {
     /// The concrete set of blocks a proxy must fetch to execute this
     /// plan: the peeling reads plus, for global plans, k surviving
     /// generator rows chosen to be invertible (preferring blocks already
-    /// read, then data blocks — the paper's reuse rule).
-    pub fn fetch_set(&self, scheme: &Scheme) -> BTreeSet<usize> {
+    /// read, then data blocks — the paper's reuse rule). Errors when the
+    /// survivors do not span the data space (an unrecoverable pattern).
+    pub fn fetch_set(&self, scheme: &Scheme) -> anyhow::Result<BTreeSet<usize>> {
         let mut set = self.reads.clone();
         if !self.global_blocks.is_empty() {
-            let n = scheme.n();
-            let mut cand: Vec<usize> =
-                (0..n).filter(|b| !self.erased.contains(b)).collect();
-            cand.sort_by_key(|&b| (!set.contains(&b), !scheme.is_data(b), b));
-            let chosen =
-                crate::codec::choose_invertible_rows(&scheme.generator, &cand, scheme.k)
-                    .expect("recoverable plan must have an invertible survivor set");
-            set.extend(chosen);
+            set.extend(global_decode_rows(scheme, self)?);
         }
-        set
+        Ok(set)
     }
+}
+
+/// The k survivor rows the global-decode fallback reads: invertible by
+/// construction, preferring blocks the peeling stage already fetched,
+/// then data blocks (the paper's reuse rule). Shared by
+/// [`RepairPlan::fetch_set`] and [`RepairProgram::compile`] so the
+/// compiled program fetches exactly the plan's advertised set.
+pub(crate) fn global_decode_rows(
+    scheme: &Scheme,
+    plan: &RepairPlan,
+) -> anyhow::Result<Vec<usize>> {
+    let mut cand: Vec<usize> =
+        (0..scheme.n()).filter(|b| !plan.erased.contains(b)).collect();
+    cand.sort_by_key(|&b| (!plan.reads.contains(&b), !scheme.is_data(b), b));
+    crate::codec::choose_invertible_rows(&scheme.generator, &cand, scheme.k).ok_or_else(|| {
+        anyhow::anyhow!(
+            "survivors of erasure pattern {:?} do not span the data space",
+            plan.erased
+        )
+    })
 }
 
 /// Plan repair of `erased` under `scheme`. `erased` must be non-empty and
@@ -171,73 +195,25 @@ pub fn plan_single(scheme: &Scheme, block: usize) -> RepairPlan {
     plan(scheme, &[block]).expect("single failures are always recoverable")
 }
 
-/// Execute a plan against actual stripe contents.
+/// Execute a plan against in-memory stripe contents: compile it into a
+/// [`RepairProgram`] and run the shared executor once. One-shot
+/// convenience for tests, examples and protocol glue — loops over many
+/// stripes should compile once (via [`PlanCache`]) and call
+/// [`RepairProgram::execute`] with a reused [`ScratchBuffers`].
 ///
-/// `blocks[b]` must be `Some` for every block in `plan.reads`; returns the
-/// reconstructed contents of `plan.erased`, in order. Used by the tests
-/// (every plan is *proven* by execution) and by the cluster proxy.
+/// `blocks[b]` must be `Some` for every block in the plan's
+/// [`RepairPlan::fetch_set`]; returns the reconstructed contents of
+/// `plan.erased`, in order.
 pub fn execute(
     codec: &StripeCodec,
     plan: &RepairPlan,
     blocks: &[Option<Vec<u8>>],
 ) -> anyhow::Result<Vec<Vec<u8>>> {
-    use std::collections::BTreeMap;
-    let scheme = &codec.scheme;
-    let eqs: Vec<&Equation> = scheme.all_eqs().collect();
-    // Reconstructed blocks live here; survivor inputs are borrowed from
-    // `blocks` directly — the executor allocates only the outputs (§Perf:
-    // the clone-everything version ran 30× below the GF roofline).
-    let mut solved: BTreeMap<usize, Vec<u8>> = BTreeMap::new();
-    let len = blocks
-        .iter()
-        .flatten()
-        .map(|b| b.len())
-        .next()
-        .unwrap_or(0);
-    for step in &plan.steps {
-        let eq = eqs[step.eq];
-        let mut acc = vec![0u8; len];
-        for &(b, c) in &eq.terms {
-            if b == step.block {
-                continue;
-            }
-            let src: &[u8] = if let Some(s) = solved.get(&b) {
-                s
-            } else {
-                blocks[b]
-                    .as_deref()
-                    .ok_or_else(|| anyhow::anyhow!("plan reads missing block {b}"))?
-            };
-            crate::gf::mul_acc_slice(c, src, &mut acc);
-        }
-        let cf = eq.coeff(step.block).expect("planned block in equation");
-        if cf != 1 {
-            crate::gf::scale_slice(crate::gf::inv(cf), &mut acc);
-        }
-        solved.insert(step.block, acc);
-    }
-    if !plan.global_blocks.is_empty() {
-        // decode needs an Option-indexed view; splice solved blocks in.
-        let mut have: Vec<Option<Vec<u8>>> = blocks.to_vec();
-        for &e in &plan.erased {
-            have[e] = None;
-        }
-        for (b, v) in &solved {
-            have[*b] = Some(v.clone());
-        }
-        let rec = codec.decode(&have, &plan.global_blocks)?;
-        for (i, &b) in plan.global_blocks.iter().enumerate() {
-            solved.insert(b, rec[i].clone());
-        }
-    }
-    plan.erased
-        .iter()
-        .map(|&e| {
-            solved
-                .remove(&e)
-                .ok_or_else(|| anyhow::anyhow!("block {e} not reconstructed"))
-        })
-        .collect()
+    let program = RepairProgram::compile(&codec.scheme, plan)?;
+    let mut scratch = ScratchBuffers::new();
+    let mut source = SliceSource::new(blocks);
+    let out = program.execute(&mut source, &mut scratch)?;
+    Ok(out.into_iter().map(<[u8]>::to_vec).collect())
 }
 
 #[cfg(test)]

@@ -1,0 +1,391 @@
+//! Compiled repair programs: the *execute* stage of the
+//! plan → compile → execute pipeline.
+//!
+//! [`super::plan`] decides *which* equations repair a failure pattern;
+//! [`RepairProgram::compile`] lowers that decision into a flat sequence
+//! of GF combine ops with **precomputed coefficient vectors**:
+//!
+//! * each peeling step `B_f = cf⁻¹ · Σ c_b·B_b` is fused into a single
+//!   `out = Σ (cf⁻¹·c_b)·B_b` combine (no separate inverse-scale pass);
+//! * the global-decode fallback picks its k survivor rows and computes
+//!   the `row · inv` weight vectors **once at compile time** — the work
+//!   [`crate::codec::StripeCodec::decode`] used to redo per call.
+//!
+//! Execution is allocation-free on the hot path: outputs land in a
+//! reusable [`ScratchBuffers`] pool and inputs are borrowed from a
+//! [`BlockSource`] (in-memory stripes, datanode stores, or the cluster's
+//! netsim-costed fetcher). A program depends only on
+//! `(scheme, erasure pattern)`, never on stripe contents or block size,
+//! so one compilation replays across thousands of stripes — see
+//! [`super::PlanCache`].
+
+use crate::codec;
+use crate::codes::{Equation, Scheme};
+use crate::gf;
+use crate::repair::RepairPlan;
+use anyhow::Context;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Supplies survivor-block bytes to [`RepairProgram::execute`].
+///
+/// Implementations may fetch lazily (and account for network cost as a
+/// side effect); the executor only ever asks for blocks in the program's
+/// [`RepairProgram::fetch`] set.
+pub trait BlockSource {
+    /// Borrow the contents of the given survivor blocks, in order.
+    /// Implementations must return an error (never panic) for blocks
+    /// they cannot supply.
+    fn blocks(&mut self, idx: &[usize]) -> anyhow::Result<Vec<&[u8]>>;
+}
+
+/// [`BlockSource`] over an in-memory `Option`-indexed stripe — the view
+/// tests, benches and the degraded-read path already hold.
+pub struct SliceSource<'a> {
+    blocks: &'a [Option<Vec<u8>>],
+}
+
+impl<'a> SliceSource<'a> {
+    pub fn new(blocks: &'a [Option<Vec<u8>>]) -> Self {
+        Self { blocks }
+    }
+}
+
+impl BlockSource for SliceSource<'_> {
+    fn blocks(&mut self, idx: &[usize]) -> anyhow::Result<Vec<&[u8]>> {
+        idx.iter()
+            .map(|&b| {
+                self.blocks
+                    .get(b)
+                    .and_then(|o| o.as_deref())
+                    .ok_or_else(|| anyhow::anyhow!("source is missing block {b}"))
+            })
+            .collect()
+    }
+}
+
+/// Reusable output buffers for [`RepairProgram::execute`]. Keep one per
+/// executor loop and pass it to every call: buffers are resized, never
+/// reallocated, killing the per-step `Vec` churn of the old ad-hoc
+/// executors.
+#[derive(Default)]
+pub struct ScratchBuffers {
+    bufs: Vec<Vec<u8>>,
+}
+
+impl ScratchBuffers {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Ensure `n` buffers of `len` bytes each. Contents are left stale;
+    /// every op clears its own output before accumulating.
+    fn prepare(&mut self, n: usize, len: usize) {
+        if self.bufs.len() < n {
+            self.bufs.resize_with(n, Vec::new);
+        }
+        for buf in &mut self.bufs[..n] {
+            buf.resize(len, 0);
+        }
+    }
+}
+
+/// One flattened GF op: reconstruct `block` as a linear combination of
+/// survivor blocks (from the [`BlockSource`]) and earlier op outputs
+/// (from scratch). Coefficients are final — no post-scaling.
+#[derive(Clone, Debug)]
+struct GfOp {
+    /// Block index this op reconstructs.
+    block: usize,
+    /// Survivor operands, fetched from the source.
+    fetch_idx: Vec<usize>,
+    /// Coefficient per `fetch_idx` entry.
+    fetch_coeff: Vec<u8>,
+    /// `(earlier op index, coefficient)` operands read from scratch.
+    solved: Vec<(usize, u8)>,
+}
+
+/// A repair plan lowered to straight-line GF ops with precomputed
+/// coefficients. Compile once per `(scheme, erasure pattern)`, execute
+/// per stripe.
+#[derive(Clone, Debug)]
+pub struct RepairProgram {
+    /// The plan this program was compiled from (cost accounting,
+    /// `erased` output order, locality classification).
+    pub plan: RepairPlan,
+    ops: Vec<GfOp>,
+    /// Distinct survivor blocks execution reads — identical to
+    /// [`RepairPlan::fetch_set`], precomputed.
+    fetch: BTreeSet<usize>,
+    /// `outputs[i]` = op index producing `plan.erased[i]`.
+    outputs: Vec<usize>,
+}
+
+impl RepairProgram {
+    /// Lower `plan` into executable form. Fails only if the plan's
+    /// global fallback cannot assemble an invertible survivor set (an
+    /// unrecoverable pattern that [`super::plan`] let through).
+    pub fn compile(scheme: &Scheme, plan: &RepairPlan) -> anyhow::Result<RepairProgram> {
+        let eqs: Vec<&Equation> = scheme.all_eqs().collect();
+        let mut op_of: BTreeMap<usize, usize> = BTreeMap::new();
+        let mut ops: Vec<GfOp> = Vec::with_capacity(plan.steps.len() + plan.global_blocks.len());
+        let mut fetch: BTreeSet<usize> = BTreeSet::new();
+
+        for step in &plan.steps {
+            let eq = eqs
+                .get(step.eq)
+                .with_context(|| format!("plan references equation {} of {}", step.eq, eqs.len()))?;
+            let cf = eq
+                .coeff(step.block)
+                .with_context(|| format!("block {} not in its repair equation", step.block))?;
+            let icf = gf::inv(cf);
+            let mut fetch_idx = Vec::new();
+            let mut fetch_coeff = Vec::new();
+            let mut solved = Vec::new();
+            for &(b, c) in &eq.terms {
+                if b == step.block {
+                    continue;
+                }
+                // Fuse the final cf⁻¹ scale into every term coefficient.
+                let w = gf::mul(icf, c);
+                if let Some(&j) = op_of.get(&b) {
+                    solved.push((j, w));
+                } else {
+                    fetch.insert(b);
+                    fetch_idx.push(b);
+                    fetch_coeff.push(w);
+                }
+            }
+            op_of.insert(step.block, ops.len());
+            ops.push(GfOp { block: step.block, fetch_idx, fetch_coeff, solved });
+        }
+
+        if !plan.global_blocks.is_empty() {
+            // Global decode: chosen rows and the fused `row · inv`
+            // weight vectors are fixed at compile time.
+            let chosen = super::global_decode_rows(scheme, plan)?;
+            let weights = codec::decode_weights(scheme, &chosen, &plan.global_blocks)?;
+            // The paper's cost model (and the cluster's accounting)
+            // fetches all k chosen survivors, including any whose weight
+            // happens to be zero for every erased block.
+            fetch.extend(chosen.iter().copied());
+            for (i, &e) in plan.global_blocks.iter().enumerate() {
+                let row = weights.row(i);
+                let mut fetch_idx = Vec::new();
+                let mut fetch_coeff = Vec::new();
+                for (j, &b) in chosen.iter().enumerate() {
+                    if row[j] != 0 {
+                        fetch_idx.push(b);
+                        fetch_coeff.push(row[j]);
+                    }
+                }
+                op_of.insert(e, ops.len());
+                ops.push(GfOp { block: e, fetch_idx, fetch_coeff, solved: Vec::new() });
+            }
+        }
+
+        let outputs = plan
+            .erased
+            .iter()
+            .map(|e| {
+                op_of
+                    .get(e)
+                    .copied()
+                    .with_context(|| format!("plan never reconstructs block {e}"))
+            })
+            .collect::<anyhow::Result<Vec<usize>>>()?;
+        anyhow::ensure!(!fetch.is_empty(), "program would read no survivor blocks");
+        Ok(RepairProgram { plan: plan.clone(), ops, fetch, outputs })
+    }
+
+    /// Convenience: plan + compile in one call.
+    pub fn for_pattern(scheme: &Scheme, erased: &[usize]) -> anyhow::Result<RepairProgram> {
+        let plan = super::plan(scheme, erased)
+            .ok_or_else(|| anyhow::anyhow!("pattern {erased:?} is unrecoverable"))?;
+        Self::compile(scheme, &plan)
+    }
+
+    /// Distinct survivor blocks execution will read. A caller that
+    /// prefetches exactly this set (as the cluster proxy does) is
+    /// guaranteed the executor asks for nothing else.
+    pub fn fetch(&self) -> &BTreeSet<usize> {
+        &self.fetch
+    }
+
+    /// The erasure pattern, in output order.
+    pub fn erased(&self) -> &[usize] {
+        &self.plan.erased
+    }
+
+    /// Position of `block` in [`Self::erased`] (and thus in the slice
+    /// returned by [`Self::execute`]).
+    pub fn output_index(&self, block: usize) -> Option<usize> {
+        self.plan.erased.iter().position(|&e| e == block)
+    }
+
+    /// Run the program: pull survivor bytes from `source`, write every
+    /// reconstructed block into `scratch`, and return the reconstructed
+    /// erased blocks (borrowed from `scratch`, zero-copy) in
+    /// [`Self::erased`] order.
+    ///
+    /// All survivor blocks must have one common length; a ragged source
+    /// is a real error, not UB or silent corruption.
+    pub fn execute<'s, S: BlockSource>(
+        &self,
+        source: &mut S,
+        scratch: &'s mut ScratchBuffers,
+    ) -> anyhow::Result<Vec<&'s [u8]>> {
+        let first = *self.fetch.iter().next().context("program fetches nothing")?;
+        let len = source.blocks(&[first])?[0].len();
+        scratch.prepare(self.ops.len(), len);
+        for (i, op) in self.ops.iter().enumerate() {
+            let srcs = source.blocks(&op.fetch_idx)?;
+            for (&b, s) in op.fetch_idx.iter().zip(srcs.iter()) {
+                anyhow::ensure!(
+                    s.len() == len,
+                    "ragged survivor block {b} ({} bytes, expected {len}) \
+                     while reconstructing block {}",
+                    s.len(),
+                    op.block
+                );
+            }
+            let (done, rest) = scratch.bufs.split_at_mut(i);
+            let dst = &mut rest[0][..];
+            gf::combine_into(&op.fetch_coeff, &srcs, dst);
+            for &(j, c) in &op.solved {
+                gf::mul_acc_slice(c, &done[j], dst);
+            }
+        }
+        Ok(self.outputs.iter().map(|&i| scratch.bufs[i].as_slice()).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::StripeCodec;
+    use crate::codes::SchemeKind;
+    use crate::prng::Prng;
+    use crate::proptest_lite::check;
+    use crate::repair;
+
+    fn erase(stripe: &[Vec<u8>], erased: &[usize]) -> Vec<Option<Vec<u8>>> {
+        let mut blocks: Vec<Option<Vec<u8>>> = stripe.iter().cloned().map(Some).collect();
+        for &e in erased {
+            blocks[e] = None;
+        }
+        blocks
+    }
+
+    #[test]
+    fn program_matches_adhoc_and_oracle_on_cascade_pattern() {
+        // (24,2,2) CP-Azure D1+L1: the paper's two-step cascade.
+        let codec = StripeCodec::new(Scheme::new(SchemeKind::CpAzure, 24, 2, 2));
+        let s = &codec.scheme;
+        let mut rng = Prng::new(0xCA5CADE);
+        let data: Vec<Vec<u8>> = (0..s.k).map(|_| rng.bytes(512)).collect();
+        let stripe = codec.encode_stripe(&data);
+        let erased = vec![0usize, 26];
+        let plan = repair::plan(s, &erased).unwrap();
+        let program = RepairProgram::compile(s, &plan).unwrap();
+        assert_eq!(program.fetch(), &plan.fetch_set(s).unwrap());
+        let blocks = erase(&stripe, &erased);
+        let mut scratch = ScratchBuffers::new();
+        let out = program.execute(&mut SliceSource::new(&blocks), &mut scratch).unwrap();
+        assert_eq!(out[0], &stripe[0][..]);
+        assert_eq!(out[1], &stripe[26][..]);
+    }
+
+    #[test]
+    fn scratch_reuse_across_block_sizes_is_clean() {
+        // Shrinking then growing the block size must not leak stale bytes.
+        let codec = StripeCodec::new(Scheme::new(SchemeKind::CpUniform, 6, 2, 2));
+        let s = &codec.scheme;
+        let mut rng = Prng::new(0x5C4A7C8);
+        let program = RepairProgram::for_pattern(s, &[1, 8]).unwrap();
+        let mut scratch = ScratchBuffers::new();
+        for len in [1024usize, 64, 4096, 3] {
+            let data: Vec<Vec<u8>> = (0..s.k).map(|_| rng.bytes(len)).collect();
+            let stripe = codec.encode_stripe(&data);
+            let blocks = erase(&stripe, &[1, 8]);
+            let out = program.execute(&mut SliceSource::new(&blocks), &mut scratch).unwrap();
+            assert_eq!(out[0], &stripe[1][..], "len={len}");
+            assert_eq!(out[1], &stripe[8][..], "len={len}");
+        }
+    }
+
+    #[test]
+    fn ragged_source_is_a_real_error() {
+        let codec = StripeCodec::new(Scheme::new(SchemeKind::AzureLrc, 6, 2, 2));
+        let s = &codec.scheme;
+        let mut rng = Prng::new(0xBAD);
+        let data: Vec<Vec<u8>> = (0..s.k).map(|_| rng.bytes(256)).collect();
+        let stripe = codec.encode_stripe(&data);
+        let mut blocks = erase(&stripe, &[0]);
+        // corrupt one survivor's length
+        for b in blocks.iter_mut().flatten() {
+            b.truncate(100);
+            break;
+        }
+        let program = RepairProgram::for_pattern(s, &[0]).unwrap();
+        let mut scratch = ScratchBuffers::new();
+        let err = program.execute(&mut SliceSource::new(&blocks), &mut scratch);
+        assert!(err.is_err(), "ragged blocks must fail loudly");
+    }
+
+    #[test]
+    fn missing_source_block_is_a_real_error() {
+        let codec = StripeCodec::new(Scheme::new(SchemeKind::AzureLrc, 6, 2, 2));
+        let s = &codec.scheme;
+        let program = RepairProgram::for_pattern(s, &[0]).unwrap();
+        // hand the executor an empty stripe
+        let blocks: Vec<Option<Vec<u8>>> = vec![None; s.n()];
+        let mut scratch = ScratchBuffers::new();
+        assert!(program.execute(&mut SliceSource::new(&blocks), &mut scratch).is_err());
+    }
+
+    #[test]
+    fn property_program_matches_codec_decode() {
+        // ISSUE 2 acceptance: RepairProgram::execute is byte-identical to
+        // StripeCodec::decode for random recoverable patterns across all
+        // six LRCs × P1–P5.
+        check("program-vs-decode", 120, 0x9209_6BAD_C0DE, |rng| {
+            let (k, r, p) = crate::PARAMS[rng.below(5)];
+            let kind = SchemeKind::ALL_LRC[rng.below(6)];
+            let codec = StripeCodec::new(Scheme::new(kind, k, r, p));
+            let s = &codec.scheme;
+            let f = 1 + rng.below((r + p).min(4));
+            let erased = {
+                let mut e = rng.distinct(s.n(), f);
+                e.sort_unstable();
+                e
+            };
+            let Some(plan) = repair::plan(s, &erased) else {
+                crate::prop_assert!(
+                    !s.recoverable(&erased),
+                    "planner refused recoverable {erased:?}"
+                );
+                return Ok(());
+            };
+            let program = RepairProgram::compile(s, &plan).map_err(|e| e.to_string())?;
+            let data: Vec<Vec<u8>> = (0..k).map(|_| rng.bytes(96)).collect();
+            let stripe = codec.encode_stripe(&data);
+            let blocks = erase(&stripe, &erased);
+            let mut scratch = ScratchBuffers::new();
+            let out = program
+                .execute(&mut SliceSource::new(&blocks), &mut scratch)
+                .map_err(|e| e.to_string())?;
+            let oracle = codec.decode(&blocks, &erased).map_err(|e| e.to_string())?;
+            for (i, &e) in erased.iter().enumerate() {
+                crate::prop_assert!(
+                    out[i] == &oracle[i][..],
+                    "{kind:?} k={k} block {e}: program != decode"
+                );
+                crate::prop_assert!(
+                    out[i] == &stripe[e][..],
+                    "{kind:?} k={k} block {e}: program != original bytes"
+                );
+            }
+            Ok(())
+        });
+    }
+}

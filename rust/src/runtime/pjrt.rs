@@ -1,0 +1,257 @@
+//! PJRT runtime: load the AOT-compiled GF-matmul artifacts produced by
+//! the Python L2/L1 layers and execute them from the Rust hot path.
+//!
+//! Interchange format is **HLO text** (see `python/compile/aot.py` and
+//! DESIGN.md §6): jax ≥ 0.5 serialized protos carry 64-bit instruction
+//! ids that xla_extension 0.5.1 rejects; the text parser reassigns ids.
+//!
+//! The artifact computes `out[R,B] = gf_matmul(coeff[R,K], data[K,B])`
+//! over GF(2^8) (u8 everywhere). Smaller logical shapes are zero-padded
+//! into the artifact envelope — a zero coefficient contributes nothing in
+//! GF arithmetic, so padding is semantically free. Blocks longer than B
+//! are processed in B-byte shards.
+
+use crate::gf::GfMatrix;
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// A compiled GF-matmul executable with a fixed (R, K, B) envelope.
+pub struct GfMatmulExec {
+    exe: xla::PjRtLoadedExecutable,
+    /// Max parity rows.
+    pub rows: usize,
+    /// Max data blocks (k).
+    pub cols: usize,
+    /// Shard width in bytes.
+    pub shard: usize,
+    /// Serialize PJRT executions (encode jobs from multiple proxy threads
+    /// funnel through here; one executable services the whole process).
+    lock: Mutex<()>,
+}
+
+impl std::fmt::Debug for GfMatmulExec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "GfMatmulExec(r{}_k{}_b{})", self.rows, self.cols, self.shard)
+    }
+}
+
+/// Parse `gf_matmul_r{R}_k{K}_b{B}.hlo.txt` into (R, K, B).
+fn parse_artifact_name(name: &str) -> Option<(usize, usize, usize)> {
+    let stem = name.strip_prefix("gf_matmul_")?.strip_suffix(".hlo.txt")?;
+    let mut r = None;
+    let mut k = None;
+    let mut b = None;
+    for part in stem.split('_') {
+        if let Some(v) = part.strip_prefix('r') {
+            r = v.parse().ok();
+        } else if let Some(v) = part.strip_prefix('k') {
+            k = v.parse().ok();
+        } else if let Some(v) = part.strip_prefix('b') {
+            b = v.parse().ok();
+        }
+    }
+    Some((r?, k?, b?))
+}
+
+impl GfMatmulExec {
+    /// Load and compile one artifact file.
+    pub fn load(client: &xla::PjRtClient, path: &Path) -> Result<Self> {
+        let name = path
+            .file_name()
+            .and_then(|s| s.to_str())
+            .context("artifact path has no file name")?;
+        let (rows, cols, shard) = parse_artifact_name(name)
+            .with_context(|| format!("unrecognized artifact name {name}"))?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .map_err(|e| anyhow::anyhow!("parse {name}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compile {name}: {e:?}"))?;
+        Ok(Self { exe, rows, cols, shard, lock: Mutex::new(()) })
+    }
+
+    /// Does a logical (m × k) coefficient matrix fit this envelope?
+    pub fn fits(&self, m: usize, k: usize) -> bool {
+        m <= self.rows && k <= self.cols
+    }
+
+    /// `out[m] = Σ_j coeff[m][j] · data[j]` over GF(2^8), via PJRT.
+    pub fn run(&self, coeff: &GfMatrix, data: &[Vec<u8>]) -> Result<Vec<Vec<u8>>> {
+        let m = coeff.rows();
+        let k = coeff.cols();
+        anyhow::ensure!(self.fits(m, k), "shape ({m},{k}) exceeds envelope");
+        anyhow::ensure!(k == data.len(), "coeff/data arity mismatch");
+        let len = data.first().map(|d| d.len()).unwrap_or(0);
+        anyhow::ensure!(data.iter().all(|d| d.len() == len), "ragged blocks");
+
+        // Pad coefficients into the R×K envelope once.
+        let mut cbytes = vec![0u8; self.rows * self.cols];
+        for i in 0..m {
+            for j in 0..k {
+                cbytes[i * self.cols + j] = coeff.get(i, j);
+            }
+        }
+        let clit = xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::U8,
+            &[self.rows, self.cols],
+            &cbytes,
+        )
+        .map_err(|e| anyhow::anyhow!("coeff literal: {e:?}"))?;
+
+        let mut out: Vec<Vec<u8>> = (0..m).map(|_| Vec::with_capacity(len)).collect();
+        // The envelope rows beyond k never change — zero them once; only
+        // the copied prefix of live rows is rewritten per shard, and the
+        // per-row tail is zeroed only for the final partial shard
+        // (avoids an O(cols×shard) memset per shard — §Perf).
+        let mut dbytes = vec![0u8; self.cols * self.shard];
+        let mut off = 0;
+        let mut prev_w = self.shard;
+        loop {
+            let w = (len - off).min(self.shard);
+            for (j, d) in data.iter().enumerate() {
+                dbytes[j * self.shard..j * self.shard + w].copy_from_slice(&d[off..off + w]);
+                if w < prev_w {
+                    dbytes[j * self.shard + w..j * self.shard + prev_w].fill(0);
+                }
+            }
+            prev_w = w;
+            let dlit = xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::U8,
+                &[self.cols, self.shard],
+                &dbytes,
+            )
+            .map_err(|e| anyhow::anyhow!("data literal: {e:?}"))?;
+            let result = {
+                let _g = self.lock.lock().unwrap();
+                self.exe
+                    .execute::<xla::Literal>(&[clit.clone(), dlit])
+                    .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?
+            };
+            let lit = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow::anyhow!("to_literal: {e:?}"))?;
+            let tup = lit.to_tuple1().map_err(|e| anyhow::anyhow!("tuple: {e:?}"))?;
+            let flat = tup.to_vec::<u8>().map_err(|e| anyhow::anyhow!("to_vec: {e:?}"))?;
+            anyhow::ensure!(flat.len() == self.rows * self.shard, "bad output size");
+            for (i, o) in out.iter_mut().enumerate() {
+                o.extend_from_slice(&flat[i * self.shard..i * self.shard + w]);
+            }
+            off += w;
+            if off >= len {
+                break;
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// A PJRT CPU client plus every artifact found in a directory.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub execs: Vec<std::sync::Arc<GfMatmulExec>>,
+}
+
+impl Runtime {
+    /// Create a CPU client and compile all `gf_matmul_*.hlo.txt` files in
+    /// `dir`. Missing directory ⇒ empty runtime (native fallback only).
+    pub fn load_dir(dir: &Path) -> Result<Self> {
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu client: {e:?}"))?;
+        let mut execs = Vec::new();
+        if dir.is_dir() {
+            let mut paths: Vec<PathBuf> = std::fs::read_dir(dir)?
+                .filter_map(|e| e.ok().map(|e| e.path()))
+                .filter(|p| {
+                    p.file_name()
+                        .and_then(|s| s.to_str())
+                        .is_some_and(|n| n.starts_with("gf_matmul_") && n.ends_with(".hlo.txt"))
+                })
+                .collect();
+            paths.sort();
+            for p in paths {
+                execs.push(std::sync::Arc::new(GfMatmulExec::load(&client, &p)?));
+            }
+        }
+        Ok(Self { client, execs })
+    }
+
+    /// Default artifact directory: `$CP_LRC_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("CP_LRC_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    /// Smallest-envelope executable that fits an (m, k) coefficient shape.
+    pub fn best_fit(&self, m: usize, k: usize) -> Option<std::sync::Arc<GfMatmulExec>> {
+        self.execs
+            .iter()
+            .filter(|e| e.fits(m, k))
+            .min_by_key(|e| e.rows * e.cols)
+            .cloned()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::native_gf_matmul;
+    use crate::prng::Prng;
+
+    #[test]
+    fn artifact_name_parsing() {
+        assert_eq!(parse_artifact_name("gf_matmul_r8_k32_b4096.hlo.txt"), Some((8, 32, 4096)));
+        assert_eq!(
+            parse_artifact_name("gf_matmul_r16_k128_b65536.hlo.txt"),
+            Some((16, 128, 65536))
+        );
+        assert_eq!(parse_artifact_name("model.hlo.txt"), None);
+        assert_eq!(parse_artifact_name("gf_matmul_bogus.hlo.txt"), None);
+    }
+
+    #[test]
+    fn u8_literal_roundtrip() {
+        let data: Vec<u8> = (0..24u8).collect();
+        let lit = xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::U8,
+            &[4, 6],
+            &data,
+        )
+        .unwrap();
+        assert_eq!(lit.element_count(), 24);
+        assert_eq!(lit.to_vec::<u8>().unwrap(), data);
+    }
+
+    /// Integration: the PJRT path must agree bit-for-bit with the native
+    /// gf kernels. Skips (with a note) when artifacts are not built yet.
+    #[test]
+    fn pjrt_matches_native_when_artifacts_present() {
+        let dir = Runtime::default_dir();
+        let rt = match Runtime::load_dir(&dir) {
+            Ok(rt) if !rt.execs.is_empty() => rt,
+            _ => {
+                eprintln!("skipping: no artifacts in {dir:?} (run `make artifacts`)");
+                return;
+            }
+        };
+        let mut rng = Prng::new(0xA07);
+        for &(m, k, blen) in &[(2usize, 4usize, 100usize), (4, 6, 5000), (8, 24, 70000), (1, 1, 1)]
+        {
+            let Some(exec) = rt.best_fit(m, k) else { continue };
+            let mut coeff = GfMatrix::zeros(m, k);
+            for i in 0..m {
+                for j in 0..k {
+                    coeff.set(i, j, rng.u8());
+                }
+            }
+            let data: Vec<Vec<u8>> = (0..k).map(|_| rng.bytes(blen)).collect();
+            let native = native_gf_matmul(&coeff, &data).unwrap();
+            let pjrt = exec.run(&coeff, &data).unwrap();
+            assert_eq!(native, pjrt, "m={m} k={k} blen={blen}");
+        }
+    }
+}

@@ -1,0 +1,60 @@
+//! Native fallback runtime used when the `pjrt` feature (and thus the
+//! `xla` dependency) is disabled. Mirrors the PJRT backend's API; `run`
+//! produces bit-identical output via the native GF kernels.
+
+use crate::gf::GfMatrix;
+use anyhow::Result;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// Stand-in for a compiled GF-matmul executable with an (R, K, B)
+/// envelope. Never constructed by [`Runtime::load_dir`]; exists so code
+/// written against the PJRT backend (e.g.
+/// [`crate::codec::StripeCodec::with_exec`]) type-checks unchanged.
+#[derive(Debug)]
+pub struct GfMatmulExec {
+    /// Max parity rows.
+    pub rows: usize,
+    /// Max data blocks (k).
+    pub cols: usize,
+    /// Shard width in bytes.
+    pub shard: usize,
+}
+
+impl GfMatmulExec {
+    /// Does a logical (m × k) coefficient matrix fit this envelope?
+    pub fn fits(&self, m: usize, k: usize) -> bool {
+        m <= self.rows && k <= self.cols
+    }
+
+    /// `out[m] = Σ_j coeff[m][j] · data[j]` over GF(2^8), natively.
+    pub fn run(&self, coeff: &GfMatrix, data: &[Vec<u8>]) -> Result<Vec<Vec<u8>>> {
+        crate::codec::native_gf_matmul(coeff, data)
+    }
+}
+
+/// Artifact-less runtime: the native GF path serves everything.
+pub struct Runtime {
+    pub execs: Vec<Arc<GfMatmulExec>>,
+}
+
+impl Runtime {
+    /// No PJRT client available — succeed with an empty runtime so
+    /// callers fall back to the native kernels.
+    pub fn load_dir(_dir: &Path) -> Result<Self> {
+        Ok(Self { execs: Vec::new() })
+    }
+
+    /// Default artifact directory: `$CP_LRC_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("CP_LRC_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    /// Smallest-envelope executable that fits an (m, k) coefficient
+    /// shape; always `None` here.
+    pub fn best_fit(&self, _m: usize, _k: usize) -> Option<Arc<GfMatmulExec>> {
+        None
+    }
+}

@@ -153,6 +153,33 @@ fn repair_time_scales_with_block_size() {
 }
 
 #[test]
+fn repair_all_compiles_recurring_patterns_once() {
+    // The same erasure pattern recurring across repair_all sweeps (the
+    // wide-stripe production case: one block index lost again and again
+    // across stripes/rounds) must compile exactly once; every later
+    // repair replays the cached RepairProgram.
+    let mut c = Cluster::new(cfg(SchemeKind::CpAzure, 6, 2, 2, 1024));
+    let sid = c.fill_random_stripes(1, 0x5C)[0];
+    let rounds: u64 = 4;
+    for _ in 0..rounds {
+        // fail whichever node currently hosts block 0 — pattern is
+        // always [0] even though repair relocates the block each round
+        let victim = c.meta.stripes[&sid].block_nodes[0];
+        c.fail_node(victim);
+        let reports = c.repair_all().unwrap();
+        assert_eq!(reports.len(), 1);
+        assert_eq!(reports[0].blocks_repaired, vec![0]);
+        c.restore_node(victim);
+    }
+    let stats = c.plan_cache_stats();
+    assert_eq!(stats.misses, 1, "pattern [0] must compile once: {stats:?}");
+    assert_eq!(stats.hits, rounds - 1, "later rounds must hit the cache: {stats:?}");
+    assert!(stats.hit_rate() >= 0.75, "hit rate {:.2} too low", stats.hit_rate());
+    // repaired bytes are correct
+    assert!(c.scrub_stripe(sid).unwrap());
+}
+
+#[test]
 fn multi_stripe_node_failure_repairs_all_affected() {
     let mut c = Cluster::new(cfg(SchemeKind::CpUniform, 6, 2, 2, 1024));
     let sids = c.fill_random_stripes(4, 0x57);
@@ -257,7 +284,7 @@ fn tcp_transport_stripe_roundtrip() {
     servers[0].set_alive(false);
     let plan = repair::plan_single(&codec.scheme, 0);
     let mut blocks: Vec<Option<Vec<u8>>> = vec![None; n];
-    for &b in plan.fetch_set(&codec.scheme).iter() {
+    for &b in plan.fetch_set(&codec.scheme).unwrap().iter() {
         blocks[b] = clients[b].get(BlockKey { stripe: 0, index: b as u32 });
         assert!(blocks[b].is_some(), "fetch block {b} over TCP");
     }

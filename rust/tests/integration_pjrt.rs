@@ -67,7 +67,7 @@ fn wide_envelope_covers_p8_and_matches_native() {
         }
     }
     let data: Vec<Vec<u8>> = (0..k).map(|_| rng.bytes(4096)).collect();
-    assert_eq!(native_gf_matmul(&coeff, &data), exec.run(&coeff, &data).unwrap());
+    assert_eq!(native_gf_matmul(&coeff, &data).unwrap(), exec.run(&coeff, &data).unwrap());
 }
 
 #[test]
@@ -114,7 +114,7 @@ fn odd_lengths_and_shard_boundaries() {
     for blen in [1usize, 7, shard - 1, shard, shard + 1, 2 * shard + 13] {
         let data: Vec<Vec<u8>> = (0..4).map(|_| rng.bytes(blen)).collect();
         assert_eq!(
-            native_gf_matmul(&coeff, &data),
+            native_gf_matmul(&coeff, &data).unwrap(),
             exec.run(&coeff, &data).unwrap(),
             "blen={blen}"
         );

@@ -183,7 +183,7 @@ fn repair_cost_invariants_random_pairs() {
             prop_assert!(cost == s.k || plan.global_blocks.is_empty(), "global cost must be k");
         }
         // fetch_set is executable: contains no erased blocks
-        let fetch = plan.fetch_set(&s);
+        let fetch = plan.fetch_set(&s).map_err(|e| e.to_string())?;
         prop_assert!(fetch.iter().all(|b| !pair.contains(b)), "fetch includes erased");
         Ok(())
     });
