@@ -106,7 +106,9 @@ fn main() -> anyhow::Result<()> {
                     degraded += usize::from(rep.degraded);
                 }
             }
-            let reports = c.repair_all()?;
+            // Whole-node repair: batched decode over 4 worker threads
+            // (same netsim accounting as the serial repair_all).
+            let reports = c.repair_all_parallel(4)?;
             for r in &reports {
                 t1_sum += r.total_s();
                 blocks_read += r.blocks_read;
@@ -126,7 +128,7 @@ fn main() -> anyhow::Result<()> {
         let v1 = c.meta.stripes[&0].block_nodes[lp];
         c.fail_node(v0);
         c.fail_node(v1);
-        let reports2 = c.repair_all()?;
+        let reports2 = c.repair_all_parallel(4)?;
         let t2: f64 = reports2.iter().map(|r| r.total_s()).sum::<f64>() / reports2.len() as f64;
         println!(
             "two-node failure: {} stripes repaired, avg {:.3}s, local={}",

@@ -27,6 +27,26 @@ fn main() {
     b.run_throughput("gf/mul_slice/1MiB", N, || {
         gf::mul_slice(0x53, &src, &mut out);
     });
+    b.run_throughput("gf/scale_slice/1MiB", N, || {
+        gf::scale_slice(0x53, &mut out);
+    });
+
+    // --- fused multi-source combine vs one-pass-per-source ----------------
+    // The repair executor's inner loop: FUSE_MAX sources accumulated per
+    // pass over dst vs the unfused mul_acc ladder.
+    {
+        let n_src = gf::FUSE_MAX;
+        let srcs_own: Vec<Vec<u8>> = (0..n_src).map(|_| rng.bytes(N)).collect();
+        let srcs: Vec<&[u8]> = srcs_own.iter().map(Vec::as_slice).collect();
+        let coeffs: Vec<u8> = (0..n_src).map(|_| 2 + rng.below(254) as u8).collect();
+        let moved = (n_src + 1) * N;
+        b.run_throughput(&format!("gf/combine_unfused/{n_src}src/1MiB"), moved, || {
+            gf::combine_into_unfused(&coeffs, &srcs, &mut dst);
+        });
+        b.run_throughput(&format!("gf/combine_fused/{n_src}src/1MiB"), moved, || {
+            gf::combine_into_fused(&coeffs, &srcs, &mut dst);
+        });
+    }
 
     // --- stripe encode ----------------------------------------------------
     for &(kind, k, r, p) in &[

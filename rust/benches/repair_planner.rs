@@ -1,15 +1,24 @@
 //! Micro-benchmarks for the coordinator's planning hot paths — single-
-//! and two-node repair planning, decodability checks — plus the ISSUE 2
-//! headline comparison: **compile-once/execute-many** (the
-//! plan→compile→execute pipeline with a cached [`RepairProgram`] and
-//! reused scratch) vs **plan-per-stripe** (re-planning, re-compiling and
-//! re-allocating for every stripe, as the pre-redesign cluster did).
-//! Results of that comparison are recorded in
-//! `BENCH_repair_program.json` at the workspace root.
+//! and two-node repair planning, decodability checks — plus the
+//! executor-side comparisons recorded in `BENCH_repair_program.json` at
+//! the workspace root (ISSUE 2 + ISSUE 3 acceptance):
+//!
+//! * **compile-once/execute-many** vs **plan-per-stripe** (the
+//!   plan→compile→execute pipeline with a cached [`RepairProgram`] and
+//!   reused scratch vs re-planning and re-allocating per stripe);
+//! * **fused vs unfused** GF combine kernels (up to
+//!   [`cp_lrc::gf::FUSE_MAX`] sources per pass over `dst` vs one pass
+//!   per source) on repair-shaped operand sets;
+//! * a **whole-node repair batch thread sweep**: one compiled program
+//!   replayed over a batch of same-pattern stripes via
+//!   [`RepairProgram::execute_batch`] on 1/2/4/8 scoped worker threads,
+//!   one `ScratchBuffers` per worker — the cluster's
+//!   `repair_all_parallel` decode phase in isolation.
 
 use cp_lrc::bench_harness::{Bench, Stats};
 use cp_lrc::codec::StripeCodec;
 use cp_lrc::codes::{Scheme, SchemeKind};
+use cp_lrc::gf;
 use cp_lrc::prng::Prng;
 use cp_lrc::repair::{self, RepairProgram, ScratchBuffers, SliceSource};
 
@@ -38,6 +47,38 @@ fn json_stats(s: &Stats) -> String {
         "{{\"mean_ns\": {:.1}, \"median_ns\": {:.1}, \"min_ns\": {:.1}, \"p95_ns\": {:.1}, \"iters\": {}}}",
         s.mean_ns, s.median_ns, s.min_ns, s.p95_ns, s.iters
     )
+}
+
+/// Decode a batch of same-pattern stripes on `threads` scoped workers,
+/// one scratch pool per worker — the shape of the cluster's parallel
+/// whole-node decode phase. Returns total reconstructed bytes.
+fn run_batch(
+    program: &RepairProgram,
+    stripes: &[Vec<Option<Vec<u8>>>],
+    threads: usize,
+) -> usize {
+    let shard_len = (stripes.len() + threads - 1) / threads;
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = stripes
+            .chunks(shard_len)
+            .map(|shard| {
+                scope.spawn(move || {
+                    let mut scratch = ScratchBuffers::new();
+                    let mut sources: Vec<SliceSource> =
+                        shard.iter().map(|b| SliceSource::new(b)).collect();
+                    let mut n = 0usize;
+                    program
+                        .execute_batch(&mut sources, &mut scratch, |_, outs| {
+                            n += outs.iter().map(|o| o.len()).sum::<usize>();
+                            Ok(())
+                        })
+                        .expect("batch decode failed");
+                    n
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("worker panicked")).sum()
+    })
 }
 
 fn main() {
@@ -69,13 +110,14 @@ fn main() {
     });
 
     // ------------------------------------------------------------------
-    // Compile-once/execute-many vs plan-per-stripe (ISSUE 2 acceptance):
-    // same D1+L1 repair, P2 / P5 / P8. "Per stripe" pays plan + compile
-    // + fresh scratch on every iteration; "execute-only" replays one
-    // compiled program into reused buffers — exactly what the cluster's
-    // PlanCache + scratch pool do across a whole-node repair.
+    // Section 1 — compile-once/execute-many vs plan-per-stripe (ISSUE 2
+    // acceptance): same D1+L1 repair, P2 / P5 / P8. "Per stripe" pays
+    // plan + compile + fresh scratch on every iteration; "execute-only"
+    // replays one compiled program into reused buffers — exactly what
+    // the cluster's PlanCache + scratch pool do across a whole-node
+    // repair.
     // ------------------------------------------------------------------
-    let mut results: Vec<String> = Vec::new();
+    let mut compile_results: Vec<String> = Vec::new();
     for (label, k, r, p) in [("P2", 12, 2, 2), ("P5", 24, 2, 2), ("P8", 96, 5, 4)] {
         let fx = fixture(SchemeKind::CpAzure, k, r, p, 64 * 1024, &mut rng);
         let s = &fx.codec.scheme;
@@ -101,11 +143,11 @@ fn main() {
                 "  {label} ({k},{r},{p}): compile-once/execute-many is {speedup:.2}x \
                  faster than plan-per-stripe"
             );
-            results.push(format!(
-                "    {{\n      \"params\": \"{label}\", \"k\": {k}, \"r\": {r}, \"p\": {p},\n      \
-                 \"pattern\": \"D1+L1\", \"block_bytes\": {},\n      \
-                 \"plan_per_stripe\": {},\n      \"execute_only\": {},\n      \
-                 \"speedup_median\": {:.3}\n    }}",
+            compile_results.push(format!(
+                "      {{\n        \"params\": \"{label}\", \"k\": {k}, \"r\": {r}, \"p\": {p},\n        \
+                 \"pattern\": \"D1+L1\", \"block_bytes\": {},\n        \
+                 \"plan_per_stripe\": {},\n        \"execute_only\": {},\n        \
+                 \"speedup_median\": {:.3}\n      }}",
                 fx.bytes,
                 json_stats(&ps),
                 json_stats(&eo),
@@ -114,12 +156,103 @@ fn main() {
         }
     }
 
-    if !results.is_empty() {
+    // ------------------------------------------------------------------
+    // Section 2 — fused vs unfused GF combine (ISSUE 3 tentpole): the
+    // D1-repair shape (one group of k/r survivors) at 4 and 12 sources.
+    // Unfused pays one read+write pass over dst per source; fused loads
+    // dst once per FUSE_MAX sources.
+    // ------------------------------------------------------------------
+    let mut kernel_results: Vec<String> = Vec::new();
+    const BLOCK: usize = 256 * 1024;
+    for n_src in [4usize, 12] {
+        let srcs_own: Vec<Vec<u8>> = (0..n_src).map(|_| rng.bytes(BLOCK)).collect();
+        let srcs: Vec<&[u8]> = srcs_own.iter().map(Vec::as_slice).collect();
+        let coeffs: Vec<u8> = (0..n_src).map(|_| 2 + rng.below(254) as u8).collect();
+        let mut dst = vec![0u8; BLOCK];
+        let moved = (n_src + 1) * BLOCK; // sources + one store of dst
+        let unfused = b.run_throughput(
+            &format!("gf/combine_unfused/{n_src}src/256KiB"),
+            moved,
+            || gf::combine_into_unfused(&coeffs, &srcs, &mut dst),
+        );
+        let fused = b.run_throughput(
+            &format!("gf/combine_fused/{n_src}src/256KiB"),
+            moved,
+            || gf::combine_into_fused(&coeffs, &srcs, &mut dst),
+        );
+        if let (Some(u), Some(f)) = (unfused, fused) {
+            let speedup = u.median_ns / f.median_ns;
+            println!("  combine {n_src} sources: fused is {speedup:.2}x faster than unfused");
+            kernel_results.push(format!(
+                "      {{\n        \"sources\": {n_src}, \"block_bytes\": {BLOCK},\n        \
+                 \"unfused\": {},\n        \"fused\": {},\n        \
+                 \"speedup_median\": {:.3}\n      }}",
+                json_stats(&u),
+                json_stats(&f),
+                speedup
+            ));
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Section 3 — whole-node repair batch, 1/2/4/8 decode threads: one
+    // compiled D1 program replayed over a batch of same-pattern stripes
+    // (what a dead node leaves behind), sharded over scoped workers.
+    // ------------------------------------------------------------------
+    let mut sweep_results: Vec<String> = Vec::new();
+    {
+        const STRIPES: usize = 24;
+        const BLK: usize = 64 * 1024;
+        let codec = StripeCodec::new(Scheme::new(SchemeKind::CpAzure, 24, 2, 2));
+        let s = &codec.scheme;
+        let program = RepairProgram::for_pattern(s, &[0]).unwrap();
+        let mut batch: Vec<Vec<Option<Vec<u8>>>> = Vec::with_capacity(STRIPES);
+        for _ in 0..STRIPES {
+            let data: Vec<Vec<u8>> = (0..s.k).map(|_| rng.bytes(BLK)).collect();
+            let stripe = codec.encode_stripe(&data);
+            let mut blocks: Vec<Option<Vec<u8>>> = stripe.into_iter().map(Some).collect();
+            blocks[0] = None;
+            batch.push(blocks);
+        }
+        let mut base_median = 0.0f64;
+        for threads in [1usize, 2, 4, 8] {
+            let stats = b.run(
+                &format!("repair_batch/node_d1/(24,2,2)/{STRIPES}x64KiB/t{threads}"),
+                || run_batch(&program, &batch, threads),
+            );
+            if let Some(st) = stats {
+                if threads == 1 {
+                    base_median = st.median_ns;
+                }
+                let scaling = if st.median_ns > 0.0 { base_median / st.median_ns } else { 0.0 };
+                println!(
+                    "  node-repair batch ({STRIPES} stripes) on {threads} thread(s): \
+                     {:.2} ms/batch, {scaling:.2}x vs 1 thread",
+                    st.median_ns / 1e6
+                );
+                sweep_results.push(format!(
+                    "      {{\n        \"threads\": {threads}, \"stripes\": {STRIPES}, \
+                     \"block_bytes\": {BLK}, \"pattern\": \"D1\",\n        \
+                     \"batch\": {},\n        \"scaling_vs_1thread\": {scaling:.3}\n      }}",
+                    json_stats(&st)
+                ));
+            }
+        }
+    }
+
+    if !compile_results.is_empty() || !kernel_results.is_empty() || !sweep_results.is_empty() {
         let doc = format!(
             "{{\n  \"bench\": \"repair_program\",\n  \
-             \"description\": \"compile-once/execute-many vs plan-per-stripe, D1+L1 repair, CP-Azure\",\n  \
-             \"unit\": \"ns per repaired stripe\",\n  \"results\": [\n{}\n  ]\n}}\n",
-            results.join(",\n")
+             \"description\": \"executor hot-path measurements: compile-once vs plan-per-stripe, \
+             fused vs unfused GF kernels, whole-node batch decode thread sweep\",\n  \
+             \"unit\": \"ns\",\n  \
+             \"regenerate\": \"cargo bench --bench repair_planner\",\n  \
+             \"sections\": {{\n    \"compile_once_vs_plan_per_stripe\": [\n{}\n    ],\n    \
+             \"fused_vs_unfused_kernels\": [\n{}\n    ],\n    \
+             \"whole_node_batch_thread_sweep\": [\n{}\n    ]\n  }}\n}}\n",
+            compile_results.join(",\n"),
+            kernel_results.join(",\n"),
+            sweep_results.join(",\n")
         );
         match std::fs::write("BENCH_repair_program.json", &doc) {
             Ok(()) => println!("wrote BENCH_repair_program.json"),

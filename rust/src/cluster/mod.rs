@@ -20,7 +20,9 @@ use crate::codec::StripeCodec;
 use crate::codes::{Scheme, SchemeKind};
 use crate::netsim::{Flow, NetSim};
 use crate::prng::Prng;
-use crate::repair::{BlockSource, CacheStats, PlanCache, ScratchBuffers};
+use crate::repair::{
+    BlockSource, CacheStats, PlanCache, RepairProgram, ScratchBuffers, SliceSource,
+};
 use datanode::DataNodeHandle;
 use metadata::{BlockKey, Extent, FileId, Metadata, NodeInfo, ObjectInfo, StripeId, StripeInfo};
 use std::collections::HashMap;
@@ -372,8 +374,34 @@ impl Cluster {
         drop(source);
         let decode_cpu_s = t0.elapsed().as_secs_f64();
 
-        // (5) Write-back to replacement nodes (live nodes not already
-        // holding a block of this stripe).
+        // (5) Write-back to replacement nodes.
+        let wb_time = self.write_back(sid, &stripe, failed_blocks, &reconstructed)?;
+
+        Ok(RepairReport {
+            stripe: sid,
+            blocks_repaired: failed_blocks.to_vec(),
+            blocks_read: fetch.len(),
+            bytes_read,
+            sim_time_s: read_time + wb_time,
+            decode_sim_s: bytes_read as f64 / (self.cfg.decode_gbps * 1e9 / 8.0),
+            decode_cpu_s,
+            local: program.plan.fully_local(),
+        })
+    }
+
+    /// Step (5) of the decoding workflow, shared by the serial and
+    /// batched repair paths: write reconstructed blocks to replacement
+    /// nodes (live nodes not already holding a block of this stripe),
+    /// charge the write-back flows through the netsim, and update the
+    /// stripe's placement metadata. Returns the simulated write-back
+    /// time.
+    fn write_back(
+        &mut self,
+        sid: StripeId,
+        stripe: &StripeInfo,
+        failed_blocks: &[usize],
+        reconstructed: &[Vec<u8>],
+    ) -> anyhow::Result<f64> {
         let mut used: Vec<usize> = stripe.block_nodes.clone();
         let mut wb_flows = Vec::new();
         let mut new_nodes: HashMap<usize, usize> = HashMap::new();
@@ -400,17 +428,7 @@ impl Cluster {
                 si.block_nodes[*b] = *nid;
             }
         }
-
-        Ok(RepairReport {
-            stripe: sid,
-            blocks_repaired: failed_blocks.to_vec(),
-            blocks_read: fetch.len(),
-            bytes_read,
-            sim_time_s: read_time + wb_time,
-            decode_sim_s: bytes_read as f64 / (self.cfg.decode_gbps * 1e9 / 8.0),
-            decode_cpu_s,
-            local: program.plan.fully_local(),
-        })
+        Ok(wb_time)
     }
 
     /// Repair every stripe affected by currently-failed nodes; returns
@@ -424,6 +442,152 @@ impl Cluster {
             if !failed.is_empty() {
                 reports.push(self.repair_stripe(sid, &failed)?);
             }
+        }
+        Ok(reports)
+    }
+
+    /// Whole-node (multi-stripe) repair, batched and parallel: repair
+    /// every stripe affected by currently-failed nodes using `threads`
+    /// decode workers. Network fetches and write-backs run through the
+    /// (serial) netsim with exactly [`Self::repair_all`]'s accounting;
+    /// the proxy's decode work fans out over a scoped worker pool — one
+    /// [`ScratchBuffers`] per worker, stripes sharing a compiled
+    /// program batched through
+    /// [`RepairProgram::execute_batch`] — so wall-clock decode scales
+    /// with cores instead of serialising behind one scratch mutex.
+    pub fn repair_all_parallel(&mut self, threads: usize) -> anyhow::Result<Vec<RepairReport>> {
+        let mut sids: Vec<StripeId> = self.meta.stripes.keys().copied().collect();
+        sids.sort_unstable();
+        let mut jobs = Vec::new();
+        for sid in sids {
+            let stripe = self.meta.stripes[&sid].clone();
+            let failed = self.meta.failed_blocks(&stripe);
+            if !failed.is_empty() {
+                jobs.push((sid, failed));
+            }
+        }
+        self.repair_stripes_batch(&jobs, threads)
+    }
+
+    /// Batched repair of an explicit job list (`(stripe, failed blocks)`
+    /// pairs, each stripe at most once). Three phases:
+    ///
+    /// 1. **fetch** (serial): compile-or-look-up each pattern's program,
+    ///    prefetch its survivor set from the datanodes and charge the
+    ///    read flows;
+    /// 2. **decode** (parallel): jobs are sorted so stripes sharing a
+    ///    compiled program are contiguous, sharded over `threads`
+    ///    scoped workers, and each worker replays runs of same-program
+    ///    stripes with [`RepairProgram::execute_batch`] into its own
+    ///    [`ScratchBuffers`] — no allocation in steady state, no shared
+    ///    mutable state;
+    /// 3. **write-back** (serial): reconstructed blocks go to
+    ///    replacement nodes and placement metadata is updated.
+    ///
+    /// Reports come back in input-job order.
+    pub fn repair_stripes_batch(
+        &mut self,
+        jobs: &[(StripeId, Vec<usize>)],
+        threads: usize,
+    ) -> anyhow::Result<Vec<RepairReport>> {
+        // Process the job list in bounded waves: fetching every affected
+        // stripe's survivor set up front would make whole-node repair
+        // peak at O(surviving dataset) resident bytes. A wave holds a
+        // few stripes per decode worker in flight, which keeps workers
+        // saturated while bounding memory at
+        // O(wave × fetch set × block size).
+        const STRIPES_IN_FLIGHT_PER_WORKER: usize = 4;
+        let scheme = self.scheme().clone();
+        let wave_len = threads.max(1) * STRIPES_IN_FLIGHT_PER_WORKER;
+        let mut reports = Vec::with_capacity(jobs.len());
+        for wave in jobs.chunks(wave_len) {
+            reports.extend(self.repair_wave(wave, threads, &scheme)?);
+        }
+        Ok(reports)
+    }
+
+    /// One wave of [`Self::repair_stripes_batch`]: fetch → parallel
+    /// decode → write-back for a bounded slice of the job list.
+    fn repair_wave(
+        &mut self,
+        jobs: &[(StripeId, Vec<usize>)],
+        threads: usize,
+        scheme: &Arc<Scheme>,
+    ) -> anyhow::Result<Vec<RepairReport>> {
+        // -- phase 1: fetch (serial, netsim-accounted) ------------------
+        let mut prepared: Vec<Prepared> = Vec::with_capacity(jobs.len());
+        for (orig, (sid, failed)) in jobs.iter().enumerate() {
+            let stripe = self
+                .meta
+                .stripes
+                .get(sid)
+                .cloned()
+                .ok_or_else(|| anyhow::anyhow!("unknown stripe {sid}"))?;
+            anyhow::ensure!(!failed.is_empty(), "nothing to repair in stripe {sid}");
+            let program = self.programs.lock().unwrap().get_or_compile(scheme, failed)?;
+            let fetch: Vec<usize> = program.fetch().iter().copied().collect();
+            let mut source = self.stripe_fetcher(&stripe);
+            source.prefetch(&fetch)?;
+            let (_, read_time) = self.net.run(&source.flows);
+            let bytes_read = source.bytes_read;
+            let StripeFetcher { cache: blocks, .. } = source;
+            prepared.push(Prepared {
+                orig,
+                sid: *sid,
+                failed: failed.clone(),
+                stripe,
+                program,
+                blocks,
+                read_time,
+                bytes_read,
+                fetched: fetch.len(),
+            });
+        }
+        // Same-pattern stripes contiguous → workers batch one program.
+        prepared.sort_by(|a, b| a.failed.cmp(&b.failed).then(a.sid.cmp(&b.sid)));
+
+        // -- phase 2: decode (parallel, one scratch per worker) ---------
+        let mut recs: Vec<Option<(Vec<Vec<u8>>, f64)>> = Vec::new();
+        recs.resize_with(jobs.len(), || None);
+        if !prepared.is_empty() {
+            let workers = threads.max(1).min(prepared.len());
+            let shard_len = (prepared.len() + workers - 1) / workers;
+            let results: Vec<anyhow::Result<Vec<(usize, Vec<Vec<u8>>, f64)>>> =
+                std::thread::scope(|scope| {
+                    let handles: Vec<_> = prepared
+                        .chunks(shard_len)
+                        .map(|shard| scope.spawn(move || decode_shard(shard)))
+                        .collect();
+                    handles
+                        .into_iter()
+                        .map(|h| h.join().expect("decode worker panicked"))
+                        .collect()
+                });
+            for r in results {
+                for (orig, rec, cpu) in r? {
+                    recs[orig] = Some((rec, cpu));
+                }
+            }
+        }
+
+        // -- phase 3: write-back (serial), reports in input order -------
+        prepared.sort_by_key(|p| p.orig);
+        let mut reports = Vec::with_capacity(prepared.len());
+        for p in prepared {
+            let (rec, decode_cpu_s) = recs[p.orig]
+                .take()
+                .ok_or_else(|| anyhow::anyhow!("stripe {} never decoded", p.sid))?;
+            let wb_time = self.write_back(p.sid, &p.stripe, &p.failed, &rec)?;
+            reports.push(RepairReport {
+                stripe: p.sid,
+                blocks_repaired: p.failed,
+                blocks_read: p.fetched,
+                bytes_read: p.bytes_read,
+                sim_time_s: p.read_time + wb_time,
+                decode_sim_s: p.bytes_read as f64 / (self.cfg.decode_gbps * 1e9 / 8.0),
+                decode_cpu_s,
+                local: p.program.plan.fully_local(),
+            });
         }
         Ok(reports)
     }
@@ -471,6 +635,63 @@ impl Cluster {
         }
         sids
     }
+}
+
+/// One stripe's repair inside a [`Cluster::repair_stripes_batch`] wave:
+/// fetched survivor bytes plus the accounting captured in phase 1,
+/// ready for a decode worker.
+struct Prepared {
+    /// Index of this job within its wave (reports are re-ordered by it).
+    orig: usize,
+    sid: StripeId,
+    failed: Vec<usize>,
+    stripe: StripeInfo,
+    program: Arc<RepairProgram>,
+    /// Survivor bytes by block index (program fetch set filled).
+    blocks: Vec<Option<Vec<u8>>>,
+    read_time: f64,
+    bytes_read: u64,
+    fetched: usize,
+}
+
+/// Decode one worker's shard of a repair wave: walk runs of
+/// same-program jobs and replay each run as one
+/// [`RepairProgram::execute_batch`]. Returns
+/// `(orig job index, reconstructed failed blocks, decode cpu seconds)`.
+fn decode_shard(shard: &[Prepared]) -> anyhow::Result<Vec<(usize, Vec<Vec<u8>>, f64)>> {
+    let mut scratch = ScratchBuffers::new();
+    let mut out = Vec::with_capacity(shard.len());
+    let mut i = 0;
+    while i < shard.len() {
+        let mut j = i + 1;
+        while j < shard.len() && Arc::ptr_eq(&shard[j].program, &shard[i].program) {
+            j += 1;
+        }
+        let run = &shard[i..j];
+        let program = &run[0].program;
+        let mut sources: Vec<SliceSource> =
+            run.iter().map(|p| SliceSource::new(&p.blocks)).collect();
+        let mut last = Instant::now();
+        program.execute_batch(&mut sources, &mut scratch, |si, outs| {
+            let p = &run[si];
+            let rec = p
+                .failed
+                .iter()
+                .map(|&b| {
+                    program
+                        .output_index(b)
+                        .map(|oi| outs[oi].to_vec())
+                        .ok_or_else(|| anyhow::anyhow!("program lacks output for block {b}"))
+                })
+                .collect::<anyhow::Result<Vec<Vec<u8>>>>()?;
+            let now = Instant::now();
+            out.push((p.orig, rec, (now - last).as_secs_f64()));
+            last = now;
+            Ok(())
+        })?;
+        i = j;
+    }
+    Ok(out)
 }
 
 /// [`BlockSource`] over one stripe's datanodes: whole blocks fetched on
@@ -524,6 +745,34 @@ impl BlockSource for StripeFetcher<'_> {
                 self.cache[b]
                     .as_deref()
                     .ok_or_else(|| anyhow::anyhow!("block {b} missing from fetch cache"))
+            })
+            .collect()
+    }
+
+    // Native override: slice the cached whole blocks directly (fetch
+    // cost is whole-block either way — the netsim charge is unchanged),
+    // avoiding the default impl's intermediate Vec per column.
+    fn blocks_range(
+        &mut self,
+        idx: &[usize],
+        range: std::ops::Range<usize>,
+    ) -> anyhow::Result<Vec<&[u8]>> {
+        for &b in idx {
+            self.ensure(b)?;
+        }
+        idx.iter()
+            .map(|&b| {
+                let s = self.cache[b]
+                    .as_deref()
+                    .ok_or_else(|| anyhow::anyhow!("block {b} missing from fetch cache"))?;
+                s.get(range.clone()).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "block {b} too short ({} bytes) for column {}..{}",
+                        s.len(),
+                        range.start,
+                        range.end
+                    )
+                })
             })
             .collect()
     }
@@ -640,6 +889,74 @@ mod tests {
         let rep_az = &az.repair_all().unwrap()[0];
         assert_eq!(rep_az.blocks_read, 3);
         assert!(rep_cp.sim_time_s < rep_az.sim_time_s);
+    }
+
+    #[test]
+    fn parallel_node_repair_restores_data_all_thread_counts() {
+        for threads in [1usize, 2, 4, 8] {
+            let mut c = Cluster::new(tiny_cfg(SchemeKind::CpAzure));
+            let sids = c.fill_random_stripes(3, 9);
+            // one dead node degrades several stripes at once
+            let victim = c.meta.stripes[&sids[0]].block_nodes[0];
+            c.fail_node(victim);
+            let reports = c.repair_all_parallel(threads).unwrap();
+            assert!(!reports.is_empty(), "threads={threads}");
+            for r in &reports {
+                assert!(r.total_s() > 0.0);
+                assert!(r.decode_cpu_s >= 0.0);
+            }
+            c.restore_node(victim);
+            for sid in sids {
+                assert!(c.scrub_stripe(sid).unwrap(), "threads={threads} stripe {sid}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_repair_accounting_matches_serial() {
+        // Same cluster, same failure: the parallel path must report the
+        // identical virtual-clock costs (reads, bytes, sim time) as the
+        // serial executor — only decode_cpu_s (wall clock) may differ.
+        let mk = || {
+            let mut c = Cluster::new(tiny_cfg(SchemeKind::CpUniform));
+            c.fill_random_stripes(3, 11);
+            c
+        };
+        let mut a = mk();
+        let mut b = mk();
+        let victim = a.meta.stripes[&0].block_nodes[2];
+        a.fail_node(victim);
+        b.fail_node(victim);
+        let mut ra = a.repair_all().unwrap();
+        let mut rb = b.repair_all_parallel(4).unwrap();
+        ra.sort_by_key(|r| r.stripe);
+        rb.sort_by_key(|r| r.stripe);
+        assert_eq!(ra.len(), rb.len());
+        for (x, y) in ra.iter().zip(rb.iter()) {
+            assert_eq!(x.stripe, y.stripe);
+            assert_eq!(x.blocks_repaired, y.blocks_repaired);
+            assert_eq!(x.blocks_read, y.blocks_read);
+            assert_eq!(x.bytes_read, y.bytes_read);
+            assert!((x.sim_time_s - y.sim_time_s).abs() < 1e-9, "stripe {}", x.stripe);
+            assert_eq!(x.local, y.local);
+        }
+    }
+
+    #[test]
+    fn batch_repair_of_two_node_failure() {
+        let mut c = Cluster::new(tiny_cfg(SchemeKind::CpAzure));
+        let sids = c.fill_random_stripes(2, 21);
+        let n0 = c.meta.stripes[&sids[0]].block_nodes[0];
+        let n1 = c.meta.stripes[&sids[0]].block_nodes[8];
+        c.fail_node(n0);
+        c.fail_node(n1);
+        let reports = c.repair_all_parallel(2).unwrap();
+        assert!(!reports.is_empty());
+        c.restore_node(n0);
+        c.restore_node(n1);
+        for sid in sids {
+            assert!(c.scrub_stripe(sid).unwrap());
+        }
     }
 
     #[test]

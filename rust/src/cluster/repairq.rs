@@ -96,6 +96,38 @@ impl RepairQueue {
         }
         Ok(out)
     }
+
+    /// Drain the whole queue through the cluster's batched executor:
+    /// pops every pending job (riskiest first — that order is preserved
+    /// in the returned reports) and hands them to
+    /// [`Cluster::repair_stripes_batch`], which fetches serially,
+    /// decodes on `threads` workers, and writes back. This is the
+    /// whole-node recovery path: a dead node enqueues one same-pattern
+    /// job per stripe and the decode fan-out amortises one compiled
+    /// program across all of them.
+    ///
+    /// On error every popped job is pushed back, so the queue still
+    /// tracks the outstanding work (stripes a completed wave already
+    /// repaired come back clean on the next [`Self::scan`] and simply
+    /// don't requeue); only the failed attempt's reports are lost.
+    pub fn drain_parallel(
+        &mut self,
+        cluster: &mut Cluster,
+        threads: usize,
+    ) -> anyhow::Result<Vec<RepairReport>> {
+        let mut popped: Vec<Job> = Vec::with_capacity(self.heap.len());
+        while let Some(job) = self.heap.pop() {
+            popped.push(job);
+        }
+        let jobs: Vec<_> = popped.iter().map(|j| (j.stripe, j.blocks.clone())).collect();
+        match cluster.repair_stripes_batch(&jobs, threads) {
+            Ok(reports) => Ok(reports),
+            Err(e) => {
+                self.heap.extend(popped);
+                Err(e)
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -143,6 +175,54 @@ mod tests {
         for sid in 0..3u64 {
             assert!(c.scrub_stripe(sid).unwrap());
         }
+    }
+
+    #[test]
+    fn drain_parallel_matches_serial_drain() {
+        let build = || {
+            let mut c = cluster(3);
+            let victims = [
+                c.meta.stripes[&1].block_nodes[0],
+                c.meta.stripes[&1].block_nodes[3],
+                c.meta.stripes[&0].block_nodes[1],
+            ];
+            for v in victims {
+                c.fail_node(v);
+            }
+            (c, victims)
+        };
+
+        let (mut serial, sv) = build();
+        let mut q = RepairQueue::new();
+        q.scan(&serial);
+        let rs = q.drain(&mut serial).unwrap();
+
+        let (mut parallel, pv) = build();
+        let mut q = RepairQueue::new();
+        q.scan(&parallel);
+        let rp = q.drain_parallel(&mut parallel, 4).unwrap();
+
+        // same jobs, same priority order, same virtual-clock accounting
+        assert_eq!(rs.len(), rp.len());
+        for (a, b) in rs.iter().zip(rp.iter()) {
+            assert_eq!(a.stripe, b.stripe, "priority order must be preserved");
+            assert_eq!(a.blocks_repaired, b.blocks_repaired);
+            assert_eq!(a.bytes_read, b.bytes_read);
+        }
+        // both clusters end up clean
+        for v in sv {
+            serial.restore_node(v);
+        }
+        for v in pv {
+            parallel.restore_node(v);
+        }
+        for sid in 0..3u64 {
+            assert!(serial.scrub_stripe(sid).unwrap());
+            assert!(parallel.scrub_stripe(sid).unwrap());
+        }
+        // queues stay drained
+        q.scan(&parallel);
+        assert!(q.is_empty());
     }
 
     #[test]

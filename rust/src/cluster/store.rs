@@ -172,16 +172,24 @@ impl<'a> StoreSource<'a> {
     }
 }
 
+impl StoreSource<'_> {
+    /// Read-through: cache block `b` from the store if absent.
+    fn ensure(&mut self, b: usize) -> anyhow::Result<()> {
+        if !self.cache.contains_key(&b) {
+            let data = self
+                .store
+                .get(BlockKey { stripe: self.stripe, index: b as u32 })?
+                .ok_or_else(|| anyhow::anyhow!("block {b} absent from store"))?;
+            self.cache.insert(b, data);
+        }
+        Ok(())
+    }
+}
+
 impl crate::repair::BlockSource for StoreSource<'_> {
     fn blocks(&mut self, idx: &[usize]) -> anyhow::Result<Vec<&[u8]>> {
         for &b in idx {
-            if !self.cache.contains_key(&b) {
-                let data = self
-                    .store
-                    .get(BlockKey { stripe: self.stripe, index: b as u32 })?
-                    .ok_or_else(|| anyhow::anyhow!("block {b} absent from store"))?;
-                self.cache.insert(b, data);
-            }
+            self.ensure(b)?;
         }
         idx.iter()
             .map(|b| {
@@ -189,6 +197,35 @@ impl crate::repair::BlockSource for StoreSource<'_> {
                     .get(b)
                     .map(Vec::as_slice)
                     .ok_or_else(|| anyhow::anyhow!("block {b} missing from store cache"))
+            })
+            .collect()
+    }
+
+    // Native override: slice the cached blocks in place instead of the
+    // default impl's full-blocks Vec per column.
+    fn blocks_range(
+        &mut self,
+        idx: &[usize],
+        range: std::ops::Range<usize>,
+    ) -> anyhow::Result<Vec<&[u8]>> {
+        for &b in idx {
+            self.ensure(b)?;
+        }
+        idx.iter()
+            .map(|&b| {
+                let s = self
+                    .cache
+                    .get(&b)
+                    .map(Vec::as_slice)
+                    .ok_or_else(|| anyhow::anyhow!("block {b} missing from store cache"))?;
+                s.get(range.clone()).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "block {b} too short ({} bytes) for column {}..{}",
+                        s.len(),
+                        range.start,
+                        range.end
+                    )
+                })
             })
             .collect()
     }

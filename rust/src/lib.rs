@@ -29,12 +29,19 @@
 //!                                          fused coefficient vectors
 //!        └► program.execute(src, buf)   — replay per stripe: zero-copy
 //!                                          inputs from a BlockSource,
-//!                                          outputs into reused scratch
+//!                                          outputs into reused scratch,
+//!                                          cache-blocked columns, fused
+//!                                          multi-source GF kernels
+//!        └► program.execute_batch(...)  — amortise fetch resolution and
+//!                                          scratch setup across stripes
+//!                                          sharing one program
 //! ```
 //!
 //! Programs depend only on `(scheme, erasure pattern)`, so
 //! [`repair::PlanCache`] compiles each pattern once and replays it
-//! across thousands of stripes.
+//! across thousands of stripes; whole-node repair fans batches out over
+//! a scoped worker pool ([`cluster::Cluster::repair_all_parallel`]).
+//! Kernel-level details and measurements: `EXPERIMENTS.md` §Perf.
 //!
 //! Start with [`codes::Scheme`] (pick a construction and parameters),
 //! [`codec::StripeCodec`] (encode/decode bytes), [`repair`] (the repair

@@ -18,7 +18,13 @@
 //!    ops against any [`BlockSource`] (in-memory stripes, datanode
 //!    stores, netsim-costed cluster fetches) into reusable
 //!    [`ScratchBuffers`] — no planning, no matrix inversions, no
-//!    per-step allocations on the hot path.
+//!    per-step allocations on the hot path. Execution is cache-blocked
+//!    (the op list runs column-by-column, [`DEFAULT_CHUNK_BYTES`] at a
+//!    time) and each op is a single fused multi-source GF combine
+//!    ([`crate::gf::combine_into_fused`]). Multi-stripe repairs go
+//!    through [`RepairProgram::execute_batch`], which the cluster fans
+//!    out over a worker pool for whole-node repair
+//!    ([`crate::cluster::Cluster::repair_all_parallel`]).
 //!
 //! [`PlanCache`] memoizes stage 2 so whole-cluster repairs and the
 //! Figure 6/9 sweeps compile each erasure pattern exactly once.
@@ -27,7 +33,9 @@ pub mod cache;
 pub mod program;
 
 pub use cache::{CacheStats, PlanCache};
-pub use program::{BlockSource, RepairProgram, ScratchBuffers, SliceSource};
+pub use program::{
+    BlockSource, RepairProgram, ScratchBuffers, SliceSource, DEFAULT_CHUNK_BYTES,
+};
 
 use crate::codec::StripeCodec;
 use crate::codes::{Equation, Scheme};

@@ -9,15 +9,27 @@
 //!   `out = Σ (cf⁻¹·c_b)·B_b` combine (no separate inverse-scale pass);
 //! * the global-decode fallback picks its k survivor rows and computes
 //!   the `row · inv` weight vectors **once at compile time** — the work
-//!   [`crate::codec::StripeCodec::decode`] used to redo per call.
+//!   [`crate::codec::StripeCodec::decode`] used to redo per call;
+//! * survivor and earlier-op operands share **one** coefficient vector
+//!   per op, so execution is a single [`crate::gf::combine_into_fused`]
+//!   call per op (up to [`crate::gf::FUSE_MAX`] sources per pass over
+//!   the output).
 //!
-//! Execution is allocation-free on the hot path: outputs land in a
+//! Execution is allocation-light on the hot path: outputs land in a
 //! reusable [`ScratchBuffers`] pool and inputs are borrowed from a
 //! [`BlockSource`] (in-memory stripes, datanode stores, or the cluster's
-//! netsim-costed fetcher). A program depends only on
-//! `(scheme, erasure pattern)`, never on stripe contents or block size,
-//! so one compilation replays across thousands of stripes — see
-//! [`super::PlanCache`].
+//! netsim-costed fetcher). Ops are replayed **cache-blocked**: the op
+//! list runs chunk-by-chunk over a column of [`DEFAULT_CHUNK_BYTES`]
+//! bytes (tunable via [`RepairProgram::execute_chunked`]), so every
+//! op's operands for a chunk stay L2-resident instead of streaming full
+//! multi-MiB blocks through the cache once per op. Multi-stripe callers
+//! should use [`RepairProgram::execute_batch`], which amortises
+//! fetch-set resolution and scratch setup across stripes sharing one
+//! compiled program. Measured effects live in `EXPERIMENTS.md` §Perf.
+//!
+//! A program depends only on `(scheme, erasure pattern)`, never on
+//! stripe contents or block size, so one compilation replays across
+//! thousands of stripes — see [`super::PlanCache`].
 
 use crate::codec;
 use crate::codes::{Equation, Scheme};
@@ -25,6 +37,13 @@ use crate::gf;
 use crate::repair::RepairPlan;
 use anyhow::Context;
 use std::collections::{BTreeMap, BTreeSet};
+use std::ops::Range;
+
+/// Default column width for cache-blocked execution. 64 KiB per operand
+/// keeps a typical op (2–13 survivor chunks + the output chunk) inside a
+/// 256 KiB–1 MiB L2 while staying wide enough that per-chunk dispatch
+/// overhead is noise.
+pub const DEFAULT_CHUNK_BYTES: usize = 64 * 1024;
 
 /// Supplies survivor-block bytes to [`RepairProgram::execute`].
 ///
@@ -36,6 +55,32 @@ pub trait BlockSource {
     /// Implementations must return an error (never panic) for blocks
     /// they cannot supply.
     fn blocks(&mut self, idx: &[usize]) -> anyhow::Result<Vec<&[u8]>>;
+
+    /// Borrow `range` of each of the given survivor blocks, in order —
+    /// the cache-blocked executor's access path. The default
+    /// implementation slices whole blocks from [`Self::blocks`], so
+    /// existing sources keep working unchanged; sources that can serve
+    /// partial reads natively (mmap, `pread`-style stores) may override.
+    fn blocks_range(
+        &mut self,
+        idx: &[usize],
+        range: Range<usize>,
+    ) -> anyhow::Result<Vec<&[u8]>> {
+        let full = self.blocks(idx)?;
+        full.into_iter()
+            .zip(idx.iter())
+            .map(|(s, &b)| {
+                s.get(range.clone()).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "block {b} too short ({} bytes) for column {}..{}",
+                        s.len(),
+                        range.start,
+                        range.end
+                    )
+                })
+            })
+            .collect()
+    }
 }
 
 /// [`BlockSource`] over an in-memory `Option`-indexed stripe — the view
@@ -61,14 +106,52 @@ impl BlockSource for SliceSource<'_> {
             })
             .collect()
     }
+
+    // Native override: slice in place, skipping the default impl's
+    // intermediate full-blocks Vec on the per-column hot path.
+    fn blocks_range(
+        &mut self,
+        idx: &[usize],
+        range: Range<usize>,
+    ) -> anyhow::Result<Vec<&[u8]>> {
+        idx.iter()
+            .map(|&b| {
+                let s = self
+                    .blocks
+                    .get(b)
+                    .and_then(|o| o.as_deref())
+                    .ok_or_else(|| anyhow::anyhow!("source is missing block {b}"))?;
+                s.get(range.clone()).ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "block {b} too short ({} bytes) for column {}..{}",
+                        s.len(),
+                        range.start,
+                        range.end
+                    )
+                })
+            })
+            .collect()
+    }
 }
 
 /// Reusable output buffers for [`RepairProgram::execute`]. Keep one per
-/// executor loop and pass it to every call: buffers are resized, never
-/// reallocated, killing the per-step `Vec` churn of the old ad-hoc
-/// executors.
+/// executor loop (or one per worker thread) and pass it to every call:
+/// buffers are resized, never reallocated in steady state, killing the
+/// per-step `Vec` churn of the old ad-hoc executors.
+///
+/// **Stale-contents contract:** buffers are kept at their *high-water
+/// mark* and never re-zeroed — [`ScratchBuffers::prepare`] zero-fills
+/// a buffer only the first time it grows past its all-time maximum
+/// (the unavoidable first-touch cost), so shrink/grow oscillations in
+/// block size pay nothing. A prepared buffer therefore holds the
+/// previous execution's bytes; this is sound because every op fully
+/// overwrites its `len`-byte window before anything reads it:
+/// [`gf::combine_into_fused`]'s first pass over a destination *stores*
+/// (it never loads `dst`), and ops only read windows of earlier ops.
 #[derive(Default)]
 pub struct ScratchBuffers {
+    /// Each buffer's length is its high-water mark; executions use the
+    /// leading `len` bytes only.
     bufs: Vec<Vec<u8>>,
 }
 
@@ -77,36 +160,42 @@ impl ScratchBuffers {
         Self::default()
     }
 
-    /// Ensure `n` buffers of `len` bytes each. Contents are left stale;
-    /// every op clears its own output before accumulating.
+    /// Ensure `n` buffers of at least `len` bytes each (see the
+    /// stale-contents contract on the type: no zeroing except on
+    /// first-time growth, no truncation on shrink).
     fn prepare(&mut self, n: usize, len: usize) {
         if self.bufs.len() < n {
             self.bufs.resize_with(n, Vec::new);
         }
         for buf in &mut self.bufs[..n] {
-            buf.resize(len, 0);
+            if buf.len() < len {
+                buf.resize(len, 0);
+            }
         }
     }
 }
 
 /// One flattened GF op: reconstruct `block` as a linear combination of
 /// survivor blocks (from the [`BlockSource`]) and earlier op outputs
-/// (from scratch). Coefficients are final — no post-scaling.
+/// (from scratch). Coefficients are final — no post-scaling — and cover
+/// both operand kinds in one vector so execution is a single fused
+/// combine per op.
 #[derive(Clone, Debug)]
 struct GfOp {
     /// Block index this op reconstructs.
     block: usize,
     /// Survivor operands, fetched from the source.
     fetch_idx: Vec<usize>,
-    /// Coefficient per `fetch_idx` entry.
-    fetch_coeff: Vec<u8>,
-    /// `(earlier op index, coefficient)` operands read from scratch.
-    solved: Vec<(usize, u8)>,
+    /// Earlier-op operands, read from scratch (op indices).
+    solved_idx: Vec<usize>,
+    /// One coefficient per operand: `fetch_idx` entries first, then
+    /// `solved_idx` entries.
+    coeffs: Vec<u8>,
 }
 
 /// A repair plan lowered to straight-line GF ops with precomputed
 /// coefficients. Compile once per `(scheme, erasure pattern)`, execute
-/// per stripe.
+/// per stripe (or per batch of stripes).
 #[derive(Clone, Debug)]
 pub struct RepairProgram {
     /// The plan this program was compiled from (cost accounting,
@@ -140,7 +229,8 @@ impl RepairProgram {
             let icf = gf::inv(cf);
             let mut fetch_idx = Vec::new();
             let mut fetch_coeff = Vec::new();
-            let mut solved = Vec::new();
+            let mut solved_idx = Vec::new();
+            let mut solved_coeff = Vec::new();
             for &(b, c) in &eq.terms {
                 if b == step.block {
                     continue;
@@ -148,7 +238,8 @@ impl RepairProgram {
                 // Fuse the final cf⁻¹ scale into every term coefficient.
                 let w = gf::mul(icf, c);
                 if let Some(&j) = op_of.get(&b) {
-                    solved.push((j, w));
+                    solved_idx.push(j);
+                    solved_coeff.push(w);
                 } else {
                     fetch.insert(b);
                     fetch_idx.push(b);
@@ -156,7 +247,9 @@ impl RepairProgram {
                 }
             }
             op_of.insert(step.block, ops.len());
-            ops.push(GfOp { block: step.block, fetch_idx, fetch_coeff, solved });
+            let mut coeffs = fetch_coeff;
+            coeffs.extend_from_slice(&solved_coeff);
+            ops.push(GfOp { block: step.block, fetch_idx, solved_idx, coeffs });
         }
 
         if !plan.global_blocks.is_empty() {
@@ -171,15 +264,15 @@ impl RepairProgram {
             for (i, &e) in plan.global_blocks.iter().enumerate() {
                 let row = weights.row(i);
                 let mut fetch_idx = Vec::new();
-                let mut fetch_coeff = Vec::new();
+                let mut coeffs = Vec::new();
                 for (j, &b) in chosen.iter().enumerate() {
                     if row[j] != 0 {
                         fetch_idx.push(b);
-                        fetch_coeff.push(row[j]);
+                        coeffs.push(row[j]);
                     }
                 }
                 op_of.insert(e, ops.len());
-                ops.push(GfOp { block: e, fetch_idx, fetch_coeff, solved: Vec::new() });
+                ops.push(GfOp { block: e, fetch_idx, solved_idx: Vec::new(), coeffs });
             }
         }
 
@@ -225,7 +318,8 @@ impl RepairProgram {
     /// Run the program: pull survivor bytes from `source`, write every
     /// reconstructed block into `scratch`, and return the reconstructed
     /// erased blocks (borrowed from `scratch`, zero-copy) in
-    /// [`Self::erased`] order.
+    /// [`Self::erased`] order. Uses the default cache-blocked column
+    /// width of [`DEFAULT_CHUNK_BYTES`].
     ///
     /// All survivor blocks must have one common length; a ragged source
     /// is a real error, not UB or silent corruption.
@@ -234,28 +328,94 @@ impl RepairProgram {
         source: &mut S,
         scratch: &'s mut ScratchBuffers,
     ) -> anyhow::Result<Vec<&'s [u8]>> {
-        let first = *self.fetch.iter().next().context("program fetches nothing")?;
-        let len = source.blocks(&[first])?[0].len();
-        scratch.prepare(self.ops.len(), len);
-        for (i, op) in self.ops.iter().enumerate() {
-            let srcs = source.blocks(&op.fetch_idx)?;
-            for (&b, s) in op.fetch_idx.iter().zip(srcs.iter()) {
+        self.execute_chunked(source, scratch, DEFAULT_CHUNK_BYTES)
+    }
+
+    /// [`Self::execute`] with an explicit column width: the op list is
+    /// replayed once per `chunk_bytes`-wide column so the working set
+    /// stays cache-resident. `chunk_bytes >= block length` degenerates
+    /// to the unblocked whole-block schedule.
+    pub fn execute_chunked<'s, S: BlockSource>(
+        &self,
+        source: &mut S,
+        scratch: &'s mut ScratchBuffers,
+        chunk_bytes: usize,
+    ) -> anyhow::Result<Vec<&'s [u8]>> {
+        let fetch_idx: Vec<usize> = self.fetch.iter().copied().collect();
+        let len = self.run_into_scratch(source, scratch, chunk_bytes, &fetch_idx)?;
+        Ok(self.outputs.iter().map(|&i| &scratch.bufs[i][..len]).collect())
+    }
+
+    /// Execute the same compiled program over many stripes, reusing one
+    /// scratch pool and resolving the fetch set once for the whole
+    /// batch. `sink` is called with `(stripe index, outputs in erased
+    /// order)` after each stripe; the output slices borrow `scratch`
+    /// and are only valid during the callback (the next stripe reuses
+    /// the same buffers — copy out what must outlive it).
+    ///
+    /// This is the building block the cluster's whole-node repair fans
+    /// out over worker threads: one `ScratchBuffers` per worker, one
+    /// `execute_batch` per run of same-pattern stripes.
+    pub fn execute_batch<S: BlockSource>(
+        &self,
+        sources: &mut [S],
+        scratch: &mut ScratchBuffers,
+        mut sink: impl FnMut(usize, &[&[u8]]) -> anyhow::Result<()>,
+    ) -> anyhow::Result<()> {
+        let fetch_idx: Vec<usize> = self.fetch.iter().copied().collect();
+        for (si, source) in sources.iter_mut().enumerate() {
+            let len = self
+                .run_into_scratch(source, scratch, DEFAULT_CHUNK_BYTES, &fetch_idx)
+                .with_context(|| format!("stripe {si} of batch"))?;
+            let outs: Vec<&[u8]> =
+                self.outputs.iter().map(|&i| &scratch.bufs[i][..len]).collect();
+            sink(si, &outs)?;
+        }
+        Ok(())
+    }
+
+    /// Shared executor core: validate the fetch set, size scratch, then
+    /// replay the op list column-by-column. Returns the block length.
+    fn run_into_scratch<S: BlockSource>(
+        &self,
+        source: &mut S,
+        scratch: &mut ScratchBuffers,
+        chunk_bytes: usize,
+        fetch_idx: &[usize],
+    ) -> anyhow::Result<usize> {
+        let chunk = chunk_bytes.max(1);
+        // One raggedness check over the whole fetch set up front; the
+        // per-column loop can then slice blindly.
+        let len = {
+            let blocks = source.blocks(fetch_idx)?;
+            let len = blocks.first().context("program fetches nothing")?.len();
+            for (&b, s) in fetch_idx.iter().zip(blocks.iter()) {
                 anyhow::ensure!(
                     s.len() == len,
-                    "ragged survivor block {b} ({} bytes, expected {len}) \
-                     while reconstructing block {}",
-                    s.len(),
-                    op.block
+                    "ragged survivor block {b} ({} bytes, expected {len})",
+                    s.len()
                 );
             }
-            let (done, rest) = scratch.bufs.split_at_mut(i);
-            let dst = &mut rest[0][..];
-            gf::combine_into(&op.fetch_coeff, &srcs, dst);
-            for &(j, c) in &op.solved {
-                gf::mul_acc_slice(c, &done[j], dst);
+            len
+        };
+        scratch.prepare(self.ops.len(), len);
+        let mut lo = 0usize;
+        while lo < len {
+            let hi = (lo + chunk).min(len);
+            for (i, op) in self.ops.iter().enumerate() {
+                let mut srcs = source
+                    .blocks_range(&op.fetch_idx, lo..hi)
+                    .with_context(|| format!("reconstructing block {}", op.block))?;
+                let (done, rest) = scratch.bufs.split_at_mut(i);
+                let dst = &mut rest[0][lo..hi];
+                for &j in &op.solved_idx {
+                    srcs.push(&done[j][lo..hi]);
+                }
+                gf::combine_into_fused(&op.coeffs, &srcs, dst);
             }
+            lo = hi;
         }
-        Ok(self.outputs.iter().map(|&i| scratch.bufs[i].as_slice()).collect())
+        Ok(len)
     }
 }
 
@@ -293,6 +453,30 @@ mod tests {
         let out = program.execute(&mut SliceSource::new(&blocks), &mut scratch).unwrap();
         assert_eq!(out[0], &stripe[0][..]);
         assert_eq!(out[1], &stripe[26][..]);
+    }
+
+    #[test]
+    fn chunked_execution_matches_whole_block_for_every_width() {
+        // Cache-blocked columns must be invisible in the output, for
+        // widths smaller than / equal to / larger than the block, and
+        // for widths that do and don't divide the block length.
+        let codec = StripeCodec::new(Scheme::new(SchemeKind::CpAzure, 12, 2, 2));
+        let s = &codec.scheme;
+        let mut rng = Prng::new(0xC01);
+        let data: Vec<Vec<u8>> = (0..s.k).map(|_| rng.bytes(1000)).collect();
+        let stripe = codec.encode_stripe(&data);
+        let erased = vec![0usize, s.local_parity(0)];
+        let program = RepairProgram::for_pattern(s, &erased).unwrap();
+        let blocks = erase(&stripe, &erased);
+        let mut scratch = ScratchBuffers::new();
+        for chunk in [1usize, 7, 64, 250, 999, 1000, 1001, 1 << 20] {
+            let out = program
+                .execute_chunked(&mut SliceSource::new(&blocks), &mut scratch, chunk)
+                .unwrap();
+            for (i, &e) in erased.iter().enumerate() {
+                assert_eq!(out[i], &stripe[e][..], "chunk={chunk} block {e}");
+            }
+        }
     }
 
     #[test]
@@ -344,6 +528,79 @@ mod tests {
     }
 
     #[test]
+    fn execute_batch_matches_repeated_execute() {
+        // ISSUE 3 acceptance: one execute_batch over N stripes is
+        // byte-identical to N independent execute calls (fresh scratch
+        // each, so no reuse effects can mask a leak between stripes).
+        let codec = StripeCodec::new(Scheme::new(SchemeKind::CpAzure, 12, 2, 2));
+        let s = &codec.scheme;
+        let mut rng = Prng::new(0xBA7C4);
+        let erased = vec![0usize, s.local_parity(0)];
+        let program = RepairProgram::for_pattern(s, &erased).unwrap();
+
+        let stripes: Vec<Vec<Vec<u8>>> = (0..6)
+            .map(|_| {
+                let data: Vec<Vec<u8>> = (0..s.k).map(|_| rng.bytes(777)).collect();
+                codec.encode_stripe(&data)
+            })
+            .collect();
+        let erased_stripes: Vec<Vec<Option<Vec<u8>>>> =
+            stripes.iter().map(|st| erase(st, &erased)).collect();
+
+        // Reference: repeated single executes, each with fresh scratch.
+        let mut want: Vec<Vec<Vec<u8>>> = Vec::new();
+        for blocks in &erased_stripes {
+            let mut scratch = ScratchBuffers::new();
+            let out = program.execute(&mut SliceSource::new(blocks), &mut scratch).unwrap();
+            want.push(out.into_iter().map(<[u8]>::to_vec).collect());
+        }
+
+        // Batch: one scratch for everything.
+        let mut sources: Vec<SliceSource> =
+            erased_stripes.iter().map(|b| SliceSource::new(b)).collect();
+        let mut scratch = ScratchBuffers::new();
+        let mut got: Vec<Vec<Vec<u8>>> = Vec::new();
+        program
+            .execute_batch(&mut sources, &mut scratch, |si, outs| {
+                assert_eq!(si, got.len(), "sink called out of order");
+                got.push(outs.iter().map(|o| o.to_vec()).collect());
+                Ok(())
+            })
+            .unwrap();
+
+        assert_eq!(got, want);
+        // and against the original bytes
+        for (g, st) in got.iter().zip(stripes.iter()) {
+            for (i, &e) in erased.iter().enumerate() {
+                assert_eq!(g[i], st[e], "batch output != original block {e}");
+            }
+        }
+    }
+
+    #[test]
+    fn execute_batch_sink_error_aborts() {
+        let codec = StripeCodec::new(Scheme::new(SchemeKind::CpAzure, 6, 2, 2));
+        let s = &codec.scheme;
+        let mut rng = Prng::new(0xAB07);
+        let program = RepairProgram::for_pattern(s, &[0]).unwrap();
+        let data: Vec<Vec<u8>> = (0..s.k).map(|_| rng.bytes(64)).collect();
+        let stripe = codec.encode_stripe(&data);
+        let blocks = erase(&stripe, &[0]);
+        let erased_stripes = vec![blocks.clone(), blocks.clone(), blocks];
+        let mut sources: Vec<SliceSource> =
+            erased_stripes.iter().map(|b| SliceSource::new(b)).collect();
+        let mut scratch = ScratchBuffers::new();
+        let mut calls = 0usize;
+        let res = program.execute_batch(&mut sources, &mut scratch, |si, _| {
+            calls += 1;
+            anyhow::ensure!(si < 1, "stop after the first stripe");
+            Ok(())
+        });
+        assert!(res.is_err());
+        assert_eq!(calls, 2, "sink must not run past the erroring stripe");
+    }
+
+    #[test]
     fn property_program_matches_codec_decode() {
         // ISSUE 2 acceptance: RepairProgram::execute is byte-identical to
         // StripeCodec::decode for random recoverable patterns across all
@@ -371,14 +628,16 @@ mod tests {
             let stripe = codec.encode_stripe(&data);
             let blocks = erase(&stripe, &erased);
             let mut scratch = ScratchBuffers::new();
+            // Random column width: blocked execution must be invisible.
+            let chunk = [13usize, 32, 96, 128, DEFAULT_CHUNK_BYTES][rng.below(5)];
             let out = program
-                .execute(&mut SliceSource::new(&blocks), &mut scratch)
+                .execute_chunked(&mut SliceSource::new(&blocks), &mut scratch, chunk)
                 .map_err(|e| e.to_string())?;
             let oracle = codec.decode(&blocks, &erased).map_err(|e| e.to_string())?;
             for (i, &e) in erased.iter().enumerate() {
                 crate::prop_assert!(
                     out[i] == &oracle[i][..],
-                    "{kind:?} k={k} block {e}: program != decode"
+                    "{kind:?} k={k} block {e}: program != decode (chunk {chunk})"
                 );
                 crate::prop_assert!(
                     out[i] == &stripe[e][..],
