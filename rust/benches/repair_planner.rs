@@ -13,9 +13,15 @@
 //!   replayed over a batch of same-pattern stripes via
 //!   [`RepairProgram::execute_batch`] on 1/2/4/8 scoped worker threads,
 //!   one `ScratchBuffers` per worker — the cluster's
-//!   `repair_all_parallel` decode phase in isolation.
+//!   `repair_all_parallel` decode phase in isolation;
+//! * a **wave vs pipelined whole-node sweep** through the full cluster
+//!   (netsim-costed fetch → readiness-queue decode → write-back) at
+//!   1/2/4/8 decode threads, recorded in `BENCH_repair_pipeline.json`
+//!   (ISSUE 4): per-stripe serial wave time vs overlapped
+//!   `completion_s`, plus wall-clock drain times.
 
 use cp_lrc::bench_harness::{Bench, Stats};
+use cp_lrc::cluster::{Cluster, ClusterConfig};
 use cp_lrc::codec::StripeCodec;
 use cp_lrc::codes::{Scheme, SchemeKind};
 use cp_lrc::gf;
@@ -30,7 +36,14 @@ struct Fixture {
     bytes: usize,
 }
 
-fn fixture(kind: SchemeKind, k: usize, r: usize, p: usize, block_len: usize, rng: &mut Prng) -> Fixture {
+fn fixture(
+    kind: SchemeKind,
+    k: usize,
+    r: usize,
+    p: usize,
+    block_len: usize,
+    rng: &mut Prng,
+) -> Fixture {
     let codec = StripeCodec::new(Scheme::new(kind, k, r, p));
     let erased = vec![0usize, codec.scheme.local_parity(0)];
     let data: Vec<Vec<u8>> = (0..k).map(|_| rng.bytes(block_len)).collect();
@@ -57,7 +70,7 @@ fn run_batch(
     stripes: &[Vec<Option<Vec<u8>>>],
     threads: usize,
 ) -> usize {
-    let shard_len = (stripes.len() + threads - 1) / threads;
+    let shard_len = stripes.len().div_ceil(threads);
     std::thread::scope(|scope| {
         let handles: Vec<_> = stripes
             .chunks(shard_len)
@@ -237,6 +250,87 @@ fn main() {
                     json_stats(&st)
                 ));
             }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Section 4 (ISSUE 4 acceptance) — whole-node repair through the
+    // cluster, wave vs pipelined: drain every stripe degraded by a dead
+    // node with 1/2/4/8 decode threads and record, per thread count,
+    // the wall-clock drain plus the two virtual clocks — the serial
+    // wave model (fetch + decode paid in full, `total_s`) and the
+    // overlapped pipeline model (`completion_s`). The virtual clocks
+    // are thread-count-invariant by construction; the wall clock is
+    // where the decode fan-out shows. Results land in
+    // BENCH_repair_pipeline.json.
+    // ------------------------------------------------------------------
+    let mut pipeline_results: Vec<String> = Vec::new();
+    {
+        const STRIPES: usize = 12;
+        const BLK: usize = 64 * 1024;
+        let mut c = Cluster::new(ClusterConfig {
+            num_datanodes: 31,
+            block_size: BLK,
+            kind: SchemeKind::CpAzure,
+            k: 24,
+            r: 2,
+            p: 2,
+            ..Default::default()
+        });
+        c.fill_random_stripes(STRIPES, 0xD15C);
+        for threads in [1usize, 2, 4, 8] {
+            let mut wave_s = 0.0f64;
+            let mut pipe_s = 0.0f64;
+            let mut jobs = 0usize;
+            let stats = b.run(
+                &format!("repair_pipeline/whole_node/(24,2,2)/{STRIPES}x64KiB/t{threads}"),
+                || {
+                    // fail whichever node currently hosts stripe 0's
+                    // block 0 (repair relocates it each round)
+                    let victim = c.meta.stripes[&0].block_nodes[0];
+                    c.fail_node(victim);
+                    let reports = c.repair_all_parallel(threads).expect("whole-node repair");
+                    c.restore_node(victim);
+                    wave_s = reports.iter().map(|r| r.total_s()).sum();
+                    pipe_s = reports.iter().map(|r| r.completion_s).sum();
+                    jobs = reports.len();
+                    jobs
+                },
+            );
+            if let Some(st) = stats {
+                let saving = if wave_s > 0.0 { 100.0 * (1.0 - pipe_s / wave_s) } else { 0.0 };
+                println!(
+                    "  whole-node t{threads}: {jobs} stripes, wave {wave_s:.4}s vs \
+                     pipelined {pipe_s:.4}s virtual ({saving:.1}% saved), \
+                     {:.2} ms wall-clock/drain",
+                    st.median_ns / 1e6
+                );
+                pipeline_results.push(format!(
+                    "      {{\n        \"threads\": {threads}, \"stripes\": {STRIPES}, \
+                     \"block_bytes\": {BLK}, \"jobs\": {jobs}, \"pattern\": \"whole-node\",\n        \
+                     \"drain_wallclock\": {},\n        \
+                     \"wave_sim_s\": {wave_s:.6}, \"pipelined_sim_s\": {pipe_s:.6},\n        \
+                     \"overlap_saving_pct\": {saving:.2}\n      }}",
+                    json_stats(&st)
+                ));
+            }
+        }
+    }
+    if !pipeline_results.is_empty() {
+        let doc = format!(
+            "{{\n  \"bench\": \"repair_pipeline\",\n  \
+             \"description\": \"whole-node repair, serial wave model vs readiness-pipelined \
+             overlap model: per decode-thread count, the summed per-stripe virtual repair \
+             times (wave = fetch+decode serial, pipelined = max(last arrival, streamed \
+             decode completion)) plus the wall-clock drain\",\n  \
+             \"unit\": \"ns (wall-clock stats) / s (virtual clocks)\",\n  \
+             \"regenerate\": \"cargo bench --bench repair_planner\",\n  \
+             \"sections\": {{\n    \"whole_node_wave_vs_pipelined\": [\n{}\n    ]\n  }}\n}}\n",
+            pipeline_results.join(",\n")
+        );
+        match std::fs::write("BENCH_repair_pipeline.json", &doc) {
+            Ok(()) => println!("wrote BENCH_repair_pipeline.json"),
+            Err(e) => eprintln!("could not write BENCH_repair_pipeline.json: {e}"),
         }
     }
 

@@ -9,9 +9,9 @@
 //! sound.
 
 use super::metadata::{BlockKey, FileId};
-use super::{Cluster, PROXY};
+use super::{net_id, Cluster, PROXY};
 use crate::netsim::Flow;
-use crate::repair::SliceSource;
+use crate::repair::IterStream;
 use std::collections::BTreeMap;
 
 /// Degraded-read strategy knob (Fig 10 compares the first and the last).
@@ -54,8 +54,11 @@ impl Cluster {
         let failed = self.meta.failed_blocks(stripe);
 
         let mut out = vec![0u8; obj.size];
-        // (src_node, bytes) per transfer, for the netsim.
-        let mut transfers: Vec<(usize, u64)> = Vec::new();
+        // One netsim flow per transfer (survivor→proxy).
+        let mut transfers: Vec<Flow> = Vec::new();
+        let charge = |transfers: &mut Vec<Flow>, nid: usize, bytes: u64| {
+            transfers.push(Flow { src: net_id(nid), dst: PROXY, bytes, start: 0.0 });
+        };
         let mut bytes_read = 0u64;
         // Cache of fetched (block, range) segments for dedup; keyed by
         // block, holds (off, data) of the single coalesced range we read.
@@ -75,7 +78,7 @@ impl Cluster {
                     let whole = self.nodes[nid]
                         .get(key)
                         .ok_or_else(|| anyhow::anyhow!("block {b} unavailable"))?;
-                    transfers.push((nid, whole.len() as u64));
+                    charge(&mut transfers, nid, whole.len() as u64);
                     bytes_read += whole.len() as u64;
                     let seg = whole[e.block_off..e.block_off + e.len].to_vec();
                     seg_cache.insert(b, (0, whole));
@@ -85,7 +88,7 @@ impl Cluster {
                     let seg = self.nodes[nid]
                         .get_segment(key, e.block_off, e.len)
                         .ok_or_else(|| anyhow::anyhow!("segment of block {b} unavailable"))?;
-                    transfers.push((nid, e.len as u64));
+                    charge(&mut transfers, nid, e.len as u64);
                     bytes_read += e.len as u64;
                     seg_cache.insert(b, (e.block_off, seg.clone()));
                     seg
@@ -116,84 +119,96 @@ impl Cluster {
             for e in &failed_extents {
                 let b = e.block_index as usize;
                 let (lo, len) = (e.block_off, e.len);
-                // Fetch the [lo, lo+len) range of every plan source.
-                let mut ranges: BTreeMap<usize, Vec<u8>> = BTreeMap::new();
-                for &src in fetch.iter() {
-                    let nid = stripe.block_nodes[src];
-                    let key = BlockKey { stripe: obj.stripe_id, index: src as u32 };
-                    let seg = match mode {
-                        ReadMode::BlockLevel => {
-                            let whole = if let Some((0, w)) = seg_cache.get(&src) {
-                                w.clone() // already fetched whole block
-                            } else {
-                                let w = self.nodes[nid]
-                                    .get(key)
-                                    .ok_or_else(|| anyhow::anyhow!("block {src} gone"))?;
-                                transfers.push((nid, w.len() as u64));
-                                bytes_read += w.len() as u64;
-                                seg_cache.insert(src, (0, w.clone()));
-                                w
-                            };
-                            whole[lo..lo + len].to_vec()
-                        }
-                        ReadMode::FileLevel => {
-                            let seg = self.nodes[nid]
-                                .get_segment(key, lo, len)
-                                .ok_or_else(|| anyhow::anyhow!("segment gone"))?;
-                            transfers.push((nid, len as u64));
-                            bytes_read += len as u64;
-                            seg
-                        }
-                        ReadMode::FileLevelDedup => {
-                            // Repeated-read elimination: reuse overlap with
-                            // segments already fetched for this file.
-                            if let Some((coff, cdata)) = seg_cache.get(&src) {
-                                if *coff <= lo && lo + len <= coff + cdata.len() {
-                                    cdata[lo - coff..lo - coff + len].to_vec()
-                                } else {
-                                    // partial overlap: fetch only the missing bytes
-                                    let (mlo, mhi) = missing_range(*coff, cdata.len(), lo, len);
-                                    let fetched = self.nodes[nid]
-                                        .get_segment(key, mlo, mhi - mlo)
-                                        .ok_or_else(|| anyhow::anyhow!("segment gone"))?;
-                                    transfers.push((nid, (mhi - mlo) as u64));
-                                    bytes_read += (mhi - mlo) as u64;
-                                    splice_range(*coff, cdata, mlo, &fetched, lo, len)
-                                }
-                            } else {
-                                let seg = self.nodes[nid]
-                                    .get_segment(key, lo, len)
-                                    .ok_or_else(|| anyhow::anyhow!("segment gone"))?;
-                                transfers.push((nid, len as u64));
-                                bytes_read += len as u64;
-                                seg_cache.insert(src, (lo, seg.clone()));
-                                seg
-                            }
-                        }
-                    };
-                    ranges.insert(src, seg);
-                }
-                // Reconstruct the segment: replay the compiled program
-                // over range-sized pseudo-blocks (GF math is bytewise, so
-                // a block-level program is also a segment-level program).
-                let mut blocks: Vec<Option<Vec<u8>>> = vec![None; scheme.n()];
-                for (src, seg) in ranges {
-                    blocks[src] = Some(seg);
-                }
-                let mut scratch = self.scratch.lock().unwrap();
-                let rec = program.execute(&mut SliceSource::new(&blocks), &mut scratch)?;
                 let pos = program
                     .output_index(b)
                     .ok_or_else(|| anyhow::anyhow!("block {b} not in repair program"))?;
-                out[e.file_off..e.file_off + e.len].copy_from_slice(rec[pos]);
+                // All modes reconstruct through the shared readiness-
+                // driven executor over range-sized pseudo-blocks (GF
+                // math is bytewise, so a block-level program is also a
+                // segment-level program) — the same code path as stripe
+                // repair, single- through whole-node.
+                let seg: Vec<u8> = if mode == ReadMode::FileLevel {
+                    // Windowed netsim-costed fetcher: only [lo, lo+len)
+                    // of every plan source moves, and the flows charge
+                    // exactly those bytes. The fetcher caches in place,
+                    // so the cache-blocked executor reads it zero-copy.
+                    let mut source = self.stripe_fetcher_range(stripe, lo..lo + len);
+                    let rec = {
+                        let mut scratch = self.scratch.lock().unwrap();
+                        let outs = program.execute(&mut source, &mut scratch)?;
+                        outs[pos].to_vec()
+                    };
+                    bytes_read += source.bytes_read;
+                    transfers.extend(source.flows.iter().copied());
+                    rec
+                } else {
+                    // BlockLevel / FileLevelDedup keep their mode-
+                    // specific fetch bookkeeping (whole blocks, or
+                    // repeated-read elimination against segments this
+                    // file already moved), then stream the fetched
+                    // ranges into the same executor.
+                    let mut ranges: BTreeMap<usize, Vec<u8>> = BTreeMap::new();
+                    for &src in fetch.iter() {
+                        let nid = stripe.block_nodes[src];
+                        let key = BlockKey { stripe: obj.stripe_id, index: src as u32 };
+                        let seg = match mode {
+                            ReadMode::FileLevel => unreachable!("handled above"),
+                            ReadMode::BlockLevel => {
+                                let whole = if let Some((0, w)) = seg_cache.get(&src) {
+                                    w.clone() // already fetched whole block
+                                } else {
+                                    let w = self.nodes[nid]
+                                        .get(key)
+                                        .ok_or_else(|| anyhow::anyhow!("block {src} gone"))?;
+                                    charge(&mut transfers, nid, w.len() as u64);
+                                    bytes_read += w.len() as u64;
+                                    seg_cache.insert(src, (0, w.clone()));
+                                    w
+                                };
+                                whole[lo..lo + len].to_vec()
+                            }
+                            ReadMode::FileLevelDedup => {
+                                // Repeated-read elimination: reuse overlap
+                                // with segments already fetched for this
+                                // file.
+                                if let Some((coff, cdata)) = seg_cache.get(&src) {
+                                    if *coff <= lo && lo + len <= coff + cdata.len() {
+                                        cdata[lo - coff..lo - coff + len].to_vec()
+                                    } else {
+                                        // partial overlap: fetch only the
+                                        // missing bytes
+                                        let (mlo, mhi) =
+                                            missing_range(*coff, cdata.len(), lo, len);
+                                        let fetched = self.nodes[nid]
+                                            .get_segment(key, mlo, mhi - mlo)
+                                            .ok_or_else(|| anyhow::anyhow!("segment gone"))?;
+                                        charge(&mut transfers, nid, (mhi - mlo) as u64);
+                                        bytes_read += (mhi - mlo) as u64;
+                                        splice_range(*coff, cdata, mlo, &fetched, lo, len)
+                                    }
+                                } else {
+                                    let seg = self.nodes[nid]
+                                        .get_segment(key, lo, len)
+                                        .ok_or_else(|| anyhow::anyhow!("segment gone"))?;
+                                    charge(&mut transfers, nid, len as u64);
+                                    bytes_read += len as u64;
+                                    seg_cache.insert(src, (lo, seg.clone()));
+                                    seg
+                                }
+                            }
+                        };
+                        ranges.insert(src, seg);
+                    }
+                    let mut scratch = self.scratch.lock().unwrap();
+                    let outs = program
+                        .execute_pipelined(&mut IterStream(ranges.into_iter()), &mut scratch)?;
+                    outs[pos].to_vec()
+                };
+                out[e.file_off..e.file_off + e.len].copy_from_slice(&seg);
             }
         }
 
-        let flows: Vec<Flow> = transfers
-            .iter()
-            .map(|&(nid, bytes)| Flow { src: super::net_id(nid), dst: PROXY, bytes, start: 0.0 })
-            .collect();
-        let (_, time_s) = self.net.run(&flows);
+        let (_, time_s) = self.net.run(&transfers);
         Ok(ReadReport { bytes: out, time_s, bytes_read, degraded })
     }
 }

@@ -18,7 +18,7 @@ pub mod wire;
 
 use crate::codec::StripeCodec;
 use crate::codes::{Scheme, SchemeKind};
-use crate::netsim::{Flow, NetSim};
+use crate::netsim::{pipeline_completion, Flow, NetSim};
 use crate::prng::Prng;
 use crate::repair::{
     BlockSource, CacheStats, PlanCache, RepairProgram, ScratchBuffers, SliceSource,
@@ -26,7 +26,8 @@ use crate::repair::{
 use datanode::DataNodeHandle;
 use metadata::{BlockKey, Extent, FileId, Metadata, NodeInfo, ObjectInfo, StripeId, StripeInfo};
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use std::ops::Range;
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::Instant;
 
 /// Cluster configuration (defaults = the paper's §VI-B setup).
@@ -88,14 +89,31 @@ pub struct RepairReport {
     /// Wall-clock decode CPU time, seconds (reported for §Perf; not part
     /// of the virtual repair time).
     pub decode_cpu_s: f64,
+    /// Virtual completion time under the **pipelined overlap model**
+    /// (`EXPERIMENTS.md` §Overlap): network fetch overlapped with
+    /// decode — the decode engine consumes the stream of arriving
+    /// survivor bytes, so the fetch+decode stage finishes at
+    /// `max(last arrival, streamed decode completion)`
+    /// ([`crate::netsim::pipeline_completion`]), not at
+    /// `fetch + decode`. Write-back stays serial on top. Always ≤
+    /// [`Self::total_s`]; equals `sim_time_s` exactly when decode cost
+    /// is zero (infinite `decode_gbps`).
+    pub completion_s: f64,
     /// Did the plan stay within local/cascaded groups?
     pub local: bool,
 }
 
 impl RepairReport {
-    /// Total repair time as the experiments report it (virtual clock).
+    /// Total repair time under the serial **wave model** (fetch, then
+    /// decode, each paid in full — the paper's accounting).
     pub fn total_s(&self) -> f64 {
         self.sim_time_s + self.decode_sim_s
+    }
+
+    /// Virtual time the pipelined executor saves over the serial wave
+    /// model for this stripe (≥ 0 by construction).
+    pub fn overlap_saving_s(&self) -> f64 {
+        self.total_s() - self.completion_s
     }
 }
 
@@ -311,12 +329,29 @@ impl Cluster {
     }
 
     /// Netsim-costed [`BlockSource`] over one stripe's datanodes for
-    /// [`crate::repair::RepairProgram::execute`]: blocks are fetched once,
-    /// cached, and every fetch is accounted as a survivor→proxy flow.
+    /// [`crate::repair::RepairProgram::execute`]: whole blocks are
+    /// fetched once, cached, and every fetch is accounted as a
+    /// survivor→proxy flow.
     fn stripe_fetcher<'a>(&'a self, stripe: &'a StripeInfo) -> StripeFetcher<'a> {
+        self.stripe_fetcher_range(stripe, 0..stripe.block_size)
+    }
+
+    /// [`Self::stripe_fetcher`] restricted to one byte `window` of every
+    /// block: fetches move (and the netsim charges) **only the window's
+    /// bytes**, not whole blocks — the segment-level accounting degraded
+    /// reads need. The executor sees window-length pseudo-blocks; GF
+    /// math is bytewise, so a block-level program is also a
+    /// window-level program.
+    fn stripe_fetcher_range<'a>(
+        &'a self,
+        stripe: &'a StripeInfo,
+        window: Range<usize>,
+    ) -> StripeFetcher<'a> {
+        debug_assert!(window.start <= window.end && window.end <= stripe.block_size);
         StripeFetcher {
             nodes: &self.nodes,
             stripe,
+            window,
             cache: vec![None; stripe.n()],
             flows: Vec::new(),
             bytes_read: 0,
@@ -325,9 +360,12 @@ impl Cluster {
 
     /// Repair the given failed blocks of one stripe (§V-B decoding
     /// workflow): look up (or compile) the pattern's [`RepairProgram`]
-    /// at the coordinator, fetch the program's read set from survivors,
-    /// execute at the proxy into reused scratch, write reconstructed
-    /// blocks to replacement nodes.
+    /// at the coordinator, stream the program's read set from survivors
+    /// and decode it through the readiness-driven pipelined executor at
+    /// the proxy, write reconstructed blocks to replacement nodes. Thin
+    /// wrapper over [`Self::repair_stripes_batch`] with one job and one
+    /// decode lane, so single-stripe, multi-stripe and whole-node
+    /// repairs all run the same executor and accounting.
     ///
     /// [`RepairProgram`]: crate::repair::RepairProgram
     pub fn repair_stripe(
@@ -335,58 +373,8 @@ impl Cluster {
         sid: StripeId,
         failed_blocks: &[usize],
     ) -> anyhow::Result<RepairReport> {
-        let stripe = self
-            .meta
-            .stripes
-            .get(&sid)
-            .cloned()
-            .ok_or_else(|| anyhow::anyhow!("unknown stripe {sid}"))?;
-        let scheme = self.scheme().clone();
-        anyhow::ensure!(!failed_blocks.is_empty(), "nothing to repair");
-
-        // (2) Metadata retrieval + compiled repair program from the
-        // coordinator (one compile per pattern, cluster-wide).
-        let program = self.programs.lock().unwrap().get_or_compile(&scheme, failed_blocks)?;
-
-        // (3) Data collection from surviving nodes (real bytes, RPC):
-        // exactly the program's fetch set, charged through the netsim.
-        let fetch: Vec<usize> = program.fetch().iter().copied().collect();
-        let mut source = self.stripe_fetcher(&stripe);
-        source.prefetch(&fetch)?;
-        let (_, read_time) = self.net.run(&source.flows);
-        let bytes_read = source.bytes_read;
-
-        // (4) Failure decoding at the proxy: replay the program.
-        let t0 = Instant::now();
-        let reconstructed: Vec<Vec<u8>> = {
-            let mut scratch = self.scratch.lock().unwrap();
-            let outputs = program.execute(&mut source, &mut scratch)?;
-            failed_blocks
-                .iter()
-                .map(|&b| {
-                    program
-                        .output_index(b)
-                        .map(|i| outputs[i].to_vec())
-                        .ok_or_else(|| anyhow::anyhow!("program lacks output for block {b}"))
-                })
-                .collect::<anyhow::Result<_>>()?
-        };
-        drop(source);
-        let decode_cpu_s = t0.elapsed().as_secs_f64();
-
-        // (5) Write-back to replacement nodes.
-        let wb_time = self.write_back(sid, &stripe, failed_blocks, &reconstructed)?;
-
-        Ok(RepairReport {
-            stripe: sid,
-            blocks_repaired: failed_blocks.to_vec(),
-            blocks_read: fetch.len(),
-            bytes_read,
-            sim_time_s: read_time + wb_time,
-            decode_sim_s: bytes_read as f64 / (self.cfg.decode_gbps * 1e9 / 8.0),
-            decode_cpu_s,
-            local: program.plan.fully_local(),
-        })
+        let mut reports = self.repair_stripes_batch(&[(sid, failed_blocks.to_vec())], 1)?;
+        Ok(reports.pop().expect("one job yields one report"))
     }
 
     /// Step (5) of the decoding workflow, shared by the serial and
@@ -446,15 +434,13 @@ impl Cluster {
         Ok(reports)
     }
 
-    /// Whole-node (multi-stripe) repair, batched and parallel: repair
+    /// Whole-node (multi-stripe) repair, pipelined and parallel: repair
     /// every stripe affected by currently-failed nodes using `threads`
     /// decode workers. Network fetches and write-backs run through the
-    /// (serial) netsim with exactly [`Self::repair_all`]'s accounting;
-    /// the proxy's decode work fans out over a scoped worker pool — one
-    /// [`ScratchBuffers`] per worker, stripes sharing a compiled
-    /// program batched through
-    /// [`RepairProgram::execute_batch`] — so wall-clock decode scales
-    /// with cores instead of serialising behind one scratch mutex.
+    /// (serial) netsim with exactly [`Self::repair_all`]'s wave
+    /// accounting; decode overlaps fetch both structurally (readiness
+    /// queue, one [`ScratchBuffers`] per worker) and in the virtual
+    /// clock (`completion_s` — see [`Self::repair_stripes_batch`]).
     pub fn repair_all_parallel(&mut self, threads: usize) -> anyhow::Result<Vec<RepairReport>> {
         let mut sids: Vec<StripeId> = self.meta.stripes.keys().copied().collect();
         sids.sort_unstable();
@@ -470,21 +456,30 @@ impl Cluster {
     }
 
     /// Batched repair of an explicit job list (`(stripe, failed blocks)`
-    /// pairs, each stripe at most once). Three phases:
+    /// pairs, each stripe at most once), run as a **three-stage
+    /// pipeline** instead of barrier-separated phases:
     ///
-    /// 1. **fetch** (serial): compile-or-look-up each pattern's program,
-    ///    prefetch its survivor set from the datanodes and charge the
-    ///    read flows;
-    /// 2. **decode** (parallel): jobs are sorted so stripes sharing a
-    ///    compiled program are contiguous, sharded over `threads`
-    ///    scoped workers, and each worker replays runs of same-program
-    ///    stripes with [`RepairProgram::execute_batch`] into its own
-    ///    [`ScratchBuffers`] — no allocation in steady state, no shared
-    ///    mutable state;
+    /// 1. **fetch issuer** (serial, netsim-accounted): compile-or-look-up
+    ///    each pattern's program and stream its survivor set off the
+    ///    datanodes — every flow completes at its own virtual time,
+    ///    which becomes the block's arrival stamp;
+    /// 2. **decode workers** (`threads` scoped workers) consume a
+    ///    readiness queue of fetched stripes: as soon as a stripe's
+    ///    blocks are in, a worker replays the compiled program
+    ///    (cache-blocked [`RepairProgram::execute`] — operands are
+    ///    resident by then, see [`decode_job`]) into its own
+    ///    [`ScratchBuffers`] — later stripes are still fetching while
+    ///    earlier ones decode;
     /// 3. **write-back** (serial): reconstructed blocks go to
     ///    replacement nodes and placement metadata is updated.
     ///
-    /// Reports come back in input-job order.
+    /// Virtual-clock accounting: `sim_time_s`/`decode_sim_s` keep the
+    /// serial wave model (read makespan + write-back; full decode cost)
+    /// so reports stay comparable with [`Self::repair_all`], while
+    /// `completion_s` records the pipelined overlap model — per stripe,
+    /// `max(last-needed-arrival, decode-completion) + write-back`,
+    /// property-pinned ≤ the wave time and equal to it when decode cost
+    /// is zero. Reports come back in input-job order.
     pub fn repair_stripes_batch(
         &mut self,
         jobs: &[(StripeId, Vec<usize>)],
@@ -506,87 +501,189 @@ impl Cluster {
         Ok(reports)
     }
 
-    /// One wave of [`Self::repair_stripes_batch`]: fetch → parallel
-    /// decode → write-back for a bounded slice of the job list.
+    /// Stage 1 of the pipelined repair executor, for one stripe: look
+    /// up/compile the pattern's program and pull its whole fetch set
+    /// from the datanodes. The read flows are charged through the
+    /// netsim **streamingly** — each flow finishes at its own virtual
+    /// time, which becomes the block's arrival stamp for the decode
+    /// stage — while `read_time` keeps the set's makespan (the serial
+    /// wave model's read term, unchanged).
+    fn prepare_repair(
+        &self,
+        orig: usize,
+        sid: StripeId,
+        failed: &[usize],
+        scheme: &Arc<Scheme>,
+    ) -> anyhow::Result<(JobMeta, DecodeJob)> {
+        let stripe = self
+            .meta
+            .stripes
+            .get(&sid)
+            .cloned()
+            .ok_or_else(|| anyhow::anyhow!("unknown stripe {sid}"))?;
+        anyhow::ensure!(!failed.is_empty(), "nothing to repair in stripe {sid}");
+        let program = self.programs.lock().unwrap().get_or_compile(scheme, failed)?;
+        // One netsim charge for exactly the program's read set, through
+        // the shared fetcher (whole-block window).
+        let fetch_idx: Vec<usize> = program.fetch().iter().copied().collect();
+        let mut fetcher = self.stripe_fetcher(&stripe);
+        fetcher.prefetch(&fetch_idx)?;
+        let (_, read_time, trace) = self.net.run_traced(&fetcher.flows, PROXY);
+        let bytes_read = fetcher.bytes_read;
+        // Overlap model (`EXPERIMENTS.md` §Overlap): the proxy's decode
+        // engine consumes the *stream* of arriving survivor bytes at
+        // `decode_gbps`, so the fetch+decode stage ends at
+        // max(last arrival, busy-period decode completion) — never at
+        // fetch + decode.
+        let done_s =
+            pipeline_completion(&trace, bytes_read as f64, self.cfg.decode_gbps * 1e9 / 8.0);
+        // The fetcher's block-indexed cache (fetch set filled) moves to
+        // the worker as-is — it is already the executor's source shape.
+        let StripeFetcher { cache, .. } = fetcher;
+        // Resolve the requested blocks to program output positions now,
+        // so a pattern/program mismatch fails before any decode work.
+        let outs_idx = failed
+            .iter()
+            .map(|&b| {
+                program
+                    .output_index(b)
+                    .ok_or_else(|| anyhow::anyhow!("program lacks output for block {b}"))
+            })
+            .collect::<anyhow::Result<Vec<usize>>>()?;
+        let meta = JobMeta {
+            sid,
+            failed: failed.to_vec(),
+            stripe,
+            read_time,
+            done_s,
+            bytes_read,
+            fetched: fetch_idx.len(),
+            local: program.plan.fully_local(),
+        };
+        Ok((meta, DecodeJob { orig, program, outs_idx, blocks: cache }))
+    }
+
+    /// One wave of [`Self::repair_stripes_batch`]: fetch issuer feeding
+    /// decode workers through a readiness queue, then serial write-back
+    /// in input order.
     fn repair_wave(
         &mut self,
         jobs: &[(StripeId, Vec<usize>)],
         threads: usize,
         scheme: &Arc<Scheme>,
     ) -> anyhow::Result<Vec<RepairReport>> {
-        // -- phase 1: fetch (serial, netsim-accounted) ------------------
-        let mut prepared: Vec<Prepared> = Vec::with_capacity(jobs.len());
-        for (orig, (sid, failed)) in jobs.iter().enumerate() {
-            let stripe = self
-                .meta
-                .stripes
-                .get(sid)
-                .cloned()
-                .ok_or_else(|| anyhow::anyhow!("unknown stripe {sid}"))?;
-            anyhow::ensure!(!failed.is_empty(), "nothing to repair in stripe {sid}");
-            let program = self.programs.lock().unwrap().get_or_compile(scheme, failed)?;
-            let fetch: Vec<usize> = program.fetch().iter().copied().collect();
-            let mut source = self.stripe_fetcher(&stripe);
-            source.prefetch(&fetch)?;
-            let (_, read_time) = self.net.run(&source.flows);
-            let bytes_read = source.bytes_read;
-            let StripeFetcher { cache: blocks, .. } = source;
-            prepared.push(Prepared {
-                orig,
-                sid: *sid,
-                failed: failed.clone(),
-                stripe,
-                program,
-                blocks,
-                read_time,
-                bytes_read,
-                fetched: fetch.len(),
+        let decode_bps = self.cfg.decode_gbps * 1e9 / 8.0;
+        let workers = threads.max(1).min(jobs.len());
+        let mut metas: Vec<Option<JobMeta>> = Vec::new();
+        metas.resize_with(jobs.len(), || None);
+        let mut decoded: Vec<Option<Decoded>> = Vec::new();
+        decoded.resize_with(jobs.len(), || None);
+        let mut first_err: Option<anyhow::Error> = None;
+
+        if workers <= 1 {
+            // One decode lane: fetch → decode inline per stripe through
+            // the same helpers (single-stripe repairs and callers that
+            // asked for no parallelism pay no thread overhead).
+            let mut scratch = self.scratch.lock().unwrap();
+            for (orig, (sid, failed)) in jobs.iter().enumerate() {
+                let (meta, djob) = self.prepare_repair(orig, *sid, failed, scheme)?;
+                metas[orig] = Some(meta);
+                let (o, res) = decode_job(djob, &mut scratch);
+                decoded[o] = Some(res?);
+            }
+        } else {
+            // Stage 2 runs while stage 1 is still issuing fetches for
+            // later stripes: workers pull fetched stripes off a shared
+            // readiness queue, one ScratchBuffers each.
+            let (job_tx, job_rx) = mpsc::channel::<DecodeJob>();
+            let (res_tx, res_rx) = mpsc::channel::<(usize, anyhow::Result<Decoded>)>();
+            let job_rx = Arc::new(Mutex::new(job_rx));
+            std::thread::scope(|scope| {
+                for _ in 0..workers {
+                    let job_rx = Arc::clone(&job_rx);
+                    let res_tx = res_tx.clone();
+                    scope.spawn(move || {
+                        let mut scratch = ScratchBuffers::new();
+                        loop {
+                            let job = job_rx.lock().unwrap().recv();
+                            let Ok(job) = job else { break };
+                            if res_tx.send(decode_job(job, &mut scratch)).is_err() {
+                                break;
+                            }
+                        }
+                    });
+                }
+                drop(res_tx);
+                for (orig, (sid, failed)) in jobs.iter().enumerate() {
+                    // Stop issuing as soon as any worker reported an
+                    // error: the wave is doomed, and every further
+                    // fetch (datanode reads, netsim runs) would be
+                    // thrown away.
+                    while let Ok((o, res)) = res_rx.try_recv() {
+                        match res {
+                            Ok(d) => decoded[o] = Some(d),
+                            Err(e) => {
+                                if first_err.is_none() {
+                                    first_err = Some(e);
+                                }
+                            }
+                        }
+                    }
+                    if first_err.is_some() {
+                        break;
+                    }
+                    match self.prepare_repair(orig, *sid, failed, scheme) {
+                        Ok((meta, djob)) => {
+                            metas[orig] = Some(meta);
+                            if job_tx.send(djob).is_err() {
+                                break; // all workers gone (they only exit on error)
+                            }
+                        }
+                        Err(e) => {
+                            first_err = Some(e);
+                            break;
+                        }
+                    }
+                }
+                drop(job_tx);
+                for (orig, res) in res_rx {
+                    match res {
+                        Ok(d) => decoded[orig] = Some(d),
+                        Err(e) => {
+                            if first_err.is_none() {
+                                first_err = Some(e);
+                            }
+                        }
+                    }
+                }
             });
         }
-        // Same-pattern stripes contiguous → workers batch one program.
-        prepared.sort_by(|a, b| a.failed.cmp(&b.failed).then(a.sid.cmp(&b.sid)));
-
-        // -- phase 2: decode (parallel, one scratch per worker) ---------
-        let mut recs: Vec<Option<(Vec<Vec<u8>>, f64)>> = Vec::new();
-        recs.resize_with(jobs.len(), || None);
-        if !prepared.is_empty() {
-            let workers = threads.max(1).min(prepared.len());
-            let shard_len = (prepared.len() + workers - 1) / workers;
-            let results: Vec<anyhow::Result<Vec<(usize, Vec<Vec<u8>>, f64)>>> =
-                std::thread::scope(|scope| {
-                    let handles: Vec<_> = prepared
-                        .chunks(shard_len)
-                        .map(|shard| scope.spawn(move || decode_shard(shard)))
-                        .collect();
-                    handles
-                        .into_iter()
-                        .map(|h| h.join().expect("decode worker panicked"))
-                        .collect()
-                });
-            for r in results {
-                for (orig, rec, cpu) in r? {
-                    recs[orig] = Some((rec, cpu));
-                }
-            }
+        if let Some(e) = first_err {
+            return Err(e);
         }
 
-        // -- phase 3: write-back (serial), reports in input order -------
-        prepared.sort_by_key(|p| p.orig);
-        let mut reports = Vec::with_capacity(prepared.len());
-        for p in prepared {
-            let (rec, decode_cpu_s) = recs[p.orig]
+        // -- stage 3: write-back (serial), reports in input order -------
+        let mut reports = Vec::with_capacity(jobs.len());
+        for (orig, (meta_slot, dec_slot)) in
+            metas.iter_mut().zip(decoded.iter_mut()).enumerate()
+        {
+            let meta = meta_slot
                 .take()
-                .ok_or_else(|| anyhow::anyhow!("stripe {} never decoded", p.sid))?;
-            let wb_time = self.write_back(p.sid, &p.stripe, &p.failed, &rec)?;
+                .ok_or_else(|| anyhow::anyhow!("job {orig} was never fetched"))?;
+            let dec = dec_slot
+                .take()
+                .ok_or_else(|| anyhow::anyhow!("stripe {} never decoded", meta.sid))?;
+            let wb_time = self.write_back(meta.sid, &meta.stripe, &meta.failed, &dec.rec)?;
             reports.push(RepairReport {
-                stripe: p.sid,
-                blocks_repaired: p.failed,
-                blocks_read: p.fetched,
-                bytes_read: p.bytes_read,
-                sim_time_s: p.read_time + wb_time,
-                decode_sim_s: p.bytes_read as f64 / (self.cfg.decode_gbps * 1e9 / 8.0),
-                decode_cpu_s,
-                local: p.program.plan.fully_local(),
+                stripe: meta.sid,
+                blocks_repaired: meta.failed,
+                blocks_read: meta.fetched,
+                bytes_read: meta.bytes_read,
+                sim_time_s: meta.read_time + wb_time,
+                decode_sim_s: meta.bytes_read as f64 / decode_bps,
+                decode_cpu_s: dec.decode_cpu_s,
+                completion_s: meta.done_s + wb_time,
+                local: meta.local,
             });
         }
         Ok(reports)
@@ -637,71 +734,88 @@ impl Cluster {
     }
 }
 
-/// One stripe's repair inside a [`Cluster::repair_stripes_batch`] wave:
-/// fetched survivor bytes plus the accounting captured in phase 1,
-/// ready for a decode worker.
-struct Prepared {
-    /// Index of this job within its wave (reports are re-ordered by it).
-    orig: usize,
+/// Main-thread bookkeeping for one stripe of a repair wave: everything
+/// stage 3 (write-back + report) needs, kept out of the decode workers'
+/// hands.
+struct JobMeta {
     sid: StripeId,
     failed: Vec<usize>,
     stripe: StripeInfo,
-    program: Arc<RepairProgram>,
-    /// Survivor bytes by block index (program fetch set filled).
-    blocks: Vec<Option<Vec<u8>>>,
+    /// Makespan of the stripe's read flows (serial wave read term).
     read_time: f64,
+    /// Virtual time the overlapped fetch+decode stage finishes (the
+    /// [`pipeline_completion`] of the read flows' arrival trace against
+    /// the decode rate; write-back comes on top).
+    done_s: f64,
     bytes_read: u64,
     fetched: usize,
+    local: bool,
 }
 
-/// Decode one worker's shard of a repair wave: walk runs of
-/// same-program jobs and replay each run as one
-/// [`RepairProgram::execute_batch`]. Returns
-/// `(orig job index, reconstructed failed blocks, decode cpu seconds)`.
-fn decode_shard(shard: &[Prepared]) -> anyhow::Result<Vec<(usize, Vec<Vec<u8>>, f64)>> {
-    let mut scratch = ScratchBuffers::new();
-    let mut out = Vec::with_capacity(shard.len());
-    let mut i = 0;
-    while i < shard.len() {
-        let mut j = i + 1;
-        while j < shard.len() && Arc::ptr_eq(&shard[j].program, &shard[i].program) {
-            j += 1;
-        }
-        let run = &shard[i..j];
-        let program = &run[0].program;
-        let mut sources: Vec<SliceSource> =
-            run.iter().map(|p| SliceSource::new(&p.blocks)).collect();
-        let mut last = Instant::now();
-        program.execute_batch(&mut sources, &mut scratch, |si, outs| {
-            let p = &run[si];
-            let rec = p
-                .failed
-                .iter()
-                .map(|&b| {
-                    program
-                        .output_index(b)
-                        .map(|oi| outs[oi].to_vec())
-                        .ok_or_else(|| anyhow::anyhow!("program lacks output for block {b}"))
-                })
-                .collect::<anyhow::Result<Vec<Vec<u8>>>>()?;
-            let now = Instant::now();
-            out.push((p.orig, rec, (now - last).as_secs_f64()));
-            last = now;
-            Ok(())
-        })?;
-        i = j;
-    }
-    Ok(out)
+/// One entry of the decode workers' readiness queue: a stripe whose
+/// survivor set has been fetched and netsim-accounted.
+struct DecodeJob {
+    /// Index of this job within its wave (reports are re-ordered by it).
+    orig: usize,
+    program: Arc<RepairProgram>,
+    /// Program output positions of the job's failed blocks, in job
+    /// order (resolved at fetch time).
+    outs_idx: Vec<usize>,
+    /// The fetched survivor blocks, owned, indexed by block (the
+    /// fetcher cache, fetch set filled).
+    blocks: Vec<Option<Vec<u8>>>,
 }
 
-/// [`BlockSource`] over one stripe's datanodes: whole blocks fetched on
-/// demand via the datanode RPC handles, cached for the lifetime of one
-/// repair, with one netsim flow recorded per distinct fetch. Prefetching
-/// the program's fetch set up front (as `repair_stripe` does) charges
-/// the network exactly once for exactly the paper-accounted read set.
+/// What a decode worker hands back to stage 3.
+struct Decoded {
+    /// Reconstructed contents of the job's failed blocks, in job order.
+    rec: Vec<Vec<u8>>,
+    decode_cpu_s: f64,
+}
+
+/// Stage 2 of the pipelined repair executor: decode one stripe off the
+/// readiness queue. The overlap itself is already costed in stage 1
+/// ([`pipeline_completion`] over the netsim arrival trace), and by the
+/// time a job reaches a worker every operand block is resident — the
+/// datanode handles return bytes instantly, only the *virtual* clock
+/// streams — so the wall-clock-optimal replay is the cache-blocked
+/// [`RepairProgram::execute`] (64 KiB L2-resident columns), not a
+/// whole-block at-arrival schedule. [`RepairProgram::execute_pipelined`]
+/// is reserved for sources that genuinely stream (degraded reads over
+/// segment fetchers, real-network block sources); chunk-granular
+/// readiness that would merge both is a ROADMAP follow-up.
+fn decode_job(
+    job: DecodeJob,
+    scratch: &mut ScratchBuffers,
+) -> (usize, anyhow::Result<Decoded>) {
+    let DecodeJob { orig, program, outs_idx, blocks } = job;
+    let t0 = Instant::now();
+    let res = program
+        .execute(&mut SliceSource::new(&blocks), scratch)
+        .map(|outs| {
+            let rec = outs_idx.iter().map(|&i| outs[i].to_vec()).collect();
+            Decoded { rec, decode_cpu_s: t0.elapsed().as_secs_f64() }
+        });
+    (orig, res)
+}
+
+/// [`BlockSource`] over one stripe's datanodes: one byte window of each
+/// block (whole blocks by default, a sub-range for segment-level
+/// callers) fetched on demand via the datanode RPC handles, cached for
+/// the lifetime of one repair, with one netsim flow recorded per
+/// distinct fetch **sized to the bytes actually moved** — a sub-range
+/// fetch charges the window, never the whole block. Prefetching the
+/// program's fetch set up front charges the network exactly once for
+/// exactly the paper-accounted read set; the executor sees
+/// window-length pseudo-blocks and its column ranges address the
+/// window, so chunked and whole-pass execution charge identical totals
+/// (pinned by `subrange_fetch_charges_actual_bytes_*` below).
 struct StripeFetcher<'a> {
     nodes: &'a [DataNodeHandle],
     stripe: &'a StripeInfo,
+    /// Byte range of every block this fetcher moves and serves.
+    window: Range<usize>,
+    /// `cache[b]` holds the window's bytes of block `b` once fetched.
     cache: Vec<Option<Vec<u8>>>,
     flows: Vec<Flow>,
     bytes_read: u64,
@@ -712,8 +826,18 @@ impl StripeFetcher<'_> {
         if self.cache[b].is_none() {
             let nid = self.stripe.block_nodes[b];
             let data = self.nodes[nid]
-                .get(BlockKey { stripe: self.stripe.stripe_id, index: b as u32 })
-                .ok_or_else(|| anyhow::anyhow!("survivor block {b} unavailable"))?;
+                .get_segment(
+                    BlockKey { stripe: self.stripe.stripe_id, index: b as u32 },
+                    self.window.start,
+                    self.window.len(),
+                )
+                .ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "survivor block {b} unavailable (window {}..{})",
+                        self.window.start,
+                        self.window.end
+                    )
+                })?;
             self.bytes_read += data.len() as u64;
             self.flows.push(Flow {
                 src: net_id(nid),
@@ -726,7 +850,7 @@ impl StripeFetcher<'_> {
         Ok(())
     }
 
-    /// Fetch (and account) every listed block now.
+    /// Fetch (and account) every listed block's window now.
     fn prefetch(&mut self, blocks: &[usize]) -> anyhow::Result<()> {
         for &b in blocks {
             self.ensure(b)?;
@@ -749,13 +873,13 @@ impl BlockSource for StripeFetcher<'_> {
             .collect()
     }
 
-    // Native override: slice the cached whole blocks directly (fetch
-    // cost is whole-block either way — the netsim charge is unchanged),
-    // avoiding the default impl's intermediate Vec per column.
+    // Native override: slice the cached windows directly (the range is
+    // window-relative, as for every pseudo-block source), avoiding the
+    // default impl's intermediate Vec per column.
     fn blocks_range(
         &mut self,
         idx: &[usize],
-        range: std::ops::Range<usize>,
+        range: Range<usize>,
     ) -> anyhow::Result<Vec<&[u8]>> {
         for &b in idx {
             self.ensure(b)?;
@@ -767,7 +891,7 @@ impl BlockSource for StripeFetcher<'_> {
                     .ok_or_else(|| anyhow::anyhow!("block {b} missing from fetch cache"))?;
                 s.get(range.clone()).ok_or_else(|| {
                     anyhow::anyhow!(
-                        "block {b} too short ({} bytes) for column {}..{}",
+                        "block {b} window too short ({} bytes) for column {}..{}",
                         s.len(),
                         range.start,
                         range.end
@@ -938,8 +1062,117 @@ mod tests {
             assert_eq!(x.blocks_read, y.blocks_read);
             assert_eq!(x.bytes_read, y.bytes_read);
             assert!((x.sim_time_s - y.sim_time_s).abs() < 1e-9, "stripe {}", x.stripe);
+            // The pipelined virtual clock is a pure function of the
+            // flow set and decode rate — thread count must not move it.
+            assert!((x.completion_s - y.completion_s).abs() < 1e-9, "stripe {}", x.stripe);
             assert_eq!(x.local, y.local);
         }
+    }
+
+    #[test]
+    fn pipelined_completion_bounded_by_wave_time_all_seeds() {
+        // ISSUE 4 acceptance: on every seed, thread count and failure
+        // pattern, the overlap model's completion time is at most the
+        // serial wave time, read/byte accounting is identical to the
+        // serial executor's, and the overlap never goes below the
+        // fetch-bound floor (sim_time_s).
+        for seed in [3u64, 11, 21, 77, 123] {
+            for threads in [1usize, 4] {
+                let mut c = Cluster::new(tiny_cfg(SchemeKind::CpAzure));
+                let sids = c.fill_random_stripes(3, seed);
+                let v0 = c.meta.stripes[&sids[0]].block_nodes[0];
+                let v1 = c.meta.stripes[&sids[0]].block_nodes[8];
+                c.fail_node(v0);
+                c.fail_node(v1);
+                let reports = c.repair_all_parallel(threads).unwrap();
+                assert!(!reports.is_empty());
+                for r in &reports {
+                    assert!(
+                        r.completion_s <= r.total_s() + 1e-9,
+                        "seed {seed} threads {threads} stripe {}: pipelined {} > wave {}",
+                        r.stripe,
+                        r.completion_s,
+                        r.total_s()
+                    );
+                    assert!(
+                        r.completion_s >= r.sim_time_s - 1e-9,
+                        "completion below the fetch+write-back floor"
+                    );
+                    // decode cost and transfer time are both non-zero
+                    // here, so streaming must win strictly
+                    assert!(r.overlap_saving_s() > 0.0, "no overlap won on stripe {}", r.stripe);
+                }
+                c.restore_node(v0);
+                c.restore_node(v1);
+                for sid in sids {
+                    assert!(c.scrub_stripe(sid).unwrap(), "seed {seed} stripe {sid}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_decode_cost_makes_pipelined_equal_serial() {
+        // With an infinitely fast decoder the overlap model degenerates
+        // to pure fetch + write-back: completion_s == sim_time_s and
+        // decode_sim_s == 0, so pipelined == wave exactly.
+        let mut cfg = tiny_cfg(SchemeKind::CpUniform);
+        cfg.decode_gbps = f64::INFINITY;
+        let mut c = Cluster::new(cfg);
+        let sids = c.fill_random_stripes(2, 31);
+        let victim = c.meta.stripes[&sids[0]].block_nodes[1];
+        c.fail_node(victim);
+        let reports = c.repair_all_parallel(2).unwrap();
+        assert!(!reports.is_empty());
+        for r in &reports {
+            assert_eq!(r.decode_sim_s, 0.0);
+            assert!(
+                (r.completion_s - r.sim_time_s).abs() < 1e-12,
+                "stripe {}: completion {} != sim {}",
+                r.stripe,
+                r.completion_s,
+                r.sim_time_s
+            );
+            assert!((r.completion_s - r.total_s()).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn subrange_fetch_charges_actual_bytes_with_chunk_parity() {
+        // ISSUE 4 satellite: a windowed fetcher must charge the bytes
+        // actually moved (window × fetch set), not whole blocks, and
+        // cache-blocked execution must charge exactly the same total as
+        // the whole-pass schedule (no per-column double charging).
+        let mut c = Cluster::new(tiny_cfg(SchemeKind::CpAzure)); // 4 KiB blocks
+        let sid = c.fill_random_stripes(1, 41)[0];
+        let stripe = c.meta.stripes[&sid].clone();
+        let scheme = c.scheme().clone();
+        let program = RepairProgram::for_pattern(&scheme, &[0]).unwrap();
+        let window = 512usize..1536; // 1 KiB of each 4 KiB block
+        let original = c.fetch_block(&stripe, 0).unwrap();
+
+        let mut scratch = ScratchBuffers::new();
+        let mut whole = c.stripe_fetcher_range(&stripe, window.clone());
+        let out_whole: Vec<u8> =
+            program.execute(&mut whole, &mut scratch).unwrap()[0].to_vec();
+
+        let mut chunked = c.stripe_fetcher_range(&stripe, window.clone());
+        let out_chunked: Vec<u8> =
+            program.execute_chunked(&mut chunked, &mut scratch, 100).unwrap()[0].to_vec();
+
+        // Correctness: both reconstruct the erased block's window.
+        assert_eq!(out_whole, &original[window.clone()]);
+        assert_eq!(out_chunked, out_whole);
+        // Accounting: actual bytes, once per block, on both schedules.
+        let expect = (window.len() * program.fetch().len()) as u64;
+        assert_eq!(whole.bytes_read, expect, "whole-pass charges window bytes");
+        assert_eq!(chunked.bytes_read, expect, "chunked execution must not re-charge");
+        assert_eq!(whole.flows.len(), program.fetch().len());
+        assert_eq!(chunked.flows.len(), whole.flows.len());
+        let total = |f: &[Flow]| f.iter().map(|x| x.bytes).sum::<u64>();
+        assert_eq!(total(&whole.flows), total(&chunked.flows));
+        // And far less than the whole-block charge.
+        assert!(expect < (stripe.block_size * program.fetch().len()) as u64 / 3);
     }
 
     #[test]

@@ -97,14 +97,16 @@ impl RepairQueue {
         Ok(out)
     }
 
-    /// Drain the whole queue through the cluster's batched executor:
+    /// Drain the whole queue through the cluster's pipelined executor:
     /// pops every pending job (riskiest first — that order is preserved
     /// in the returned reports) and hands them to
-    /// [`Cluster::repair_stripes_batch`], which fetches serially,
-    /// decodes on `threads` workers, and writes back. This is the
+    /// [`Cluster::repair_stripes_batch`], whose fetch issuer streams
+    /// survivor sets to `threads` readiness-queue decode workers while
+    /// later fetches are still in flight, then writes back. This is the
     /// whole-node recovery path: a dead node enqueues one same-pattern
-    /// job per stripe and the decode fan-out amortises one compiled
-    /// program across all of them.
+    /// job per stripe, the compiled program is shared via the PlanCache,
+    /// and every stripe's report carries both the serial wave time
+    /// (`total_s`) and the overlapped `completion_s`.
     ///
     /// On error every popped job is pushed back, so the queue still
     /// tracks the outstanding work (stripes a completed wave already

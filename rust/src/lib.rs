@@ -35,13 +35,20 @@
 //!        └► program.execute_batch(...)  — amortise fetch resolution and
 //!                                          scratch setup across stripes
 //!                                          sharing one program
+//!        └► program.execute_pipelined() — readiness-driven: fire each
+//!                                          op as its operands arrive
+//!                                          from a StreamingBlockSource,
+//!                                          overlapping fetch and decode
 //! ```
 //!
 //! Programs depend only on `(scheme, erasure pattern)`, so
-//! [`repair::PlanCache`] compiles each pattern once and replays it
-//! across thousands of stripes; whole-node repair fans batches out over
-//! a scoped worker pool ([`cluster::Cluster::repair_all_parallel`]).
-//! Kernel-level details and measurements: `EXPERIMENTS.md` §Perf.
+//! [`repair::PlanCache`] (bounded, LRU) compiles each pattern once and
+//! replays it across thousands of stripes; whole-node repair streams
+//! fetched stripes to a readiness-queue worker pool
+//! ([`cluster::Cluster::repair_all_parallel`]), reporting both the
+//! serial wave time and the overlapped completion time per stripe.
+//! Kernel-level details and measurements: `EXPERIMENTS.md` §Perf and
+//! §Overlap.
 //!
 //! Start with [`codes::Scheme`] (pick a construction and parameters),
 //! [`codec::StripeCodec`] (encode/decode bytes), [`repair`] (the repair

@@ -71,6 +71,31 @@ impl NetSim {
     /// Run a set of flows to completion; returns per-flow finish times and
     /// (as `.1`) the makespan (0.0 when `flows` is empty).
     pub fn run(&self, flows: &[Flow]) -> (Vec<FlowResult>, f64) {
+        let (results, makespan, _) = self.run_core(flows, None);
+        (results, makespan)
+    }
+
+    /// [`Self::run`] that additionally records the **cumulative-arrival
+    /// trace** at `dst`: corner points `(time, bytes arrived)` of the
+    /// piecewise-linear curve of bytes delivered into `dst`'s ingress
+    /// (rates are constant between events, so the corners describe the
+    /// fluid curve exactly). This is what lets a consumer overlapped
+    /// with the network — the cluster's pipelined repair decoder — be
+    /// costed against the *stream* of arriving bytes instead of the
+    /// wave barrier at the makespan. See [`pipeline_completion`].
+    pub fn run_traced(
+        &self,
+        flows: &[Flow],
+        dst: NodeId,
+    ) -> (Vec<FlowResult>, f64, Vec<(f64, f64)>) {
+        self.run_core(flows, Some(dst))
+    }
+
+    fn run_core(
+        &self,
+        flows: &[Flow],
+        trace_dst: Option<NodeId>,
+    ) -> (Vec<FlowResult>, f64, Vec<(f64, f64)>) {
         #[derive(Clone, Debug)]
         struct Active {
             idx: usize,
@@ -79,6 +104,10 @@ impl NetSim {
             remaining: f64,
         }
         let mut results = vec![FlowResult { finish: 0.0 }; flows.len()];
+        // Untraced runs never touch the trace; skip its allocation.
+        let mut trace: Vec<(f64, f64)> =
+            if trace_dst.is_some() { vec![(0.0, 0.0)] } else { Vec::new() };
+        let mut arrived = 0.0f64;
         // Latency shifts a flow's start; data then moves under fair share.
         let mut pending: Vec<(f64, Active)> = flows
             .iter()
@@ -107,6 +136,9 @@ impl NetSim {
                     break;
                 }
                 now = pending[pi].0;
+                if trace_dst.is_some() {
+                    trace.push((now, arrived)); // flat segment corner
+                }
                 continue;
             }
 
@@ -132,6 +164,12 @@ impl NetSim {
             now += dt;
             for (a, &r) in active.iter_mut().zip(rates.iter()) {
                 a.remaining -= r * dt;
+                if Some(a.dst) == trace_dst {
+                    arrived += r * dt;
+                }
+            }
+            if trace_dst.is_some() {
+                trace.push((now, arrived));
             }
             // Retire completed flows.
             let mut i = 0;
@@ -145,7 +183,7 @@ impl NetSim {
                 }
             }
         }
-        (results, makespan)
+        (results, makespan, trace)
     }
 
     /// Max-min fair allocation for flows given as parallel src/dst arrays
@@ -204,6 +242,31 @@ impl NetSim {
         }
         rate
     }
+}
+
+/// Virtual completion time of a work-conserving consumer of rate
+/// `rate_bps` fed by the fluid arrival curve `trace` (corner points of
+/// cumulative bytes, as produced by [`NetSim::run_traced`]) and owing
+/// `total_bytes` of work: the classic busy-period bound
+///
+/// ```text
+///   T = max over corners s of  s + (total − A(s)) / rate
+/// ```
+///
+/// (`s` ranges over the curve's corners because both the curve and the
+/// objective are piecewise linear, so the max sits on a corner.) This is
+/// exactly `max(last arrival, decode completion)` for a decoder that
+/// consumes bytes as they stream in: never later than
+/// `makespan + total/rate` (the serial wave model), and equal to the
+/// makespan when the consumer is infinitely fast.
+pub fn pipeline_completion(trace: &[(f64, f64)], total_bytes: f64, rate_bps: f64) -> f64 {
+    let mut t_done = 0.0f64;
+    for &(s, a) in trace {
+        let backlog = (total_bytes - a).max(0.0);
+        // rate_bps = ∞ makes backlog/rate 0 (backlog is finite ≥ 0)
+        t_done = t_done.max(s + backlog / rate_bps);
+    }
+    t_done
 }
 
 #[cfg(test)]
@@ -308,5 +371,75 @@ mod tests {
         let (res, makespan) = s.run(&[]);
         assert!(res.is_empty());
         assert_eq!(makespan, 0.0);
+    }
+
+    #[test]
+    fn traced_run_matches_run_and_conserves_bytes() {
+        let s = sim(5);
+        let flows: Vec<Flow> = (0..4)
+            .map(|i| Flow { src: i, dst: 4, bytes: (GBPS / 4.0) as u64, start: 0.0 })
+            .collect();
+        let (res_a, mk_a) = s.run(&flows);
+        let (res_b, mk_b, trace) = s.run_traced(&flows, 4);
+        assert_eq!(mk_a, mk_b);
+        for (a, b) in res_a.iter().zip(res_b.iter()) {
+            assert_eq!(a.finish, b.finish);
+        }
+        // monotone corners, ending at (makespan, total bytes)
+        let total: f64 = flows.iter().map(|f| f.bytes as f64).sum();
+        for w in trace.windows(2) {
+            assert!(w[1].0 >= w[0].0 && w[1].1 >= w[0].1 - 1e-9, "{trace:?}");
+        }
+        let (t_last, a_last) = *trace.last().unwrap();
+        assert!((t_last - mk_b).abs() < 1e-9);
+        assert!((a_last - total).abs() < 1e-3 * total, "arrived {a_last} of {total}");
+    }
+
+    #[test]
+    fn pipeline_completion_overlaps_fetch_and_consume() {
+        // 4 sources fan into one 1 Gbps ingress: bytes stream at line
+        // rate, so a consumer at rate D finishes at
+        // max(makespan, total/D) — not makespan + total/D.
+        let s = sim(5);
+        let flows: Vec<Flow> = (0..4)
+            .map(|i| Flow { src: i, dst: 4, bytes: (GBPS / 4.0) as u64, start: 0.0 })
+            .collect();
+        let (_, makespan, trace) = s.run_traced(&flows, 4);
+        let total: f64 = flows.iter().map(|f| f.bytes as f64).sum();
+
+        // Fast consumer (8x line rate): fetch-bound, finishes with fetch.
+        let fast = pipeline_completion(&trace, total, 8.0 * GBPS);
+        assert!((fast - makespan).abs() < 1e-4, "fast {fast} vs makespan {makespan}");
+        // Infinitely fast consumer: exactly the makespan.
+        let inf = pipeline_completion(&trace, total, f64::INFINITY);
+        assert!((inf - makespan).abs() < 1e-9);
+        // Slow consumer (half line rate): consume-bound, ≈ total/D.
+        let slow = pipeline_completion(&trace, total, 0.5 * GBPS);
+        assert!((slow - total / (0.5 * GBPS)).abs() < 1e-4, "slow {slow}");
+        // Always within [makespan, makespan + total/D].
+        for rate in [0.1 * GBPS, GBPS, 3.0 * GBPS] {
+            let t = pipeline_completion(&trace, total, rate);
+            assert!(t >= makespan - 1e-9);
+            assert!(t <= makespan + total / rate + 1e-9);
+        }
+    }
+
+    #[test]
+    fn pipeline_completion_staggered_arrivals_respect_backlog() {
+        // One early small flow + one late large flow: the consumer
+        // drains the early bytes, idles, then is gated by the late
+        // arrival — the corner max must pick that up.
+        let s = sim(3);
+        let flows = vec![
+            Flow { src: 0, dst: 2, bytes: (GBPS / 10.0) as u64, start: 0.0 },
+            Flow { src: 1, dst: 2, bytes: GBPS as u64, start: 5.0 },
+        ];
+        let (res, makespan, trace) = s.run_traced(&flows, 2);
+        let total: f64 = flows.iter().map(|f| f.bytes as f64).sum();
+        // Consumer at line rate: finishes an instant after the last
+        // arrival (backlog is zero at line rate), i.e. at the makespan.
+        let t = pipeline_completion(&trace, total, GBPS);
+        assert!((t - makespan).abs() < 1e-6, "t={t} makespan={makespan}");
+        assert!(res[1].finish > res[0].finish);
     }
 }

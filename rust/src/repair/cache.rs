@@ -6,17 +6,32 @@
 //! `(scheme, pattern)` once and replays the [`RepairProgram`]
 //! everywhere. Patterns are normalized (sorted, deduplicated) before
 //! lookup so `[26, 0]` and `[0, 26]` share one entry.
+//!
+//! The cache is **bounded**: multi-node erasure patterns are
+//! combinatorial (`C(n, f)` grows fast at wide stripes), so a long
+//! failure trace with random multi-node patterns would otherwise grow
+//! the map without limit. Beyond [`PlanCache::capacity`] entries the
+//! least-recently-used program is evicted; evictions only drop the
+//! cache's `Arc` reference, so programs still executing elsewhere are
+//! unaffected.
 
 use super::program::RepairProgram;
 use crate::codes::{Scheme, SchemeId};
 use std::collections::HashMap;
 use std::sync::Arc;
 
-/// Hit/miss counters for a [`PlanCache`].
+/// Default [`PlanCache`] capacity. Sized to hold every single- and
+/// two-node pattern of a (96,5,4)-class stripe's hot set with room to
+/// spare, while bounding worst-case memory on adversarial traces.
+pub const DEFAULT_PLAN_CACHE_CAPACITY: usize = 1024;
+
+/// Hit/miss/eviction counters for a [`PlanCache`].
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct CacheStats {
     pub hits: u64,
     pub misses: u64,
+    /// Entries dropped to stay within capacity.
+    pub evictions: u64,
 }
 
 impl CacheStats {
@@ -31,12 +46,25 @@ impl CacheStats {
     }
 }
 
-/// Cache of compiled [`RepairProgram`]s keyed by
+struct Entry {
+    program: Arc<RepairProgram>,
+    /// Logical timestamp of the last lookup that returned this entry.
+    last_used: u64,
+}
+
+/// Bounded LRU cache of compiled [`RepairProgram`]s keyed by
 /// `(scheme id, normalized erasure pattern)`.
-#[derive(Default)]
 pub struct PlanCache {
-    map: HashMap<(SchemeId, Vec<usize>), Arc<RepairProgram>>,
+    map: HashMap<(SchemeId, Vec<usize>), Entry>,
     stats: CacheStats,
+    capacity: usize,
+    tick: u64,
+}
+
+impl Default for PlanCache {
+    fn default() -> Self {
+        Self::with_capacity(DEFAULT_PLAN_CACHE_CAPACITY)
+    }
 }
 
 impl PlanCache {
@@ -44,9 +72,27 @@ impl PlanCache {
         Self::default()
     }
 
+    /// Cache holding at most `capacity` compiled programs (clamped to a
+    /// minimum of 1 — a zero-capacity cache could not even return the
+    /// program it just compiled without thrashing the counters).
+    pub fn with_capacity(capacity: usize) -> Self {
+        Self {
+            map: HashMap::new(),
+            stats: CacheStats::default(),
+            capacity: capacity.max(1),
+            tick: 0,
+        }
+    }
+
+    /// Maximum number of compiled programs held.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
     /// Fetch the compiled program for `erased` under `scheme`, planning
     /// and compiling it on first sight. Unrecoverable patterns error and
-    /// are not cached.
+    /// are not cached. At capacity, the least-recently-used entry is
+    /// evicted to make room.
     pub fn get_or_compile(
         &mut self,
         scheme: &Scheme,
@@ -57,14 +103,34 @@ impl PlanCache {
         pattern.dedup();
         anyhow::ensure!(!pattern.is_empty(), "empty erasure pattern");
         let key = (scheme.id(), pattern);
-        if let Some(program) = self.map.get(&key) {
+        self.tick += 1;
+        if let Some(entry) = self.map.get_mut(&key) {
+            entry.last_used = self.tick;
             self.stats.hits += 1;
-            return Ok(program.clone());
+            return Ok(entry.program.clone());
         }
         let program = Arc::new(RepairProgram::for_pattern(scheme, &key.1)?);
         self.stats.misses += 1;
-        self.map.insert(key, program.clone());
+        if self.map.len() >= self.capacity {
+            self.evict_lru();
+        }
+        self.map.insert(key, Entry { program: program.clone(), last_used: self.tick });
         Ok(program)
+    }
+
+    /// Drop the least-recently-used entry. Linear scan: capacity is
+    /// small and eviction only happens on a compile miss, which already
+    /// cost a planning pass.
+    fn evict_lru(&mut self) {
+        if let Some(key) = self
+            .map
+            .iter()
+            .min_by_key(|(_, e)| e.last_used)
+            .map(|(k, _)| k.clone())
+        {
+            self.map.remove(&key);
+            self.stats.evictions += 1;
+        }
     }
 
     /// Number of distinct compiled programs held.
@@ -98,7 +164,7 @@ mod tests {
         let a = cache.get_or_compile(&s, &[0, 14]).unwrap();
         let b = cache.get_or_compile(&s, &[14, 0]).unwrap(); // normalized
         assert!(Arc::ptr_eq(&a, &b));
-        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 1 });
+        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 1, evictions: 0 });
         assert_eq!(cache.len(), 1);
         assert!(cache.stats().hit_rate() > 0.49);
     }
@@ -123,5 +189,48 @@ mod tests {
         let mut cache = PlanCache::new();
         assert!(cache.get_or_compile(&s, &bad).is_err());
         assert!(cache.is_empty());
+    }
+
+    #[test]
+    fn capacity_bounds_entries_with_lru_eviction() {
+        let s = Scheme::new(SchemeKind::CpAzure, 6, 2, 2);
+        let mut cache = PlanCache::with_capacity(2);
+        assert_eq!(cache.capacity(), 2);
+        let p0 = cache.get_or_compile(&s, &[0]).unwrap();
+        cache.get_or_compile(&s, &[1]).unwrap();
+        // Touch [0] so [1] becomes the LRU entry.
+        let p0_again = cache.get_or_compile(&s, &[0]).unwrap();
+        assert!(Arc::ptr_eq(&p0, &p0_again));
+        // Third pattern evicts [1], never [0].
+        cache.get_or_compile(&s, &[2]).unwrap();
+        assert_eq!(cache.len(), 2);
+        assert_eq!(
+            cache.stats(),
+            CacheStats { hits: 1, misses: 3, evictions: 1 }
+        );
+        // [0] survived the eviction…
+        let before = cache.stats().hits;
+        cache.get_or_compile(&s, &[0]).unwrap();
+        assert_eq!(cache.stats().hits, before + 1);
+        // …and [1] was the one dropped: looking it up recompiles (a miss)
+        // and evicts the current LRU again.
+        cache.get_or_compile(&s, &[1]).unwrap();
+        assert_eq!(cache.stats().misses, 4);
+        assert_eq!(cache.stats().evictions, 2);
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn zero_capacity_clamps_to_one() {
+        let s = Scheme::new(SchemeKind::CpAzure, 6, 2, 2);
+        let mut cache = PlanCache::with_capacity(0);
+        assert_eq!(cache.capacity(), 1);
+        cache.get_or_compile(&s, &[0]).unwrap();
+        cache.get_or_compile(&s, &[1]).unwrap();
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.stats().evictions, 1);
+        // The surviving entry still hits.
+        cache.get_or_compile(&s, &[1]).unwrap();
+        assert_eq!(cache.stats().hits, 1);
     }
 }

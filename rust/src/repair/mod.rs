@@ -21,10 +21,19 @@
 //!    per-step allocations on the hot path. Execution is cache-blocked
 //!    (the op list runs column-by-column, [`DEFAULT_CHUNK_BYTES`] at a
 //!    time) and each op is a single fused multi-source GF combine
-//!    ([`crate::gf::combine_into_fused`]). Multi-stripe repairs go
-//!    through [`RepairProgram::execute_batch`], which the cluster fans
-//!    out over a worker pool for whole-node repair
-//!    ([`crate::cluster::Cluster::repair_all_parallel`]).
+//!    ([`crate::gf::combine_into_fused`]). For sources that *stream*,
+//!    [`RepairProgram::execute_pipelined`] uses a compile-time
+//!    readiness frontier to fire each op as soon as its operands
+//!    arrive from a [`StreamingBlockSource`] — degraded reads decode
+//!    through it, and the cluster's whole-node repair
+//!    ([`crate::cluster::Cluster::repair_all_parallel`]) overlaps
+//!    fetch with decode at stripe granularity (readiness-queue
+//!    workers) and in the virtual clock (`EXPERIMENTS.md` §Overlap),
+//!    while replaying resident blocks cache-blocked.
+//!    [`RepairProgram::execute_batch`] remains the CPU-bound multi-
+//!    stripe primitive for callers that already hold whole stripes in
+//!    memory; it amortises fetch-set resolution and scratch sizing
+//!    but does not overlap fetch.
 //!
 //! [`PlanCache`] memoizes stage 2 so whole-cluster repairs and the
 //! Figure 6/9 sweeps compile each erasure pattern exactly once.
@@ -32,9 +41,10 @@
 pub mod cache;
 pub mod program;
 
-pub use cache::{CacheStats, PlanCache};
+pub use cache::{CacheStats, PlanCache, DEFAULT_PLAN_CACHE_CAPACITY};
 pub use program::{
-    BlockSource, RepairProgram, ScratchBuffers, SliceSource, DEFAULT_CHUNK_BYTES,
+    BlockSource, FetchOrderStream, IterStream, RepairProgram, ScratchBuffers, SliceSource,
+    StreamingBlockSource, DEFAULT_CHUNK_BYTES,
 };
 
 use crate::codec::StripeCodec;

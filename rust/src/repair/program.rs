@@ -30,13 +30,24 @@
 //! A program depends only on `(scheme, erasure pattern)`, never on
 //! stripe contents or block size, so one compilation replays across
 //! thousands of stripes — see [`super::PlanCache`].
+//!
+//! The op list is a dependency DAG (peeling ops only read earlier
+//! outputs), so besides the all-at-once [`RepairProgram::execute`] the
+//! program carries a compile-time **readiness frontier** (`ready_after`:
+//! each fetched block / earlier-op output → the ops it unblocks) that
+//! drives [`RepairProgram::execute_pipelined`]: blocks stream in from a
+//! [`StreamingBlockSource`] in *any* order and each GF combine fires as
+//! soon as its last operand is available, instead of waiting for the
+//! whole fetch set. That is what lets the cluster overlap datanode
+//! transfer time with decode time (see `EXPERIMENTS.md` §Overlap).
 
 use crate::codec;
 use crate::codes::{Equation, Scheme};
 use crate::gf;
 use crate::repair::RepairPlan;
 use anyhow::Context;
-use std::collections::{BTreeMap, BTreeSet};
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, BTreeSet, BinaryHeap};
 use std::ops::Range;
 
 /// Default column width for cache-blocked execution. 64 KiB per operand
@@ -80,6 +91,67 @@ pub trait BlockSource {
                 })
             })
             .collect()
+    }
+}
+
+/// Supplies survivor blocks *as they become available* — the streaming
+/// counterpart of [`BlockSource`], consumed by
+/// [`RepairProgram::execute_pipelined`].
+///
+/// A source must deliver **exactly** the program's [`RepairProgram::fetch`]
+/// set, each block once, all with one common length, in any order (the
+/// executor's readiness frontier tolerates arbitrary arrival order — a
+/// netsim-costed fetcher delivers in virtual-arrival order, the default
+/// [`FetchOrderStream`] adapter in sorted fetch-set order). Blocks are
+/// handed over by value: a streaming fetch owns the received bytes
+/// anyway, and the executor must retain operands until their last
+/// reader has run.
+///
+/// Any infallible `Iterator<Item = (usize, Vec<u8>)>` streams via the
+/// [`IterStream`] wrapper, so an in-memory `BTreeMap<usize, Vec<u8>>` of
+/// fetched segments streams with `IterStream(map.into_iter())`.
+pub trait StreamingBlockSource {
+    /// Deliver the next available survivor block `(index, bytes)`, or
+    /// `None` once the whole fetch set has been delivered. Errors are
+    /// real (failed fetch), never flow control.
+    fn next_block(&mut self) -> anyhow::Result<Option<(usize, Vec<u8>)>>;
+}
+
+/// [`StreamingBlockSource`] over any infallible iterator of owned
+/// `(block index, bytes)` pairs — arrival-ordered fetch results, maps of
+/// fetched segments, test fixtures.
+pub struct IterStream<I>(pub I);
+
+impl<I: Iterator<Item = (usize, Vec<u8>)>> StreamingBlockSource for IterStream<I> {
+    fn next_block(&mut self) -> anyhow::Result<Option<(usize, Vec<u8>)>> {
+        Ok(self.0.next())
+    }
+}
+
+/// Default [`StreamingBlockSource`] adapter over any [`BlockSource`]:
+/// delivers the program's fetch set one block at a time, in sorted
+/// fetch-set order. Lets every existing source (slices, stores, the
+/// cluster fetcher) run under [`RepairProgram::execute_pipelined`]
+/// unchanged.
+pub struct FetchOrderStream<'a, S: BlockSource> {
+    source: &'a mut S,
+    order: Vec<usize>,
+    pos: usize,
+}
+
+impl<'a, S: BlockSource> FetchOrderStream<'a, S> {
+    /// Stream `source` in `program`'s fetch-set order.
+    pub fn new(program: &RepairProgram, source: &'a mut S) -> Self {
+        Self { source, order: program.fetch_order.clone(), pos: 0 }
+    }
+}
+
+impl<S: BlockSource> StreamingBlockSource for FetchOrderStream<'_, S> {
+    fn next_block(&mut self) -> anyhow::Result<Option<(usize, Vec<u8>)>> {
+        let Some(&b) = self.order.get(self.pos) else { return Ok(None) };
+        self.pos += 1;
+        let bytes = self.source.blocks(&[b])?[0].to_vec();
+        Ok(Some((b, bytes)))
     }
 }
 
@@ -207,6 +279,20 @@ pub struct RepairProgram {
     fetch: BTreeSet<usize>,
     /// `outputs[i]` = op index producing `plan.erased[i]`.
     outputs: Vec<usize>,
+    /// Readiness frontier for pipelined execution: one entry per input —
+    /// indices `0..fetch.len()` are fetch-set positions (sorted order),
+    /// `fetch.len()..` are op outputs — listing the ops that input
+    /// unblocks. Derived once at compile time from the op list.
+    ready_after: Vec<Vec<usize>>,
+    /// Per-op operand count (fetched blocks + earlier-op outputs): the
+    /// op fires when this many of its inputs have become available.
+    pending_inputs: Vec<usize>,
+    /// The fetch set as a sorted vector — the pipelined executor's
+    /// block→position index, precomputed.
+    fetch_order: Vec<usize>,
+    /// `op_fetch_pos[i]` = fetch-set positions of `ops[i].fetch_idx`,
+    /// resolved at compile time so execution never searches.
+    op_fetch_pos: Vec<Vec<usize>>,
 }
 
 impl RepairProgram {
@@ -287,7 +373,42 @@ impl RepairProgram {
             })
             .collect::<anyhow::Result<Vec<usize>>>()?;
         anyhow::ensure!(!fetch.is_empty(), "program would read no survivor blocks");
-        Ok(RepairProgram { plan: plan.clone(), ops, fetch, outputs })
+
+        // Readiness frontier: invert the op list's operand edges so the
+        // pipelined executor can fire ops as inputs become available,
+        // resolving every operand's fetch-set position once, here.
+        let fetch_order: Vec<usize> = fetch.iter().copied().collect();
+        let mut ready_after: Vec<Vec<usize>> = vec![Vec::new(); fetch_order.len() + ops.len()];
+        let mut pending_inputs = vec![0usize; ops.len()];
+        let mut op_fetch_pos: Vec<Vec<usize>> = Vec::with_capacity(ops.len());
+        for (i, op) in ops.iter().enumerate() {
+            let mut positions = Vec::with_capacity(op.fetch_idx.len());
+            for &b in &op.fetch_idx {
+                let pos = fetch_order
+                    .binary_search(&b)
+                    .expect("op reads a block outside the fetch set");
+                positions.push(pos);
+                ready_after[pos].push(i);
+                pending_inputs[i] += 1;
+            }
+            op_fetch_pos.push(positions);
+            for &j in &op.solved_idx {
+                debug_assert!(j < i, "op list must be topologically ordered");
+                ready_after[fetch_order.len() + j].push(i);
+                pending_inputs[i] += 1;
+            }
+        }
+
+        Ok(RepairProgram {
+            plan: plan.clone(),
+            ops,
+            fetch,
+            outputs,
+            ready_after,
+            pending_inputs,
+            fetch_order,
+            op_fetch_pos,
+        })
     }
 
     /// Convenience: plan + compile in one call.
@@ -341,8 +462,110 @@ impl RepairProgram {
         scratch: &'s mut ScratchBuffers,
         chunk_bytes: usize,
     ) -> anyhow::Result<Vec<&'s [u8]>> {
-        let fetch_idx: Vec<usize> = self.fetch.iter().copied().collect();
-        let len = self.run_into_scratch(source, scratch, chunk_bytes, &fetch_idx)?;
+        let len = self.run_into_scratch(source, scratch, chunk_bytes, &self.fetch_order)?;
+        Ok(self.outputs.iter().map(|&i| &scratch.bufs[i][..len]).collect())
+    }
+
+    /// Readiness-driven execution: pull survivor blocks from a
+    /// [`StreamingBlockSource`] **in whatever order they arrive** and run
+    /// each GF op the moment its last operand (fetched block or earlier
+    /// op output) is available, instead of waiting for the whole fetch
+    /// set. Output contract is identical to [`Self::execute`]:
+    /// reconstructed blocks land in `scratch` and are returned in
+    /// [`Self::erased`] order, byte-for-byte equal to the all-at-once
+    /// path (property-pinned).
+    ///
+    /// The stream must deliver exactly the [`Self::fetch`] set, each
+    /// block once, all of one common length; anything else is a real
+    /// error. Ops run whole-block (readiness replaces cache blocking —
+    /// the overlap win dwarfs the L2 residency win on fetch-bound
+    /// paths; CPU-bound callers with the full stripe in hand should
+    /// keep using [`Self::execute`]).
+    pub fn execute_pipelined<'s, S: StreamingBlockSource>(
+        &self,
+        source: &mut S,
+        scratch: &'s mut ScratchBuffers,
+    ) -> anyhow::Result<Vec<&'s [u8]>> {
+        let n_fetch = self.fetch_order.len();
+        let mut arrived: Vec<Option<Vec<u8>>> = Vec::new();
+        arrived.resize_with(n_fetch, || None);
+        let mut pending = self.pending_inputs.clone();
+        // Min-heap: among simultaneously-ready ops, run in op order so
+        // execution is deterministic for a given arrival order.
+        let mut ready: BinaryHeap<Reverse<usize>> = BinaryHeap::new();
+        let mut len: Option<usize> = None;
+        let mut delivered = 0usize;
+        let mut executed = 0usize;
+
+        while let Some((b, bytes)) = source.next_block()? {
+            let pos = self
+                .fetch_order
+                .binary_search(&b)
+                .map_err(|_| anyhow::anyhow!("stream delivered block {b} outside the fetch set"))?;
+            anyhow::ensure!(arrived[pos].is_none(), "stream delivered block {b} twice");
+            match len {
+                None => {
+                    len = Some(bytes.len());
+                    scratch.prepare(self.ops.len(), bytes.len());
+                    // Ops with no inputs of their own (degenerate but
+                    // legal) become runnable once sizing is known.
+                    for (i, &p) in self.pending_inputs.iter().enumerate() {
+                        if p == 0 {
+                            ready.push(Reverse(i));
+                        }
+                    }
+                }
+                Some(l) => anyhow::ensure!(
+                    bytes.len() == l,
+                    "ragged survivor block {b} ({} bytes, expected {l})",
+                    bytes.len()
+                ),
+            }
+            arrived[pos] = Some(bytes);
+            delivered += 1;
+            for &op in &self.ready_after[pos] {
+                pending[op] -= 1;
+                if pending[op] == 0 {
+                    ready.push(Reverse(op));
+                }
+            }
+            // Drain everything this arrival unblocked, cascading through
+            // op-output edges of the frontier.
+            while let Some(Reverse(i)) = ready.pop() {
+                let l = len.expect("len set on first arrival");
+                let op = &self.ops[i];
+                let (done, rest) = scratch.bufs.split_at_mut(i);
+                let dst = &mut rest[0][..l];
+                let mut srcs: Vec<&[u8]> =
+                    Vec::with_capacity(op.fetch_idx.len() + op.solved_idx.len());
+                for &fp in &self.op_fetch_pos[i] {
+                    srcs.push(arrived[fp].as_deref().expect("readiness implies arrival"));
+                }
+                for &j in &op.solved_idx {
+                    srcs.push(&done[j][..l]);
+                }
+                gf::combine_into_fused(&op.coeffs, &srcs, dst);
+                executed += 1;
+                for &dep in &self.ready_after[n_fetch + i] {
+                    pending[dep] -= 1;
+                    if pending[dep] == 0 {
+                        ready.push(Reverse(dep));
+                    }
+                }
+            }
+        }
+
+        anyhow::ensure!(
+            delivered == n_fetch,
+            "stream ended after {delivered} of {n_fetch} fetch-set blocks"
+        );
+        anyhow::ensure!(
+            executed == self.ops.len(),
+            "{} of {} ops never became ready (broken readiness frontier)",
+            self.ops.len() - executed,
+            self.ops.len()
+        );
+        let len = len.context("program fetches nothing")?;
         Ok(self.outputs.iter().map(|&i| &scratch.bufs[i][..len]).collect())
     }
 
@@ -362,10 +585,9 @@ impl RepairProgram {
         scratch: &mut ScratchBuffers,
         mut sink: impl FnMut(usize, &[&[u8]]) -> anyhow::Result<()>,
     ) -> anyhow::Result<()> {
-        let fetch_idx: Vec<usize> = self.fetch.iter().copied().collect();
         for (si, source) in sources.iter_mut().enumerate() {
             let len = self
-                .run_into_scratch(source, scratch, DEFAULT_CHUNK_BYTES, &fetch_idx)
+                .run_into_scratch(source, scratch, DEFAULT_CHUNK_BYTES, &self.fetch_order)
                 .with_context(|| format!("stripe {si} of batch"))?;
             let outs: Vec<&[u8]> =
                 self.outputs.iter().map(|&i| &scratch.bufs[i][..len]).collect();
@@ -598,6 +820,157 @@ mod tests {
         });
         assert!(res.is_err());
         assert_eq!(calls, 2, "sink must not run past the erroring stripe");
+    }
+
+    #[test]
+    fn pipelined_matches_execute_in_fetch_order() {
+        // The default adapter (fetch-set order) must reproduce execute
+        // exactly, including the two-step cascade pattern.
+        let codec = StripeCodec::new(Scheme::new(SchemeKind::CpAzure, 24, 2, 2));
+        let s = &codec.scheme;
+        let mut rng = Prng::new(0x91955);
+        let data: Vec<Vec<u8>> = (0..s.k).map(|_| rng.bytes(777)).collect();
+        let stripe = codec.encode_stripe(&data);
+        let erased = vec![0usize, 26];
+        let program = RepairProgram::for_pattern(s, &erased).unwrap();
+        let blocks = erase(&stripe, &erased);
+
+        let mut scratch = ScratchBuffers::new();
+        let want: Vec<Vec<u8>> = program
+            .execute(&mut SliceSource::new(&blocks), &mut scratch)
+            .unwrap()
+            .into_iter()
+            .map(<[u8]>::to_vec)
+            .collect();
+
+        let mut scratch = ScratchBuffers::new();
+        let mut source = SliceSource::new(&blocks);
+        let mut stream = FetchOrderStream::new(&program, &mut source);
+        let got = program.execute_pipelined(&mut stream, &mut scratch).unwrap();
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(want.iter()) {
+            assert_eq!(*g, &w[..]);
+        }
+        for (i, &e) in erased.iter().enumerate() {
+            assert_eq!(got[i], &stripe[e][..]);
+        }
+    }
+
+    #[test]
+    fn pipelined_accepts_any_arrival_order() {
+        // Readiness scheduling must be arrival-order independent: a
+        // multi-step cascade repaired from blocks delivered in reversed
+        // and shuffled orders still reconstructs the same bytes.
+        let codec = StripeCodec::new(Scheme::new(SchemeKind::CpUniform, 12, 2, 2));
+        let s = &codec.scheme;
+        let mut rng = Prng::new(0xA11041);
+        let data: Vec<Vec<u8>> = (0..s.k).map(|_| rng.bytes(333)).collect();
+        let stripe = codec.encode_stripe(&data);
+        let erased = vec![1usize, s.local_parity(0)];
+        let program = RepairProgram::for_pattern(s, &erased).unwrap();
+        let blocks = erase(&stripe, &erased);
+        for trial in 0..6 {
+            let mut order: Vec<usize> = program.fetch().iter().copied().collect();
+            match trial {
+                0 => order.reverse(),
+                _ => rng.shuffle(&mut order),
+            }
+            let deliveries: Vec<(usize, Vec<u8>)> =
+                order.iter().map(|&b| (b, blocks[b].clone().unwrap())).collect();
+            let mut scratch = ScratchBuffers::new();
+            let out = program
+                .execute_pipelined(&mut IterStream(deliveries.into_iter()), &mut scratch)
+                .unwrap();
+            for (i, &e) in erased.iter().enumerate() {
+                assert_eq!(out[i], &stripe[e][..], "trial {trial} block {e}");
+            }
+        }
+    }
+
+    #[test]
+    fn pipelined_stream_misbehavior_is_a_real_error() {
+        let codec = StripeCodec::new(Scheme::new(SchemeKind::AzureLrc, 6, 2, 2));
+        let s = &codec.scheme;
+        let mut rng = Prng::new(0x57BAD);
+        let data: Vec<Vec<u8>> = (0..s.k).map(|_| rng.bytes(128)).collect();
+        let stripe = codec.encode_stripe(&data);
+        let program = RepairProgram::for_pattern(s, &[0]).unwrap();
+        let fetch: Vec<usize> = program.fetch().iter().copied().collect();
+        let deliver = |order: &[usize]| -> Vec<(usize, Vec<u8>)> {
+            order.iter().map(|&b| (b, stripe[b].clone())).collect()
+        };
+        let mut scratch = ScratchBuffers::new();
+
+        // truncated stream
+        let short = deliver(&fetch[..fetch.len() - 1]);
+        assert!(program
+            .execute_pipelined(&mut IterStream(short.into_iter()), &mut scratch)
+            .is_err());
+        // duplicate block
+        let mut dup = deliver(&fetch);
+        dup.push(dup[0].clone());
+        assert!(program
+            .execute_pipelined(&mut IterStream(dup.into_iter()), &mut scratch)
+            .is_err());
+        // block outside the fetch set
+        let mut foreign = deliver(&fetch[..fetch.len() - 1]);
+        foreign.push((0, stripe[1].clone())); // block 0 is the erasure
+        assert!(program
+            .execute_pipelined(&mut IterStream(foreign.into_iter()), &mut scratch)
+            .is_err());
+        // ragged lengths
+        let mut ragged = deliver(&fetch);
+        ragged.last_mut().unwrap().1.truncate(17);
+        assert!(program
+            .execute_pipelined(&mut IterStream(ragged.into_iter()), &mut scratch)
+            .is_err());
+    }
+
+    #[test]
+    fn property_pipelined_matches_execute() {
+        // ISSUE 4 acceptance: execute_pipelined is byte-identical to
+        // execute for random schemes, patterns and arrival orders.
+        check("pipelined-vs-execute", 120, 0x9195_11FE_D0_u64, |rng| {
+            let (k, r, p) = crate::PARAMS[rng.below(5)];
+            let kind = SchemeKind::ALL_LRC[rng.below(6)];
+            let codec = StripeCodec::new(Scheme::new(kind, k, r, p));
+            let s = &codec.scheme;
+            let f = 1 + rng.below((r + p).min(4));
+            let erased = rng.distinct(s.n(), f);
+            let Some(plan) = repair::plan(s, &erased) else {
+                return Ok(());
+            };
+            let program = RepairProgram::compile(s, &plan).map_err(|e| e.to_string())?;
+            let blen = 64 + rng.below(97);
+            let data: Vec<Vec<u8>> = (0..k).map(|_| rng.bytes(blen)).collect();
+            let stripe = codec.encode_stripe(&data);
+            let blocks = erase(&stripe, &erased);
+
+            let mut scratch = ScratchBuffers::new();
+            let want: Vec<Vec<u8>> = program
+                .execute(&mut SliceSource::new(&blocks), &mut scratch)
+                .map_err(|e| e.to_string())?
+                .into_iter()
+                .map(<[u8]>::to_vec)
+                .collect();
+
+            let mut order: Vec<usize> = program.fetch().iter().copied().collect();
+            rng.shuffle(&mut order);
+            let deliveries: Vec<(usize, Vec<u8>)> =
+                order.iter().map(|&b| (b, blocks[b].clone().unwrap())).collect();
+            // Reused (stale) scratch: the pipelined path must fully
+            // overwrite its windows just like execute does.
+            let got = program
+                .execute_pipelined(&mut IterStream(deliveries.into_iter()), &mut scratch)
+                .map_err(|e| e.to_string())?;
+            for (i, w) in want.iter().enumerate() {
+                crate::prop_assert!(
+                    got[i] == &w[..],
+                    "{kind:?} k={k} erased={erased:?}: pipelined != execute at output {i}"
+                );
+            }
+            Ok(())
+        });
     }
 
     #[test]
