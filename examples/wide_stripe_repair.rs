@@ -46,13 +46,13 @@ fn main() -> anyhow::Result<()> {
         // single data-block repair
         let v = c.meta.stripes[&sid].block_nodes[0];
         c.fail_node(v);
-        let rep_d = c.repair_stripe(sid, &[0])?;
+        let rep_d = c.repair().stripe(sid, &[0]).run_single()?;
         c.restore_node(v);
 
         // single local-parity repair
         let v = c.meta.stripes[&sid].block_nodes[lp];
         c.fail_node(v);
-        let rep_l = c.repair_stripe(sid, &[lp])?;
+        let rep_l = c.repair().stripe(sid, &[lp]).run_single()?;
         c.restore_node(v);
 
         // D1 + L1 double failure
@@ -60,7 +60,7 @@ fn main() -> anyhow::Result<()> {
         let v1 = c.meta.stripes[&sid].block_nodes[lp];
         c.fail_node(v0);
         c.fail_node(v1);
-        let rep_dl = c.repair_stripe(sid, &[0, lp])?;
+        let rep_dl = c.repair().stripe(sid, &[0, lp]).run_single()?;
         c.restore_node(v0);
         c.restore_node(v1);
         assert!(c.scrub_stripe(sid)?, "stripe corrupt after repairs");

@@ -106,7 +106,7 @@ fn ablation_placement() {
         for b in 0..n {
             let v = c.meta.stripes[&sid].block_nodes[b];
             c.fail_node(v);
-            total += c.repair_stripe(sid, &[b]).unwrap().total_s();
+            total += c.repair().stripe(sid, &[b]).run_single().unwrap().total_s();
             c.restore_node(v);
         }
         println!("{:<16} mean single-node repair {:.4}s", name, total / n as f64);
@@ -140,7 +140,7 @@ fn ablation_latency() {
             for b in 0..n {
                 let v = c.meta.stripes[&sid].block_nodes[b];
                 c.fail_node(v);
-                total += c.repair_stripe(sid, &[b]).unwrap().total_s();
+                total += c.repair().stripe(sid, &[b]).run_single().unwrap().total_s();
                 c.restore_node(v);
             }
             times.push(total / n as f64);

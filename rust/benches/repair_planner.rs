@@ -18,10 +18,15 @@
 //!   (netsim-costed fetch → readiness-queue decode → write-back) at
 //!   1/2/4/8 decode threads, recorded in `BENCH_repair_pipeline.json`
 //!   (ISSUE 4): per-stripe serial wave time vs overlapped
-//!   `completion_s`, plus wall-clock drain times.
+//!   `completion_s`, plus wall-clock drain times;
+//! * a **contended whole-node session sweep** (ISSUE 5): the same
+//!   repairs as one `TrafficPlane` session under 0/25/50% foreground
+//!   load at 1/2/4/8 decode threads — shared-timeline completion vs the
+//!   serial wave bound, contention delay and write-back overlap —
+//!   recorded in `BENCH_repair_contention.json`.
 
 use cp_lrc::bench_harness::{Bench, Stats};
-use cp_lrc::cluster::{Cluster, ClusterConfig};
+use cp_lrc::cluster::{Cluster, ClusterConfig, ForegroundLoad};
 use cp_lrc::codec::StripeCodec;
 use cp_lrc::codes::{Scheme, SchemeKind};
 use cp_lrc::gf;
@@ -289,7 +294,8 @@ fn main() {
                     // block 0 (repair relocates it each round)
                     let victim = c.meta.stripes[&0].block_nodes[0];
                     c.fail_node(victim);
-                    let reports = c.repair_all_parallel(threads).expect("whole-node repair");
+                    let reports =
+                        c.repair().threads(threads).run().expect("whole-node repair").reports;
                     c.restore_node(victim);
                     wave_s = reports.iter().map(|r| r.total_s()).sum();
                     pipe_s = reports.iter().map(|r| r.completion_s).sum();
@@ -316,6 +322,99 @@ fn main() {
             }
         }
     }
+    // ------------------------------------------------------------------
+    // Section 5 (ISSUE 5 acceptance) — whole-node repair through the
+    // TrafficPlane session at 0/25/50% foreground load, 1/2/4/8 decode
+    // threads: per point, the shared-timeline session completion, the
+    // serial wave bound, the contention delay and the write-back-overlap
+    // saving. Results land in BENCH_repair_contention.json.
+    // ------------------------------------------------------------------
+    let mut contention_results: Vec<String> = Vec::new();
+    {
+        const STRIPES: usize = 12;
+        const BLK: usize = 64 * 1024;
+        let mut c = Cluster::new(ClusterConfig {
+            num_datanodes: 31,
+            block_size: BLK,
+            kind: SchemeKind::CpAzure,
+            k: 24,
+            r: 2,
+            p: 2,
+            ..Default::default()
+        });
+        c.fill_random_stripes(STRIPES, 0xC0D7);
+        for fg_pct in [0usize, 25, 50] {
+            for threads in [1usize, 2, 4, 8] {
+                let mut completion_s = 0.0f64;
+                let mut serial_s = 0.0f64;
+                let mut contention_s = 0.0f64;
+                let mut wb_overlap_s = 0.0f64;
+                let mut jobs = 0usize;
+                let stats = b.run(
+                    &format!(
+                        "repair_contention/whole_node/(24,2,2)/{STRIPES}x64KiB/fg{fg_pct}/t{threads}"
+                    ),
+                    || {
+                        let victim = c.meta.stripes[&0].block_nodes[0];
+                        c.fail_node(victim);
+                        let mut session = c.repair().threads(threads);
+                        if fg_pct > 0 {
+                            session = session.foreground(ForegroundLoad {
+                                fraction: fg_pct as f64 / 100.0,
+                                request_bytes: BLK as u64,
+                                seed: 0xF06,
+                            });
+                        }
+                        let report = session.run().expect("contended whole-node repair");
+                        c.restore_node(victim);
+                        completion_s = report.completion_s;
+                        serial_s = report.serial_s;
+                        contention_s = report.contention_delay_s;
+                        wb_overlap_s = report.write_back_overlap_s;
+                        jobs = report.reports.len();
+                        jobs
+                    },
+                );
+                if let Some(st) = stats {
+                    let saving =
+                        if serial_s > 0.0 { 100.0 * (1.0 - completion_s / serial_s) } else { 0.0 };
+                    println!(
+                        "  contended whole-node fg{fg_pct}% t{threads}: {jobs} stripes, \
+                         session {completion_s:.4}s vs serial {serial_s:.4}s \
+                         ({saving:.1}% saved, {contention_s:.4}s contention, \
+                         {wb_overlap_s:.5}s wb-overlap), {:.2} ms wall-clock/session",
+                        st.median_ns / 1e6
+                    );
+                    contention_results.push(format!(
+                        "      {{\n        \"foreground_pct\": {fg_pct}, \"threads\": {threads}, \
+                         \"stripes\": {STRIPES}, \"block_bytes\": {BLK}, \"jobs\": {jobs},\n        \
+                         \"session_wallclock\": {},\n        \
+                         \"session_completion_s\": {completion_s:.6}, \"serial_bound_s\": {serial_s:.6},\n        \
+                         \"contention_delay_s\": {contention_s:.6}, \"write_back_overlap_s\": {wb_overlap_s:.6},\n        \
+                         \"overlap_saving_pct\": {saving:.2}\n      }}",
+                        json_stats(&st)
+                    ));
+                }
+            }
+        }
+    }
+    if !contention_results.is_empty() {
+        let doc = format!(
+            "{{\n  \"bench\": \"repair_contention\",\n  \
+             \"description\": \"whole-node repair as one TrafficPlane session under 0/25/50% \
+             foreground load at 1/2/4/8 decode threads: shared-timeline session completion vs \
+             the serial wave bound, plus contention-delay and write-back-overlap accounting\",\n  \
+             \"unit\": \"ns (wall-clock stats) / s (virtual clocks)\",\n  \
+             \"regenerate\": \"cargo bench --bench repair_planner\",\n  \
+             \"sections\": {{\n    \"whole_node_foreground_sweep\": [\n{}\n    ]\n  }}\n}}\n",
+            contention_results.join(",\n")
+        );
+        match std::fs::write("BENCH_repair_contention.json", &doc) {
+            Ok(()) => println!("wrote BENCH_repair_contention.json"),
+            Err(e) => eprintln!("could not write BENCH_repair_contention.json: {e}"),
+        }
+    }
+
     if !pipeline_results.is_empty() {
         let doc = format!(
             "{{\n  \"bench\": \"repair_pipeline\",\n  \

@@ -7,12 +7,20 @@
 //! reconstructs a whole block also reconstructs any byte range of it from
 //! the same range of its inputs — that is what makes segment-level repair
 //! sound.
+//!
+//! All three modes fetch through the **shared `StripeFetcher`** — one
+//! per read, with a per-mode caching policy (whole-block /
+//! window-per-request / overlap-aware reuse), so surviving-extent reads
+//! and decode-source windows share one cache and one flow ledger, and
+//! every byte the read moves is charged by the same fetcher that serves
+//! the repair executor. Netsim costing goes through the
+//! [`super::TrafficPlane`]: standalone reads on an isolated one-shot
+//! pass, in-session reads ([`super::RepairSession::degraded_reads`]) on
+//! the session's shared contended timeline.
 
-use super::metadata::{BlockKey, FileId};
-use super::{net_id, Cluster, PROXY};
+use super::metadata::FileId;
+use super::{Cluster, FetchPolicy, TrafficPlane};
 use crate::netsim::Flow;
-use crate::repair::IterStream;
-use std::collections::BTreeMap;
 
 /// Degraded-read strategy knob (Fig 10 compares the first and the last).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -29,17 +37,46 @@ pub enum ReadMode {
 #[derive(Clone, Debug)]
 pub struct ReadReport {
     pub bytes: Vec<u8>,
-    /// Simulated latency, seconds.
+    /// Simulated latency, seconds (isolated pass for standalone reads;
+    /// shared-timeline completion for in-session reads).
     pub time_s: f64,
     /// Total bytes moved over the network.
     pub bytes_read: u64,
     pub degraded: bool,
 }
 
+/// A degraded read's data + flow ledger, before netsim costing — what
+/// the session scheduler admits to the shared timeline.
+pub(super) struct ReadOutcome {
+    pub(super) bytes: Vec<u8>,
+    pub(super) flows: Vec<Flow>,
+    pub(super) bytes_read: u64,
+    pub(super) degraded: bool,
+}
+
 impl Cluster {
     /// Read `file`, transparently reconstructing any segments that live on
-    /// failed nodes (§V-B decoding workflow, steps 1–5).
+    /// failed nodes (§V-B decoding workflow, steps 1–5), costed on an
+    /// isolated [`TrafficPlane`] pass.
     pub fn degraded_read(&self, file: FileId, mode: ReadMode) -> anyhow::Result<ReadReport> {
+        let out = self.degraded_read_core(file, mode)?;
+        let (_, time_s) = TrafficPlane::new(&self.net).cost(&out.flows);
+        Ok(ReadReport {
+            bytes: out.bytes,
+            time_s,
+            bytes_read: out.bytes_read,
+            degraded: out.degraded,
+        })
+    }
+
+    /// The read itself: move the bytes and record the flows, leaving the
+    /// netsim costing to the caller (isolated pass or shared session
+    /// timeline).
+    pub(super) fn degraded_read_core(
+        &self,
+        file: FileId,
+        mode: ReadMode,
+    ) -> anyhow::Result<ReadOutcome> {
         let obj = self
             .meta
             .objects
@@ -53,52 +90,40 @@ impl Cluster {
         let scheme = self.scheme();
         let failed = self.meta.failed_blocks(stripe);
 
-        let mut out = vec![0u8; obj.size];
-        // One netsim flow per transfer (survivor→proxy).
-        let mut transfers: Vec<Flow> = Vec::new();
-        let charge = |transfers: &mut Vec<Flow>, nid: usize, bytes: u64| {
-            transfers.push(Flow { src: net_id(nid), dst: PROXY, bytes, start: 0.0 });
+        // One shared fetcher for the whole read: the mode picks the
+        // caching/accounting policy, the fetcher owns every byte moved.
+        let policy = match mode {
+            ReadMode::BlockLevel => FetchPolicy::WholeBlock,
+            ReadMode::FileLevel => FetchPolicy::Window,
+            ReadMode::FileLevelDedup => FetchPolicy::WindowReuse,
         };
-        let mut bytes_read = 0u64;
-        // Cache of fetched (block, range) segments for dedup; keyed by
-        // block, holds (off, data) of the single coalesced range we read.
-        let mut seg_cache: BTreeMap<usize, (usize, Vec<u8>)> = BTreeMap::new();
+        let mut fetcher =
+            self.stripe_fetcher_policy(stripe, policy, 0..stripe.block_size);
+        let mut out = vec![0u8; obj.size];
         let mut degraded = false;
 
-        // Pass 1: surviving extents — read them directly (file-aligned).
+        // Pass 1: surviving extents — file-aligned segments through the
+        // fetcher cache (under WindowReuse they double as decode inputs
+        // for pass 2: repeated-read elimination).
         for e in &obj.extents {
             let b = e.block_index as usize;
             if failed.contains(&b) {
                 continue;
             }
-            let nid = stripe.block_nodes[b];
-            let key = BlockKey { stripe: obj.stripe_id, index: e.block_index };
-            let seg = match mode {
-                ReadMode::BlockLevel => {
-                    let whole = self.nodes[nid]
-                        .get(key)
-                        .ok_or_else(|| anyhow::anyhow!("block {b} unavailable"))?;
-                    charge(&mut transfers, nid, whole.len() as u64);
-                    bytes_read += whole.len() as u64;
-                    let seg = whole[e.block_off..e.block_off + e.len].to_vec();
-                    seg_cache.insert(b, (0, whole));
-                    seg
-                }
-                ReadMode::FileLevel | ReadMode::FileLevelDedup => {
-                    let seg = self.nodes[nid]
-                        .get_segment(key, e.block_off, e.len)
-                        .ok_or_else(|| anyhow::anyhow!("segment of block {b} unavailable"))?;
-                    charge(&mut transfers, nid, e.len as u64);
-                    bytes_read += e.len as u64;
-                    seg_cache.insert(b, (e.block_off, seg.clone()));
-                    seg
-                }
-            };
+            let seg = fetcher.read_segment(b, e.block_off, e.len)?;
             out[e.file_off..e.file_off + e.len].copy_from_slice(&seg);
         }
 
-        // Pass 2: extents on failed blocks — plan a repair, fetch only the
-        // needed ranges of the plan's sources, reconstruct the segment.
+        // Pass 2: extents on failed blocks — one compiled program covers
+        // all failed blocks the file touches (the multi-node degraded
+        // read of Fig 5(b)); every failed block is erased even if the
+        // file only touches some (they are unavailable as inputs).
+        // Compiled once per pattern, shared with whole-block repairs via
+        // the cluster's PlanCache. Per failed extent the fetcher window
+        // is re-aimed at the extent's byte range and the cache-blocked
+        // executor reconstructs exactly that range of range-sized
+        // pseudo-blocks — the same plan→compile→execute path as stripe
+        // repair.
         let failed_extents: Vec<_> = obj
             .extents
             .iter()
@@ -106,145 +131,27 @@ impl Cluster {
             .collect();
         if !failed_extents.is_empty() {
             degraded = true;
-            // One program covers all failed blocks the file touches (the
-            // multi-node degraded read of Fig 5(b)).
-            // The program must treat EVERY failed block as erased (they
-            // are unavailable as inputs) even if the file only touches
-            // some. Compiled once per pattern, shared with whole-block
-            // repairs via the cluster's PlanCache.
-            let program =
-                self.programs.lock().unwrap().get_or_compile(scheme, &failed)?;
-            let fetch = program.fetch();
-
+            let program = self.programs.lock().unwrap().get_or_compile(scheme, &failed)?;
             for e in &failed_extents {
                 let b = e.block_index as usize;
                 let (lo, len) = (e.block_off, e.len);
                 let pos = program
                     .output_index(b)
                     .ok_or_else(|| anyhow::anyhow!("block {b} not in repair program"))?;
-                // All modes reconstruct through the shared readiness-
-                // driven executor over range-sized pseudo-blocks (GF
-                // math is bytewise, so a block-level program is also a
-                // segment-level program) — the same code path as stripe
-                // repair, single- through whole-node.
-                let seg: Vec<u8> = if mode == ReadMode::FileLevel {
-                    // Windowed netsim-costed fetcher: only [lo, lo+len)
-                    // of every plan source moves, and the flows charge
-                    // exactly those bytes. The fetcher caches in place,
-                    // so the cache-blocked executor reads it zero-copy.
-                    let mut source = self.stripe_fetcher_range(stripe, lo..lo + len);
-                    let rec = {
-                        let mut scratch = self.scratch.lock().unwrap();
-                        let outs = program.execute(&mut source, &mut scratch)?;
-                        outs[pos].to_vec()
-                    };
-                    bytes_read += source.bytes_read;
-                    transfers.extend(source.flows.iter().copied());
-                    rec
-                } else {
-                    // BlockLevel / FileLevelDedup keep their mode-
-                    // specific fetch bookkeeping (whole blocks, or
-                    // repeated-read elimination against segments this
-                    // file already moved), then stream the fetched
-                    // ranges into the same executor.
-                    let mut ranges: BTreeMap<usize, Vec<u8>> = BTreeMap::new();
-                    for &src in fetch.iter() {
-                        let nid = stripe.block_nodes[src];
-                        let key = BlockKey { stripe: obj.stripe_id, index: src as u32 };
-                        let seg = match mode {
-                            ReadMode::FileLevel => unreachable!("handled above"),
-                            ReadMode::BlockLevel => {
-                                let whole = if let Some((0, w)) = seg_cache.get(&src) {
-                                    w.clone() // already fetched whole block
-                                } else {
-                                    let w = self.nodes[nid]
-                                        .get(key)
-                                        .ok_or_else(|| anyhow::anyhow!("block {src} gone"))?;
-                                    charge(&mut transfers, nid, w.len() as u64);
-                                    bytes_read += w.len() as u64;
-                                    seg_cache.insert(src, (0, w.clone()));
-                                    w
-                                };
-                                whole[lo..lo + len].to_vec()
-                            }
-                            ReadMode::FileLevelDedup => {
-                                // Repeated-read elimination: reuse overlap
-                                // with segments already fetched for this
-                                // file.
-                                if let Some((coff, cdata)) = seg_cache.get(&src) {
-                                    if *coff <= lo && lo + len <= coff + cdata.len() {
-                                        cdata[lo - coff..lo - coff + len].to_vec()
-                                    } else {
-                                        // partial overlap: fetch only the
-                                        // missing bytes
-                                        let (mlo, mhi) =
-                                            missing_range(*coff, cdata.len(), lo, len);
-                                        let fetched = self.nodes[nid]
-                                            .get_segment(key, mlo, mhi - mlo)
-                                            .ok_or_else(|| anyhow::anyhow!("segment gone"))?;
-                                        charge(&mut transfers, nid, (mhi - mlo) as u64);
-                                        bytes_read += (mhi - mlo) as u64;
-                                        splice_range(*coff, cdata, mlo, &fetched, lo, len)
-                                    }
-                                } else {
-                                    let seg = self.nodes[nid]
-                                        .get_segment(key, lo, len)
-                                        .ok_or_else(|| anyhow::anyhow!("segment gone"))?;
-                                    charge(&mut transfers, nid, len as u64);
-                                    bytes_read += len as u64;
-                                    seg_cache.insert(src, (lo, seg.clone()));
-                                    seg
-                                }
-                            }
-                        };
-                        ranges.insert(src, seg);
-                    }
-                    let mut scratch = self.scratch.lock().unwrap();
-                    let outs = program
-                        .execute_pipelined(&mut IterStream(ranges.into_iter()), &mut scratch)?;
-                    outs[pos].to_vec()
-                };
-                out[e.file_off..e.file_off + e.len].copy_from_slice(&seg);
+                fetcher.set_window(lo..lo + len);
+                let mut scratch = self.scratch.lock().unwrap();
+                let outs = program.execute(&mut fetcher, &mut scratch)?;
+                out[e.file_off..e.file_off + e.len].copy_from_slice(outs[pos]);
             }
         }
 
-        let (_, time_s) = self.net.run(&transfers);
-        Ok(ReadReport { bytes: out, time_s, bytes_read, degraded })
+        Ok(ReadOutcome {
+            bytes: out,
+            flows: fetcher.flows,
+            bytes_read: fetcher.bytes_read,
+            degraded,
+        })
     }
-}
-
-/// The sub-range of `[lo, lo+len)` not covered by the cached range
-/// `[coff, coff+clen)`; assumes partial overlap on one side.
-fn missing_range(coff: usize, clen: usize, lo: usize, len: usize) -> (usize, usize) {
-    let chi = coff + clen;
-    let hi = lo + len;
-    if lo < coff {
-        (lo, coff.min(hi))
-    } else {
-        (chi.max(lo), hi)
-    }
-}
-
-/// Assemble `[lo, lo+len)` out of the cached range and the fetched range.
-fn splice_range(
-    coff: usize,
-    cdata: &[u8],
-    mlo: usize,
-    fetched: &[u8],
-    lo: usize,
-    len: usize,
-) -> Vec<u8> {
-    let mut out = vec![0u8; len];
-    for i in 0..len {
-        let pos = lo + i;
-        if pos >= coff && pos < coff + cdata.len() {
-            out[i] = cdata[pos - coff];
-        } else {
-            debug_assert!(pos >= mlo && pos < mlo + fetched.len());
-            out[i] = fetched[pos - mlo];
-        }
-    }
-    out
 }
 
 #[cfg(test)]
@@ -253,6 +160,7 @@ mod tests {
     use crate::cluster::{Cluster, ClusterConfig};
     use crate::codes::SchemeKind;
     use crate::prng::Prng;
+    use crate::repair::RepairProgram;
 
     fn cluster() -> Cluster {
         Cluster::new(ClusterConfig {
@@ -333,6 +241,74 @@ mod tests {
     }
 
     #[test]
+    fn dedup_fetches_exactly_the_range_union_bytes() {
+        // ISSUE 5 satellite (bytes-fetched parity): under the shared
+        // fetcher's overlap-aware cache, FileLevelDedup must charge
+        // exactly the union footprint per source block — every surviving
+        // extent plus every decode window, overlaps counted once — while
+        // FileLevel charges the unreduced sum.
+        let mut rng = Prng::new(0xD0D0);
+        let mut c = cluster();
+        let content = rng.bytes(6000); // extents: block0 [0,4096), block1 [0,1904)
+        let id = c.put_file(content.clone());
+        let sid = c.seal_stripe().unwrap();
+        let victim = c.meta.stripes[&sid].block_nodes[0];
+        c.fail_node(victim);
+
+        // Expected footprint, per block: union of the ranges this read
+        // requests (surviving extents + per-failed-extent decode windows
+        // over the program's fetch set).
+        let obj = c.meta.objects[&id].clone();
+        let scheme = c.scheme().clone();
+        let program = RepairProgram::for_pattern(&scheme, &[0]).unwrap();
+        let mut ranges: std::collections::BTreeMap<usize, Vec<(usize, usize)>> =
+            Default::default();
+        for e in &obj.extents {
+            let b = e.block_index as usize;
+            if b == 0 {
+                for &src in program.fetch().iter() {
+                    ranges.entry(src).or_default().push((e.block_off, e.block_off + e.len));
+                }
+            } else {
+                ranges.entry(b).or_default().push((e.block_off, e.block_off + e.len));
+            }
+        }
+        let union_bytes: usize = ranges
+            .values()
+            .map(|rs| {
+                let mut rs = rs.clone();
+                rs.sort_unstable();
+                let mut total = 0usize;
+                let mut hi = 0usize;
+                for &(s, e) in &rs {
+                    let s = s.max(hi);
+                    if e > s {
+                        total += e - s;
+                        hi = e;
+                    }
+                    hi = hi.max(e);
+                }
+                total
+            })
+            .sum();
+        let sum_bytes: usize =
+            ranges.values().flat_map(|rs| rs.iter().map(|&(s, e)| e - s)).sum();
+
+        let dd = c.degraded_read(id, ReadMode::FileLevelDedup).unwrap();
+        let fl = c.degraded_read(id, ReadMode::FileLevel).unwrap();
+        assert_eq!(dd.bytes, content);
+        assert_eq!(
+            dd.bytes_read, union_bytes as u64,
+            "dedup must fetch exactly the range union"
+        );
+        assert_eq!(
+            fl.bytes_read, sum_bytes as u64,
+            "file-level fetches the unreduced per-request sum"
+        );
+        assert!(union_bytes < sum_bytes, "fixture must actually overlap");
+    }
+
+    #[test]
     fn two_failed_blocks_degraded_read() {
         // Fig 5(b): file spans two failed blocks.
         let mut rng = Prng::new(13);
@@ -349,12 +325,6 @@ mod tests {
             assert_eq!(rep.bytes, content, "{mode:?}");
             assert!(rep.degraded);
         }
-    }
-
-    #[test]
-    fn missing_range_math() {
-        assert_eq!(missing_range(100, 50, 80, 40), (80, 100)); // left overhang
-        assert_eq!(missing_range(100, 50, 120, 60), (150, 180)); // right overhang
     }
 
     #[test]

@@ -7,7 +7,7 @@
 //! ReliabilityParams`), tying the prototype and the Markov chain to the
 //! same mechanism.
 
-use super::Cluster;
+use super::{Cluster, SessionReport};
 
 /// Sweep-based failure detector driven by the caller (deterministic —
 /// experiments advance it explicitly rather than with a wall-clock
@@ -38,6 +38,25 @@ pub struct SweepReport {
 impl FailureDetector {
     pub fn new(num_nodes: usize, threshold: u32, interval_s: f64) -> Self {
         Self { missed: vec![0; num_nodes], threshold, interval_s, sweeps: 0 }
+    }
+
+    /// [`Self::sweep`], then — if the sweep declared any node failed —
+    /// repair everything it degraded as **one TrafficPlane session**
+    /// ([`Cluster::repair`]) on `threads` decode workers: the §V-B
+    /// "repair triggering" path, detection through contended repair,
+    /// wired end to end. Returns the sweep plus the session report
+    /// (`None` when nothing new failed).
+    pub fn sweep_and_repair(
+        &mut self,
+        cluster: &mut Cluster,
+        threads: usize,
+    ) -> anyhow::Result<(SweepReport, Option<SessionReport>)> {
+        let sweep = self.sweep(cluster);
+        if sweep.newly_failed.is_empty() {
+            return Ok((sweep, None));
+        }
+        let session = cluster.repair().threads(threads).run()?;
+        Ok((sweep, Some(session)))
     }
 
     /// Probe every datanode once and update the coordinator's node index.
@@ -111,6 +130,30 @@ mod tests {
         let rep = fd.sweep(&mut c);
         assert_eq!(rep.recovered, vec![2]);
         assert!(c.meta.nodes[2].alive);
+    }
+
+    #[test]
+    fn sweep_and_repair_runs_one_session_on_detection() {
+        let mut c = cluster();
+        c.fill_random_stripes(2, 0x5A11);
+        let mut fd = FailureDetector::new(12, 1, 1.0);
+        // healthy sweep: no session
+        let (rep, session) = fd.sweep_and_repair(&mut c, 2).unwrap();
+        assert!(rep.newly_failed.is_empty());
+        assert!(session.is_none());
+        // crash the node behind stripe 0's block 0 silently
+        let victim = c.meta.stripes[&0].block_nodes[0];
+        c.nodes[victim].set_alive(false);
+        let (rep, session) = fd.sweep_and_repair(&mut c, 2).unwrap();
+        assert_eq!(rep.newly_failed, vec![victim]);
+        let session = session.expect("detection must trigger a repair session");
+        assert!(!session.reports.is_empty());
+        assert!(session.completion_s > 0.0);
+        c.nodes[victim].set_alive(true);
+        c.restore_node(victim);
+        for sid in 0..2u64 {
+            assert!(c.scrub_stripe(sid).unwrap());
+        }
     }
 
     #[test]

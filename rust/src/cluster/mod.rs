@@ -14,7 +14,12 @@ pub mod metadata;
 pub mod placement;
 pub mod repairq;
 pub mod store;
+pub mod traffic;
 pub mod wire;
+
+pub use traffic::{
+    ForegroundLoad, ForegroundReport, RepairSession, SessionReport, TrafficPlane, WriteBackMode,
+};
 
 use crate::codec::StripeCodec;
 use crate::codes::{Scheme, SchemeKind};
@@ -27,7 +32,7 @@ use datanode::DataNodeHandle;
 use metadata::{BlockKey, Extent, FileId, Metadata, NodeInfo, ObjectInfo, StripeId, StripeInfo};
 use std::collections::HashMap;
 use std::ops::Range;
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 /// Cluster configuration (defaults = the paper's §VI-B setup).
@@ -74,6 +79,15 @@ impl Default for ClusterConfig {
 }
 
 /// Outcome of one repair operation.
+///
+/// Two clock families coexist. The **isolated-pass** fields (`read_s`,
+/// `wb_s`, `sim_time_s`, `decode_sim_s`, `completion_s`) cost this
+/// stripe's flows on a private netsim run, exactly the pre-TrafficPlane
+/// accounting — they are a pure function of this stripe's flow set, so
+/// they stay comparable across sessions, thread counts and foreground
+/// load. The **shared-timeline** fields (`issue_s`, `contended_read_s`,
+/// `session_done_s`) come from the session's one shared [`TrafficPlane`]
+/// timeline, where this stripe contended with every other admitted flow.
 #[derive(Clone, Debug)]
 pub struct RepairReport {
     pub stripe: StripeId,
@@ -81,7 +95,12 @@ pub struct RepairReport {
     /// Distinct blocks fetched over the network.
     pub blocks_read: usize,
     pub bytes_read: u64,
-    /// Simulated transfer time (reads + write-back), seconds.
+    /// Isolated-pass makespan of the survivor reads, seconds.
+    pub read_s: f64,
+    /// Isolated-pass write-back time, seconds.
+    pub wb_s: f64,
+    /// Simulated transfer time (reads + write-back), seconds
+    /// (= `read_s + wb_s`; kept under its historical name).
     pub sim_time_s: f64,
     /// Virtual decode time (`bytes_read / decode_gbps`), seconds — same
     /// clock as `sim_time_s`.
@@ -97,8 +116,20 @@ pub struct RepairReport {
     /// ([`crate::netsim::pipeline_completion`]), not at
     /// `fetch + decode`. Write-back stays serial on top. Always ≤
     /// [`Self::total_s`]; equals `sim_time_s` exactly when decode cost
-    /// is zero (infinite `decode_gbps`).
+    /// is zero (infinite `decode_gbps`). Isolated-pass clock.
     pub completion_s: f64,
+    /// Shared-timeline instant the session's fetch issuer admitted this
+    /// stripe's survivor reads (stripes are staggered by issue order).
+    pub issue_s: f64,
+    /// Shared-timeline duration from issue to the last survivor-byte
+    /// arrival — `read_s` plus whatever cross-stripe / foreground
+    /// contention cost on the shared NICs (equal to `read_s` when
+    /// nothing else was on the wire).
+    pub contended_read_s: f64,
+    /// Shared-timeline instant this stripe's last write-back flow
+    /// finished (its write-back flows start at per-output decode
+    /// readiness under [`WriteBackMode::Overlapped`]).
+    pub session_done_s: f64,
     /// Did the plan stay within local/cascaded groups?
     pub local: bool,
 }
@@ -114,6 +145,12 @@ impl RepairReport {
     /// model for this stripe (≥ 0 by construction).
     pub fn overlap_saving_s(&self) -> f64 {
         self.total_s() - self.completion_s
+    }
+
+    /// Shared-timeline fetch slowdown attributable to contention
+    /// (`contended_read_s − read_s`, clamped at 0).
+    pub fn contention_delay_s(&self) -> f64 {
+        (self.contended_read_s - self.read_s).max(0.0)
     }
 }
 
@@ -305,7 +342,7 @@ impl Cluster {
             out[e.file_off..e.file_off + e.len].copy_from_slice(&seg);
             flows.push(Flow { src: net_id(nid), dst: PROXY, bytes: e.len as u64, start: 0.0 });
         }
-        let (_, t) = self.net.run(&flows);
+        let (_, t) = TrafficPlane::new(&self.net).cost(&flows);
         Some((out, t))
     }
 
@@ -347,49 +384,103 @@ impl Cluster {
         stripe: &'a StripeInfo,
         window: Range<usize>,
     ) -> StripeFetcher<'a> {
+        self.stripe_fetcher_policy(stripe, FetchPolicy::Window, window)
+    }
+
+    /// A [`StripeFetcher`] with an explicit caching/accounting policy —
+    /// the one fetch path all three degraded-read modes share.
+    fn stripe_fetcher_policy<'a>(
+        &'a self,
+        stripe: &'a StripeInfo,
+        policy: FetchPolicy,
+        window: Range<usize>,
+    ) -> StripeFetcher<'a> {
         debug_assert!(window.start <= window.end && window.end <= stripe.block_size);
         StripeFetcher {
             nodes: &self.nodes,
             stripe,
+            policy,
             window,
+            epoch: 0,
             cache: vec![None; stripe.n()],
+            cache_epoch: vec![0; stripe.n()],
             flows: Vec::new(),
             bytes_read: 0,
         }
     }
 
+    /// Open a repair **session**: the one entry point to every repair in
+    /// the cluster. Configure it builder-style and run it —
+    ///
+    /// ```no_run
+    /// # let mut cluster = cp_lrc::cluster::Cluster::new(Default::default());
+    /// let session = cluster
+    ///     .repair()               // all currently-degraded stripes…
+    ///     .threads(4)             // …on 4 decode workers…
+    ///     .run()                  // …through the TrafficPlane timeline
+    ///     .unwrap();
+    /// println!("session finished at {:.3}s", session.completion_s);
+    /// ```
+    ///
+    /// Explicit job lists ([`RepairSession::stripe`] /
+    /// [`RepairSession::stripes`]), foreground load
+    /// ([`RepairSession::foreground`]), in-session degraded reads and
+    /// write-back policy are all session options; see [`RepairSession`].
+    /// The legacy entrypoints (`repair_stripe`, `repair_all`,
+    /// `repair_all_parallel`, `repair_stripes_batch`,
+    /// `RepairQueue::drain*`) are deprecated shims over this.
+    pub fn repair(&mut self) -> RepairSession<'_> {
+        RepairSession::new(self)
+    }
+
+    /// Every currently-degraded stripe with its failed blocks, in
+    /// stripe-id order — the default job list of a repair session.
+    pub(crate) fn failed_jobs(&self) -> Vec<(StripeId, Vec<usize>)> {
+        let mut sids: Vec<StripeId> = self.meta.stripes.keys().copied().collect();
+        sids.sort_unstable();
+        let mut jobs = Vec::new();
+        for sid in sids {
+            let failed = self.meta.failed_blocks(&self.meta.stripes[&sid]);
+            if !failed.is_empty() {
+                jobs.push((sid, failed));
+            }
+        }
+        jobs
+    }
+
     /// Repair the given failed blocks of one stripe (§V-B decoding
     /// workflow): look up (or compile) the pattern's [`RepairProgram`]
-    /// at the coordinator, stream the program's read set from survivors
-    /// and decode it through the readiness-driven pipelined executor at
-    /// the proxy, write reconstructed blocks to replacement nodes. Thin
-    /// wrapper over [`Self::repair_stripes_batch`] with one job and one
-    /// decode lane, so single-stripe, multi-stripe and whole-node
-    /// repairs all run the same executor and accounting.
+    /// at the coordinator, stream the program's read set from survivors,
+    /// decode at the proxy, write reconstructed blocks to replacement
+    /// nodes.
     ///
     /// [`RepairProgram`]: crate::repair::RepairProgram
+    #[deprecated(
+        since = "0.3.0",
+        note = "use the session API: `cluster.repair().stripe(sid, failed).run_single()`"
+    )]
     pub fn repair_stripe(
         &mut self,
         sid: StripeId,
         failed_blocks: &[usize],
     ) -> anyhow::Result<RepairReport> {
-        let mut reports = self.repair_stripes_batch(&[(sid, failed_blocks.to_vec())], 1)?;
-        Ok(reports.pop().expect("one job yields one report"))
+        self.repair().stripe(sid, failed_blocks).run_single()
     }
 
-    /// Step (5) of the decoding workflow, shared by the serial and
-    /// batched repair paths: write reconstructed blocks to replacement
-    /// nodes (live nodes not already holding a block of this stripe),
-    /// charge the write-back flows through the netsim, and update the
-    /// stripe's placement metadata. Returns the simulated write-back
-    /// time.
+    /// Step (5) of the decoding workflow: write reconstructed blocks to
+    /// replacement nodes (live nodes not already holding a block of this
+    /// stripe), cost the write-back flows on an isolated [`TrafficPlane`]
+    /// pass (the session's shared timeline re-admits them with
+    /// per-output start times), and update the stripe's placement
+    /// metadata. Returns the isolated write-back time and the flows, in
+    /// `failed_blocks` order.
     fn write_back(
         &mut self,
         sid: StripeId,
         stripe: &StripeInfo,
         failed_blocks: &[usize],
         reconstructed: &[Vec<u8>],
-    ) -> anyhow::Result<f64> {
+    ) -> anyhow::Result<(f64, Vec<Flow>)> {
         let mut used: Vec<usize> = stripe.block_nodes.clone();
         let mut wb_flows = Vec::new();
         let mut new_nodes: HashMap<usize, usize> = HashMap::new();
@@ -408,7 +499,7 @@ impl Cluster {
             });
             new_nodes.insert(b, target);
         }
-        let (_, wb_time) = self.net.run(&wb_flows);
+        let (_, wb_time) = TrafficPlane::new(&self.net).cost(&wb_flows);
 
         // Update stripe placement metadata.
         if let Some(si) = self.meta.stripes.get_mut(&sid) {
@@ -416,98 +507,47 @@ impl Cluster {
                 si.block_nodes[*b] = *nid;
             }
         }
-        Ok(wb_time)
+        Ok((wb_time, wb_flows))
     }
 
     /// Repair every stripe affected by currently-failed nodes; returns
-    /// one report per affected stripe.
+    /// one report per affected stripe, in stripe-id order.
+    #[deprecated(since = "0.3.0", note = "use the session API: `cluster.repair().run()`")]
     pub fn repair_all(&mut self) -> anyhow::Result<Vec<RepairReport>> {
-        let sids: Vec<StripeId> = self.meta.stripes.keys().copied().collect();
-        let mut reports = Vec::new();
-        for sid in sids {
-            let stripe = self.meta.stripes[&sid].clone();
-            let failed = self.meta.failed_blocks(&stripe);
-            if !failed.is_empty() {
-                reports.push(self.repair_stripe(sid, &failed)?);
-            }
-        }
-        Ok(reports)
+        Ok(self.repair().run()?.reports)
     }
 
-    /// Whole-node (multi-stripe) repair, pipelined and parallel: repair
-    /// every stripe affected by currently-failed nodes using `threads`
-    /// decode workers. Network fetches and write-backs run through the
-    /// (serial) netsim with exactly [`Self::repair_all`]'s wave
-    /// accounting; decode overlaps fetch both structurally (readiness
-    /// queue, one [`ScratchBuffers`] per worker) and in the virtual
-    /// clock (`completion_s` — see [`Self::repair_stripes_batch`]).
+    /// Whole-node (multi-stripe) repair on `threads` decode workers.
+    #[deprecated(
+        since = "0.3.0",
+        note = "use the session API: `cluster.repair().threads(n).run()`"
+    )]
     pub fn repair_all_parallel(&mut self, threads: usize) -> anyhow::Result<Vec<RepairReport>> {
-        let mut sids: Vec<StripeId> = self.meta.stripes.keys().copied().collect();
-        sids.sort_unstable();
-        let mut jobs = Vec::new();
-        for sid in sids {
-            let stripe = self.meta.stripes[&sid].clone();
-            let failed = self.meta.failed_blocks(&stripe);
-            if !failed.is_empty() {
-                jobs.push((sid, failed));
-            }
-        }
-        self.repair_stripes_batch(&jobs, threads)
+        Ok(self.repair().threads(threads).run()?.reports)
     }
 
     /// Batched repair of an explicit job list (`(stripe, failed blocks)`
-    /// pairs, each stripe at most once), run as a **three-stage
-    /// pipeline** instead of barrier-separated phases:
-    ///
-    /// 1. **fetch issuer** (serial, netsim-accounted): compile-or-look-up
-    ///    each pattern's program and stream its survivor set off the
-    ///    datanodes — every flow completes at its own virtual time,
-    ///    which becomes the block's arrival stamp;
-    /// 2. **decode workers** (`threads` scoped workers) consume a
-    ///    readiness queue of fetched stripes: as soon as a stripe's
-    ///    blocks are in, a worker replays the compiled program
-    ///    (cache-blocked [`RepairProgram::execute`] — operands are
-    ///    resident by then, see [`decode_job`]) into its own
-    ///    [`ScratchBuffers`] — later stripes are still fetching while
-    ///    earlier ones decode;
-    /// 3. **write-back** (serial): reconstructed blocks go to
-    ///    replacement nodes and placement metadata is updated.
-    ///
-    /// Virtual-clock accounting: `sim_time_s`/`decode_sim_s` keep the
-    /// serial wave model (read makespan + write-back; full decode cost)
-    /// so reports stay comparable with [`Self::repair_all`], while
-    /// `completion_s` records the pipelined overlap model — per stripe,
-    /// `max(last-needed-arrival, decode-completion) + write-back`,
-    /// property-pinned ≤ the wave time and equal to it when decode cost
-    /// is zero. Reports come back in input-job order.
+    /// pairs, each stripe at most once) on `threads` decode workers;
+    /// reports come back in input-job order.
+    #[deprecated(
+        since = "0.3.0",
+        note = "use the session API: `cluster.repair().stripes(jobs).threads(n).run()`"
+    )]
     pub fn repair_stripes_batch(
         &mut self,
         jobs: &[(StripeId, Vec<usize>)],
         threads: usize,
     ) -> anyhow::Result<Vec<RepairReport>> {
-        // Process the job list in bounded waves: fetching every affected
-        // stripe's survivor set up front would make whole-node repair
-        // peak at O(surviving dataset) resident bytes. A wave holds a
-        // few stripes per decode worker in flight, which keeps workers
-        // saturated while bounding memory at
-        // O(wave × fetch set × block size).
-        const STRIPES_IN_FLIGHT_PER_WORKER: usize = 4;
-        let scheme = self.scheme().clone();
-        let wave_len = threads.max(1) * STRIPES_IN_FLIGHT_PER_WORKER;
-        let mut reports = Vec::with_capacity(jobs.len());
-        for wave in jobs.chunks(wave_len) {
-            reports.extend(self.repair_wave(wave, threads, &scheme)?);
-        }
-        Ok(reports)
+        Ok(self.repair().stripes(jobs.iter().cloned()).threads(threads).run()?.reports)
     }
 
-    /// Stage 1 of the pipelined repair executor, for one stripe: look
-    /// up/compile the pattern's program and pull its whole fetch set
-    /// from the datanodes. The read flows are charged through the
-    /// netsim **streamingly** — each flow finishes at its own virtual
-    /// time, which becomes the block's arrival stamp for the decode
-    /// stage — while `read_time` keeps the set's makespan (the serial
-    /// wave model's read term, unchanged).
+    /// Stage 1 of the session executor, for one stripe: look up/compile
+    /// the pattern's program and pull its whole fetch set from the
+    /// datanodes. The isolated-pass clocks (`read_s`, `done_s`) are
+    /// computed here from the stripe's own flows via the
+    /// [`TrafficPlane`]; the flows themselves ride along in the
+    /// [`JobMeta`] so the session can re-admit them — contended, issue-
+    /// staggered — on the shared timeline.
     fn prepare_repair(
         &self,
         orig: usize,
@@ -528,7 +568,8 @@ impl Cluster {
         let fetch_idx: Vec<usize> = program.fetch().iter().copied().collect();
         let mut fetcher = self.stripe_fetcher(&stripe);
         fetcher.prefetch(&fetch_idx)?;
-        let (_, read_time, trace) = self.net.run_traced(&fetcher.flows, PROXY);
+        let (_, read_time, trace) =
+            TrafficPlane::new(&self.net).cost_traced(&fetcher.flows, PROXY);
         let bytes_read = fetcher.bytes_read;
         // Overlap model (`EXPERIMENTS.md` §Overlap): the proxy's decode
         // engine consumes the *stream* of arriving survivor bytes at
@@ -537,9 +578,13 @@ impl Cluster {
         // fetch + decode.
         let done_s =
             pipeline_completion(&trace, bytes_read as f64, self.cfg.decode_gbps * 1e9 / 8.0);
-        // The fetcher's block-indexed cache (fetch set filled) moves to
-        // the worker as-is — it is already the executor's source shape.
-        let StripeFetcher { cache, .. } = fetcher;
+        // The fetcher's block-indexed cache (fetch set filled, whole
+        // blocks at offset 0) moves to the worker as the executor's
+        // source shape.
+        let window_len = fetcher.window.len();
+        let StripeFetcher { cache, flows, .. } = fetcher;
+        let blocks: Vec<Option<Vec<u8>>> =
+            cache.into_iter().map(|slot| slot.map(|(_, data)| data)).collect();
         // Resolve the requested blocks to program output positions now,
         // so a pattern/program mismatch fails before any decode work.
         let outs_idx = failed
@@ -554,139 +599,17 @@ impl Cluster {
             sid,
             failed: failed.to_vec(),
             stripe,
-            read_time,
+            read_s: read_time,
             done_s,
             bytes_read,
             fetched: fetch_idx.len(),
             local: program.plan.fully_local(),
+            flows,
+            program: program.clone(),
+            outs_idx: outs_idx.clone(),
+            window_len,
         };
-        Ok((meta, DecodeJob { orig, program, outs_idx, blocks: cache }))
-    }
-
-    /// One wave of [`Self::repair_stripes_batch`]: fetch issuer feeding
-    /// decode workers through a readiness queue, then serial write-back
-    /// in input order.
-    fn repair_wave(
-        &mut self,
-        jobs: &[(StripeId, Vec<usize>)],
-        threads: usize,
-        scheme: &Arc<Scheme>,
-    ) -> anyhow::Result<Vec<RepairReport>> {
-        let decode_bps = self.cfg.decode_gbps * 1e9 / 8.0;
-        let workers = threads.max(1).min(jobs.len());
-        let mut metas: Vec<Option<JobMeta>> = Vec::new();
-        metas.resize_with(jobs.len(), || None);
-        let mut decoded: Vec<Option<Decoded>> = Vec::new();
-        decoded.resize_with(jobs.len(), || None);
-        let mut first_err: Option<anyhow::Error> = None;
-
-        if workers <= 1 {
-            // One decode lane: fetch → decode inline per stripe through
-            // the same helpers (single-stripe repairs and callers that
-            // asked for no parallelism pay no thread overhead).
-            let mut scratch = self.scratch.lock().unwrap();
-            for (orig, (sid, failed)) in jobs.iter().enumerate() {
-                let (meta, djob) = self.prepare_repair(orig, *sid, failed, scheme)?;
-                metas[orig] = Some(meta);
-                let (o, res) = decode_job(djob, &mut scratch);
-                decoded[o] = Some(res?);
-            }
-        } else {
-            // Stage 2 runs while stage 1 is still issuing fetches for
-            // later stripes: workers pull fetched stripes off a shared
-            // readiness queue, one ScratchBuffers each.
-            let (job_tx, job_rx) = mpsc::channel::<DecodeJob>();
-            let (res_tx, res_rx) = mpsc::channel::<(usize, anyhow::Result<Decoded>)>();
-            let job_rx = Arc::new(Mutex::new(job_rx));
-            std::thread::scope(|scope| {
-                for _ in 0..workers {
-                    let job_rx = Arc::clone(&job_rx);
-                    let res_tx = res_tx.clone();
-                    scope.spawn(move || {
-                        let mut scratch = ScratchBuffers::new();
-                        loop {
-                            let job = job_rx.lock().unwrap().recv();
-                            let Ok(job) = job else { break };
-                            if res_tx.send(decode_job(job, &mut scratch)).is_err() {
-                                break;
-                            }
-                        }
-                    });
-                }
-                drop(res_tx);
-                for (orig, (sid, failed)) in jobs.iter().enumerate() {
-                    // Stop issuing as soon as any worker reported an
-                    // error: the wave is doomed, and every further
-                    // fetch (datanode reads, netsim runs) would be
-                    // thrown away.
-                    while let Ok((o, res)) = res_rx.try_recv() {
-                        match res {
-                            Ok(d) => decoded[o] = Some(d),
-                            Err(e) => {
-                                if first_err.is_none() {
-                                    first_err = Some(e);
-                                }
-                            }
-                        }
-                    }
-                    if first_err.is_some() {
-                        break;
-                    }
-                    match self.prepare_repair(orig, *sid, failed, scheme) {
-                        Ok((meta, djob)) => {
-                            metas[orig] = Some(meta);
-                            if job_tx.send(djob).is_err() {
-                                break; // all workers gone (they only exit on error)
-                            }
-                        }
-                        Err(e) => {
-                            first_err = Some(e);
-                            break;
-                        }
-                    }
-                }
-                drop(job_tx);
-                for (orig, res) in res_rx {
-                    match res {
-                        Ok(d) => decoded[orig] = Some(d),
-                        Err(e) => {
-                            if first_err.is_none() {
-                                first_err = Some(e);
-                            }
-                        }
-                    }
-                }
-            });
-        }
-        if let Some(e) = first_err {
-            return Err(e);
-        }
-
-        // -- stage 3: write-back (serial), reports in input order -------
-        let mut reports = Vec::with_capacity(jobs.len());
-        for (orig, (meta_slot, dec_slot)) in
-            metas.iter_mut().zip(decoded.iter_mut()).enumerate()
-        {
-            let meta = meta_slot
-                .take()
-                .ok_or_else(|| anyhow::anyhow!("job {orig} was never fetched"))?;
-            let dec = dec_slot
-                .take()
-                .ok_or_else(|| anyhow::anyhow!("stripe {} never decoded", meta.sid))?;
-            let wb_time = self.write_back(meta.sid, &meta.stripe, &meta.failed, &dec.rec)?;
-            reports.push(RepairReport {
-                stripe: meta.sid,
-                blocks_repaired: meta.failed,
-                blocks_read: meta.fetched,
-                bytes_read: meta.bytes_read,
-                sim_time_s: meta.read_time + wb_time,
-                decode_sim_s: meta.bytes_read as f64 / decode_bps,
-                decode_cpu_s: dec.decode_cpu_s,
-                completion_s: meta.done_s + wb_time,
-                local: meta.local,
-            });
-        }
-        Ok(reports)
+        Ok((meta, DecodeJob { orig, program, outs_idx, blocks }))
     }
 
     /// Verify stripe consistency (ops/scrub tool; also used by the
@@ -698,6 +621,14 @@ impl Cluster {
     /// plan→compile→execute path (and sharing its [`PlanCache`] entry
     /// across all scrubbed stripes).
     pub fn scrub_stripe(&self, sid: StripeId) -> anyhow::Result<bool> {
+        Ok(self.scrub_stripe_report(sid)?.0)
+    }
+
+    /// [`Self::scrub_stripe`] plus the scrub's simulated read time: both
+    /// the decode-source survivor reads *and* the stored-parity
+    /// verification reads are costed through the [`TrafficPlane`] like
+    /// every other flow in the cluster.
+    pub fn scrub_stripe_report(&self, sid: StripeId) -> anyhow::Result<(bool, f64)> {
         let stripe = self
             .meta
             .stripes
@@ -707,17 +638,30 @@ impl Cluster {
         let parities: Vec<usize> = (scheme.k..scheme.n()).collect();
         let program = self.programs.lock().unwrap().get_or_compile(&scheme, &parities)?;
         let mut source = self.stripe_fetcher(stripe);
-        let mut scratch = self.scratch.lock().unwrap();
-        let outputs = program.execute(&mut source, &mut scratch)?;
-        for (i, &b) in program.erased().iter().enumerate() {
-            let stored = self
-                .fetch_block(stripe, b)
-                .ok_or_else(|| anyhow::anyhow!("block {b} unavailable"))?;
-            if stored != outputs[i] {
-                return Ok(false);
+        let mut clean = true;
+        let mut verify_flows: Vec<Flow> = Vec::new();
+        {
+            let mut scratch = self.scratch.lock().unwrap();
+            let outputs = program.execute(&mut source, &mut scratch)?;
+            for (i, &b) in program.erased().iter().enumerate() {
+                let stored = self
+                    .fetch_block(stripe, b)
+                    .ok_or_else(|| anyhow::anyhow!("block {b} unavailable"))?;
+                verify_flows.push(Flow {
+                    src: net_id(stripe.block_nodes[b]),
+                    dst: PROXY,
+                    bytes: stored.len() as u64,
+                    start: 0.0,
+                });
+                if stored != outputs[i] {
+                    clean = false;
+                    break;
+                }
             }
         }
-        Ok(true)
+        verify_flows.extend(source.flows.iter().copied());
+        let (_, time_s) = TrafficPlane::new(&self.net).cost(&verify_flows);
+        Ok((clean, time_s))
     }
 
     /// Generate and store `n_stripes` full stripes of pseudo-random data
@@ -734,22 +678,33 @@ impl Cluster {
     }
 }
 
-/// Main-thread bookkeeping for one stripe of a repair wave: everything
-/// stage 3 (write-back + report) needs, kept out of the decode workers'
-/// hands.
+/// Main-thread bookkeeping for one stripe of a repair session:
+/// everything write-back, reporting and the shared-timeline schedule
+/// need, kept out of the decode workers' hands.
 struct JobMeta {
     sid: StripeId,
     failed: Vec<usize>,
     stripe: StripeInfo,
-    /// Makespan of the stripe's read flows (serial wave read term).
-    read_time: f64,
+    /// Makespan of the stripe's read flows (isolated pass; the serial
+    /// wave read term).
+    read_s: f64,
     /// Virtual time the overlapped fetch+decode stage finishes (the
     /// [`pipeline_completion`] of the read flows' arrival trace against
-    /// the decode rate; write-back comes on top).
+    /// the decode rate; write-back comes on top). Isolated pass.
     done_s: f64,
     bytes_read: u64,
     fetched: usize,
     local: bool,
+    /// The stripe's fetch flows (issue-relative `start = 0`), in sorted
+    /// fetch-set order — re-admitted on the session's shared timeline.
+    flows: Vec<Flow>,
+    /// The compiled program (shared with the decode job) — the shared
+    /// timeline asks it for per-output completion times.
+    program: Arc<RepairProgram>,
+    /// Program output positions of `failed`, in job order.
+    outs_idx: Vec<usize>,
+    /// Bytes of each fetched pseudo-block (the fetcher window).
+    window_len: usize,
 }
 
 /// One entry of the decode workers' readiness queue: a stripe whose
@@ -781,9 +736,9 @@ struct Decoded {
 /// streams — so the wall-clock-optimal replay is the cache-blocked
 /// [`RepairProgram::execute`] (64 KiB L2-resident columns), not a
 /// whole-block at-arrival schedule. [`RepairProgram::execute_pipelined`]
-/// is reserved for sources that genuinely stream (degraded reads over
-/// segment fetchers, real-network block sources); chunk-granular
-/// readiness that would merge both is a ROADMAP follow-up.
+/// is reserved for sources that genuinely stream (real-network block
+/// sources); chunk-granular readiness that would merge both is a
+/// ROADMAP follow-up.
 fn decode_job(
     job: DecodeJob,
     scratch: &mut ScratchBuffers,
@@ -799,78 +754,190 @@ fn decode_job(
     (orig, res)
 }
 
+/// How a [`StripeFetcher`] accounts requests against its per-block
+/// range cache — the knob that makes one fetcher serve all three
+/// degraded-read modes (plus repair and scrub) with their distinct
+/// byte-accounting semantics.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum FetchPolicy {
+    /// Fetch whole blocks on first touch; serve any range from the
+    /// cached block (the conventional block-level path).
+    WholeBlock,
+    /// Fetch exactly the requested range, re-fetching (and re-charging)
+    /// on every new window — segment-level accounting with no
+    /// cross-request reuse (`ReadMode::FileLevel`).
+    Window,
+    /// Overlap-aware: serve covered ranges from cache for free, fetch
+    /// only the missing bytes of a partially-covered request and
+    /// coalesce the cached range — repeated-read elimination, Fig 5(c)
+    /// (`ReadMode::FileLevelDedup`).
+    WindowReuse,
+}
+
 /// [`BlockSource`] over one stripe's datanodes: one byte window of each
 /// block (whole blocks by default, a sub-range for segment-level
 /// callers) fetched on demand via the datanode RPC handles, cached for
-/// the lifetime of one repair, with one netsim flow recorded per
-/// distinct fetch **sized to the bytes actually moved** — a sub-range
-/// fetch charges the window, never the whole block. Prefetching the
-/// program's fetch set up front charges the network exactly once for
-/// exactly the paper-accounted read set; the executor sees
-/// window-length pseudo-blocks and its column ranges address the
-/// window, so chunked and whole-pass execution charge identical totals
-/// (pinned by `subrange_fetch_charges_actual_bytes_*` below).
+/// the lifetime of one read/repair, with one netsim flow recorded per
+/// fetch **sized to the bytes actually moved** — a sub-range fetch
+/// charges the window, never the whole block; under
+/// [`FetchPolicy::WindowReuse`] only the bytes missing from the cached
+/// range. Prefetching the program's fetch set up front charges the
+/// network exactly once for exactly the paper-accounted read set; the
+/// executor sees window-length pseudo-blocks and its column ranges
+/// address the window, so chunked and whole-pass execution charge
+/// identical totals (pinned by `subrange_fetch_charges_actual_bytes_*`
+/// below). The per-block cache keeps one *coalesced* range — offset +
+/// bytes — so a degraded read's surviving-extent reads and its decode
+/// windows share one cache (`degraded.rs`).
 struct StripeFetcher<'a> {
     nodes: &'a [DataNodeHandle],
     stripe: &'a StripeInfo,
-    /// Byte range of every block this fetcher moves and serves.
+    policy: FetchPolicy,
+    /// Byte range of every block the executor currently addresses
+    /// (pseudo-block window); [`Self::set_window`] switches it.
     window: Range<usize>,
-    /// `cache[b]` holds the window's bytes of block `b` once fetched.
-    cache: Vec<Option<Vec<u8>>>,
+    /// Bumped by `set_window`: under [`FetchPolicy::Window`] a cached
+    /// range only satisfies requests from its own window epoch, so a
+    /// new window always re-charges.
+    epoch: u32,
+    /// `cache[b]` holds one coalesced `(offset, bytes)` range of block
+    /// `b`.
+    cache: Vec<Option<(usize, Vec<u8>)>>,
+    cache_epoch: Vec<u32>,
     flows: Vec<Flow>,
     bytes_read: u64,
 }
 
 impl StripeFetcher<'_> {
-    fn ensure(&mut self, b: usize) -> anyhow::Result<()> {
-        if self.cache[b].is_none() {
-            let nid = self.stripe.block_nodes[b];
-            let data = self.nodes[nid]
-                .get_segment(
-                    BlockKey { stripe: self.stripe.stripe_id, index: b as u32 },
-                    self.window.start,
-                    self.window.len(),
-                )
-                .ok_or_else(|| {
-                    anyhow::anyhow!(
-                        "survivor block {b} unavailable (window {}..{})",
-                        self.window.start,
-                        self.window.end
-                    )
-                })?;
-            self.bytes_read += data.len() as u64;
-            self.flows.push(Flow {
-                src: net_id(nid),
-                dst: PROXY,
-                bytes: data.len() as u64,
-                start: 0.0,
-            });
-            self.cache[b] = Some(data);
+    /// Re-aim the executor window (degraded reads decode one failed
+    /// extent's range at a time). Cached ranges survive; whether they
+    /// satisfy requests in the new window is the policy's call.
+    fn set_window(&mut self, window: Range<usize>) {
+        debug_assert!(
+            window.start <= window.end && window.end <= self.stripe.block_size
+        );
+        self.window = window;
+        self.epoch += 1;
+    }
+
+    /// Move `len` bytes of block `b` starting at `off` over the
+    /// (virtual) network: one survivor→proxy flow, charged at actual
+    /// size.
+    fn fetch_bytes(&mut self, b: usize, off: usize, len: usize) -> anyhow::Result<Vec<u8>> {
+        let nid = self.stripe.block_nodes[b];
+        let data = self.nodes[nid]
+            .get_segment(BlockKey { stripe: self.stripe.stripe_id, index: b as u32 }, off, len)
+            .ok_or_else(|| {
+                anyhow::anyhow!("survivor block {b} unavailable (range {off}..{})", off + len)
+            })?;
+        self.bytes_read += data.len() as u64;
+        self.flows.push(Flow {
+            src: net_id(nid),
+            dst: PROXY,
+            bytes: data.len() as u64,
+            start: 0.0,
+        });
+        Ok(data)
+    }
+
+    /// Make the cache of block `b` cover `range`, honoring the policy's
+    /// accounting.
+    fn ensure_range(&mut self, b: usize, range: Range<usize>) -> anyhow::Result<()> {
+        if let Some((off, data)) = &self.cache[b] {
+            let covered = *off <= range.start && range.end <= *off + data.len();
+            let fresh = self.policy != FetchPolicy::Window || self.cache_epoch[b] == self.epoch;
+            if covered && fresh {
+                return Ok(());
+            }
+        }
+        match self.policy {
+            FetchPolicy::WholeBlock => {
+                let data = self.fetch_bytes(b, 0, self.stripe.block_size)?;
+                self.cache[b] = Some((0, data));
+            }
+            FetchPolicy::Window => {
+                let data = self.fetch_bytes(b, range.start, range.len())?;
+                self.cache[b] = Some((range.start, data));
+                self.cache_epoch[b] = self.epoch;
+            }
+            FetchPolicy::WindowReuse => {
+                match self.cache[b].take() {
+                    // Overlapping or adjacent: fetch only the missing
+                    // prefix/suffix and coalesce into one range.
+                    Some((off, data)) if off <= range.end && range.start <= off + data.len() => {
+                        let chi = off + data.len();
+                        let lo = off.min(range.start);
+                        let hi = chi.max(range.end);
+                        let mut merged = vec![0u8; hi - lo];
+                        if range.start < off {
+                            let pre = self.fetch_bytes(b, range.start, off - range.start)?;
+                            merged[range.start - lo..off - lo].copy_from_slice(&pre);
+                        }
+                        merged[off - lo..chi - lo].copy_from_slice(&data);
+                        if range.end > chi {
+                            let post = self.fetch_bytes(b, chi, range.end - chi)?;
+                            merged[chi - lo..range.end - lo].copy_from_slice(&post);
+                        }
+                        self.cache[b] = Some((lo, merged));
+                    }
+                    // Disjoint (or nothing cached): fetch the request
+                    // and keep it — the executor serves from the cache,
+                    // so the live window must be the resident range.
+                    _ => {
+                        let data = self.fetch_bytes(b, range.start, range.len())?;
+                        self.cache[b] = Some((range.start, data));
+                    }
+                }
+            }
         }
         Ok(())
     }
 
+    /// Read one file-aligned segment through the cache (degraded reads'
+    /// surviving-extent path): same policy accounting as decode fetches,
+    /// so a later decode window reuses these bytes under
+    /// [`FetchPolicy::WindowReuse`].
+    fn read_segment(&mut self, b: usize, off: usize, len: usize) -> anyhow::Result<Vec<u8>> {
+        self.ensure_range(b, off..off + len)?;
+        let (coff, data) = self.cache[b]
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("block {b} missing from fetch cache"))?;
+        Ok(data[off - coff..off - coff + len].to_vec())
+    }
+
     /// Fetch (and account) every listed block's window now.
     fn prefetch(&mut self, blocks: &[usize]) -> anyhow::Result<()> {
+        let window = self.window.clone();
         for &b in blocks {
-            self.ensure(b)?;
+            self.ensure_range(b, window.clone())?;
         }
         Ok(())
+    }
+
+    /// Serve the window-relative `rel` range of block `b` from cache.
+    fn serve(&self, b: usize, rel: Range<usize>) -> anyhow::Result<&[u8]> {
+        let (off, data) = self.cache[b]
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("block {b} missing from fetch cache"))?;
+        let lo = self.window.start + rel.start;
+        let hi = self.window.start + rel.end;
+        anyhow::ensure!(
+            *off <= lo && hi <= off + data.len(),
+            "cached range {}..{} of block {b} does not cover column {lo}..{hi}",
+            off,
+            off + data.len()
+        );
+        Ok(&data[lo - off..hi - off])
     }
 }
 
 impl BlockSource for StripeFetcher<'_> {
     fn blocks(&mut self, idx: &[usize]) -> anyhow::Result<Vec<&[u8]>> {
+        let window = self.window.clone();
         for &b in idx {
-            self.ensure(b)?;
+            self.ensure_range(b, window.clone())?;
         }
-        idx.iter()
-            .map(|&b| {
-                self.cache[b]
-                    .as_deref()
-                    .ok_or_else(|| anyhow::anyhow!("block {b} missing from fetch cache"))
-            })
-            .collect()
+        idx.iter().map(|&b| self.serve(b, 0..window.len())).collect()
     }
 
     // Native override: slice the cached windows directly (the range is
@@ -881,24 +948,11 @@ impl BlockSource for StripeFetcher<'_> {
         idx: &[usize],
         range: Range<usize>,
     ) -> anyhow::Result<Vec<&[u8]>> {
+        let window = self.window.clone();
         for &b in idx {
-            self.ensure(b)?;
+            self.ensure_range(b, window.clone())?;
         }
-        idx.iter()
-            .map(|&b| {
-                let s = self.cache[b]
-                    .as_deref()
-                    .ok_or_else(|| anyhow::anyhow!("block {b} missing from fetch cache"))?;
-                s.get(range.clone()).ok_or_else(|| {
-                    anyhow::anyhow!(
-                        "block {b} window too short ({} bytes) for column {}..{}",
-                        s.len(),
-                        range.start,
-                        range.end
-                    )
-                })
-            })
-            .collect()
+        idx.iter().map(|&b| self.serve(b, range.clone())).collect()
     }
 }
 
@@ -967,7 +1021,7 @@ mod tests {
             // fail the node holding block 0 (D1)
             let victim = c.meta.stripes[&sid].block_nodes[0];
             c.fail_node(victim);
-            let reports = c.repair_all().unwrap();
+            let reports = c.repair().run().unwrap().reports;
             assert_eq!(reports.len(), 1);
             let rep = &reports[0];
             assert_eq!(rep.blocks_repaired, vec![0]);
@@ -986,7 +1040,7 @@ mod tests {
             let n1 = c.meta.stripes[&sid].block_nodes[8]; // L1
             c.fail_node(n0);
             c.fail_node(n1);
-            let reports = c.repair_all().unwrap();
+            let reports = c.repair().run().unwrap().reports;
             assert_eq!(reports.len(), 1);
             c.restore_node(n0);
             c.restore_node(n1);
@@ -1002,7 +1056,7 @@ mod tests {
         let sid = cp.fill_random_stripes(1, 6)[0];
         let victim = cp.meta.stripes[&sid].block_nodes[8];
         cp.fail_node(victim);
-        let rep_cp = &cp.repair_all().unwrap()[0];
+        let rep_cp = cp.repair().run().unwrap().reports.remove(0);
         assert_eq!(rep_cp.blocks_read, 2);
         assert!(rep_cp.local);
 
@@ -1010,7 +1064,7 @@ mod tests {
         let sid = az.fill_random_stripes(1, 6)[0];
         let victim = az.meta.stripes[&sid].block_nodes[8];
         az.fail_node(victim);
-        let rep_az = &az.repair_all().unwrap()[0];
+        let rep_az = az.repair().run().unwrap().reports.remove(0);
         assert_eq!(rep_az.blocks_read, 3);
         assert!(rep_cp.sim_time_s < rep_az.sim_time_s);
     }
@@ -1023,7 +1077,7 @@ mod tests {
             // one dead node degrades several stripes at once
             let victim = c.meta.stripes[&sids[0]].block_nodes[0];
             c.fail_node(victim);
-            let reports = c.repair_all_parallel(threads).unwrap();
+            let reports = c.repair().threads(threads).run().unwrap().reports;
             assert!(!reports.is_empty(), "threads={threads}");
             for r in &reports {
                 assert!(r.total_s() > 0.0);
@@ -1038,9 +1092,10 @@ mod tests {
 
     #[test]
     fn parallel_repair_accounting_matches_serial() {
-        // Same cluster, same failure: the parallel path must report the
-        // identical virtual-clock costs (reads, bytes, sim time) as the
-        // serial executor — only decode_cpu_s (wall clock) may differ.
+        // Same cluster, same failure: the parallel session must report
+        // the identical isolated-pass virtual-clock costs (reads, bytes,
+        // sim time) as the one-worker session — only decode_cpu_s (wall
+        // clock) and the shared-timeline fields may differ.
         let mk = || {
             let mut c = Cluster::new(tiny_cfg(SchemeKind::CpUniform));
             c.fill_random_stripes(3, 11);
@@ -1051,8 +1106,8 @@ mod tests {
         let victim = a.meta.stripes[&0].block_nodes[2];
         a.fail_node(victim);
         b.fail_node(victim);
-        let mut ra = a.repair_all().unwrap();
-        let mut rb = b.repair_all_parallel(4).unwrap();
+        let mut ra = a.repair().run().unwrap().reports;
+        let mut rb = b.repair().threads(4).run().unwrap().reports;
         ra.sort_by_key(|r| r.stripe);
         rb.sort_by_key(|r| r.stripe);
         assert_eq!(ra.len(), rb.len());
@@ -1070,6 +1125,61 @@ mod tests {
     }
 
     #[test]
+    #[allow(deprecated)]
+    fn deprecated_entrypoints_delegate_to_the_session() {
+        // ISSUE 5 satellite: all four deprecated cluster entrypoints
+        // must be report-identical to the session API they shim.
+        let mk = || {
+            let mut c = Cluster::new(tiny_cfg(SchemeKind::CpAzure));
+            c.fill_random_stripes(2, 13);
+            let victim = c.meta.stripes[&0].block_nodes[1];
+            c.fail_node(victim);
+            c
+        };
+        let same = |x: &RepairReport, y: &RepairReport| {
+            assert_eq!(x.stripe, y.stripe);
+            assert_eq!(x.blocks_repaired, y.blocks_repaired);
+            assert_eq!(x.blocks_read, y.blocks_read);
+            assert_eq!(x.bytes_read, y.bytes_read);
+            assert!((x.sim_time_s - y.sim_time_s).abs() < 1e-12);
+            assert!((x.decode_sim_s - y.decode_sim_s).abs() < 1e-12);
+            assert!((x.completion_s - y.completion_s).abs() < 1e-12);
+            assert!((x.session_done_s - y.session_done_s).abs() < 1e-12);
+            assert_eq!(x.local, y.local);
+        };
+
+        // repair_all == repair().run()
+        let (mut a, mut b) = (mk(), mk());
+        let ra = a.repair_all().unwrap();
+        let rb = b.repair().run().unwrap().reports;
+        assert_eq!(ra.len(), rb.len());
+        ra.iter().zip(rb.iter()).for_each(|(x, y)| same(x, y));
+
+        // repair_all_parallel == repair().threads(n).run()
+        let (mut a, mut b) = (mk(), mk());
+        let ra = a.repair_all_parallel(3).unwrap();
+        let rb = b.repair().threads(3).run().unwrap().reports;
+        assert_eq!(ra.len(), rb.len());
+        ra.iter().zip(rb.iter()).for_each(|(x, y)| same(x, y));
+
+        // repair_stripe == repair().stripe(..).run_single()
+        let (mut a, mut b) = (mk(), mk());
+        let jobs = a.failed_jobs();
+        let (sid, failed) = jobs[0].clone();
+        let x = a.repair_stripe(sid, &failed).unwrap();
+        let y = b.repair().stripe(sid, &failed).run_single().unwrap();
+        same(&x, &y);
+
+        // repair_stripes_batch == repair().stripes(..).threads(n).run()
+        let (mut a, mut b) = (mk(), mk());
+        let jobs = a.failed_jobs();
+        let ra = a.repair_stripes_batch(&jobs, 2).unwrap();
+        let rb = b.repair().stripes(jobs).threads(2).run().unwrap().reports;
+        assert_eq!(ra.len(), rb.len());
+        ra.iter().zip(rb.iter()).for_each(|(x, y)| same(x, y));
+    }
+
+    #[test]
     fn pipelined_completion_bounded_by_wave_time_all_seeds() {
         // ISSUE 4 acceptance: on every seed, thread count and failure
         // pattern, the overlap model's completion time is at most the
@@ -1084,7 +1194,7 @@ mod tests {
                 let v1 = c.meta.stripes[&sids[0]].block_nodes[8];
                 c.fail_node(v0);
                 c.fail_node(v1);
-                let reports = c.repair_all_parallel(threads).unwrap();
+                let reports = c.repair().threads(threads).run().unwrap().reports;
                 assert!(!reports.is_empty());
                 for r in &reports {
                     assert!(
@@ -1122,7 +1232,7 @@ mod tests {
         let sids = c.fill_random_stripes(2, 31);
         let victim = c.meta.stripes[&sids[0]].block_nodes[1];
         c.fail_node(victim);
-        let reports = c.repair_all_parallel(2).unwrap();
+        let reports = c.repair().threads(2).run().unwrap().reports;
         assert!(!reports.is_empty());
         for r in &reports {
             assert_eq!(r.decode_sim_s, 0.0);
@@ -1183,7 +1293,7 @@ mod tests {
         let n1 = c.meta.stripes[&sids[0]].block_nodes[8];
         c.fail_node(n0);
         c.fail_node(n1);
-        let reports = c.repair_all_parallel(2).unwrap();
+        let reports = c.repair().threads(2).run().unwrap().reports;
         assert!(!reports.is_empty());
         c.restore_node(n0);
         c.restore_node(n1);
@@ -1198,7 +1308,7 @@ mod tests {
         let sid = c.fill_random_stripes(1, 7)[0];
         let victim = c.meta.stripes[&sid].block_nodes[3];
         c.fail_node(victim);
-        c.repair_all().unwrap();
+        c.repair().run().unwrap();
         // block 3 now lives elsewhere and the stripe is whole without the
         // dead node.
         assert_ne!(c.meta.stripes[&sid].block_nodes[3], victim);

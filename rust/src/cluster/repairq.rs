@@ -6,7 +6,7 @@
 //! failure detector and the proxy's repair executor.
 
 use super::metadata::StripeId;
-use super::{Cluster, RepairReport};
+use super::{Cluster, RepairReport, SessionReport};
 use std::collections::BinaryHeap;
 
 /// One queued repair job.
@@ -84,51 +84,63 @@ impl RepairQueue {
     /// Pop and execute the riskiest pending job. `Ok(None)` if idle.
     pub fn run_one(&mut self, cluster: &mut Cluster) -> anyhow::Result<Option<RepairReport>> {
         let Some(job) = self.heap.pop() else { return Ok(None) };
-        let report = cluster.repair_stripe(job.stripe, &job.blocks)?;
+        let report = cluster.repair().stripe(job.stripe, &job.blocks).run_single()?;
         Ok(Some(report))
     }
 
-    /// Drain the whole queue; returns reports in execution order.
-    pub fn drain(&mut self, cluster: &mut Cluster) -> anyhow::Result<Vec<RepairReport>> {
-        let mut out = Vec::new();
-        while let Some(rep) = self.run_one(cluster)? {
-            out.push(rep);
-        }
-        Ok(out)
-    }
-
-    /// Drain the whole queue through the cluster's pipelined executor:
-    /// pops every pending job (riskiest first — that order is preserved
-    /// in the returned reports) and hands them to
-    /// [`Cluster::repair_stripes_batch`], whose fetch issuer streams
-    /// survivor sets to `threads` readiness-queue decode workers while
-    /// later fetches are still in flight, then writes back. This is the
-    /// whole-node recovery path: a dead node enqueues one same-pattern
-    /// job per stripe, the compiled program is shared via the PlanCache,
-    /// and every stripe's report carries both the serial wave time
-    /// (`total_s`) and the overlapped `completion_s`.
+    /// Drain the whole queue as **one repair session**
+    /// ([`Cluster::repair`]): every pending job is popped (riskiest
+    /// first — that order is preserved in the session's reports) and
+    /// becomes a stripe of a single `TrafficPlane` session on `threads`
+    /// decode workers, so the whole-node recovery path — a dead node
+    /// enqueues one same-pattern job per stripe, the compiled program is
+    /// shared via the PlanCache — is fetched, decoded, written back and
+    /// *contention-accounted* on one shared timeline.
     ///
     /// On error every popped job is pushed back, so the queue still
-    /// tracks the outstanding work (stripes a completed wave already
+    /// tracks the outstanding work (stripes a completed session already
     /// repaired come back clean on the next [`Self::scan`] and simply
     /// don't requeue); only the failed attempt's reports are lost.
-    pub fn drain_parallel(
+    pub fn drain_session(
         &mut self,
         cluster: &mut Cluster,
         threads: usize,
-    ) -> anyhow::Result<Vec<RepairReport>> {
+    ) -> anyhow::Result<SessionReport> {
         let mut popped: Vec<Job> = Vec::with_capacity(self.heap.len());
         while let Some(job) = self.heap.pop() {
             popped.push(job);
         }
         let jobs: Vec<_> = popped.iter().map(|j| (j.stripe, j.blocks.clone())).collect();
-        match cluster.repair_stripes_batch(&jobs, threads) {
-            Ok(reports) => Ok(reports),
+        match cluster.repair().stripes(jobs).threads(threads).run() {
+            Ok(session) => Ok(session),
             Err(e) => {
                 self.heap.extend(popped);
                 Err(e)
             }
         }
+    }
+
+    /// Drain the whole queue serially; returns reports in execution
+    /// order.
+    #[deprecated(
+        since = "0.3.0",
+        note = "use the session API: `queue.drain_session(cluster, 1)`"
+    )]
+    pub fn drain(&mut self, cluster: &mut Cluster) -> anyhow::Result<Vec<RepairReport>> {
+        Ok(self.drain_session(cluster, 1)?.reports)
+    }
+
+    /// Drain the whole queue on `threads` decode workers.
+    #[deprecated(
+        since = "0.3.0",
+        note = "use the session API: `queue.drain_session(cluster, threads)`"
+    )]
+    pub fn drain_parallel(
+        &mut self,
+        cluster: &mut Cluster,
+        threads: usize,
+    ) -> anyhow::Result<Vec<RepairReport>> {
+        Ok(self.drain_session(cluster, threads)?.reports)
     }
 }
 
@@ -168,8 +180,8 @@ mod tests {
         assert!(q.len() >= 2);
         let first = q.run_one(&mut c).unwrap().unwrap();
         assert_eq!(first.stripe, 1, "two-failure stripe must repair first");
-        let rest = q.drain(&mut c).unwrap();
-        assert!(!rest.is_empty());
+        let rest = q.drain_session(&mut c, 1).unwrap();
+        assert!(!rest.reports.is_empty());
         // everything clean afterwards
         for v in [s1, s1b, s0] {
             c.restore_node(v);
@@ -180,7 +192,7 @@ mod tests {
     }
 
     #[test]
-    fn drain_parallel_matches_serial_drain() {
+    fn drain_session_matches_serial_session_and_preserves_priority() {
         let build = || {
             let mut c = cluster(3);
             let victims = [
@@ -197,19 +209,25 @@ mod tests {
         let (mut serial, sv) = build();
         let mut q = RepairQueue::new();
         q.scan(&serial);
-        let rs = q.drain(&mut serial).unwrap();
+        let rs = q.drain_session(&mut serial, 1).unwrap();
 
         let (mut parallel, pv) = build();
         let mut q = RepairQueue::new();
         q.scan(&parallel);
-        let rp = q.drain_parallel(&mut parallel, 4).unwrap();
+        let rp = q.drain_session(&mut parallel, 4).unwrap();
 
         // same jobs, same priority order, same virtual-clock accounting
-        assert_eq!(rs.len(), rp.len());
-        for (a, b) in rs.iter().zip(rp.iter()) {
+        assert_eq!(rs.reports.len(), rp.reports.len());
+        assert!(rs.reports[0].stripe == 1, "riskiest stripe first");
+        for (a, b) in rs.reports.iter().zip(rp.reports.iter()) {
             assert_eq!(a.stripe, b.stripe, "priority order must be preserved");
             assert_eq!(a.blocks_repaired, b.blocks_repaired);
             assert_eq!(a.bytes_read, b.bytes_read);
+        }
+        // session roll-up present and sane on both
+        for s in [&rs, &rp] {
+            assert!(s.completion_s > 0.0);
+            assert!(s.completion_s <= s.serial_s + 1e-6);
         }
         // both clusters end up clean
         for v in sv {
@@ -225,6 +243,39 @@ mod tests {
         // queues stay drained
         q.scan(&parallel);
         assert!(q.is_empty());
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_drains_delegate_to_the_session() {
+        // ISSUE 5 satellite: the deprecated shims must be report-
+        // identical to the session API they delegate to.
+        let build = || {
+            let mut c = cluster(2);
+            let v = c.meta.stripes[&0].block_nodes[2];
+            c.fail_node(v);
+            c
+        };
+        let mut a = build();
+        let mut q = RepairQueue::new();
+        q.scan(&a);
+        let shim = q.drain_parallel(&mut a, 2).unwrap();
+
+        let mut b = build();
+        let mut q = RepairQueue::new();
+        q.scan(&b);
+        let session = q.drain_session(&mut b, 2).unwrap();
+
+        assert_eq!(shim.len(), session.reports.len());
+        for (x, y) in shim.iter().zip(session.reports.iter()) {
+            assert_eq!(x.stripe, y.stripe);
+            assert_eq!(x.blocks_repaired, y.blocks_repaired);
+            assert_eq!(x.blocks_read, y.blocks_read);
+            assert_eq!(x.bytes_read, y.bytes_read);
+            assert!((x.sim_time_s - y.sim_time_s).abs() < 1e-12);
+            assert!((x.completion_s - y.completion_s).abs() < 1e-12);
+            assert!((x.session_done_s - y.session_done_s).abs() < 1e-12);
+        }
     }
 
     #[test]
@@ -246,7 +297,7 @@ mod tests {
         let n1 = q.len();
         q.scan(&c);
         assert_eq!(q.len(), n1);
-        q.drain(&mut c).unwrap();
+        q.drain_session(&mut c, 1).unwrap();
         q.scan(&c);
         assert!(q.is_empty(), "repaired stripes must not requeue");
     }

@@ -1,0 +1,1108 @@
+//! The **TrafficPlane**: the cluster's single traffic authority and the
+//! event-driven scheduler behind the repair **session API**
+//! ([`super::Cluster::repair`]).
+//!
+//! Before this module, every stripe's fetch was costed on an *isolated*
+//! netsim pass and write-back was paid serially after decode — the two
+//! accounting gaps the ROADMAP tracked ("multi-stripe netsim
+//! contention", "overlap write-back too"). A session now runs **one
+//! shared [`SessionSim`] timeline** that admits *all* flows:
+//!
+//! * **repair fetches**, staggered by issue order — the fetch issuer
+//!   admits the first `in_flight` stripes at session start (one issuer
+//!   gap apart) and each later stripe the instant an earlier stripe's
+//!   fetch completes, so cross-stripe proxy-ingress contention is
+//!   actually modeled;
+//! * **write-back** of reconstructed blocks, each flow starting at its
+//!   *output's* virtual decode-completion time
+//!   ([`RepairProgram::output_completions`]) instead of after the whole
+//!   stripe — write-back overlaps decode
+//!   ([`WriteBackMode::Overlapped`]; issuance happens at the stripe's
+//!   fetch-complete event, see the [`WriteBackMode`] docs for what that
+//!   bounds);
+//! * **degraded reads** admitted at session start as client traffic;
+//! * an optional open-loop **foreground load generator**
+//!   ([`ForegroundLoad`]) offering a fraction of the proxy's ingress
+//!   bandwidth, the contended regime behind the paper's §VI headline
+//!   numbers.
+//!
+//! Decode is virtual here too: `threads` decode lanes at
+//! `decode_gbps`; a stripe's decode claims the earliest-free lane when
+//! its fetch completes and finishes per output at the gates described
+//! in [`RepairProgram::output_completions`].
+//!
+//! The per-stripe **isolated-pass** clocks (`read_s`, `sim_time_s`,
+//! `completion_s`, …) are retained unchanged on every
+//! [`RepairReport`] — they are what stays comparable with the paper's
+//! model — while the session adds the shared-timeline fields and the
+//! session-level [`SessionReport`] roll-up (completion, contention,
+//! write-back-overlap accounting). With one stripe, no foreground and
+//! serial write-back the shared timeline *reduces exactly* to the
+//! isolated accounting (property-pinned below and in
+//! `tests/property_suite.rs`). See `EXPERIMENTS.md` §Contention.
+//!
+//! [`RepairProgram::output_completions`]: crate::repair::RepairProgram::output_completions
+//! [`RepairProgram`]: crate::repair::RepairProgram
+
+use super::degraded::{ReadMode, ReadReport};
+use super::metadata::{FileId, StripeId};
+use super::{decode_job, Cluster, DecodeJob, Decoded, JobMeta, RepairReport, PROXY};
+use crate::netsim::{Flow, FlowResult, NetSim, NodeId, SessionSim};
+use crate::prng::Prng;
+use crate::repair::{RepairProgram, ScratchBuffers};
+use std::sync::{mpsc, Arc, Mutex};
+
+/// Stripes the fetch issuer keeps in flight per decode worker, for both
+/// the wall-clock pipeline (bounds resident bytes at
+/// O(in-flight × fetch set × block size)) and the virtual timeline's
+/// admission window.
+const STRIPES_IN_FLIGHT_PER_WORKER: usize = 4;
+
+/// The cluster's traffic authority: every byte any path moves — repair
+/// fetch, write-back, normal and degraded reads, scrubs, foreground
+/// load — is costed through one of these, either as a one-shot
+/// [`Self::cost`]/[`Self::cost_traced`] pass (the isolated per-stripe
+/// accounting) or through the event-driven shared-timeline scheduler a
+/// [`RepairSession`] runs.
+pub struct TrafficPlane<'a> {
+    net: &'a NetSim,
+}
+
+impl<'a> TrafficPlane<'a> {
+    pub fn new(net: &'a NetSim) -> Self {
+        Self { net }
+    }
+
+    /// One-shot isolated pass: run `flows` to completion on a private
+    /// timeline. The pre-session accounting every report keeps.
+    pub fn cost(&self, flows: &[Flow]) -> (Vec<FlowResult>, f64) {
+        self.net.run(flows)
+    }
+
+    /// [`Self::cost`] plus the cumulative-arrival trace at `dst`.
+    pub fn cost_traced(
+        &self,
+        flows: &[Flow],
+        dst: NodeId,
+    ) -> (Vec<FlowResult>, f64, Vec<(f64, f64)>) {
+        self.net.run_traced(flows, dst)
+    }
+
+    /// Run the shared session timeline, re-running with a longer
+    /// foreground horizon until the generator covers the whole session.
+    #[allow(clippy::too_many_arguments)]
+    fn schedule(
+        &self,
+        jobs: &[PlaneJob<'_>],
+        reads: &[&[Flow]],
+        threads: usize,
+        in_flight: usize,
+        issue_gap_s: f64,
+        decode_bps: f64,
+        overlap_wb: bool,
+        fg: Option<&ForegroundLoad>,
+    ) -> anyhow::Result<PlaneOutcome> {
+        let have_work = !jobs.is_empty() || reads.iter().any(|r| !r.is_empty());
+        let Some(f) = fg.filter(|_| have_work) else {
+            // No generator, or nothing on the timeline for it to
+            // contend with.
+            return self
+                .schedule_once(jobs, reads, threads, in_flight, issue_gap_s, decode_bps, overlap_wb, None, 0.0);
+        };
+        let ingress = self.net.nodes[PROXY].ingress_bps;
+        let interarrival = f.request_bytes as f64 / (f.fraction.max(1e-6) * ingress);
+        let total_bytes: f64 = jobs
+            .iter()
+            .flat_map(|j| j.flows.iter().chain(j.wb_flows.iter()))
+            .chain(reads.iter().flat_map(|r| r.iter()))
+            .map(|fl| fl.bytes as f64)
+            .sum();
+        let slack = (1.0 - f.fraction).max(0.05);
+        let mut cover_s =
+            (total_bytes / ingress) / slack * 2.0 + 10.0 * interarrival + 1.0;
+        for _ in 0..32 {
+            let out = self.schedule_once(
+                jobs, reads, threads, in_flight, issue_gap_s, decode_bps, overlap_wb,
+                Some(f), cover_s,
+            )?;
+            // The generator must outlive everything it contends with:
+            // the last repair write-back AND the last in-session read —
+            // and the arrivals must actually have been generated that
+            // far (the request-count safety cap can pin the horizon
+            // below `cover_s`).
+            let busy_until = out
+                .read_done_s
+                .iter()
+                .copied()
+                .fold(out.completion_s, f64::max);
+            if busy_until + interarrival <= cover_s.min(out.fg_horizon_s) {
+                return Ok(out);
+            }
+            cover_s *= 2.0;
+        }
+        anyhow::bail!(
+            "foreground horizon failed to converge (offered load too high, or the \
+             1e6-request generator cap is below the session's busy period?)"
+        )
+    }
+
+    /// One pass of the event-driven scheduler over a fixed foreground
+    /// horizon.
+    #[allow(clippy::too_many_arguments)]
+    fn schedule_once(
+        &self,
+        jobs: &[PlaneJob<'_>],
+        reads: &[&[Flow]],
+        threads: usize,
+        in_flight: usize,
+        issue_gap_s: f64,
+        decode_bps: f64,
+        overlap_wb: bool,
+        fg: Option<&ForegroundLoad>,
+        fg_cover_s: f64,
+    ) -> anyhow::Result<PlaneOutcome> {
+        for (j, job) in jobs.iter().enumerate() {
+            anyhow::ensure!(!job.flows.is_empty(), "job {j} fetches nothing");
+        }
+        let mut sim = SessionSim::new(self.net, PROXY, jobs.len());
+        let mut kinds: Vec<FlowKind> = Vec::new();
+
+        // Degraded reads: client traffic present from session start.
+        let mut read_left: Vec<usize> = reads.iter().map(|f| f.len()).collect();
+        let mut read_done = vec![0.0f64; reads.len()];
+        let mut reads_open = 0usize;
+        for (r, flows) in reads.iter().enumerate() {
+            if flows.is_empty() {
+                continue;
+            }
+            reads_open += 1;
+            for f in flows.iter() {
+                sim.admit(Flow { start: 0.0, ..*f }, usize::MAX);
+                kinds.push(FlowKind::Read { read: r });
+            }
+        }
+
+        // Foreground generator: open-loop arrivals across the horizon
+        // (admissions sit in the queue until their start times come).
+        // `fg_horizon_s` records how far the generated arrivals actually
+        // reach — the caller's convergence check compares the session's
+        // busy period against it, so hitting the request-count safety
+        // cap surfaces as a convergence error, never as a silently
+        // uncontended session tail.
+        let mut fg_starts: Vec<f64> = Vec::new();
+        let mut fg_horizon_s = f64::INFINITY;
+        let (mut fg_completed, mut fg_bytes, mut fg_latency) = (0usize, 0u64, 0.0f64);
+        if let Some(f) = fg {
+            let ingress = self.net.nodes[PROXY].ingress_bps;
+            let interarrival = f.request_bytes as f64 / (f.fraction.max(1e-6) * ingress);
+            let sources = self.net.nodes.len().saturating_sub(1).max(1);
+            let mut rng = Prng::new(f.seed);
+            let mut t = 0.0;
+            while t < fg_cover_s && fg_starts.len() < 1_000_000 {
+                let src = 1 + rng.below(sources);
+                sim.admit(Flow { src, dst: PROXY, bytes: f.request_bytes, start: t }, usize::MAX);
+                kinds.push(FlowKind::Foreground { req: fg_starts.len() });
+                fg_starts.push(t);
+                t += interarrival;
+            }
+            fg_horizon_s = t;
+        }
+
+        // Repair jobs: event-driven admission, staggered by issue order.
+        let mut outs: Vec<PlaneJobOutcome> = vec![PlaneJobOutcome::default(); jobs.len()];
+        let mut arrivals: Vec<Vec<f64>> =
+            jobs.iter().map(|j| vec![0.0; j.flows.len()]).collect();
+        let mut fetch_left: Vec<usize> = jobs.iter().map(|j| j.flows.len()).collect();
+        let mut wb_left: Vec<usize> = jobs.iter().map(|j| j.wb_flows.len()).collect();
+        let mut lanes = vec![0.0f64; threads.max(1)];
+        let mut issue_floor = 0.0f64;
+        let mut next_job = 0usize;
+        let mut jobs_open = jobs.len();
+        while next_job < jobs.len().min(in_flight.max(1)) {
+            issue_job(&mut sim, &mut kinds, &jobs[next_job], next_job, 0.0, &mut issue_floor, issue_gap_s, &mut outs);
+            next_job += 1;
+        }
+
+        while jobs_open > 0 || reads_open > 0 {
+            let Some(ev) = sim.next_event() else {
+                anyhow::bail!(
+                    "TrafficPlane timeline stalled with {jobs_open} repair(s) and {reads_open} read(s) outstanding"
+                )
+            };
+            let kind = kinds[ev.id];
+            match kind {
+                FlowKind::Fetch { job, pos } => {
+                    arrivals[job][pos] = ev.finish;
+                    fetch_left[job] -= 1;
+                    if fetch_left[job] > 0 {
+                        continue;
+                    }
+                    // Whole fetch set in: virtual decode on the first
+                    // free lane, write-back at per-output readiness.
+                    outs[job].fetch_done_s = ev.finish;
+                    let lane = lanes
+                        .iter()
+                        .enumerate()
+                        .min_by(|a, b| a.1.total_cmp(b.1))
+                        .map(|(i, _)| i)
+                        .expect("at least one lane");
+                    let trace = sim.group_trace(job).to_vec();
+                    let completions = jobs[job].program.output_completions(
+                        &arrivals[job],
+                        &trace,
+                        jobs[job].window_len,
+                        decode_bps,
+                        lanes[lane],
+                    )?;
+                    let dd = completions.iter().copied().fold(0.0f64, f64::max);
+                    lanes[lane] = dd;
+                    outs[job].decode_done_s = dd;
+                    if wb_left[job] == 0 {
+                        outs[job].done_s = dd;
+                        jobs_open -= 1;
+                    }
+                    for (wi, f) in jobs[job].wb_flows.iter().enumerate() {
+                        let start = if overlap_wb {
+                            completions[jobs[job].wb_out_pos[wi]]
+                        } else {
+                            dd
+                        };
+                        sim.admit(Flow { start, ..*f }, usize::MAX);
+                        kinds.push(FlowKind::WriteBack { job });
+                    }
+                    // A fetch slot freed: issue the next stripe now.
+                    if next_job < jobs.len() {
+                        let at = sim.now();
+                        issue_job(&mut sim, &mut kinds, &jobs[next_job], next_job, at, &mut issue_floor, issue_gap_s, &mut outs);
+                        next_job += 1;
+                    }
+                }
+                FlowKind::WriteBack { job } => {
+                    wb_left[job] -= 1;
+                    if wb_left[job] == 0 {
+                        outs[job].done_s = ev.finish;
+                        jobs_open -= 1;
+                    }
+                }
+                FlowKind::Read { read } => {
+                    read_left[read] -= 1;
+                    if read_left[read] == 0 {
+                        read_done[read] = ev.finish;
+                        reads_open -= 1;
+                    }
+                }
+                FlowKind::Foreground { req } => {
+                    fg_completed += 1;
+                    fg_bytes += fg.map_or(0, |f| f.request_bytes);
+                    fg_latency += ev.finish - fg_starts[req];
+                }
+            }
+        }
+
+        let completion_s = outs.iter().map(|o| o.done_s).fold(0.0f64, f64::max);
+        let busy_until = read_done.iter().copied().fold(completion_s, f64::max);
+        let foreground = fg.map(|f| ForegroundReport {
+            fraction: f.fraction,
+            request_bytes: f.request_bytes,
+            requests_issued: fg_starts.iter().filter(|&&t| t <= busy_until).count(),
+            requests_completed: fg_completed,
+            bytes_completed: fg_bytes,
+            mean_latency_s: if fg_completed > 0 { fg_latency / fg_completed as f64 } else { 0.0 },
+        });
+        Ok(PlaneOutcome { jobs: outs, read_done_s: read_done, completion_s, fg_horizon_s, foreground })
+    }
+}
+
+/// Admit one stripe's fetch flows at `max(at, issue floor)` — the
+/// issuer is serial, so consecutive issues sit one `gap` apart even
+/// when slots free simultaneously ("staggered by issue order").
+#[allow(clippy::too_many_arguments)]
+fn issue_job(
+    sim: &mut SessionSim<'_>,
+    kinds: &mut Vec<FlowKind>,
+    job: &PlaneJob<'_>,
+    j: usize,
+    at: f64,
+    floor: &mut f64,
+    gap: f64,
+    outs: &mut [PlaneJobOutcome],
+) {
+    let start = at.max(*floor);
+    for (pos, f) in job.flows.iter().enumerate() {
+        sim.admit(Flow { start, ..*f }, j);
+        kinds.push(FlowKind::Fetch { job: j, pos });
+    }
+    outs[j].issue_s = start;
+    *floor = start + gap;
+}
+
+/// One repair stripe as the virtual scheduler sees it.
+struct PlaneJob<'a> {
+    flows: &'a [Flow],
+    program: &'a RepairProgram,
+    window_len: usize,
+    wb_flows: &'a [Flow],
+    /// Program output position feeding each write-back flow.
+    wb_out_pos: &'a [usize],
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+struct PlaneJobOutcome {
+    issue_s: f64,
+    fetch_done_s: f64,
+    #[allow(dead_code)]
+    decode_done_s: f64,
+    done_s: f64,
+}
+
+#[derive(Clone)]
+struct PlaneOutcome {
+    jobs: Vec<PlaneJobOutcome>,
+    read_done_s: Vec<f64>,
+    completion_s: f64,
+    /// How far the generated foreground arrivals reach (∞ without a
+    /// generator): the session's busy period must end inside it.
+    fg_horizon_s: f64,
+    foreground: Option<ForegroundReport>,
+}
+
+#[derive(Clone, Copy, Debug)]
+enum FlowKind {
+    Fetch { job: usize, pos: usize },
+    WriteBack { job: usize },
+    Read { read: usize },
+    Foreground { req: usize },
+}
+
+/// When a reconstructed block's write-back flow may start on the shared
+/// timeline.
+///
+/// In both modes the proxy *issues* a stripe's write-backs at the event
+/// where its fetch completes (the scheduler's per-output virtual times
+/// are only fully determined then — the stripe's arrival curve can be
+/// bent by traffic admitted mid-fetch), so an output whose virtual
+/// completion lands *before* the last survivor arrival starts at that
+/// arrival instead: the overlap win materializes where decode extends
+/// past the fetch (decode-bound stripes), which is also where there is
+/// serial write-back time worth reclaiming. Per-output *event-driven*
+/// issuance is a ROADMAP follow-up.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum WriteBackMode {
+    /// Each flow starts at its block's own virtual decode-completion
+    /// time ([`crate::repair::RepairProgram::output_completions`]):
+    /// write-back overlaps the rest of the stripe's decode.
+    #[default]
+    Overlapped,
+    /// After the whole stripe has decoded — the pre-TrafficPlane
+    /// serial model (kept for the reduction property and comparisons).
+    Serial,
+}
+
+/// Open-loop foreground load: read requests from random datanodes into
+/// the proxy at an offered load of `fraction` × the proxy's ingress
+/// bandwidth, for the lifetime of the repair session. This is what the
+/// paper's contended repair experiments run against.
+#[derive(Clone, Copy, Debug)]
+pub struct ForegroundLoad {
+    /// Offered load as a fraction of proxy ingress capacity (e.g. 0.25
+    /// for the paper's 25% point). Values ≤ 0 disable the generator.
+    pub fraction: f64,
+    /// Bytes per foreground request.
+    pub request_bytes: u64,
+    /// Seed of the deterministic source-picking sequence.
+    pub seed: u64,
+}
+
+impl ForegroundLoad {
+    /// A generator at the given offered-load fraction with 1 MiB
+    /// requests.
+    pub fn fraction(fraction: f64) -> Self {
+        Self { fraction, ..Self::default() }
+    }
+}
+
+impl Default for ForegroundLoad {
+    fn default() -> Self {
+        Self { fraction: 0.25, request_bytes: 1024 * 1024, seed: 0xF06 }
+    }
+}
+
+/// What the foreground generator experienced during the session.
+#[derive(Clone, Debug)]
+pub struct ForegroundReport {
+    pub fraction: f64,
+    pub request_bytes: u64,
+    /// Requests whose arrival fell before the session's last repair or
+    /// in-session read finished.
+    pub requests_issued: usize,
+    /// Requests that finished before the session's work did.
+    pub requests_completed: usize,
+    pub bytes_completed: u64,
+    /// Mean completed-request latency, seconds.
+    pub mean_latency_s: f64,
+}
+
+/// Roll-up of one repair session: the per-stripe [`RepairReport`]s (in
+/// job order) plus session-level completion, contention and
+/// write-back-overlap accounting from the shared [`TrafficPlane`]
+/// timeline.
+#[derive(Clone, Debug)]
+pub struct SessionReport {
+    /// Per-stripe reports, in job order (isolated-pass clocks unchanged
+    /// from the pre-session accounting; see [`RepairReport`]).
+    pub reports: Vec<RepairReport>,
+    /// In-session degraded reads, in request order; `time_s` is each
+    /// read's completion instant on the shared timeline.
+    pub reads: Vec<ReadReport>,
+    /// Decode workers / virtual decode lanes the session ran with.
+    pub threads: usize,
+    /// Shared-timeline instant the last repaired stripe's write-back
+    /// finished (0 when the session repaired nothing).
+    pub completion_s: f64,
+    /// Same timeline with write-back serialized after each stripe's
+    /// decode ([`WriteBackMode::Serial`]).
+    pub completion_serial_wb_s: f64,
+    /// The serial wave bound: Σ per-stripe `total_s()` — fetch, decode
+    /// and write-back paid in full, one stripe at a time. The session's
+    /// `completion_s` is property-pinned ≤ this (absent foreground
+    /// load).
+    pub serial_s: f64,
+    /// Σ per-stripe `contention_delay_s()`: fetch time attributable to
+    /// sharing the timeline with other stripes / reads / foreground.
+    pub contention_delay_s: f64,
+    /// `completion_serial_wb_s − completion_s` (≥ 0): what starting
+    /// write-back at per-output readiness saved.
+    pub write_back_overlap_s: f64,
+    /// Present when a foreground generator ran.
+    pub foreground: Option<ForegroundReport>,
+}
+
+/// Builder-style repair session — the single entry point to the repair
+/// executor. Construct via [`Cluster::repair`], configure, then
+/// [`Self::run`].
+///
+/// Defaults: every currently-degraded stripe (stripe-id order), one
+/// decode worker, no foreground load, no in-session reads, overlapped
+/// write-back, `threads × 4` stripes in flight.
+pub struct RepairSession<'c> {
+    cluster: &'c mut Cluster,
+    jobs: Option<Vec<(StripeId, Vec<usize>)>>,
+    threads: usize,
+    foreground: Option<ForegroundLoad>,
+    reads: Vec<(FileId, ReadMode)>,
+    write_back: WriteBackMode,
+    in_flight: Option<usize>,
+}
+
+impl<'c> RepairSession<'c> {
+    pub(super) fn new(cluster: &'c mut Cluster) -> Self {
+        Self {
+            cluster,
+            jobs: None,
+            threads: 1,
+            foreground: None,
+            reads: Vec::new(),
+            write_back: WriteBackMode::default(),
+            in_flight: None,
+        }
+    }
+
+    /// Add one explicit job: repair `failed` blocks of stripe `sid`.
+    /// Without any explicit job the session repairs every degraded
+    /// stripe.
+    pub fn stripe(mut self, sid: StripeId, failed: &[usize]) -> Self {
+        self.jobs.get_or_insert_with(Vec::new).push((sid, failed.to_vec()));
+        self
+    }
+
+    /// Add explicit jobs (`(stripe, failed blocks)`, each stripe at most
+    /// once across the session).
+    pub fn stripes(mut self, jobs: impl IntoIterator<Item = (StripeId, Vec<usize>)>) -> Self {
+        self.jobs.get_or_insert_with(Vec::new).extend(jobs);
+        self
+    }
+
+    /// Decode workers (wall-clock) and virtual decode lanes (shared
+    /// timeline). Clamped to ≥ 1.
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// Run an open-loop foreground load generator against the session
+    /// (fractions ≤ 0 disable it).
+    pub fn foreground(mut self, load: ForegroundLoad) -> Self {
+        self.foreground = if load.fraction > 0.0 && load.request_bytes > 0 {
+            Some(load)
+        } else {
+            None
+        };
+        self
+    }
+
+    /// Serve these degraded reads *inside* the session: the reads'
+    /// flows are admitted to the shared timeline at session start, so
+    /// they contend with (and are contended by) the repair traffic.
+    /// Results appear in [`SessionReport::reads`].
+    pub fn degraded_reads(
+        mut self,
+        reads: impl IntoIterator<Item = (FileId, ReadMode)>,
+    ) -> Self {
+        self.reads.extend(reads);
+        self
+    }
+
+    /// Write-back start policy on the shared timeline (default:
+    /// [`WriteBackMode::Overlapped`]).
+    pub fn write_back(mut self, mode: WriteBackMode) -> Self {
+        self.write_back = mode;
+        self
+    }
+
+    /// Cap on stripes in flight at the fetch issuer (default
+    /// `threads × 4`). `1` serializes stripes on the shared timeline —
+    /// useful for isolating the contention terms.
+    pub fn in_flight(mut self, stripes: usize) -> Self {
+        self.in_flight = Some(stripes.max(1));
+        self
+    }
+
+    /// Execute the session: wall-clock pipeline (fetch issuer →
+    /// readiness-queue decode workers → write-back) plus the shared
+    /// virtual timeline, returning the full [`SessionReport`].
+    pub fn run(self) -> anyhow::Result<SessionReport> {
+        let RepairSession { cluster, jobs, threads, foreground, reads, write_back, in_flight } =
+            self;
+        let jobs = match jobs {
+            Some(jobs) => jobs,
+            None => cluster.failed_jobs(),
+        };
+
+        // In-session degraded reads arrive at session start — serve them
+        // against the still-degraded metadata, before repair relocates
+        // anything.
+        let read_outs = reads
+            .iter()
+            .map(|&(file, mode)| cluster.degraded_read_core(file, mode))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        // Wall-clock work: fetch, decode, write back, metadata updates.
+        let finished = run_waves(cluster, &jobs, threads)?;
+
+        // Shared virtual timeline, in both write-back modes (their
+        // difference is the session's write-back-overlap accounting).
+        let plane = TrafficPlane::new(&cluster.net);
+        let decode_bps = cluster.cfg.decode_gbps * 1e9 / 8.0;
+        let window = in_flight.unwrap_or(threads * STRIPES_IN_FLIGHT_PER_WORKER).max(1);
+        let gap = cluster.cfg.latency_s;
+        let pjobs: Vec<PlaneJob> = finished
+            .iter()
+            .map(|fj| PlaneJob {
+                flows: &fj.meta.flows,
+                program: &fj.meta.program,
+                window_len: fj.meta.window_len,
+                wb_flows: &fj.wb_flows,
+                wb_out_pos: &fj.meta.outs_idx,
+            })
+            .collect();
+        let read_flows: Vec<&[Flow]> = read_outs.iter().map(|o| o.flows.as_slice()).collect();
+        let fg = foreground.as_ref();
+        let overlapped =
+            plane.schedule(&pjobs, &read_flows, threads, window, gap, decode_bps, true, fg)?;
+        // On a stripe with a single reconstructed block, that block's
+        // per-output start *is* the stripe decode completion, so the two
+        // write-back modes produce the same timeline — skip the second
+        // pass (the common single-block-failure case) unless some stripe
+        // actually has several outputs to stagger.
+        let serial_wb = if pjobs.iter().any(|j| j.wb_flows.len() > 1) {
+            plane.schedule(&pjobs, &read_flows, threads, window, gap, decode_bps, false, fg)?
+        } else {
+            overlapped.clone()
+        };
+        drop(pjobs);
+        drop(read_flows);
+        let chosen = match write_back {
+            WriteBackMode::Overlapped => &overlapped,
+            WriteBackMode::Serial => &serial_wb,
+        };
+
+        let mut reports = Vec::with_capacity(finished.len());
+        let mut serial_s = 0.0f64;
+        let mut contention_delay_s = 0.0f64;
+        for (fj, oc) in finished.into_iter().zip(chosen.jobs.iter()) {
+            let FinishedJob { meta, decode_cpu_s, wb_s, .. } = fj;
+            let report = RepairReport {
+                stripe: meta.sid,
+                blocks_repaired: meta.failed,
+                blocks_read: meta.fetched,
+                bytes_read: meta.bytes_read,
+                read_s: meta.read_s,
+                wb_s,
+                sim_time_s: meta.read_s + wb_s,
+                decode_sim_s: meta.bytes_read as f64 / decode_bps,
+                decode_cpu_s,
+                completion_s: meta.done_s + wb_s,
+                issue_s: oc.issue_s,
+                contended_read_s: oc.fetch_done_s - oc.issue_s,
+                session_done_s: oc.done_s,
+                local: meta.local,
+            };
+            serial_s += report.total_s();
+            contention_delay_s += report.contention_delay_s();
+            reports.push(report);
+        }
+        let reads = read_outs
+            .into_iter()
+            .zip(chosen.read_done_s.iter())
+            .map(|(o, &t)| ReadReport {
+                bytes: o.bytes,
+                time_s: t,
+                bytes_read: o.bytes_read,
+                degraded: o.degraded,
+            })
+            .collect();
+        Ok(SessionReport {
+            completion_s: chosen.completion_s,
+            completion_serial_wb_s: serial_wb.completion_s,
+            serial_s,
+            contention_delay_s,
+            write_back_overlap_s: (serial_wb.completion_s - overlapped.completion_s).max(0.0),
+            foreground: chosen.foreground.clone(),
+            threads,
+            reports,
+            reads,
+        })
+    }
+
+    /// [`Self::run`] for sessions that repair exactly one stripe:
+    /// returns its report directly.
+    pub fn run_single(self) -> anyhow::Result<RepairReport> {
+        let mut session = self.run()?;
+        anyhow::ensure!(
+            session.reports.len() == 1,
+            "session repaired {} stripes, expected exactly 1",
+            session.reports.len()
+        );
+        Ok(session.reports.pop().expect("length checked"))
+    }
+}
+
+/// One stripe through the wall-clock pipeline, ready for reporting and
+/// the virtual timeline.
+struct FinishedJob {
+    meta: JobMeta,
+    decode_cpu_s: f64,
+    /// Isolated-pass write-back time.
+    wb_s: f64,
+    /// Write-back flows, in `meta.failed` order.
+    wb_flows: Vec<Flow>,
+}
+
+/// The wall-clock executor: process the job list in bounded waves —
+/// fetch issuer feeding `threads` readiness-queue decode workers, then
+/// serial write-back in input order (identical mechanics, byte movement
+/// and isolated-pass accounting to the pre-session
+/// `repair_stripes_batch`).
+fn run_waves(
+    cluster: &mut Cluster,
+    jobs: &[(StripeId, Vec<usize>)],
+    threads: usize,
+) -> anyhow::Result<Vec<FinishedJob>> {
+    let scheme = cluster.scheme().clone();
+    let wave_len = threads.max(1) * STRIPES_IN_FLIGHT_PER_WORKER;
+    let mut out = Vec::with_capacity(jobs.len());
+    for wave in jobs.chunks(wave_len) {
+        run_wave(cluster, wave, threads, &scheme, &mut out)?;
+    }
+    Ok(out)
+}
+
+fn run_wave(
+    cluster: &mut Cluster,
+    jobs: &[(StripeId, Vec<usize>)],
+    threads: usize,
+    scheme: &Arc<crate::codes::Scheme>,
+    out: &mut Vec<FinishedJob>,
+) -> anyhow::Result<()> {
+    let workers = threads.max(1).min(jobs.len());
+    let mut metas: Vec<Option<JobMeta>> = Vec::new();
+    metas.resize_with(jobs.len(), || None);
+    let mut decoded: Vec<Option<Decoded>> = Vec::new();
+    decoded.resize_with(jobs.len(), || None);
+    let mut first_err: Option<anyhow::Error> = None;
+
+    if workers <= 1 {
+        // One decode lane: fetch → decode inline per stripe through the
+        // same helpers (single-stripe repairs and callers that asked
+        // for no parallelism pay no thread overhead).
+        let mut scratch = cluster.scratch.lock().unwrap();
+        for (orig, (sid, failed)) in jobs.iter().enumerate() {
+            let (meta, djob) = cluster.prepare_repair(orig, *sid, failed, scheme)?;
+            metas[orig] = Some(meta);
+            let (o, res) = decode_job(djob, &mut scratch);
+            decoded[o] = Some(res?);
+        }
+    } else {
+        // Stage 2 runs while stage 1 is still issuing fetches for later
+        // stripes: workers pull fetched stripes off a shared readiness
+        // queue, one ScratchBuffers each.
+        let (job_tx, job_rx) = mpsc::channel::<DecodeJob>();
+        let (res_tx, res_rx) = mpsc::channel::<(usize, anyhow::Result<Decoded>)>();
+        let job_rx = Arc::new(Mutex::new(job_rx));
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                let job_rx = Arc::clone(&job_rx);
+                let res_tx = res_tx.clone();
+                scope.spawn(move || {
+                    let mut scratch = ScratchBuffers::new();
+                    loop {
+                        let job = job_rx.lock().unwrap().recv();
+                        let Ok(job) = job else { break };
+                        if res_tx.send(decode_job(job, &mut scratch)).is_err() {
+                            break;
+                        }
+                    }
+                });
+            }
+            drop(res_tx);
+            for (orig, (sid, failed)) in jobs.iter().enumerate() {
+                // Stop issuing as soon as any worker reported an error:
+                // the wave is doomed, and every further fetch (datanode
+                // reads, netsim runs) would be thrown away.
+                while let Ok((o, res)) = res_rx.try_recv() {
+                    match res {
+                        Ok(d) => decoded[o] = Some(d),
+                        Err(e) => {
+                            if first_err.is_none() {
+                                first_err = Some(e);
+                            }
+                        }
+                    }
+                }
+                if first_err.is_some() {
+                    break;
+                }
+                match cluster.prepare_repair(orig, *sid, failed, scheme) {
+                    Ok((meta, djob)) => {
+                        metas[orig] = Some(meta);
+                        if job_tx.send(djob).is_err() {
+                            break; // all workers gone (they only exit on error)
+                        }
+                    }
+                    Err(e) => {
+                        first_err = Some(e);
+                        break;
+                    }
+                }
+            }
+            drop(job_tx);
+            for (orig, res) in res_rx {
+                match res {
+                    Ok(d) => decoded[orig] = Some(d),
+                    Err(e) => {
+                        if first_err.is_none() {
+                            first_err = Some(e);
+                        }
+                    }
+                }
+            }
+        });
+    }
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+
+    // -- stage 3: write-back (serial), results in input order ----------
+    for (orig, (meta_slot, dec_slot)) in metas.iter_mut().zip(decoded.iter_mut()).enumerate() {
+        let meta = meta_slot
+            .take()
+            .ok_or_else(|| anyhow::anyhow!("job {orig} was never fetched"))?;
+        let dec = dec_slot
+            .take()
+            .ok_or_else(|| anyhow::anyhow!("stripe {} never decoded", meta.sid))?;
+        let (wb_s, wb_flows) =
+            cluster.write_back(meta.sid, &meta.stripe, &meta.failed, &dec.rec)?;
+        out.push(FinishedJob { meta, decode_cpu_s: dec.decode_cpu_s, wb_s, wb_flows });
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Cluster, ClusterConfig};
+    use crate::codes::SchemeKind;
+
+    fn tiny_cfg(kind: SchemeKind) -> ClusterConfig {
+        ClusterConfig {
+            num_datanodes: 12,
+            gbps: 1.0,
+            latency_s: 0.001,
+            block_size: 4096,
+            kind,
+            k: 6,
+            r: 2,
+            p: 2,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn empty_session_is_a_no_op() {
+        let mut c = Cluster::new(tiny_cfg(SchemeKind::CpAzure));
+        c.fill_random_stripes(1, 1);
+        let s = c.repair().threads(4).run().unwrap();
+        assert!(s.reports.is_empty());
+        assert_eq!(s.completion_s, 0.0);
+        assert_eq!(s.serial_s, 0.0);
+        assert!(s.foreground.is_none());
+    }
+
+    #[test]
+    fn lone_stripe_session_reduces_to_isolated_accounting() {
+        // ISSUE 5 property: when flows don't overlap in time (a single
+        // stripe, serial write-back, no foreground), the shared-timeline
+        // accounting reduces exactly to the old isolated per-stripe
+        // accounting.
+        for kind in [SchemeKind::CpAzure, SchemeKind::CpUniform, SchemeKind::AzureLrc] {
+            let mut c = Cluster::new(tiny_cfg(kind));
+            let sid = c.fill_random_stripes(1, 17)[0];
+            let victim = c.meta.stripes[&sid].block_nodes[0];
+            c.fail_node(victim);
+            let s = c.repair().write_back(WriteBackMode::Serial).run().unwrap();
+            assert_eq!(s.reports.len(), 1);
+            let r = &s.reports[0];
+            assert_eq!(r.issue_s, 0.0, "{kind:?}: lone stripe issues at t=0");
+            assert!(
+                (r.contended_read_s - r.read_s).abs() < 1e-9,
+                "{kind:?}: uncontended fetch must cost the isolated makespan \
+                 ({} vs {})",
+                r.contended_read_s,
+                r.read_s
+            );
+            assert!(
+                (r.session_done_s - r.completion_s).abs() < 1e-9,
+                "{kind:?}: serial-wb lone session must equal completion_s \
+                 ({} vs {})",
+                r.session_done_s,
+                r.completion_s
+            );
+            assert!((s.completion_s - r.completion_s).abs() < 1e-9);
+            assert!(s.contention_delay_s.abs() < 1e-9);
+            c.restore_node(victim);
+            assert!(c.scrub_stripe(sid).unwrap());
+        }
+    }
+
+    #[test]
+    fn session_completion_bounded_by_serial_wave_time_all_seeds() {
+        // ISSUE 5 property: on every seed and thread count (without
+        // foreground load), the shared, overlapped timeline never loses
+        // to running the stripes one at a time with everything serial.
+        for seed in [3u64, 11, 21, 77, 123] {
+            for threads in [1usize, 2, 4, 8] {
+                let mut c = Cluster::new(tiny_cfg(SchemeKind::CpAzure));
+                let sids = c.fill_random_stripes(4, seed);
+                let v0 = c.meta.stripes[&sids[0]].block_nodes[0];
+                let v1 = c.meta.stripes[&sids[0]].block_nodes[8];
+                c.fail_node(v0);
+                c.fail_node(v1);
+                let s = c.repair().threads(threads).run().unwrap();
+                assert!(!s.reports.is_empty());
+                assert!(
+                    s.completion_s <= s.serial_s + 1e-6,
+                    "seed {seed} threads {threads}: session {} > serial {}",
+                    s.completion_s,
+                    s.serial_s
+                );
+                assert!(
+                    s.completion_serial_wb_s <= s.serial_s + 1e-6,
+                    "seed {seed} threads {threads}: serial-wb session beats serial bound"
+                );
+                assert!(s.write_back_overlap_s >= 0.0);
+                for r in &s.reports {
+                    assert!(
+                        r.contended_read_s >= r.read_s - 1e-9,
+                        "seed {seed}: contention cannot speed a fetch up"
+                    );
+                    assert!(r.session_done_s <= s.completion_s + 1e-12);
+                    assert!(r.session_done_s > 0.0);
+                }
+                c.restore_node(v0);
+                c.restore_node(v1);
+                for sid in sids {
+                    assert!(c.scrub_stripe(sid).unwrap(), "seed {seed} stripe {sid}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn contended_session_beats_the_serial_sum_strictly() {
+        // ISSUE 5 acceptance, cross-stripe half: with several stripes on
+        // the shared timeline, session completion is strictly below the
+        // fetch+decode+write-back serial sum (later fetches overlap
+        // earlier decodes and write-backs).
+        let mut c = Cluster::new(tiny_cfg(SchemeKind::CpAzure));
+        let sids = c.fill_random_stripes(4, 99);
+        let v0 = c.meta.stripes[&sids[0]].block_nodes[0];
+        let v1 = c.meta.stripes[&sids[0]].block_nodes[8];
+        c.fail_node(v0);
+        c.fail_node(v1);
+        let s = c.repair().threads(4).run().unwrap();
+        assert!(s.reports.len() >= 2);
+        assert!(
+            s.completion_s < s.serial_s - 1e-9,
+            "no overlap won: session {} vs serial {}",
+            s.completion_s,
+            s.serial_s
+        );
+        c.restore_node(v0);
+        c.restore_node(v1);
+        for sid in sids {
+            assert!(c.scrub_stripe(sid).unwrap());
+        }
+    }
+
+    #[test]
+    fn write_back_overlaps_decode_per_output() {
+        // ISSUE 5 acceptance, write-back half: on a decode-bound
+        // two-output cascade (D1+L1), the first output's write-back
+        // starts at its own virtual completion — two decode-work blocks
+        // in — so the overlapped schedule strictly beats whole-stripe
+        // write-back. (Decode must be the bottleneck: with a fast
+        // decoder every output gates on the same last arrival and there
+        // is nothing to stagger.)
+        let mut cfg = tiny_cfg(SchemeKind::CpAzure);
+        cfg.decode_gbps = 0.05;
+        let mut c = Cluster::new(cfg);
+        let sid = c.fill_random_stripes(1, 99)[0];
+        let v0 = c.meta.stripes[&sid].block_nodes[0];
+        let v1 = c.meta.stripes[&sid].block_nodes[8];
+        c.fail_node(v0);
+        c.fail_node(v1);
+        let s = c.repair().run().unwrap();
+        assert_eq!(s.reports.len(), 1);
+        assert!(
+            s.write_back_overlap_s > 0.0,
+            "per-output write-back saved nothing (serial-wb {} vs overlapped {})",
+            s.completion_serial_wb_s,
+            s.completion_s
+        );
+        assert!(s.completion_s < s.completion_serial_wb_s);
+        // And the whole session still beats full serialization.
+        assert!(s.completion_s < s.serial_s - 1e-9);
+        c.restore_node(v0);
+        c.restore_node(v1);
+        assert!(c.scrub_stripe(sid).unwrap());
+    }
+
+    #[test]
+    fn foreground_load_contends_with_repair() {
+        // 50% offered load on the proxy ingress must slow the fetch
+        // phase down and be accounted per stripe and per session.
+        let build = || {
+            let mut c = Cluster::new(tiny_cfg(SchemeKind::CpUniform));
+            let sids = c.fill_random_stripes(3, 7);
+            let v = c.meta.stripes[&sids[0]].block_nodes[1];
+            c.fail_node(v);
+            (c, v, sids)
+        };
+        let (mut quiet_c, qv, qsids) = build();
+        let quiet = quiet_c.repair().threads(2).run().unwrap();
+        let (mut loaded_c, lv, _) = build();
+        let loaded = loaded_c
+            .repair()
+            .threads(2)
+            .foreground(ForegroundLoad {
+                fraction: 0.5,
+                request_bytes: 2048,
+                seed: 42,
+            })
+            .run()
+            .unwrap();
+        assert_eq!(quiet.reports.len(), loaded.reports.len());
+        assert!(
+            loaded.completion_s > quiet.completion_s + 1e-9,
+            "foreground load did not slow the session ({} vs {})",
+            loaded.completion_s,
+            quiet.completion_s
+        );
+        assert!(loaded.contention_delay_s > quiet.contention_delay_s - 1e-12);
+        let fg = loaded.foreground.as_ref().expect("foreground report");
+        assert!(fg.requests_issued > 0);
+        assert!((fg.fraction - 0.5).abs() < 1e-12);
+        // Isolated-pass clocks must be untouched by foreground load.
+        for (q, l) in quiet.reports.iter().zip(loaded.reports.iter()) {
+            assert_eq!(q.stripe, l.stripe);
+            assert_eq!(q.bytes_read, l.bytes_read);
+            assert!((q.sim_time_s - l.sim_time_s).abs() < 1e-12);
+            assert!((q.completion_s - l.completion_s).abs() < 1e-12);
+        }
+        quiet_c.restore_node(qv);
+        for sid in qsids {
+            assert!(quiet_c.scrub_stripe(sid).unwrap());
+        }
+        let _ = lv;
+    }
+
+    #[test]
+    fn in_session_degraded_reads_are_served_and_contended() {
+        use crate::prng::Prng;
+        let mut c = Cluster::new(tiny_cfg(SchemeKind::CpAzure));
+        let mut rng = Prng::new(5);
+        let content = rng.bytes(6000);
+        let fid = c.put_file(content.clone());
+        let sid = c.seal_stripe().unwrap();
+        c.fill_random_stripes(2, 6);
+        let victim = c.meta.stripes[&sid].block_nodes[0];
+        c.fail_node(victim);
+
+        // Standalone (isolated) read for comparison.
+        let alone = c.degraded_read(fid, ReadMode::FileLevelDedup).unwrap();
+        assert_eq!(alone.bytes, content);
+
+        let s = c
+            .repair()
+            .threads(2)
+            .degraded_reads([(fid, ReadMode::FileLevelDedup)])
+            .run()
+            .unwrap();
+        assert_eq!(s.reads.len(), 1);
+        let read = &s.reads[0];
+        assert_eq!(read.bytes, content, "in-session read must reconstruct");
+        assert!(read.degraded);
+        assert_eq!(read.bytes_read, alone.bytes_read, "accounting identical");
+        assert!(
+            read.time_s >= alone.time_s - 1e-9,
+            "shared timeline cannot serve the read faster than isolation"
+        );
+        c.restore_node(victim);
+        assert!(c.scrub_stripe(sid).unwrap());
+    }
+
+    #[test]
+    fn in_flight_one_serializes_fetches() {
+        // With a one-stripe admission window, each stripe's fetch sees
+        // an empty ingress: contended == isolated read time for all.
+        let mut c = Cluster::new(tiny_cfg(SchemeKind::CpAzure));
+        let sids = c.fill_random_stripes(3, 31);
+        let v = c.meta.stripes[&sids[0]].block_nodes[2];
+        c.fail_node(v);
+        let s = c.repair().threads(2).in_flight(1).run().unwrap();
+        assert!(!s.reports.is_empty());
+        for r in &s.reports {
+            assert!(
+                (r.contended_read_s - r.read_s).abs() < 1e-9,
+                "stripe {}: serialized fetches must be contention-free ({} vs {})",
+                r.stripe,
+                r.contended_read_s,
+                r.read_s
+            );
+        }
+        assert!(s.contention_delay_s < 1e-9);
+        c.restore_node(v);
+        for sid in sids {
+            assert!(c.scrub_stripe(sid).unwrap());
+        }
+    }
+}

@@ -225,7 +225,7 @@ pub fn single_node_repair_time(
         for b in 0..n {
             let victim = c.meta.stripes[&sid].block_nodes[b];
             c.fail_node(victim);
-            let rep = c.repair_stripe(sid, &[b]).expect("repair");
+            let rep = c.repair().stripe(sid, &[b]).run_single().expect("repair");
             times.push(rep.total_s());
             c.restore_node(victim);
         }
@@ -264,7 +264,7 @@ pub fn two_node_repair_time(
             let v1 = c.meta.stripes[&sid].block_nodes[pair[1]];
             c.fail_node(v0);
             c.fail_node(v1);
-            let rep = c.repair_stripe(sid, &pair).expect("repair");
+            let rep = c.repair().stripe(sid, &pair).run_single().expect("repair");
             times.push(rep.total_s());
             c.restore_node(v0);
             c.restore_node(v1);

@@ -18,10 +18,9 @@
 //!
 //! ## Repair: one plan → compile → execute pipeline
 //!
-//! Every repair in the crate — whole-block repairs, whole-cluster
-//! [`cluster::Cluster::repair_all`], degraded reads, scrubs, the
-//! Figure 6/9 experiment sweeps — flows through a single three-stage
-//! pipeline:
+//! Every repair in the crate — single stripes, whole-node recovery,
+//! degraded reads, scrubs, the Figure 6/9 experiment sweeps — flows
+//! through a single three-stage pipeline:
 //!
 //! ```text
 //! repair::plan(scheme, erased)          — which equations, what cost (§IV)
@@ -43,12 +42,32 @@
 //!
 //! Programs depend only on `(scheme, erasure pattern)`, so
 //! [`repair::PlanCache`] (bounded, LRU) compiles each pattern once and
-//! replays it across thousands of stripes; whole-node repair streams
-//! fetched stripes to a readiness-queue worker pool
-//! ([`cluster::Cluster::repair_all_parallel`]), reporting both the
-//! serial wave time and the overlapped completion time per stripe.
-//! Kernel-level details and measurements: `EXPERIMENTS.md` §Perf and
-//! §Overlap.
+//! replays it across thousands of stripes.
+//!
+//! ## The TrafficPlane session API
+//!
+//! At the cluster layer, every repair runs as a **session**
+//! ([`cluster::Cluster::repair`], builder-style):
+//!
+//! ```text
+//! cluster.repair()
+//!        .threads(4)                       // decode workers + lanes
+//!        .foreground(ForegroundLoad::fraction(0.25))
+//!        .run()? -> SessionReport
+//! ```
+//!
+//! The session's [`cluster::TrafficPlane`] owns **one shared netsim
+//! timeline**: every stripe's fetch (staggered by issue order), each
+//! reconstructed block's write-back (starting at its *own* virtual
+//! decode-completion time, overlapping the rest of the decode),
+//! in-session degraded reads, and an optional foreground-load
+//! generator all contend on it — so cross-stripe proxy-ingress
+//! contention is modeled, not assumed away. Per-stripe reports keep
+//! the isolated-pass clocks (the paper-comparable accounting)
+//! alongside the shared-timeline fields; the
+//! [`cluster::SessionReport`] rolls up completion, contention-delay
+//! and write-back-overlap accounting. Kernel-level details and
+//! measurements: `EXPERIMENTS.md` §Perf, §Overlap and §Contention.
 //!
 //! Start with [`codes::Scheme`] (pick a construction and parameters),
 //! [`codec::StripeCodec`] (encode/decode bytes), [`repair`] (the repair

@@ -152,7 +152,8 @@ fn run_cluster(
     let mut q = RepairQueue::new();
     q.scan(&c);
     println!("repair queue: {} degraded stripes", q.len());
-    let reports = q.drain(&mut c)?;
+    let session = q.drain_session(&mut c, 2)?;
+    let reports = &session.reports;
     let total: f64 = reports.iter().map(|x| x.total_s()).sum();
     let bytes: u64 = reports.iter().map(|x| x.bytes_read).sum();
     println!(
@@ -162,6 +163,14 @@ fn run_cluster(
         bytes as f64 / 1024.0 / 1024.0,
         reports.iter().filter(|x| x.local).count(),
         reports.iter().filter(|x| !x.local).count()
+    );
+    println!(
+        "shared-timeline session: {:.3}s contended completion vs {:.3}s serial bound \
+         ({:.3}s contention delay, {:.4}s saved by write-back overlap)",
+        session.completion_s,
+        session.serial_s,
+        session.contention_delay_s,
+        session.write_back_overlap_s
     );
     for &v in &victims {
         c.restore_node(v);

@@ -244,6 +244,221 @@ impl NetSim {
     }
 }
 
+/// One completion event of a [`SessionSim`] timeline: the flow admitted
+/// as `id` (the value [`SessionSim::admit`] returned) finished at virtual
+/// time `finish`.
+#[derive(Clone, Copy, Debug)]
+pub struct SessionEvent {
+    pub id: usize,
+    pub finish: f64,
+}
+
+#[derive(Clone, Debug)]
+struct SessFlow {
+    id: usize,
+    group: usize,
+    src: NodeId,
+    dst: NodeId,
+    /// Virtual time the flow becomes active (start + per-flow latency).
+    admit: f64,
+    remaining: f64,
+}
+
+/// Min-heap entry ordering pending admissions by (admit time, id).
+#[derive(Clone, Debug)]
+struct Pending(SessFlow);
+
+impl PartialEq for Pending {
+    fn eq(&self, other: &Self) -> bool {
+        self.0.id == other.0.id
+    }
+}
+impl Eq for Pending {}
+impl Ord for Pending {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // BinaryHeap is a max-heap: the earliest admission (ties by
+        // lowest id, the admission order) must compare GREATEST.
+        other
+            .0
+            .admit
+            .total_cmp(&self.0.admit)
+            .then(other.0.id.cmp(&self.0.id))
+    }
+}
+impl PartialOrd for Pending {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// **Incremental** fluid simulation over one shared virtual timeline —
+/// the engine under the cluster's `TrafficPlane` scheduler.
+///
+/// [`NetSim::run`] answers "given this fixed flow set, when does each
+/// flow finish?"; a `SessionSim` instead lets a *scheduler* interleave
+/// admission decisions with simulation progress: admit some flows
+/// ([`Self::admit`], at the current clock or any future virtual time),
+/// advance to the next completion ([`Self::next_event`]), and react —
+/// admit the next repair stripe's fetch when a slot frees, start a
+/// write-back flow at the virtual time its output decodes, and so on.
+/// Bandwidth sharing between events is the same max-min fair allocation
+/// as [`NetSim::run`]; a timeline whose admissions are all made up front
+/// reproduces `run` exactly (event order, finish times and arrival
+/// curves — unit-pinned below).
+///
+/// Each admitted flow carries a caller-chosen **group**; for groups
+/// `< traced_groups` the sim records the cumulative-arrival curve of
+/// that group's bytes into `trace_dst` (the same corner-point form as
+/// [`NetSim::run_traced`], but per group), which is what lets one
+/// stripe's decode be costed against *its own* bytes while the shared
+/// NIC is also carrying every other stripe plus foreground traffic.
+pub struct SessionSim<'a> {
+    net: &'a NetSim,
+    trace_dst: NodeId,
+    now: f64,
+    active: Vec<SessFlow>,
+    pending: std::collections::BinaryHeap<Pending>,
+    done: std::collections::VecDeque<SessionEvent>,
+    /// Cumulative bytes arrived at `trace_dst` per traced group.
+    arrived: Vec<f64>,
+    /// Corner points of each traced group's arrival curve.
+    traces: Vec<Vec<(f64, f64)>>,
+    next_id: usize,
+}
+
+impl<'a> SessionSim<'a> {
+    /// A fresh timeline at virtual time zero. Arrival curves are traced
+    /// for groups `0..traced_groups` into `trace_dst`.
+    pub fn new(net: &'a NetSim, trace_dst: NodeId, traced_groups: usize) -> Self {
+        Self {
+            net,
+            trace_dst,
+            now: 0.0,
+            active: Vec::new(),
+            pending: std::collections::BinaryHeap::new(),
+            done: std::collections::VecDeque::new(),
+            arrived: vec![0.0; traced_groups],
+            traces: vec![vec![(0.0, 0.0)]; traced_groups],
+            next_id: 0,
+        }
+    }
+
+    /// Current virtual time (the finish time of the last event, or 0).
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Admit a flow to the timeline under `group`. `flow.start` is an
+    /// *absolute* virtual time and may lie in the future (the flow waits
+    /// in the admission queue); a start in the past is clamped to the
+    /// current clock — the caller cannot rewrite history. Returns the
+    /// flow's id, echoed by its completion [`SessionEvent`]. Ids are
+    /// assigned in admission-call order starting at 0.
+    pub fn admit(&mut self, flow: Flow, group: usize) -> usize {
+        let id = self.next_id;
+        self.next_id += 1;
+        self.pending.push(Pending(SessFlow {
+            id,
+            group,
+            src: flow.src,
+            dst: flow.dst,
+            admit: flow.start.max(self.now) + self.net.latency_s,
+            remaining: flow.bytes as f64,
+        }));
+        id
+    }
+
+    /// Borrow the recorded arrival curve of a traced group: corner
+    /// points `(time, cumulative bytes into trace_dst)`, starting at
+    /// `(0, 0)`. Exact between corners (rates are piecewise constant).
+    pub fn group_trace(&self, group: usize) -> &[(f64, f64)] {
+        &self.traces[group]
+    }
+
+    /// Append the current `(time, arrived)` corner to every traced
+    /// group, collapsing runs of flat corners in place: when the last
+    /// two corners already carry the same byte count as the new one,
+    /// the tail corner's time is advanced instead of pushing — the
+    /// piecewise-linear curve is unchanged (a flat run keeps both its
+    /// endpoints), but a group that sits idle through a long session
+    /// costs O(1) memory instead of one corner per event.
+    fn record_corners(&mut self) {
+        for (g, t) in self.traces.iter_mut().enumerate() {
+            let a = self.arrived[g];
+            let n = t.len();
+            if n >= 2 && t[n - 1].1 == a && t[n - 2].1 == a {
+                t[n - 1].0 = self.now;
+            } else {
+                t.push((self.now, a));
+            }
+        }
+    }
+
+    /// Advance the timeline to the next flow completion and return it;
+    /// `None` once no admitted flow remains. Simultaneous completions
+    /// are returned one call at a time without advancing the clock.
+    pub fn next_event(&mut self) -> Option<SessionEvent> {
+        if let Some(ev) = self.done.pop_front() {
+            return Some(ev);
+        }
+        loop {
+            // Activate everything whose admission time has come.
+            while self
+                .pending
+                .peek()
+                .is_some_and(|p| p.0.admit <= self.now + 1e-12)
+            {
+                let p = self.pending.pop().expect("peeked");
+                self.active.push(p.0);
+            }
+            if self.active.is_empty() {
+                let Some(p) = self.pending.peek() else { return None };
+                self.now = p.0.admit;
+                self.record_corners(); // flat segment corner
+                continue;
+            }
+
+            let srcs: Vec<NodeId> = self.active.iter().map(|a| a.src).collect();
+            let dsts: Vec<NodeId> = self.active.iter().map(|a| a.dst).collect();
+            let rates = self.net.fair_rates_impl(&srcs, &dsts);
+
+            let mut dt = f64::INFINITY;
+            for (a, &r) in self.active.iter().zip(rates.iter()) {
+                if r > 0.0 {
+                    dt = dt.min(a.remaining / r);
+                }
+            }
+            if let Some(p) = self.pending.peek() {
+                dt = dt.min(p.0.admit - self.now);
+            }
+            assert!(dt.is_finite(), "session timeline stalled (zero rates?)");
+            let dt = dt.max(0.0);
+
+            self.now += dt;
+            for (a, &r) in self.active.iter_mut().zip(rates.iter()) {
+                a.remaining -= r * dt;
+                if a.dst == self.trace_dst && a.group < self.arrived.len() {
+                    self.arrived[a.group] += r * dt;
+                }
+            }
+            self.record_corners();
+
+            let mut i = 0;
+            while i < self.active.len() {
+                if self.active[i].remaining <= 1e-6 {
+                    let a = self.active.swap_remove(i);
+                    self.done.push_back(SessionEvent { id: a.id, finish: self.now });
+                } else {
+                    i += 1;
+                }
+            }
+            if let Some(ev) = self.done.pop_front() {
+                return Some(ev);
+            }
+        }
+    }
+}
+
 /// Virtual completion time of a work-conserving consumer of rate
 /// `rate_bps` fed by the fluid arrival curve `trace` (corner points of
 /// cumulative bytes, as produced by [`NetSim::run_traced`]) and owing
@@ -265,6 +480,40 @@ pub fn pipeline_completion(trace: &[(f64, f64)], total_bytes: f64, rate_bps: f64
         let backlog = (total_bytes - a).max(0.0);
         // rate_bps = ∞ makes backlog/rate 0 (backlog is finite ≥ 0)
         t_done = t_done.max(s + backlog / rate_bps);
+    }
+    t_done
+}
+
+/// [`pipeline_completion`] generalized to a consumer that only owes the
+/// **first `work_bytes`** of the arrival curve — the per-output decode
+/// gates of the TrafficPlane's write-back overlap, where output `o` only
+/// needs the decode-work prefix of the op list that produces it.
+///
+/// Completion is `max(arrival time of the work-th byte, busy-period
+/// bound over the corners before it)`; corners *after* the prefix is
+/// satisfied do not gate it (unlike [`pipeline_completion`], whose
+/// consumer owes the whole curve and therefore never finishes before
+/// the last arrival). The work-th byte's arrival time is interpolated
+/// inside its segment — the curve is exactly piecewise linear. When
+/// `work_bytes` is at or beyond the curve's total, this degenerates to
+/// [`pipeline_completion`] over the whole curve.
+pub fn prefix_completion(trace: &[(f64, f64)], work_bytes: f64, rate_bps: f64) -> f64 {
+    if work_bytes <= 0.0 {
+        return 0.0;
+    }
+    let mut t_done = 0.0f64;
+    let mut prev: Option<(f64, f64)> = None;
+    for &(s, a) in trace {
+        if a < work_bytes {
+            t_done = t_done.max(s + (work_bytes - a) / rate_bps);
+            prev = Some((s, a));
+        } else {
+            let t_arr = match prev {
+                Some((ps, pa)) if a > pa => ps + (work_bytes - pa) * (s - ps) / (a - pa),
+                _ => s,
+            };
+            return t_done.max(t_arr);
+        }
     }
     t_done
 }
@@ -422,6 +671,130 @@ mod tests {
             assert!(t >= makespan - 1e-9);
             assert!(t <= makespan + total / rate + 1e-9);
         }
+    }
+
+    #[test]
+    fn prefix_completion_gates_only_on_the_prefix() {
+        // Linear arrival of 1.0 "byte" per second for 10 s.
+        let trace: Vec<(f64, f64)> = (0..=10).map(|i| (i as f64, i as f64)).collect();
+        // Infinite consumer: done exactly when the prefix has arrived —
+        // including interpolation inside a segment.
+        assert!((prefix_completion(&trace, 3.0, f64::INFINITY) - 3.0).abs() < 1e-12);
+        assert!((prefix_completion(&trace, 2.5, f64::INFINITY) - 2.5).abs() < 1e-12);
+        // Slow consumer (0.5/s): consume-bound, work/rate.
+        assert!((prefix_completion(&trace, 3.0, 0.5) - 6.0).abs() < 1e-12);
+        // Zero or negative work: instantly done.
+        assert_eq!(prefix_completion(&trace, 0.0, 1.0), 0.0);
+        // Whole-curve work degenerates to pipeline_completion.
+        for rate in [0.25, 1.0, 4.0, f64::INFINITY] {
+            let a = prefix_completion(&trace, 10.0, rate);
+            let b = pipeline_completion(&trace, 10.0, rate);
+            assert!((a - b).abs() < 1e-9, "rate {rate}: {a} vs {b}");
+        }
+        // Work beyond what ever arrives: busy-period bound over the
+        // whole curve (the pipeline_completion fallback).
+        let a = prefix_completion(&trace, 12.0, 1.0);
+        assert!((a - pipeline_completion(&trace, 12.0, 1.0)).abs() < 1e-9);
+        // Monotone in work.
+        let mut last = 0.0;
+        for w in [1.0, 2.0, 5.0, 9.0, 10.0] {
+            let t = prefix_completion(&trace, w, 2.0);
+            assert!(t >= last);
+            last = t;
+        }
+    }
+
+    #[test]
+    fn session_sim_with_upfront_admissions_matches_run() {
+        // A timeline whose flows are all admitted before the first event
+        // must reproduce NetSim::run exactly: same finish per flow, same
+        // makespan, and the summed per-group arrival curves must equal
+        // the aggregate run_traced curve.
+        let mut s = sim(6);
+        s.latency_s = 0.003;
+        let flows: Vec<Flow> = (0..5)
+            .map(|i| Flow {
+                src: i,
+                dst: 5,
+                bytes: (GBPS / (i + 1) as f64) as u64,
+                start: 0.1 * i as f64,
+            })
+            .collect();
+        let (want, makespan, trace) = s.run_traced(&flows, 5);
+
+        let mut sess = SessionSim::new(&s, 5, flows.len());
+        for (g, f) in flows.iter().enumerate() {
+            let id = sess.admit(*f, g);
+            assert_eq!(id, g, "ids follow admission order");
+        }
+        let mut finishes = vec![0.0f64; flows.len()];
+        let mut seen = 0;
+        while let Some(ev) = sess.next_event() {
+            finishes[ev.id] = ev.finish;
+            seen += 1;
+        }
+        assert_eq!(seen, flows.len());
+        for (a, b) in want.iter().zip(finishes.iter()) {
+            assert!((a.finish - b).abs() < 1e-9, "{} vs {b}", a.finish);
+        }
+        assert!((sess.now() - makespan).abs() < 1e-9);
+        // Per-group curves: each ends at (its finish, its bytes); their
+        // total at the aggregate trace's last corner equals the total.
+        let mut total_arrived = 0.0;
+        for (g, f) in flows.iter().enumerate() {
+            let (t_last, a_last) = *sess.group_trace(g).last().unwrap();
+            assert!((t_last - makespan).abs() < 1e-9);
+            assert!(
+                (a_last - f.bytes as f64).abs() < 1e-3 * f.bytes as f64,
+                "group {g}: arrived {a_last} of {}",
+                f.bytes
+            );
+            total_arrived += a_last;
+        }
+        let (_, agg_last) = *trace.last().unwrap();
+        assert!((total_arrived - agg_last).abs() < 1e-3 * agg_last);
+    }
+
+    #[test]
+    fn session_sim_future_admission_waits_for_its_start() {
+        // A flow admitted mid-session with a future start must not move
+        // bytes before that start — equivalent to a staggered-start run.
+        let s = sim(3);
+        let a = Flow { src: 0, dst: 2, bytes: GBPS as u64, start: 0.0 };
+        let b = Flow { src: 1, dst: 2, bytes: GBPS as u64, start: 0.5 };
+        let (want, _) = s.run(&[a, b]);
+
+        let mut sess = SessionSim::new(&s, 2, 2);
+        sess.admit(a, 0);
+        sess.admit(b, 1); // future start, admitted up front
+        let mut got = vec![0.0f64; 2];
+        while let Some(ev) = sess.next_event() {
+            got[ev.id] = ev.finish;
+        }
+        assert!((got[0] - want[0].finish).abs() < 1e-9, "{got:?}");
+        assert!((got[1] - want[1].finish).abs() < 1e-9, "{got:?}");
+        // B's arrival curve is flat until t = 0.5.
+        for &(t, bytes) in sess.group_trace(1) {
+            assert!(bytes <= ((t - 0.5).max(0.0) + 1e-9) * GBPS, "({t}, {bytes})");
+        }
+    }
+
+    #[test]
+    fn session_sim_reactive_admission_at_event_time() {
+        // Event-driven scheduling: admit a second flow only when the
+        // first completes (a write-back chasing a fetch). The second
+        // then runs alone at full rate from that instant.
+        let s = sim(3);
+        let mut sess = SessionSim::new(&s, 2, 1);
+        sess.admit(Flow { src: 0, dst: 2, bytes: GBPS as u64, start: 0.0 }, 0);
+        let ev = sess.next_event().unwrap();
+        assert!((ev.finish - 1.0).abs() < 1e-6);
+        let wb =
+            sess.admit(Flow { src: 2, dst: 1, bytes: (GBPS / 2.0) as u64, start: sess.now() }, 1);
+        let ev2 = sess.next_event().unwrap();
+        assert_eq!(ev2.id, wb);
+        assert!((ev2.finish - 1.5).abs() < 1e-6, "wb at {}", ev2.finish);
+        assert!(sess.next_event().is_none());
     }
 
     #[test]

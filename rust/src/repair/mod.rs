@@ -24,10 +24,9 @@
 //!    ([`crate::gf::combine_into_fused`]). For sources that *stream*,
 //!    [`RepairProgram::execute_pipelined`] uses a compile-time
 //!    readiness frontier to fire each op as soon as its operands
-//!    arrive from a [`StreamingBlockSource`] — degraded reads decode
-//!    through it, and the cluster's whole-node repair
-//!    ([`crate::cluster::Cluster::repair_all_parallel`]) overlaps
-//!    fetch with decode at stripe granularity (readiness-queue
+//!    arrive from a [`StreamingBlockSource`], and the cluster's
+//!    whole-node repair sessions ([`crate::cluster::Cluster::repair`])
+//!    overlap fetch with decode at stripe granularity (readiness-queue
 //!    workers) and in the virtual clock (`EXPERIMENTS.md` §Overlap),
 //!    while replaying resident blocks cache-blocked.
 //!    [`RepairProgram::execute_batch`] remains the CPU-bound multi-

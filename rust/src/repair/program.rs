@@ -293,6 +293,16 @@ pub struct RepairProgram {
     /// `op_fetch_pos[i]` = fetch-set positions of `ops[i].fetch_idx`,
     /// resolved at compile time so execution never searches.
     op_fetch_pos: Vec<Vec<usize>>,
+    /// `op_dep_pos[i]` = fetch-set positions op `i` *transitively*
+    /// depends on (its own fetches plus everything its solved operands
+    /// fetched). Sorted, deduplicated — the per-output network gate of
+    /// the TrafficPlane's virtual schedule ([`Self::output_completions`]).
+    op_dep_pos: Vec<Vec<usize>>,
+    /// `cum_fetch_first[i]` = number of distinct fetch-set blocks first
+    /// read by ops `0..=i` — the decode-work prefix (in blocks) a serial
+    /// replay of the op list has consumed once op `i` retires. The last
+    /// entry equals the fetch-set size.
+    cum_fetch_first: Vec<usize>,
 }
 
 impl RepairProgram {
@@ -399,6 +409,28 @@ impl RepairProgram {
             }
         }
 
+        // Per-output virtual-time support (TrafficPlane write-back
+        // overlap): transitive fetched-dependency sets and the serial
+        // decode-work prefix, both fixed by the op DAG.
+        let mut op_dep_pos: Vec<Vec<usize>> = Vec::with_capacity(ops.len());
+        let mut cum_fetch_first: Vec<usize> = Vec::with_capacity(ops.len());
+        let mut first_seen = vec![false; fetch_order.len()];
+        let mut seen_count = 0usize;
+        for (i, op) in ops.iter().enumerate() {
+            let mut deps: BTreeSet<usize> = op_fetch_pos[i].iter().copied().collect();
+            for &j in &op.solved_idx {
+                deps.extend(op_dep_pos[j].iter().copied());
+            }
+            for &p in &op_fetch_pos[i] {
+                if !first_seen[p] {
+                    first_seen[p] = true;
+                    seen_count += 1;
+                }
+            }
+            cum_fetch_first.push(seen_count);
+            op_dep_pos.push(deps.into_iter().collect());
+        }
+
         Ok(RepairProgram {
             plan: plan.clone(),
             ops,
@@ -408,6 +440,8 @@ impl RepairProgram {
             pending_inputs,
             fetch_order,
             op_fetch_pos,
+            op_dep_pos,
+            cum_fetch_first,
         })
     }
 
@@ -434,6 +468,64 @@ impl RepairProgram {
     /// returned by [`Self::execute`]).
     pub fn output_index(&self, block: usize) -> Option<usize> {
         self.plan.erased.iter().position(|&e| e == block)
+    }
+
+    /// Virtual time each output finishes decoding, in [`Self::erased`]
+    /// order — the per-output readiness the cluster's `TrafficPlane`
+    /// uses to start a reconstructed block's write-back flow *before*
+    /// the whole stripe has decoded.
+    ///
+    /// Inputs describe one stripe's fetch on a shared timeline:
+    /// `arrival[p]` is the virtual finish time of fetch-set position `p`
+    /// (sorted [`Self::fetch`] order), `trace` the stripe's own
+    /// cumulative-arrival curve at the proxy, `block_len` the bytes per
+    /// fetched pseudo-block, `decode_bps` the proxy decode rate and
+    /// `lane_free_s` when a decode lane becomes available.
+    ///
+    /// Model: output `o` (produced by op `i`) completes at
+    ///
+    /// ```text
+    /// max( network gate:  latest arrival among op i's transitive fetched deps,
+    ///      fluid gate:    busy-period completion of the decode-work prefix
+    ///                     cum_fetch_first[i]·block_len against the arrival
+    ///                     curve (`prefix_completion`),
+    ///      lane gate:     lane_free_s + prefix work / decode_bps )
+    /// ```
+    ///
+    /// The last op's prefix is the whole fetch set, so the maximum over
+    /// outputs equals the stripe's [`pipeline_completion`] pushed back by
+    /// lane availability — with a free lane it reduces *exactly* to the
+    /// per-stripe overlap model of `RepairReport::completion_s`
+    /// (property-pinned in the cluster tests).
+    ///
+    /// [`pipeline_completion`]: crate::netsim::pipeline_completion
+    /// [`prefix_completion`]: crate::netsim::prefix_completion
+    pub fn output_completions(
+        &self,
+        arrival: &[f64],
+        trace: &[(f64, f64)],
+        block_len: usize,
+        decode_bps: f64,
+        lane_free_s: f64,
+    ) -> anyhow::Result<Vec<f64>> {
+        anyhow::ensure!(
+            arrival.len() == self.fetch_order.len(),
+            "arrival vector covers {} blocks, fetch set has {}",
+            arrival.len(),
+            self.fetch_order.len()
+        );
+        Ok(self
+            .outputs
+            .iter()
+            .map(|&i| {
+                let gate =
+                    self.op_dep_pos[i].iter().map(|&p| arrival[p]).fold(0.0f64, f64::max);
+                let work = (self.cum_fetch_first[i] * block_len) as f64;
+                let fluid = crate::netsim::prefix_completion(trace, work, decode_bps);
+                let lane = lane_free_s + work / decode_bps;
+                gate.max(fluid).max(lane)
+            })
+            .collect())
     }
 
     /// Run the program: pull survivor bytes from `source`, write every
@@ -820,6 +912,73 @@ mod tests {
         });
         assert!(res.is_err());
         assert_eq!(calls, 2, "sink must not run past the erroring stripe");
+    }
+
+    #[test]
+    fn output_completions_model_invariants() {
+        // The per-output virtual schedule behind TrafficPlane write-back
+        // overlap: (24,2,2) CP-Azure D1+L1, a cascade whose two outputs
+        // depend on different fetch prefixes.
+        let s = Scheme::new(SchemeKind::CpAzure, 24, 2, 2);
+        let program = RepairProgram::for_pattern(&s, &[0, 26]).unwrap();
+        let nf = program.fetch().len();
+        let block_len = 1000usize;
+        // One block lands every 0.1 s; the cascade's L2/G2 operands (the
+        // *last* fetch-set positions — highest block indices) arrive
+        // first, so the L1 output is decodable long before the data
+        // blocks D2..D12 that only D1 needs have all arrived.
+        let arrival: Vec<f64> = (0..nf).map(|i| 0.1 * (nf - i) as f64).collect();
+        let mut trace = vec![(0.0, 0.0)];
+        for i in 0..nf {
+            trace.push((0.1 * (i + 1) as f64, ((i + 1) * block_len) as f64));
+        }
+        let total = (nf * block_len) as f64;
+        let rate = 2000.0; // bytes/s — slow enough that decode matters
+
+        let outs = program
+            .output_completions(&arrival, &trace, block_len, rate, 0.0)
+            .unwrap();
+        assert_eq!(outs.len(), 2);
+        // The stripe-level completion is exactly the fluid busy-period
+        // bound over the whole fetch set.
+        let want = crate::netsim::pipeline_completion(&trace, total, rate);
+        let max = outs.iter().copied().fold(0.0f64, f64::max);
+        assert!((max - want).abs() < 1e-9, "max {max} vs fluid {want}");
+        // Every output needs at least its own work at the decode rate
+        // and never beats the fluid bound for the full set.
+        for &t in &outs {
+            assert!(t >= block_len as f64 / rate - 1e-12);
+            assert!(t <= want + 1e-12);
+        }
+
+        // Infinite decode rate: completions collapse to the per-output
+        // network gates (max transitive-dependency arrival), so the
+        // earlier output can strictly beat the last arrival.
+        let inf = program
+            .output_completions(&arrival, &trace, block_len, f64::INFINITY, 0.0)
+            .unwrap();
+        let last_arrival = arrival.iter().copied().fold(0.0f64, f64::max);
+        let inf_max = inf.iter().copied().fold(0.0f64, f64::max);
+        assert!((inf_max - last_arrival).abs() < 1e-9);
+        assert!(
+            inf.iter().any(|&t| t < last_arrival - 1e-9),
+            "some output should be ready before the final arrival: {inf:?}"
+        );
+
+        // A busy decode lane pushes everything back behind it.
+        let lane_free = 100.0;
+        let busy = program
+            .output_completions(&arrival, &trace, block_len, rate, lane_free)
+            .unwrap();
+        for (i, &t) in busy.iter().enumerate() {
+            assert!(t >= lane_free, "output {i} ignored the busy lane: {t}");
+            assert!(t >= outs[i]);
+        }
+
+        // Arity mismatch is a real error.
+        assert!(program
+            .output_completions(&arrival[..nf - 1], &trace, block_len, rate, 0.0)
+            .is_err());
     }
 
     #[test]

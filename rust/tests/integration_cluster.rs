@@ -36,7 +36,7 @@ fn every_scheme_every_position_single_repair_p1() {
         for b in 0..n {
             let victim = c.meta.stripes[&sid].block_nodes[b];
             c.fail_node(victim);
-            let rep = c.repair_stripe(sid, &[b]).unwrap();
+            let rep = c.repair().stripe(sid, &[b]).run_single().unwrap();
             assert_eq!(rep.blocks_repaired, vec![b]);
             c.restore_node(victim);
             assert!(c.scrub_stripe(sid).unwrap(), "{kind:?} pos {b}");
@@ -58,7 +58,7 @@ fn all_two_node_patterns_repair_p1_cp_schemes() {
                 let vb = c.meta.stripes[&sid].block_nodes[b];
                 c.fail_node(va);
                 c.fail_node(vb);
-                c.repair_stripe(sid, &[a, b]).unwrap();
+                c.repair().stripe(sid, &[a, b]).run_single().unwrap();
                 c.restore_node(va);
                 c.restore_node(vb);
                 assert!(c.scrub_stripe(sid).unwrap(), "{kind:?} pair ({a},{b})");
@@ -79,7 +79,7 @@ fn wide_stripe_p6_repair_and_scrub() {
         let v = c.meta.stripes[&sid].block_nodes[b];
         c.fail_node(v);
     }
-    let rep = c.repair_stripe(sid, &pattern).unwrap();
+    let rep = c.repair().stripe(sid, &pattern).run_single().unwrap();
     assert_eq!(rep.blocks_repaired, pattern);
     for &b in &pattern {
         // nodes may have been reassigned; restore all originally failed
@@ -125,7 +125,7 @@ fn blocks_read_matches_planner_cost_for_single_failures() {
         let plan = cp_lrc::repair::plan_single(&scheme, b);
         let v = c.meta.stripes[&sid].block_nodes[b];
         c.fail_node(v);
-        let rep = c.repair_stripe(sid, &[b]).unwrap();
+        let rep = c.repair().stripe(sid, &[b]).run_single().unwrap();
         c.restore_node(v);
         assert_eq!(
             rep.blocks_read,
@@ -144,7 +144,7 @@ fn repair_time_scales_with_block_size() {
         let sid = c.fill_random_stripes(1, 0x56)[0];
         let v = c.meta.stripes[&sid].block_nodes[0];
         c.fail_node(v);
-        let rep = c.repair_stripe(sid, &[0]).unwrap();
+        let rep = c.repair().stripe(sid, &[0]).run_single().unwrap();
         times.push(rep.sim_time_s);
     }
     assert!(times[0] < times[1] && times[1] < times[2], "{times:?}");
@@ -166,7 +166,7 @@ fn repair_all_compiles_recurring_patterns_once() {
         // always [0] even though repair relocates the block each round
         let victim = c.meta.stripes[&sid].block_nodes[0];
         c.fail_node(victim);
-        let reports = c.repair_all().unwrap();
+        let reports = c.repair().run().unwrap().reports;
         assert_eq!(reports.len(), 1);
         assert_eq!(reports[0].blocks_repaired, vec![0]);
         c.restore_node(victim);
@@ -190,7 +190,7 @@ fn multi_stripe_node_failure_repairs_all_affected() {
         .iter()
         .filter(|sid| c.meta.stripes[sid].block_nodes.contains(&victim))
         .count();
-    let reports = c.repair_all().unwrap();
+    let reports = c.repair().run().unwrap().reports;
     assert_eq!(reports.len(), affected);
     c.restore_node(victim);
     for sid in sids {
@@ -249,7 +249,7 @@ fn detector_plus_queue_full_cycle() {
     assert_eq!(rep.newly_failed, vec![2]);
     let mut q = RepairQueue::new();
     q.scan(&c);
-    let reports = q.drain(&mut c).unwrap();
+    let reports = q.drain_session(&mut c, 1).unwrap().reports;
     assert!(!reports.is_empty());
     c.restore_node(2);
     for sid in sids {

@@ -94,7 +94,7 @@ fn cp_azure_multinode_examples_in_cluster() {
         (c.meta.stripes[&sid].block_nodes[0], c.meta.stripes[&sid].block_nodes[7]);
     c.fail_node(v0);
     c.fail_node(v1);
-    let rep = c.repair_stripe(sid, &[0, 7]).unwrap();
+    let rep = c.repair().stripe(sid, &[0, 7]).run_single().unwrap();
     assert!(rep.local);
     assert_eq!(rep.blocks_read, 4);
     c.restore_node(v0);
@@ -109,7 +109,7 @@ fn cp_azure_multinode_examples_in_cluster() {
     for &v in &vs {
         c.fail_node(v);
     }
-    let rep = c.repair_stripe(sid, &[0, 1, 9]).unwrap();
+    let rep = c.repair().stripe(sid, &[0, 1, 9]).run_single().unwrap();
     assert!(!rep.local);
     assert_eq!(rep.blocks_read, 6);
     for v in vs {

@@ -92,7 +92,7 @@ fn cluster_with_runtime_end_to_end() {
     assert!(c.scrub_stripe(sid).unwrap());
     let victim = c.meta.stripes[&sid].block_nodes[5];
     c.fail_node(victim);
-    c.repair_all().unwrap();
+    c.repair().run().unwrap();
     c.restore_node(victim);
     assert!(c.scrub_stripe(sid).unwrap());
     let (out, _) = c.read_file(fid).unwrap();

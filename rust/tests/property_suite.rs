@@ -114,6 +114,73 @@ fn pipelined_executor_matches_wave_executor_arbitrary() {
 }
 
 #[test]
+fn session_accounting_properties_arbitrary_clusters() {
+    // ISSUE 5 acceptance, cross-module flavor: for arbitrary schemes,
+    // failure patterns and thread counts, the TrafficPlane session
+    // (a) keeps the per-stripe isolated-pass read/byte accounting
+    //     identical to a one-stripe-per-session run of the same jobs,
+    // (b) completes no later than the serial wave bound (no foreground),
+    // (c) never reports a contended fetch faster than the isolated one.
+    use cp_lrc::cluster::{Cluster, ClusterConfig};
+    check("arb-session-accounting", 12, 0x5E5510, |rng| {
+        let kind = [SchemeKind::AzureLrc, SchemeKind::CpAzure, SchemeKind::CpUniform]
+            [rng.below(3)];
+        let s = Scheme::new(kind, 6, 2, 2);
+        let mk = |seed: u64| {
+            let mut c = Cluster::new(ClusterConfig {
+                num_datanodes: s.n() + 3,
+                block_size: 2048,
+                kind,
+                k: 6,
+                r: 2,
+                p: 2,
+                ..Default::default()
+            });
+            c.fill_random_stripes(3, seed);
+            c
+        };
+        let seed = rng.u64();
+        let threads = [1usize, 2, 4, 8][rng.below(4)];
+        let mut shared = mk(seed);
+        let mut lone = mk(seed);
+        let victim = shared.meta.stripes[&0].block_nodes[rng.below(s.n())];
+        shared.fail_node(victim);
+        lone.fail_node(victim);
+
+        let session = shared.repair().threads(threads).run().map_err(|e| e.to_string())?;
+        prop_assert!(
+            session.completion_s <= session.serial_s + 1e-6,
+            "{kind:?} seed {seed} threads {threads}: session {} > serial {}",
+            session.completion_s,
+            session.serial_s
+        );
+        // One-job-per-session reference: same stripes, no co-admission.
+        for r in &session.reports {
+            let alone = lone
+                .repair()
+                .stripe(r.stripe, &r.blocks_repaired)
+                .run_single()
+                .map_err(|e| e.to_string())?;
+            prop_assert!(r.blocks_read == alone.blocks_read, "reads differ");
+            prop_assert!(r.bytes_read == alone.bytes_read, "bytes differ");
+            prop_assert!(
+                (r.read_s - alone.read_s).abs() < 1e-9,
+                "isolated read clock moved under co-admission"
+            );
+            prop_assert!(
+                (r.completion_s - alone.completion_s).abs() < 1e-9,
+                "isolated overlap clock moved under co-admission"
+            );
+            prop_assert!(
+                r.contended_read_s >= r.read_s - 1e-9,
+                "contention sped a fetch up"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn adrc_monotone_in_stripe_width() {
     // §III challenge 1: wider stripes cost more to repair, per scheme.
     for kind in [SchemeKind::AzureLrc, SchemeKind::CpAzure, SchemeKind::CpUniform] {
