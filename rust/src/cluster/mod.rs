@@ -837,7 +837,24 @@ impl StripeFetcher<'_> {
             bytes: data.len() as u64,
             start: 0.0,
         });
+        #[cfg(feature = "strict-invariants")]
+        self.assert_flow_conservation();
         Ok(data)
+    }
+
+    /// strict-invariants: every byte charged to `bytes_read` is carried
+    /// by exactly one recorded netsim flow — the paper-accounted read
+    /// totals and the shared-timeline traffic can never drift apart.
+    /// Checked after every fetch; violations are accounting bugs, so
+    /// they panic rather than Err.
+    #[cfg(feature = "strict-invariants")]
+    fn assert_flow_conservation(&self) {
+        let flow_bytes: u64 = self.flows.iter().map(|f| f.bytes).sum();
+        assert_eq!(
+            flow_bytes, self.bytes_read,
+            "fetch-bytes conservation broken: {} flow bytes vs {} charged",
+            flow_bytes, self.bytes_read
+        );
     }
 
     /// Make the cache of block `b` cover `range`, honoring the policy's

@@ -1,0 +1,83 @@
+//! Machine-readable registry of every `#[target_feature]` SIMD kernel.
+//!
+//! `cargo xtask lint` cross-checks this table against the source tree
+//! (see VERIFICATION.md): each entry's kernel must exist with exactly
+//! the declared feature string, its dispatch seam must exist and
+//! reference the kernel, and its scalar-pinning test must exist
+//! somewhere in the tree. Conversely, every `#[target_feature]`
+//! function in the tree must appear here. Adding a kernel tier without
+//! registering + dispatching + pinning it fails the lint.
+
+/// One SIMD kernel tier and the evidence that makes it shippable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KernelEntry {
+    /// Function name of the `#[target_feature]` kernel in `gf`.
+    pub name: &'static str,
+    /// Exact `enable = "..."` feature string on the attribute.
+    pub features: &'static str,
+    /// The safe dispatch seam that feature-detects and calls the
+    /// kernel; the only place the kernel may be invoked from.
+    pub dispatch: &'static str,
+    /// Name of the test pinning the kernel's output to the scalar
+    /// reference implementation.
+    pub pinning_test: &'static str,
+}
+
+/// Every SIMD kernel in the tree, from narrowest to widest tier.
+pub const KERNELS: &[KernelEntry] = &[
+    KernelEntry {
+        name: "scale_avx2",
+        features: "avx2",
+        dispatch: "scale_slice",
+        pinning_test: "scale_slice_every_coefficient_pinned_to_scalar_mul",
+    },
+    KernelEntry {
+        name: "scale_gfni",
+        features: "gfni,avx2",
+        dispatch: "scale_slice",
+        pinning_test: "scale_slice_every_coefficient_pinned_to_scalar_mul",
+    },
+    KernelEntry {
+        name: "fused_avx2",
+        features: "avx2",
+        dispatch: "fused_avx2_dispatch",
+        pinning_test: "property_combine_fused_matches_scalar_reference",
+    },
+    KernelEntry {
+        name: "fused_gfni",
+        features: "gfni,avx2",
+        dispatch: "fused_gfni_dispatch",
+        pinning_test: "gfni_matrix_is_multiplication_by_c_exhaustive",
+    },
+    KernelEntry {
+        name: "fused_gfni512",
+        features: "gfni,avx512f,avx512bw",
+        dispatch: "fused_gfni512_dispatch",
+        pinning_test: "combine_fused_wide_lengths_cover_the_avx512_body_and_tails",
+    },
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_the_full_kernel_ladder() {
+        assert_eq!(KERNELS.len(), 5, "add new kernel tiers to the registry");
+    }
+
+    #[test]
+    fn registry_entries_are_unique_and_complete() {
+        for (i, e) in KERNELS.iter().enumerate() {
+            assert!(!e.name.is_empty());
+            assert!(!e.features.is_empty());
+            assert!(!e.dispatch.is_empty());
+            assert!(!e.pinning_test.is_empty());
+            assert!(
+                KERNELS[..i].iter().all(|o| o.name != e.name),
+                "duplicate kernel entry {}",
+                e.name
+            );
+        }
+    }
+}

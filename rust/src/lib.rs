@@ -72,6 +72,20 @@
 //! Start with [`codes::Scheme`] (pick a construction and parameters),
 //! [`codec::StripeCodec`] (encode/decode bytes), [`repair`] (the repair
 //! pipeline), or [`cluster`] (run the full prototype).
+//!
+//! ## Verification plane
+//!
+//! Correctness is enforced in tiers — tier-1 tests, `cargo xtask lint`
+//! (unsafe boundary, SAFETY comments, the kernel registry), a Miri
+//! subset, AddressSanitizer/ThreadSanitizer jobs, and the
+//! `strict-invariants` feature's runtime checks. `VERIFICATION.md` at
+//! the repo root documents every tier and the conventions (SAFETY
+//! comments, [`gf::kernel_registry`]) contributors must follow.
+
+// Belt-and-braces twin of the [lints.rust] table in Cargo.toml: unsafe
+// bodies must wrap their unsafe operations in explicit blocks even if
+// the manifest lint table is bypassed (e.g. direct rustc invocations).
+#![deny(unsafe_op_in_unsafe_fn)]
 
 pub mod bench_harness;
 pub mod cluster;

@@ -324,6 +324,24 @@ pub struct SessionSim<'a> {
     /// Corner points of each traced group's arrival curve.
     traces: Vec<Vec<(f64, f64)>>,
     next_id: usize,
+    #[cfg(feature = "strict-invariants")]
+    strict: StrictSession,
+}
+
+/// strict-invariants bookkeeping for [`SessionSim`]: enough admission
+/// totals to check event-time monotonicity on every event and per-group
+/// byte conservation when the timeline drains.
+#[cfg(feature = "strict-invariants")]
+#[derive(Default)]
+struct StrictSession {
+    /// Bytes admitted per traced group with `dst == trace_dst`.
+    dst_bytes: Vec<f64>,
+    /// Flow count per traced group with `dst == trace_dst`.
+    dst_flows: Vec<usize>,
+    /// Total flows admitted on the timeline.
+    admitted: usize,
+    /// Finish time of the last returned event.
+    last_finish: f64,
 }
 
 impl<'a> SessionSim<'a> {
@@ -340,6 +358,12 @@ impl<'a> SessionSim<'a> {
             arrived: vec![0.0; traced_groups],
             traces: vec![vec![(0.0, 0.0)]; traced_groups],
             next_id: 0,
+            #[cfg(feature = "strict-invariants")]
+            strict: StrictSession {
+                dst_bytes: vec![0.0; traced_groups],
+                dst_flows: vec![0; traced_groups],
+                ..StrictSession::default()
+            },
         }
     }
 
@@ -357,6 +381,14 @@ impl<'a> SessionSim<'a> {
     pub fn admit(&mut self, flow: Flow, group: usize) -> usize {
         let id = self.next_id;
         self.next_id += 1;
+        #[cfg(feature = "strict-invariants")]
+        {
+            self.strict.admitted += 1;
+            if flow.dst == self.trace_dst && group < self.strict.dst_bytes.len() {
+                self.strict.dst_bytes[group] += flow.bytes as f64;
+                self.strict.dst_flows[group] += 1;
+            }
+        }
         self.pending.push(Pending(SessFlow {
             id,
             group,
@@ -398,6 +430,65 @@ impl<'a> SessionSim<'a> {
     /// `None` once no admitted flow remains. Simultaneous completions
     /// are returned one call at a time without advancing the clock.
     pub fn next_event(&mut self) -> Option<SessionEvent> {
+        let ev = self.advance();
+        #[cfg(feature = "strict-invariants")]
+        self.check_event_invariants(ev.as_ref());
+        ev
+    }
+
+    /// strict-invariants: event-time monotonicity and group byte
+    /// conservation, checked on every event the timeline hands out.
+    /// Violations are simulator bugs, so they panic rather than Err.
+    #[cfg(feature = "strict-invariants")]
+    fn check_event_invariants(&mut self, ev: Option<&SessionEvent>) {
+        match ev {
+            Some(ev) => {
+                assert!(
+                    ev.finish >= self.strict.last_finish - 1e-9,
+                    "session event time went backwards: {} after {}",
+                    ev.finish,
+                    self.strict.last_finish
+                );
+                assert!(
+                    ev.finish <= self.now + 1e-9,
+                    "session event finishes at {} beyond the clock {}",
+                    ev.finish,
+                    self.now
+                );
+                assert!(ev.id < self.strict.admitted, "event for a flow never admitted");
+                self.strict.last_finish = ev.finish;
+                // Over-delivery bound: a traced group can never have
+                // received more bytes than were admitted toward it.
+                for (g, &a) in self.arrived.iter().enumerate() {
+                    let bytes = self.strict.dst_bytes[g];
+                    assert!(
+                        a <= bytes + 1e-9 * bytes + 1e-9,
+                        "group {g} over-delivered: {a} of {bytes} admitted bytes"
+                    );
+                }
+            }
+            None => {
+                // Drained timeline: every byte admitted toward the trace
+                // destination arrived, within the per-flow completion
+                // threshold (flows retire at remaining <= 1e-6) plus
+                // float accumulation slack.
+                for (g, &a) in self.arrived.iter().enumerate() {
+                    let bytes = self.strict.dst_bytes[g];
+                    let slack = 1e-6 * self.strict.dst_flows[g] as f64
+                        + 1e-9 * bytes
+                        + 1e-9 * self.strict.admitted as f64
+                        + 1e-9;
+                    assert!(
+                        (a - bytes).abs() <= slack,
+                        "group {g} byte conservation broken: arrived {a}, admitted {bytes}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// The uninstrumented advance loop behind [`Self::next_event`].
+    fn advance(&mut self) -> Option<SessionEvent> {
         if let Some(ev) = self.done.pop_front() {
             return Some(ev);
         }

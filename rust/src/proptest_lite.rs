@@ -1,25 +1,90 @@
 //! Minimal property-test driver (the offline toolchain has no proptest).
 //!
 //! Runs a property over `cases` pseudo-random inputs derived from a fixed
-//! seed; on failure it reports the case index and the seed needed to
-//! replay exactly that case. No shrinking — cases are kept small instead.
+//! seed; on failure it reports the case index and the exact sub-seed, and
+//! the failure is replayable in isolation:
+//!
+//! ```text
+//! CP_LRC_PROPTEST_SEED=0xdeadbeef cargo test -q failing_test_name
+//! ```
+//!
+//! runs every property as a single case seeded with the given sub-seed
+//! (the value printed in the panic message), skipping the normal sweep.
+//! Sub-seeds that once exposed real bugs belong in [`REGRESSION_SEEDS`]:
+//! they are replayed *before* the random sweep on every run, so a fixed
+//! bug stays fixed. No shrinking — cases are kept small instead.
 
 use crate::prng::Prng;
 
-/// Run `prop` over `cases` random cases. `prop` receives a fresh `Prng`
-/// per case (replayable from the printed sub-seed) and returns
-/// `Err(message)` on property violation.
+/// Sub-seeds that previously exposed property failures, replayed first
+/// on every [`check`] call. Append the `sub-seed` value from a failure's
+/// panic message here (with a short provenance note) when fixing the bug
+/// it found. The canary seed verifies the replay plumbing itself.
+pub const REGRESSION_SEEDS: &[u64] = &[
+    // Canary: exercises the replay-first path on every run.
+    0x0123_4567_89AB_CDEF,
+];
+
+/// Replay override parsed from `CP_LRC_PROPTEST_SEED` (decimal or 0x
+/// hex). Read at each `check` call; under Miri the env lookup is
+/// skipped (isolation) and the full sweep always runs.
+fn replay_seed_from_env() -> Option<u64> {
+    #[cfg(not(miri))]
+    {
+        parse_replay_seed(&std::env::var("CP_LRC_PROPTEST_SEED").ok()?)
+    }
+    #[cfg(miri)]
+    {
+        None
+    }
+}
+
+/// Parse a replay seed: decimal (`12345`) or hex (`0xDEAD_BEEF`,
+/// underscores ignored). Pure so the parsing is testable without
+/// mutating the test process's environment.
+fn parse_replay_seed(raw: &str) -> Option<u64> {
+    let s = raw.trim().replace('_', "");
+    if let Some(hex) = s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")) {
+        u64::from_str_radix(hex, 16).ok()
+    } else {
+        s.parse().ok()
+    }
+}
+
+/// Run `prop` over `cases` random cases (after replaying
+/// [`REGRESSION_SEEDS`]). `prop` receives a fresh `Prng` per case
+/// (replayable from the printed sub-seed) and returns `Err(message)` on
+/// property violation.
 pub fn check<F>(name: &str, cases: usize, seed: u64, mut prop: F)
 where
     F: FnMut(&mut Prng) -> Result<(), String>,
 {
+    if let Some(sub) = replay_seed_from_env() {
+        // Replay mode: the one case the user asked for, nothing else.
+        run_case(name, "CP_LRC_PROPTEST_SEED replay", 0, 1, sub, &mut prop);
+        return;
+    }
+    for (i, &sub) in REGRESSION_SEEDS.iter().enumerate() {
+        run_case(name, "regression", i, REGRESSION_SEEDS.len(), sub, &mut prop);
+    }
     let mut master = Prng::new(seed);
     for i in 0..cases {
         let sub = master.u64();
-        let mut rng = Prng::new(sub);
-        if let Err(msg) = prop(&mut rng) {
-            panic!("property `{name}` failed at case {i}/{cases} (sub-seed {sub:#x}): {msg}");
-        }
+        run_case(name, "case", i, cases, sub, &mut prop);
+    }
+}
+
+/// Run one property case, panicking with a replayable report on failure.
+fn run_case<F>(name: &str, kind: &str, i: usize, total: usize, sub: u64, prop: &mut F)
+where
+    F: FnMut(&mut Prng) -> Result<(), String>,
+{
+    let mut rng = Prng::new(sub);
+    if let Err(msg) = prop(&mut rng) {
+        panic!(
+            "property `{name}` failed at {kind} {i}/{total} (sub-seed {sub:#x}): {msg}\n\
+             replay just this case with: CP_LRC_PROPTEST_SEED={sub:#x} cargo test"
+        );
     }
 }
 
@@ -68,7 +133,7 @@ mod tests {
     use super::*;
 
     #[test]
-    fn passing_property_runs_all_cases() {
+    fn passing_property_runs_regressions_then_all_cases() {
         let mut count = 0;
         check("trivial", 100, 1, |rng| {
             count += 1;
@@ -76,12 +141,35 @@ mod tests {
             prop_assert!(x < 256);
             Ok(())
         });
-        assert_eq!(count, 100);
+        // Replay mode would break the count; tests never set the env var.
+        assert_eq!(count, 100 + REGRESSION_SEEDS.len());
     }
 
     #[test]
     #[should_panic(expected = "property `always-fails` failed")]
     fn failing_property_panics_with_context() {
         check("always-fails", 10, 2, |_| Err("nope".to_string()));
+    }
+
+    #[test]
+    #[should_panic(expected = "sub-seed 0x123456789abcdef")]
+    fn regression_seed_failures_report_the_seed() {
+        // A property that fails only on the canary regression seed:
+        // proves regressions replay first and report replayably.
+        check("canary-only", 5, 3, |rng| {
+            let first = rng.u64();
+            let canary_first = Prng::new(REGRESSION_SEEDS[0]).u64();
+            prop_assert!(first != canary_first, "canary draw");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn replay_seed_parsing_accepts_decimal_and_hex() {
+        assert_eq!(parse_replay_seed("12345"), Some(12345));
+        assert_eq!(parse_replay_seed("0xDEAD_BEEF"), Some(0xDEAD_BEEF));
+        assert_eq!(parse_replay_seed(" 0X10 "), Some(16));
+        assert_eq!(parse_replay_seed("zzz"), None);
+        assert_eq!(parse_replay_seed(""), None);
     }
 }

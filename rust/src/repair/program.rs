@@ -431,7 +431,7 @@ impl RepairProgram {
             op_dep_pos.push(deps.into_iter().collect());
         }
 
-        Ok(RepairProgram {
+        let program = RepairProgram {
             plan: plan.clone(),
             ops,
             fetch,
@@ -442,7 +442,64 @@ impl RepairProgram {
             op_fetch_pos,
             op_dep_pos,
             cum_fetch_first,
-        })
+        };
+        #[cfg(feature = "strict-invariants")]
+        program.assert_compiled_invariants();
+        Ok(program)
+    }
+
+    /// strict-invariants: structural consistency of a freshly compiled
+    /// program — topological op order, readiness-frontier edge counts
+    /// matching the pending-input counters, operand positions in range,
+    /// fused coefficient arity, and monotone decode-work prefixes.
+    /// Violations are compiler bugs, so they panic rather than Err.
+    #[cfg(feature = "strict-invariants")]
+    fn assert_compiled_invariants(&self) {
+        let n_fetch = self.fetch_order.len();
+        assert!(
+            self.fetch_order.windows(2).all(|w| w[0] < w[1]),
+            "fetch_order not strictly sorted"
+        );
+        let mut edges = 0usize;
+        for (i, op) in self.ops.iter().enumerate() {
+            assert!(
+                op.solved_idx.iter().all(|&j| j < i),
+                "op {i} reads a not-yet-computed op output (topological order broken)"
+            );
+            assert_eq!(
+                op.coeffs.len(),
+                op.fetch_idx.len() + op.solved_idx.len(),
+                "op {i} fused coefficient arity mismatch"
+            );
+            assert!(
+                self.op_fetch_pos[i].iter().all(|&p| p < n_fetch),
+                "op {i} references a fetch position outside the fetch set"
+            );
+            assert_eq!(
+                self.pending_inputs[i],
+                op.fetch_idx.len() + op.solved_idx.len(),
+                "op {i} pending-input counter disagrees with its operand count"
+            );
+            assert!(
+                self.op_dep_pos[i].windows(2).all(|w| w[0] < w[1]),
+                "op {i} transitive dependency set not strictly sorted"
+            );
+            edges += op.fetch_idx.len() + op.solved_idx.len();
+        }
+        let frontier_edges: usize = self.ready_after.iter().map(Vec::len).sum();
+        assert_eq!(
+            frontier_edges, edges,
+            "readiness frontier edge count disagrees with op operand edges"
+        );
+        assert!(
+            self.cum_fetch_first.windows(2).all(|w| w[0] <= w[1]),
+            "decode-work prefix not monotone"
+        );
+        if let Some(&last) = self.cum_fetch_first.last() {
+            // `<=`, not `==`: global decode fetches every chosen
+            // survivor, including zero-weight ones no op ever reads.
+            assert!(last <= n_fetch, "decode-work prefix exceeds the fetch set");
+        }
     }
 
     /// Convenience: plan + compile in one call.
@@ -656,6 +713,14 @@ impl RepairProgram {
             "{} of {} ops never became ready (broken readiness frontier)",
             self.ops.len() - executed,
             self.ops.len()
+        );
+        // strict-invariants: every op fired exactly once, so every
+        // pending-input counter must have drained to zero — a non-zero
+        // residue means an op ran before all its operands arrived.
+        #[cfg(feature = "strict-invariants")]
+        assert!(
+            pending.iter().all(|&p| p == 0),
+            "pipelined frontier left non-zero pending-input counters"
         );
         let len = len.context("program fetches nothing")?;
         Ok(self.outputs.iter().map(|&i| &scratch.bufs[i][..len]).collect())

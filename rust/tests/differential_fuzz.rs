@@ -1,0 +1,187 @@
+//! Differential fuzz: four executors, one answer.
+//!
+//! Hammers random `(scheme, erasure pattern, block length, chunk
+//! width)` tuples — including 0-length and sub-register-tail blocks —
+//! through every repair executor and demands bit-identical outputs:
+//!
+//! * `RepairProgram::execute_chunked` at a random chunk width,
+//! * `RepairProgram::execute_pipelined` with blocks arriving in a
+//!   random (shuffled) order,
+//! * `RepairProgram::execute_batch` over several stripes sharing the
+//!   program,
+//! * the naive matrix decode (`StripeCodec::decode`), the byte-level
+//!   oracle with no compiled program, no fused kernels and no
+//!   readiness frontier in common with the paths under test.
+//!
+//! Driven by `prng.rs` (no external fuzzer); failures replay via the
+//! printed sub-seed (`CP_LRC_PROPTEST_SEED`, see `proptest_lite`).
+
+use cp_lrc::codec::StripeCodec;
+use cp_lrc::codes::{Scheme, SchemeKind};
+use cp_lrc::prng::Prng;
+use cp_lrc::proptest_lite::check;
+use cp_lrc::repair::{IterStream, RepairProgram, ScratchBuffers, SliceSource};
+use cp_lrc::{prop_assert, PARAMS};
+
+/// Random stripe with `erased` blanked out; returns (full stripe,
+/// erased view).
+fn make_stripe(
+    rng: &mut Prng,
+    codec: &StripeCodec,
+    len: usize,
+    erased: &[usize],
+) -> (Vec<Vec<u8>>, Vec<Option<Vec<u8>>>) {
+    let k = codec.scheme.k;
+    let data: Vec<Vec<u8>> = (0..k).map(|_| rng.bytes(len)).collect();
+    let stripe = codec.encode_stripe(&data);
+    let blocks: Vec<Option<Vec<u8>>> = stripe
+        .iter()
+        .enumerate()
+        .map(|(b, blk)| if erased.contains(&b) { None } else { Some(blk.clone()) })
+        .collect();
+    (stripe, blocks)
+}
+
+#[test]
+fn differential_fuzz_all_executors_agree() {
+    check("differential-executors", 120, 0xD1FF_F022, |rng| {
+        // Small-to-mid parameter sets keep a case fast; P6 (48,4,3) in
+        // the fixed test below covers the wide-stripe end.
+        let &(k, r, p) = &PARAMS[rng.below(5)];
+        let kind = SchemeKind::ALL_LRC[rng.below(SchemeKind::ALL_LRC.len())];
+        let scheme = Scheme::new(kind, k, r, p);
+        let n = scheme.n();
+        let tol = scheme.guaranteed_tolerance;
+        let codec = StripeCodec::new(scheme.clone());
+
+        // Erasure count 1..=tolerance, distinct random blocks; lengths
+        // cover empty, sub-word, sub-register tails and multi-chunk.
+        let f = 1 + rng.below(tol);
+        let mut erased = rng.distinct(n, f);
+        erased.sort_unstable();
+        let len = [0usize, 1, 3, 8, 31, 32, 33, 63, 64, 65, 100, 517][rng.below(12)];
+        let (stripe, blocks) = make_stripe(rng, &codec, len, &erased);
+
+        let program = match RepairProgram::for_pattern(&scheme, &erased) {
+            Ok(p) => p,
+            Err(e) => {
+                return Err(format!(
+                    "{kind:?} k={k} pattern {erased:?} within tolerance {tol} \
+                     but unplannable: {e}"
+                ))
+            }
+        };
+        let mut scratch = ScratchBuffers::new();
+
+        // Oracle: naive matrix decode straight off the generator.
+        let want = codec
+            .decode(&blocks, &erased)
+            .map_err(|e| format!("naive decode failed: {e}"))?;
+        for (i, &e) in erased.iter().enumerate() {
+            prop_assert!(
+                want[i] == stripe[e],
+                "{kind:?} k={k} oracle decode wrong for block {e}"
+            );
+        }
+
+        // Executor 1: chunked execution at a random column width.
+        let chunk = [1usize, 7, 64, 1024, 65536][rng.below(5)];
+        {
+            let outs = program
+                .execute_chunked(&mut SliceSource::new(&blocks), &mut scratch, chunk)
+                .map_err(|e| format!("execute_chunked failed: {e}"))?;
+            for (i, &e) in erased.iter().enumerate() {
+                prop_assert!(
+                    outs[i] == want[i],
+                    "{kind:?} k={k} chunk={chunk} block {e}: chunked != oracle"
+                );
+            }
+        }
+
+        // Executor 2: pipelined, blocks arriving in random order.
+        {
+            let mut arrivals: Vec<(usize, Vec<u8>)> = program
+                .fetch()
+                .iter()
+                .map(|&b| (b, blocks[b].clone().expect("survivor present")))
+                .collect();
+            rng.shuffle(&mut arrivals);
+            let outs = program
+                .execute_pipelined(&mut IterStream(arrivals.into_iter()), &mut scratch)
+                .map_err(|e| format!("execute_pipelined failed: {e}"))?;
+            for (i, &e) in erased.iter().enumerate() {
+                prop_assert!(
+                    outs[i] == want[i],
+                    "{kind:?} k={k} block {e}: pipelined != oracle"
+                );
+            }
+        }
+
+        // Executor 3: batch over three stripes (the original plus two
+        // fresh ones) sharing the program and scratch.
+        {
+            let (stripe2, blocks2) = make_stripe(rng, &codec, len, &erased);
+            let (stripe3, blocks3) = make_stripe(rng, &codec, len, &erased);
+            let all = [&blocks, &blocks2, &blocks3];
+            let stripes = [&stripe, &stripe2, &stripe3];
+            let mut sources: Vec<SliceSource> =
+                all.iter().map(|b| SliceSource::new(b)).collect();
+            let mut checked = 0usize;
+            program
+                .execute_batch(&mut sources, &mut scratch, |si, outs| {
+                    for (i, &e) in erased.iter().enumerate() {
+                        anyhow::ensure!(
+                            outs[i] == &stripes[si][e][..],
+                            "stripe {si} block {e}: batch != encoded truth"
+                        );
+                    }
+                    checked += 1;
+                    Ok(())
+                })
+                .map_err(|e| format!("execute_batch failed: {e}"))?;
+            prop_assert!(checked == 3, "batch sink ran {checked} of 3 stripes");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn differential_wide_stripe_multi_failure() {
+    // The paper's P6 wide stripe (48, 4, 3) at full guaranteed
+    // tolerance: the heaviest single pattern, run once per executor
+    // with deterministic inputs rather than inside the random sweep.
+    let mut rng = Prng::new(0x57A11);
+    let scheme = Scheme::new(SchemeKind::CpUniform, 48, 4, 3);
+    let tol = scheme.guaranteed_tolerance;
+    let n = scheme.n();
+    let codec = StripeCodec::new(scheme.clone());
+    let mut erased = rng.distinct(n, tol);
+    erased.sort_unstable();
+    let len = 257; // 4×64-byte AVX-512 bodies + 1-byte tail
+    let (stripe, blocks) = make_stripe(&mut rng, &codec, len, &erased);
+
+    let program = RepairProgram::for_pattern(&scheme, &erased).expect("plannable");
+    let mut scratch = ScratchBuffers::new();
+
+    let want = codec.decode(&blocks, &erased).expect("naive decode");
+    let outs = program
+        .execute(&mut SliceSource::new(&blocks), &mut scratch)
+        .expect("execute");
+    for (i, &e) in erased.iter().enumerate() {
+        assert_eq!(want[i], stripe[e], "oracle block {e}");
+        assert_eq!(outs[i], &want[i][..], "execute block {e}");
+    }
+
+    let mut arrivals: Vec<(usize, Vec<u8>)> = program
+        .fetch()
+        .iter()
+        .map(|&b| (b, blocks[b].clone().expect("survivor present")))
+        .collect();
+    arrivals.reverse(); // worst-case arrival order for the frontier
+    let outs = program
+        .execute_pipelined(&mut IterStream(arrivals.into_iter()), &mut scratch)
+        .expect("pipelined");
+    for (i, &e) in erased.iter().enumerate() {
+        assert_eq!(outs[i], &stripe[e][..], "pipelined block {e}");
+    }
+}

@@ -1,0 +1,946 @@
+//! Repo-local verification tasks: `cargo xtask lint`.
+//!
+//! The lint pass encodes this repository's safety and pinning
+//! invariants as *source-level* checks (documented in VERIFICATION.md):
+//!
+//! 1. **Unsafe boundary** — the `unsafe` keyword is forbidden outside
+//!    the kernel allowlist modules (`rust/src/gf/`,
+//!    `rust/src/runtime/pjrt.rs`). The compiler enforces the same
+//!    boundary via the crate's `unsafe_code = "deny"` lint table; this
+//!    pass additionally covers examples, benches and integration tests
+//!    (separate crates the lib-level lint table does not reach).
+//! 2. **SAFETY comments** — inside the allowlist, every `unsafe fn` /
+//!    `unsafe {}` site must carry a `// SAFETY:` comment on the same
+//!    line or in the contiguous comment/attribute block above it.
+//! 3. **Kernel registry** — every `#[target_feature]` kernel must have
+//!    an entry in `rust/src/gf/kernel_registry.rs` whose feature string
+//!    matches the attribute, whose dispatch seam exists and references
+//!    the kernel, and whose named scalar-pinning test exists. A new
+//!    kernel tier therefore cannot ship undispatched or unpinned.
+//! 4. **Bench schemas** — every section key of the committed
+//!    `BENCH_*.json` documents must be emitted by some bench source, so
+//!    a schema cannot drift away from the benches that fill it.
+//! 5. **Dependency audit** — the manifests may not grow dependencies
+//!    beyond the committed allowlist (`anyhow`); the `cargo deny`-style
+//!    audit this single-dependency tree actually needs.
+//!
+//! Everything runs on plain `std` over the source text: a
+//! length-preserving comment/string stripper feeds token-level scans,
+//! so keywords in strings or comments never false-positive. Each check
+//! is a pure function over `(path, contents)` pairs; the self-tests
+//! below seed one violation of every class and assert it is caught.
+
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+/// Files (by repo-relative prefix) allowed to contain `unsafe`.
+const UNSAFE_ALLOWLIST: &[&str] = &["rust/src/gf/", "rust/src/runtime/pjrt.rs"];
+
+/// Path of the machine-readable kernel registry.
+const REGISTRY_PATH: &str = "rust/src/gf/kernel_registry.rs";
+
+/// The only crates any manifest in this workspace may depend on.
+const ALLOWED_DEPENDENCIES: &[&str] = &["anyhow"];
+
+/// One lint finding.
+struct Diag {
+    path: String,
+    line: usize,
+    msg: String,
+}
+
+impl Diag {
+    fn new(path: &str, line: usize, msg: String) -> Self {
+        Self { path: path.to_string(), line, msg }
+    }
+}
+
+impl fmt::Display for Diag {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.line > 0 {
+            write!(f, "{}:{}: {}", self.path, self.line, self.msg)
+        } else {
+            write!(f, "{}: {}", self.path, self.msg)
+        }
+    }
+}
+
+/// `(repo-relative path with forward slashes, file contents)`.
+type Source = (String, String);
+
+fn main() -> ExitCode {
+    let mut args = std::env::args().skip(1);
+    match args.next().as_deref() {
+        Some("lint") | None => {}
+        Some(other) => {
+            eprintln!("unknown xtask command `{other}` (available: lint)");
+            return ExitCode::FAILURE;
+        }
+    }
+    let root = repo_root();
+    let diags = match lint_tree(&root) {
+        Ok(d) => d,
+        Err(e) => {
+            eprintln!("xtask lint: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    if diags.is_empty() {
+        println!("xtask lint: clean");
+        ExitCode::SUCCESS
+    } else {
+        for d in &diags {
+            eprintln!("{d}");
+        }
+        eprintln!("xtask lint: {} finding(s)", diags.len());
+        ExitCode::FAILURE
+    }
+}
+
+/// The repository root: the parent of this crate's manifest directory.
+fn repo_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("xtask lives one level under the repo root")
+        .to_path_buf()
+}
+
+/// Gather inputs from disk and run every check.
+fn lint_tree(root: &Path) -> Result<Vec<Diag>, String> {
+    let mut sources: Vec<Source> = Vec::new();
+    for dir in ["rust", "examples", "xtask"] {
+        collect_rs(&root.join(dir), root, &mut sources)?;
+    }
+    sources.sort();
+
+    let mut schemas: Vec<Source> = Vec::new();
+    let entries =
+        fs::read_dir(root).map_err(|e| format!("read_dir {}: {e}", root.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| e.to_string())?;
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if name.starts_with("BENCH_") && name.ends_with(".json") {
+            let text = fs::read_to_string(entry.path()).map_err(|e| format!("{name}: {e}"))?;
+            schemas.push((name, text));
+        }
+    }
+    schemas.sort();
+
+    let mut manifests: Vec<Source> = Vec::new();
+    for m in ["Cargo.toml", "xtask/Cargo.toml"] {
+        let text =
+            fs::read_to_string(root.join(m)).map_err(|e| format!("{m}: {e}"))?;
+        manifests.push((m.to_string(), text));
+    }
+
+    let bench_sources: Vec<Source> = sources
+        .iter()
+        .filter(|(p, _)| p.starts_with("rust/benches/"))
+        .cloned()
+        .collect();
+
+    let mut diags = check_unsafe_boundary(&sources);
+    diags.extend(check_kernel_registry(&sources));
+    diags.extend(check_bench_schemas(&schemas, &bench_sources));
+    diags.extend(check_dependency_audit(&manifests));
+    Ok(diags)
+}
+
+/// Recursively collect `.rs` files under `dir` as repo-relative sources.
+fn collect_rs(dir: &Path, root: &Path, out: &mut Vec<Source>) -> Result<(), String> {
+    let entries = match fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(_) => return Ok(()), // optional directory
+    };
+    for entry in entries {
+        let entry = entry.map_err(|e| e.to_string())?;
+        let path = entry.path();
+        if path.is_dir() {
+            if path.file_name().is_some_and(|n| n == "target") {
+                continue;
+            }
+            collect_rs(&path, root, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            let rel = path
+                .strip_prefix(root)
+                .map_err(|e| e.to_string())?
+                .to_string_lossy()
+                .replace('\\', "/");
+            let text =
+                fs::read_to_string(&path).map_err(|e| format!("{rel}: {e}"))?;
+            out.push((rel, text));
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Source-text substrate: a length-preserving stripper + token scans.
+// ---------------------------------------------------------------------
+
+fn ident_char(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+/// Blank out comments and string/char-literal contents with spaces,
+/// preserving every byte offset and newline, so token scans over the
+/// result never match inside prose. Handles nested block comments,
+/// escaped strings, byte strings, raw strings of any `#` depth, and
+/// char literals (lifetimes are left intact).
+fn strip_comments_and_strings(src: &str) -> String {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut out = b.to_vec();
+    let blank = |out: &mut [u8], lo: usize, hi: usize| {
+        for slot in out[lo..hi.min(n)].iter_mut() {
+            if *slot != b'\n' {
+                *slot = b' ';
+            }
+        }
+    };
+    let mut i = 0;
+    while i < n {
+        match b[i] {
+            b'/' if i + 1 < n && b[i + 1] == b'/' => {
+                let mut j = i;
+                while j < n && b[j] != b'\n' {
+                    j += 1;
+                }
+                blank(&mut out, i, j);
+                i = j;
+            }
+            b'/' if i + 1 < n && b[i + 1] == b'*' => {
+                let mut depth = 1usize;
+                let mut j = i + 2;
+                while j < n && depth > 0 {
+                    if j + 1 < n && b[j] == b'/' && b[j + 1] == b'*' {
+                        depth += 1;
+                        j += 2;
+                    } else if j + 1 < n && b[j] == b'*' && b[j + 1] == b'/' {
+                        depth -= 1;
+                        j += 2;
+                    } else {
+                        j += 1;
+                    }
+                }
+                blank(&mut out, i, j);
+                i = j;
+            }
+            b'r' | b'b' if raw_string_hashes(b, i).is_some() => {
+                let (hashes, open) = raw_string_hashes(b, i).expect("guard");
+                let close = raw_string_end(b, open, hashes);
+                blank(&mut out, open + 1, close);
+                i = close + 1 + hashes;
+            }
+            b'"' => {
+                let mut j = i + 1;
+                while j < n {
+                    match b[j] {
+                        b'\\' => j += 2,
+                        b'"' => break,
+                        _ => j += 1,
+                    }
+                }
+                blank(&mut out, i + 1, j);
+                i = (j + 1).min(n);
+            }
+            b'\'' => {
+                if i + 1 < n && b[i + 1] == b'\\' {
+                    // Escaped char literal: find the closing quote.
+                    let mut j = i + 2;
+                    while j < n && b[j] != b'\'' {
+                        j += 1;
+                    }
+                    blank(&mut out, i + 1, j);
+                    i = (j + 1).min(n);
+                } else if i + 2 < n && b[i + 2] == b'\'' {
+                    // Plain char literal 'x'.
+                    blank(&mut out, i + 1, i + 2);
+                    i += 3;
+                } else {
+                    i += 1; // lifetime or label
+                }
+            }
+            _ => i += 1,
+        }
+    }
+    String::from_utf8(out).expect("blanking preserves UTF-8")
+}
+
+/// If position `i` starts a raw string (`r"`, `r#"`, `br"`, ...) whose
+/// `r` is not part of an identifier, return `(hash count, index of the
+/// opening quote)`.
+fn raw_string_hashes(b: &[u8], i: usize) -> Option<(usize, usize)> {
+    if i > 0 && ident_char(b[i - 1]) {
+        return None;
+    }
+    let mut j = i;
+    if b[j] == b'b' {
+        j += 1;
+    }
+    if j >= b.len() || b[j] != b'r' {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0;
+    while j < b.len() && b[j] == b'#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j < b.len() && b[j] == b'"' {
+        Some((hashes, j))
+    } else {
+        None
+    }
+}
+
+/// Index of the closing quote of a raw string opened at `open` with
+/// `hashes` hash marks (or the end of input).
+fn raw_string_end(b: &[u8], open: usize, hashes: usize) -> usize {
+    let mut j = open + 1;
+    while j < b.len() {
+        if b[j] == b'"' && b[j + 1..].iter().take(hashes).filter(|&&c| c == b'#').count() == hashes
+        {
+            return j;
+        }
+        j += 1;
+    }
+    b.len()
+}
+
+/// 1-based line numbers of every occurrence of keyword/identifier `kw`
+/// in (stripped) source text, with word-boundary checks on both sides.
+fn token_lines(stripped: &str, kw: &str) -> Vec<usize> {
+    let sb = stripped.as_bytes();
+    let mut lines = Vec::new();
+    let mut line = 1usize;
+    let mut i = 0usize;
+    while i < sb.len() {
+        if sb[i] == b'\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if stripped[i..].starts_with(kw) {
+            let before_ok = i == 0 || !ident_char(sb[i - 1]);
+            let after = i + kw.len();
+            let after_ok = after >= sb.len() || !ident_char(sb[after]);
+            if before_ok && after_ok {
+                lines.push(line);
+                i = after;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    lines
+}
+
+/// Count word-boundary occurrences of `ident` in (stripped) text.
+fn ident_occurrences(stripped: &str, ident: &str) -> usize {
+    token_lines(stripped, ident).len()
+}
+
+/// The source extent of top-level `fn name`: from its `fn` keyword to
+/// the first close brace at column zero (rustfmt's item terminator).
+fn fn_extent<'a>(stripped: &'a str, name: &str) -> Option<&'a str> {
+    let sb = stripped.as_bytes();
+    let needle = format!("fn {name}");
+    let mut from = 0usize;
+    while let Some(rel) = stripped[from..].find(&needle) {
+        let at = from + rel;
+        let before_ok = at == 0 || !ident_char(sb[at.saturating_sub(1)]);
+        let after = at + needle.len();
+        let after_ok = after >= sb.len() || !ident_char(sb[after]);
+        if before_ok && after_ok {
+            let end = stripped[at..]
+                .find("\n}")
+                .map(|p| at + p + 2)
+                .unwrap_or(stripped.len());
+            return Some(&stripped[at..end]);
+        }
+        from = after;
+    }
+    None
+}
+
+fn has_fn(stripped: &str, name: &str) -> bool {
+    fn_extent(stripped, name).is_some()
+}
+
+// ---------------------------------------------------------------------
+// Check 1 + 2: the unsafe boundary and SAFETY comments.
+// ---------------------------------------------------------------------
+
+fn allowlisted(path: &str) -> bool {
+    UNSAFE_ALLOWLIST.iter().any(|p| path.starts_with(p))
+}
+
+/// Lines of `unsafe` sites in `src` with no `SAFETY:` comment on the
+/// same line or in the contiguous comment/attribute block above.
+fn missing_safety_comments(src: &str) -> Vec<usize> {
+    let stripped = strip_comments_and_strings(src);
+    let lines: Vec<&str> = src.lines().collect();
+    let mut missing = Vec::new();
+    for line in token_lines(&stripped, "unsafe") {
+        let mut ok = lines.get(line - 1).is_some_and(|l| l.contains("SAFETY:"));
+        let mut k = line - 1; // 1-based line above the unsafe site
+        while !ok && k >= 1 {
+            let l = lines[k - 1].trim_start();
+            let scannable = l.is_empty()
+                || l.starts_with("//")
+                || l.starts_with("#[")
+                || l.starts_with("#!")
+                || l.starts_with('*');
+            if !scannable {
+                break;
+            }
+            if l.contains("SAFETY:") {
+                ok = true;
+            }
+            k -= 1;
+        }
+        if !ok {
+            missing.push(line);
+        }
+    }
+    missing
+}
+
+fn check_unsafe_boundary(sources: &[Source]) -> Vec<Diag> {
+    let mut diags = Vec::new();
+    for (path, src) in sources {
+        if allowlisted(path) {
+            for line in missing_safety_comments(src) {
+                diags.push(Diag::new(
+                    path,
+                    line,
+                    "`unsafe` site without a `// SAFETY:` comment (same line or the \
+                     comment/attribute block directly above)"
+                        .to_string(),
+                ));
+            }
+        } else {
+            let stripped = strip_comments_and_strings(src);
+            for line in token_lines(&stripped, "unsafe") {
+                diags.push(Diag::new(
+                    path,
+                    line,
+                    format!(
+                        "`unsafe` outside the kernel allowlist ({}); move the code \
+                         into an allowlisted module or make it safe",
+                        UNSAFE_ALLOWLIST.join(", ")
+                    ),
+                ));
+            }
+        }
+    }
+    diags
+}
+
+// ---------------------------------------------------------------------
+// Check 3: the kernel registry.
+// ---------------------------------------------------------------------
+
+#[derive(Debug, PartialEq, Eq)]
+struct RegEntry {
+    name: String,
+    features: String,
+    dispatch: String,
+    pinning_test: String,
+}
+
+/// Parse `KernelEntry { name: "...", features: "...", dispatch: "...",
+/// pinning_test: "..." }` records out of the registry source.
+fn parse_registry(src: &str) -> Vec<RegEntry> {
+    let field = |chunk: &str, name: &str| -> Option<String> {
+        let at = chunk.find(&format!("{name}:"))?;
+        let rest = &chunk[at..];
+        let q1 = rest.find('"')?;
+        let q2 = rest[q1 + 1..].find('"')?;
+        Some(rest[q1 + 1..q1 + 1 + q2].to_string())
+    };
+    let mut entries = Vec::new();
+    for chunk in src.split("KernelEntry {").skip(1) {
+        let (Some(name), Some(features), Some(dispatch), Some(pinning_test)) = (
+            field(chunk, "name"),
+            field(chunk, "features"),
+            field(chunk, "dispatch"),
+            field(chunk, "pinning_test"),
+        ) else {
+            continue;
+        };
+        entries.push(RegEntry { name, features, dispatch, pinning_test });
+    }
+    entries
+}
+
+/// `(kernel name, feature string, 1-based line)` for every
+/// `#[target_feature(enable = "...")]` function in `src`.
+fn target_feature_kernels(src: &str) -> Vec<(String, String, usize)> {
+    let stripped = strip_comments_and_strings(src);
+    let sb = stripped.as_bytes();
+    let mut found = Vec::new();
+    let mut from = 0usize;
+    while let Some(rel) = stripped[from..].find("#[target_feature") {
+        let at = from + rel;
+        let line = stripped[..at].matches('\n').count() + 1;
+        // The feature string sits in the original text (stripping
+        // blanked it); offsets are identical by construction.
+        let attr_end = stripped[at..].find(']').map(|p| at + p).unwrap_or(stripped.len());
+        let features = src[at..attr_end]
+            .split('"')
+            .nth(1)
+            .unwrap_or("")
+            .to_string();
+        // The kernel is the next `fn` token after the attribute.
+        let mut name = String::new();
+        if let Some(fn_rel) = stripped[attr_end..].find("fn ") {
+            let mut j = attr_end + fn_rel + 3;
+            while j < sb.len() && sb[j] == b' ' {
+                j += 1;
+            }
+            while j < sb.len() && ident_char(sb[j]) {
+                name.push(sb[j] as char);
+                j += 1;
+            }
+        }
+        found.push((name, features, line));
+        from = attr_end;
+    }
+    found
+}
+
+fn check_kernel_registry(sources: &[Source]) -> Vec<Diag> {
+    let mut diags = Vec::new();
+    let Some((_, registry_src)) = sources.iter().find(|(p, _)| p == REGISTRY_PATH) else {
+        diags.push(Diag::new(
+            REGISTRY_PATH,
+            0,
+            "kernel registry is missing (every #[target_feature] kernel must be \
+             declared here)"
+                .to_string(),
+        ));
+        return diags;
+    };
+    let registry = parse_registry(registry_src);
+    for (i, e) in registry.iter().enumerate() {
+        if registry[..i].iter().any(|o| o.name == e.name) {
+            diags.push(Diag::new(
+                REGISTRY_PATH,
+                0,
+                format!("duplicate registry entry for kernel `{}`", e.name),
+            ));
+        }
+    }
+
+    // Stripped gf sources (registry excluded — its strings are data,
+    // not code) and stripped everything (pinning tests may live in
+    // integration suites).
+    let gf_stripped: Vec<(String, String)> = sources
+        .iter()
+        .filter(|(p, _)| p.starts_with("rust/src/gf/") && p != REGISTRY_PATH)
+        .map(|(p, s)| (p.clone(), strip_comments_and_strings(s)))
+        .collect();
+    let all_stripped: Vec<String> = sources
+        .iter()
+        .filter(|(p, _)| p != REGISTRY_PATH)
+        .map(|(_, s)| strip_comments_and_strings(s))
+        .collect();
+
+    // Every #[target_feature] kernel in the tree must be registered,
+    // with a matching feature string, and must live under gf.
+    let mut discovered: Vec<(String, String)> = Vec::new();
+    for (path, src) in sources {
+        for (name, features, line) in target_feature_kernels(src) {
+            if !path.starts_with("rust/src/gf/") {
+                diags.push(Diag::new(
+                    path,
+                    line,
+                    format!(
+                        "#[target_feature] kernel `{name}` outside rust/src/gf/ — \
+                         kernels live in the gf module so the registry and pinning \
+                         conventions cover them"
+                    ),
+                ));
+            }
+            match registry.iter().find(|e| e.name == name) {
+                None => diags.push(Diag::new(
+                    path,
+                    line,
+                    format!(
+                        "#[target_feature] kernel `{name}` is not in {REGISTRY_PATH} \
+                         (register it with its dispatch seam and scalar-pinning test)"
+                    ),
+                )),
+                Some(e) if e.features != features => diags.push(Diag::new(
+                    path,
+                    line,
+                    format!(
+                        "kernel `{name}` enables \"{features}\" but the registry \
+                         declares \"{}\"",
+                        e.features
+                    ),
+                )),
+                Some(_) => {}
+            }
+            discovered.push((name, features));
+        }
+    }
+
+    // Every registry entry must point at real code: the kernel exists,
+    // the dispatch seam exists and references it, the pinning test
+    // exists somewhere in the tree.
+    for e in &registry {
+        let kernel_exists = gf_stripped.iter().any(|(_, s)| has_fn(s, &e.name));
+        if !kernel_exists {
+            diags.push(Diag::new(
+                REGISTRY_PATH,
+                0,
+                format!("registry entry `{}` names a kernel that does not exist", e.name),
+            ));
+            continue;
+        }
+        let mut dispatch_refs = false;
+        let mut dispatch_exists = false;
+        for (_, s) in &gf_stripped {
+            if let Some(extent) = fn_extent(s, &e.dispatch) {
+                dispatch_exists = true;
+                if ident_occurrences(extent, &e.name) > 0 {
+                    dispatch_refs = true;
+                }
+            }
+        }
+        if !dispatch_exists {
+            diags.push(Diag::new(
+                REGISTRY_PATH,
+                0,
+                format!(
+                    "kernel `{}` declares dispatch seam `{}` which does not exist",
+                    e.name, e.dispatch
+                ),
+            ));
+        } else if !dispatch_refs {
+            diags.push(Diag::new(
+                REGISTRY_PATH,
+                0,
+                format!(
+                    "dispatch seam `{}` never references kernel `{}` — the kernel \
+                     would ship undispatched",
+                    e.dispatch, e.name
+                ),
+            ));
+        }
+        if !all_stripped.iter().any(|s| has_fn(s, &e.pinning_test)) {
+            diags.push(Diag::new(
+                REGISTRY_PATH,
+                0,
+                format!(
+                    "kernel `{}` declares pinning test `{}` which does not exist — \
+                     the kernel would ship unpinned",
+                    e.name, e.pinning_test
+                ),
+            ));
+        }
+    }
+    diags
+}
+
+// ---------------------------------------------------------------------
+// Check 4: bench schema keys.
+// ---------------------------------------------------------------------
+
+/// Top-level keys of the `"sections"` object in a BENCH_*.json schema.
+fn bench_section_keys(json: &str) -> Vec<String> {
+    let Some(at) = json.find("\"sections\"") else { return Vec::new() };
+    let Some(open) = json[at..].find('{').map(|p| at + p) else { return Vec::new() };
+    let b = json.as_bytes();
+    let mut keys = Vec::new();
+    let mut depth = 0i32;
+    let mut i = open;
+    while i < b.len() {
+        match b[i] {
+            b'{' | b'[' => depth += 1,
+            b'}' | b']' => {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+            b'"' if depth == 1 => {
+                let start = i + 1;
+                let mut j = start;
+                while j < b.len() && b[j] != b'"' {
+                    j += if b[j] == b'\\' { 2 } else { 1 };
+                }
+                let key = &json[start..j.min(json.len())];
+                let mut k = j + 1;
+                while k < b.len() && (b[k] == b' ' || b[k] == b'\n') {
+                    k += 1;
+                }
+                if k < b.len() && b[k] == b':' {
+                    keys.push(key.to_string());
+                }
+                i = j;
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    keys
+}
+
+fn check_bench_schemas(schemas: &[Source], bench_sources: &[Source]) -> Vec<Diag> {
+    let mut diags = Vec::new();
+    for (name, json) in schemas {
+        for key in bench_section_keys(json) {
+            let quoted = format!("\"{key}\"");
+            let emitted = bench_sources
+                .iter()
+                .any(|(_, src)| src.contains(&quoted) || src.contains(&format!("\\\"{key}\\\"")));
+            if !emitted {
+                diags.push(Diag::new(
+                    name,
+                    0,
+                    format!(
+                        "schema section \"{key}\" is not emitted by any bench under \
+                         rust/benches/ — the committed schema would never be filled"
+                    ),
+                ));
+            }
+        }
+    }
+    diags
+}
+
+// ---------------------------------------------------------------------
+// Check 5: dependency audit.
+// ---------------------------------------------------------------------
+
+/// Crate names declared in any `[dependencies]`-like section.
+fn manifest_deps(manifest: &str) -> Vec<String> {
+    let dep_sections =
+        ["[dependencies]", "[dev-dependencies]", "[build-dependencies]"];
+    let mut deps = Vec::new();
+    let mut in_deps = false;
+    for line in manifest.lines() {
+        let t = line.trim();
+        if t.starts_with('[') {
+            in_deps = dep_sections.contains(&t);
+            for prefix in ["[dependencies.", "[dev-dependencies.", "[build-dependencies."] {
+                if let Some(rest) = t.strip_prefix(prefix) {
+                    deps.push(rest.trim_end_matches(']').to_string());
+                }
+            }
+            continue;
+        }
+        if in_deps && !t.is_empty() && !t.starts_with('#') {
+            if let Some(eq) = t.find('=') {
+                deps.push(t[..eq].trim().to_string());
+            }
+        }
+    }
+    deps
+}
+
+fn check_dependency_audit(manifests: &[Source]) -> Vec<Diag> {
+    let mut diags = Vec::new();
+    for (path, manifest) in manifests {
+        for dep in manifest_deps(manifest) {
+            if !ALLOWED_DEPENDENCIES.contains(&dep.as_str()) {
+                diags.push(Diag::new(
+                    path,
+                    0,
+                    format!(
+                        "dependency `{dep}` is outside the allowlist ({}); this tree \
+                         builds offline from std + the allowlist only",
+                        ALLOWED_DEPENDENCIES.join(", ")
+                    ),
+                ));
+            }
+        }
+    }
+    diags
+}
+
+// ---------------------------------------------------------------------
+// Self-tests: each violation class is seeded and must be caught, and
+// the real tree must be clean.
+// ---------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn src(path: &str, text: &str) -> Source {
+        (path.to_string(), text.to_string())
+    }
+
+    #[test]
+    fn stripper_blanks_comments_strings_and_chars() {
+        let input =
+            "let a = \"unsafe\"; // unsafe\nlet b = 'u'; /* unsafe */ let c = r#\"unsafe\"#;";
+        let s = strip_comments_and_strings(input);
+        assert_eq!(ident_occurrences(&s, "unsafe"), 0);
+        assert_eq!(s.len(), input.len(), "stripping must preserve byte offsets");
+        let t = strip_comments_and_strings("let x = '\\n'; let l: &'static str = \"y\";");
+        assert_eq!(ident_occurrences(&t, "static"), 1, "lifetimes survive stripping");
+    }
+
+    #[test]
+    fn token_scan_respects_word_boundaries() {
+        let s = "unsafe_code deny(unsafe_code) unsafe fn f() {} my_unsafe";
+        assert_eq!(token_lines(s, "unsafe"), vec![1]);
+    }
+
+    #[test]
+    fn seeded_unsafe_outside_allowlist_is_caught() {
+        let bad = src(
+            "rust/src/netsim/mod.rs",
+            "pub fn f(p: *const u8) -> u8 {\n    unsafe { *p }\n}\n",
+        );
+        let diags = check_unsafe_boundary(&[bad]);
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert_eq!(diags[0].line, 2);
+        // The same code inside the allowlist (with a SAFETY comment) is fine.
+        let ok = src(
+            "rust/src/gf/mod.rs",
+            "pub fn f(p: *const u8) -> u8 {\n    // SAFETY: caller contract.\n    unsafe { *p }\n}\n",
+        );
+        assert!(check_unsafe_boundary(&[ok]).is_empty());
+    }
+
+    #[test]
+    fn seeded_missing_safety_comment_is_caught() {
+        let bad = src(
+            "rust/src/gf/mod.rs",
+            "pub fn f(p: *const u8) -> u8 {\n    unsafe { *p }\n}\n",
+        );
+        let diags = check_unsafe_boundary(&[bad]);
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert!(diags[0].msg.contains("SAFETY"));
+        // A SAFETY comment above attributes, doc comments or on the same
+        // line all satisfy the convention.
+        let ok = src(
+            "rust/src/gf/mod.rs",
+            "// SAFETY: feature-checked by the dispatch seam.\n#[target_feature(enable = \"avx2\")]\nunsafe fn k() {}\n\nfn g() { let x = unsafe { 1 }; // SAFETY: trivially fine.\n}\n",
+        );
+        let diags = check_unsafe_boundary(&[ok]);
+        let safety: Vec<_> =
+            diags.iter().filter(|d| d.msg.contains("SAFETY")).collect();
+        assert!(safety.is_empty(), "{safety:?}");
+    }
+
+    const REGISTRY_FIXTURE: &str = r#"
+pub const KERNELS: &[KernelEntry] = &[
+    KernelEntry {
+        name: "kern_a",
+        features: "avx2",
+        dispatch: "disp",
+        pinning_test: "kern_a_pinned_to_scalar",
+    },
+];
+"#;
+
+    fn gf_fixture() -> Vec<Source> {
+        vec![
+            src(
+                "rust/src/gf/mod.rs",
+                "#[target_feature(enable = \"avx2\")]\n// SAFETY: test fixture.\nunsafe fn kern_a() {}\n\nfn disp() {\n    // SAFETY: test fixture.\n    unsafe { kern_a() }\n}\n\n#[test]\nfn kern_a_pinned_to_scalar() {\n}\n",
+            ),
+            src("rust/src/gf/kernel_registry.rs", REGISTRY_FIXTURE),
+        ]
+    }
+
+    #[test]
+    fn registered_dispatched_pinned_kernel_is_clean() {
+        let diags = check_kernel_registry(&gf_fixture());
+        assert!(diags.is_empty(), "{diags:?}");
+    }
+
+    #[test]
+    fn seeded_unregistered_kernel_is_caught() {
+        let mut sources = gf_fixture();
+        sources[0].1.push_str(
+            "\n#[target_feature(enable = \"gfni,avx2\")]\n// SAFETY: test fixture.\nunsafe fn kern_b() {}\n",
+        );
+        let diags = check_kernel_registry(&sources);
+        assert!(
+            diags.iter().any(|d| d.msg.contains("kern_b") && d.msg.contains("not in")),
+            "{diags:?}"
+        );
+    }
+
+    #[test]
+    fn seeded_feature_string_mismatch_is_caught() {
+        let mut sources = gf_fixture();
+        sources[0].1 = sources[0].1.replace("enable = \"avx2\"", "enable = \"avx512f\"");
+        let diags = check_kernel_registry(&sources);
+        assert!(diags.iter().any(|d| d.msg.contains("declares \"avx2\"")), "{diags:?}");
+    }
+
+    #[test]
+    fn seeded_undispatched_kernel_is_caught() {
+        let mut sources = gf_fixture();
+        // The dispatch seam exists but no longer references the kernel.
+        sources[0].1 = sources[0]
+            .1
+            .replace("unsafe { kern_a() }", "unsafe { std::hint::black_box(0) };");
+        let diags = check_kernel_registry(&sources);
+        assert!(diags.iter().any(|d| d.msg.contains("undispatched")), "{diags:?}");
+    }
+
+    #[test]
+    fn seeded_unpinned_kernel_is_caught() {
+        let mut sources = gf_fixture();
+        sources[0].1 = sources[0].1.replace("fn kern_a_pinned_to_scalar", "fn renamed_test");
+        let diags = check_kernel_registry(&sources);
+        assert!(diags.iter().any(|d| d.msg.contains("unpinned")), "{diags:?}");
+    }
+
+    #[test]
+    fn seeded_phantom_registry_entry_is_caught() {
+        let mut sources = gf_fixture();
+        sources[0].1 = sources[0].1.replace("unsafe fn kern_a", "unsafe fn kern_z");
+        let diags = check_kernel_registry(&sources);
+        assert!(diags.iter().any(|d| d.msg.contains("does not exist")), "{diags:?}");
+    }
+
+    #[test]
+    fn seeded_unemitted_bench_schema_key_is_caught() {
+        let schema = src(
+            "BENCH_x.json",
+            r#"{ "bench": "x", "sections": { "real_section": [], "phantom_section": [] } }"#,
+        );
+        let bench = src(
+            "rust/benches/x.rs",
+            "fn main() { println!(\"{}\", \"\\\"real_section\\\"\"); }",
+        );
+        let diags = check_bench_schemas(&[schema], &[bench]);
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert!(diags[0].msg.contains("phantom_section"));
+    }
+
+    #[test]
+    fn seeded_dependency_outside_allowlist_is_caught() {
+        let bad = src(
+            "Cargo.toml",
+            "[package]\nname = \"x\"\n\n[dependencies]\nanyhow = \"1\"\nserde = \"1\"\n\n[features]\npjrt = []\n",
+        );
+        let diags = check_dependency_audit(&[bad]);
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert!(diags[0].msg.contains("serde"));
+    }
+
+    #[test]
+    fn repo_tree_is_clean() {
+        let diags = lint_tree(&repo_root()).expect("lint inputs readable");
+        assert!(
+            diags.is_empty(),
+            "xtask lint found problems in the tree:\n{}",
+            diags.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("\n")
+        );
+    }
+}
