@@ -1,0 +1,180 @@
+//! Measured real-I/O repair benchmarks: the file-backed data plane
+//! under both pluggable backends, recorded in `BENCH_real_io.json` at
+//! the workspace root.
+//!
+//! Unlike the virtual-clock benches, every number here is wall time off
+//! real disk reads: a tempdir-backed [`StoreKind::File`] cluster loses
+//! a node and the session API's measured pass
+//! (`cluster.repair().backend(..)`) repairs it through
+//! `RepairProgram::execute_chunk_pipelined`, so `read_s` is genuine
+//! blocked-on-I/O time, `decode_s` genuine decode time, and the two
+//! overlap whenever the backend prefetches.
+//!
+//! * **backend_sweep** — sync-pread baseline vs thread-pool prefetch at
+//!   a fixed chunk size: end-to-end session wall clock plus the summed
+//!   per-stripe measured read/decode/write-back split and the
+//!   early-fire counters (prefetch should shrink `read_s` while
+//!   `early_ops` stays > 0).
+//! * **chunk_size_sweep** — one backend across chunk sizes: smaller
+//!   chunks buy a finer decode frontier (more early columns) at more
+//!   syscalls per block.
+
+use cp_lrc::bench_harness::{Bench, Stats};
+use cp_lrc::cluster::store::StoreKind;
+use cp_lrc::cluster::{Cluster, ClusterConfig};
+use cp_lrc::codes::SchemeKind;
+use cp_lrc::store::IoBackendKind;
+
+const BLOCK_BYTES: usize = 256 * 1024;
+const STRIPES: usize = 4;
+
+fn cluster(root: &std::path::Path) -> Cluster {
+    let mut c = Cluster::new(ClusterConfig {
+        num_datanodes: 12,
+        gbps: 1.0,
+        latency_s: 0.001,
+        block_size: BLOCK_BYTES,
+        kind: SchemeKind::CpAzure,
+        k: 6,
+        r: 2,
+        p: 2,
+        store: StoreKind::File(root.to_path_buf()),
+        ..Default::default()
+    });
+    c.fill_random_stripes(STRIPES, 0x10BE);
+    c
+}
+
+/// Sum of the measured clocks/counters over one whole-node session.
+#[derive(Default)]
+struct MeasuredSum {
+    read_s: f64,
+    decode_s: f64,
+    wb_s: f64,
+    bytes_read: u64,
+    chunks: usize,
+    early_ops: usize,
+    early_columns: usize,
+    stripes: usize,
+}
+
+/// Fail the node hosting stripe 0's block 0, repair the whole node
+/// through the measured pass, restore it. Each call is one full
+/// measured whole-node repair (placement churns but stays valid).
+fn measured_session(c: &mut Cluster, kind: IoBackendKind, chunk: usize) -> MeasuredSum {
+    let sid = *c.meta.stripes.keys().min().expect("stripes filled");
+    let victim = c.meta.stripes[&sid].block_nodes[0];
+    c.fail_node(victim);
+    let s = c
+        .repair()
+        .threads(2)
+        .backend(kind)
+        .chunk_bytes(chunk)
+        .run()
+        .expect("measured session");
+    c.restore_node(victim);
+    let mut sum = MeasuredSum { stripes: s.reports.len(), ..Default::default() };
+    for r in &s.reports {
+        let m = r.measured.as_ref().expect("backend session measures");
+        sum.read_s += m.read_s;
+        sum.decode_s += m.decode_s;
+        sum.wb_s += m.wb_s;
+        sum.bytes_read += m.bytes_read;
+        sum.chunks += m.stats.chunks;
+        sum.early_ops += m.stats.early_ops;
+        sum.early_columns += m.stats.early_columns;
+    }
+    sum
+}
+
+fn json_stats(s: &Stats) -> String {
+    format!(
+        "{{\"mean_ns\": {:.1}, \"median_ns\": {:.1}, \"min_ns\": {:.1}, \"p95_ns\": {:.1}, \"iters\": {}}}",
+        s.mean_ns, s.median_ns, s.min_ns, s.p95_ns, s.iters
+    )
+}
+
+fn entry(label: &str, kind_name: &str, chunk: usize, wall: &Stats, m: &MeasuredSum) -> String {
+    format!(
+        "      {{\"label\": \"{label}\", \"backend\": \"{kind_name}\", \"chunk_bytes\": {chunk}, \
+         \"block_bytes\": {BLOCK_BYTES}, \"stripes\": {}, \"session_wallclock\": {}, \
+         \"measured_read_s\": {:.6}, \"measured_decode_s\": {:.6}, \"measured_wb_s\": {:.6}, \
+         \"bytes_read\": {}, \"chunks\": {}, \"early_ops\": {}, \"early_columns\": {}}}",
+        m.stripes,
+        json_stats(wall),
+        m.read_s,
+        m.decode_s,
+        m.wb_s,
+        m.bytes_read,
+        m.chunks,
+        m.early_ops,
+        m.early_columns
+    )
+}
+
+fn main() {
+    let b = Bench::default();
+    let root = std::env::temp_dir().join(format!("cp-lrc-bench-real-io-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+
+    let mut backend_results: Vec<String> = Vec::new();
+    {
+        let mut c = cluster(&root.join("backend"));
+        for (label, kind) in [
+            ("sync-pread", IoBackendKind::SyncPread),
+            ("thread-pool-2", IoBackendKind::ThreadPool { threads: 2 }),
+            ("thread-pool-4", IoBackendKind::ThreadPool { threads: 4 }),
+        ] {
+            let chunk = 64 * 1024;
+            let mut last = MeasuredSum::default();
+            let wall = b.run(&format!("real_io/backend/{label}"), || {
+                last = measured_session(&mut c, kind, chunk);
+            });
+            if let Some(wall) = wall {
+                backend_results.push(entry(label, kind.name(), chunk, &wall, &last));
+            }
+        }
+    }
+
+    let mut chunk_results: Vec<String> = Vec::new();
+    {
+        let mut c = cluster(&root.join("chunk"));
+        for chunk in [4 * 1024usize, 16 * 1024, 64 * 1024, 256 * 1024] {
+            let kind = IoBackendKind::ThreadPool { threads: 4 };
+            let mut last = MeasuredSum::default();
+            let wall = b.run(&format!("real_io/chunk/{}k", chunk / 1024), || {
+                last = measured_session(&mut c, kind, chunk);
+            });
+            if let Some(wall) = wall {
+                chunk_results.push(entry(
+                    &format!("chunk-{}k", chunk / 1024),
+                    kind.name(),
+                    chunk,
+                    &wall,
+                    &last,
+                ));
+            }
+        }
+    }
+
+    let _ = std::fs::remove_dir_all(&root);
+    if backend_results.is_empty() && chunk_results.is_empty() {
+        return;
+    }
+    let doc = format!(
+        "{{\n  \"bench\": \"real_io\",\n  \
+         \"description\": \"measured whole-node repair on the file-backed data plane: wall-clock \
+         read/decode/write-back split per I/O backend (sync-pread baseline vs thread-pool \
+         prefetch) and per chunk size, with chunk-granular early-fire counters\",\n  \
+         \"unit\": \"ns (wall-clock stats) / s (measured clocks)\",\n  \
+         \"regenerate\": \"cargo bench --bench real_io\",\n  \
+         \"sections\": {{\n    \"backend_sweep\": [\n{}\n    ],\n    \
+         \"chunk_size_sweep\": [\n{}\n    ]\n  }}\n}}\n",
+        backend_results.join(",\n"),
+        chunk_results.join(",\n")
+    );
+    match std::fs::write("BENCH_real_io.json", &doc) {
+        Ok(()) => println!("wrote BENCH_real_io.json"),
+        Err(e) => eprintln!("could not write BENCH_real_io.json: {e}"),
+    }
+}

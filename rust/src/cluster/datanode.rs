@@ -30,6 +30,11 @@ pub enum Request {
     Delete { key: BlockKey },
     /// Number of blocks stored (introspection).
     Count,
+    /// Resolve a block to its on-disk extent (real-I/O data plane):
+    /// lets the proxy aim an [`crate::store::IoBackend`] straight at
+    /// the node's block files instead of streaming bytes through the
+    /// RPC channel. Only file-backed stores answer with a location.
+    Locate { key: BlockKey },
     /// Liveness probe (used by the failure detector).
     Ping,
     Shutdown,
@@ -41,6 +46,8 @@ pub enum Response {
     Ok,
     Data(Vec<u8>),
     Count(usize),
+    /// On-disk extent of a block (channel transport only).
+    Location(crate::store::BlockLocation),
     NotFound,
     /// Node is down (liveness flag cleared).
     Unavailable,
@@ -80,6 +87,10 @@ fn serve_one(
             Response::Ok
         }
         Request::Count => Response::Count(store.len()),
+        Request::Locate { key } => match store.locate(key) {
+            Some(loc) => Response::Location(loc),
+            None => Response::NotFound,
+        },
         Request::Ping => Response::Ok,
         Request::Shutdown => unreachable!("handled by the loop"),
     }
@@ -149,6 +160,15 @@ impl DataNodeHandle {
     pub fn get_segment(&self, key: BlockKey, off: usize, len: usize) -> Option<Vec<u8>> {
         match self.call(Request::GetSegment { key, off, len }) {
             Response::Data(d) => Some(d),
+            _ => None,
+        }
+    }
+
+    /// Resolve a block's on-disk extent; `None` for in-memory stores,
+    /// absent blocks, or a crashed node.
+    pub fn locate(&self, key: BlockKey) -> Option<crate::store::BlockLocation> {
+        match self.call(Request::Locate { key }) {
+            Response::Location(loc) => Some(loc),
             _ => None,
         }
     }
@@ -420,6 +440,25 @@ mod tests {
         let n = DataNodeHandle::spawn_with(9, &StoreKind::Disk(dir.clone()));
         assert_eq!(n.get(key(0)), Some(vec![5; 100]));
         drop(n);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn locate_answers_only_for_file_backed_stores() {
+        let dir = std::env::temp_dir().join(format!("cp-lrc-dn-loc-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mem = DataNodeHandle::spawn(20);
+        mem.put(key(0), vec![1; 64]);
+        assert_eq!(mem.locate(key(0)), None, "in-memory stores have no extent");
+        let file = DataNodeHandle::spawn_with(21, &StoreKind::File(dir.clone()));
+        file.put(key(0), vec![2; 64]);
+        let loc = file.locate(key(0)).expect("file-backed block is locatable");
+        assert_eq!(loc.len, 64);
+        assert!(loc.path.exists());
+        assert_eq!(file.locate(key(9)), None, "absent block");
+        file.set_alive(false);
+        assert_eq!(file.locate(key(0)), None, "crashed node refuses locate");
+        drop(file);
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

@@ -328,6 +328,54 @@ mod tests {
     }
 
     #[test]
+    fn degraded_reads_work_over_a_file_backed_store() {
+        // The real-I/O data plane must be transparent to the degraded
+        // read path: segment fetches go through the datanode RPC into
+        // FileStore::get_segment (positioned sub-range reads of the
+        // on-disk block files), and the reconstructed bytes must match
+        // the in-memory store bit for bit.
+        use crate::cluster::store::StoreKind;
+        let root = std::env::temp_dir()
+            .join(format!("cp-lrc-degraded-file-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        let mut rng = Prng::new(15);
+        let content = rng.bytes(6000);
+        let build = |store: StoreKind| {
+            let mut c = Cluster::new(ClusterConfig {
+                num_datanodes: 12,
+                gbps: 1.0,
+                latency_s: 0.001,
+                block_size: 4096,
+                kind: SchemeKind::AzureLrc,
+                k: 6,
+                r: 2,
+                p: 2,
+                store,
+                ..Default::default()
+            });
+            let id = c.put_file(content.clone());
+            let sid = c.seal_stripe().unwrap();
+            let victim = c.meta.stripes[&sid].block_nodes[0];
+            c.fail_node(victim);
+            (c, id)
+        };
+        let (mem_c, mem_id) = build(StoreKind::Mem);
+        let (file_c, file_id) = build(StoreKind::File(root.clone()));
+        for mode in [ReadMode::BlockLevel, ReadMode::FileLevel, ReadMode::FileLevelDedup] {
+            let mem = mem_c.degraded_read(mem_id, mode).unwrap();
+            let file = file_c.degraded_read(file_id, mode).unwrap();
+            assert_eq!(file.bytes, content, "{mode:?}");
+            assert!(file.degraded, "{mode:?}");
+            assert_eq!(
+                file.bytes_read, mem.bytes_read,
+                "{mode:?}: byte accounting must not depend on the store"
+            );
+        }
+        drop(file_c);
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
     fn non_degraded_read_reports_not_degraded() {
         let mut rng = Prng::new(14);
         let mut c = cluster();

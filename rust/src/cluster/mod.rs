@@ -26,8 +26,10 @@ use crate::codes::{Scheme, SchemeKind};
 use crate::netsim::{pipeline_completion, Flow, NetSim};
 use crate::prng::Prng;
 use crate::repair::{
-    BlockSource, CacheStats, PlanCache, RepairProgram, ScratchBuffers, SliceSource,
+    BlockSource, CacheStats, ChunkPipelineStats, ChunkStream, PlanCache, RepairError,
+    RepairProgram, ScratchBuffers, SliceSource,
 };
+use crate::store::{make_backend, plan_requests, BackendChunkStream, IoBackendKind};
 use datanode::DataNodeHandle;
 use metadata::{BlockKey, Extent, FileId, Metadata, NodeInfo, ObjectInfo, StripeId, StripeInfo};
 use std::collections::HashMap;
@@ -132,6 +134,59 @@ pub struct RepairReport {
     pub session_done_s: f64,
     /// Did the plan stay within local/cascaded groups?
     pub local: bool,
+    /// **Measured** real-I/O clocks, present only when the session ran
+    /// with [`RepairSession::backend`] against a file-backed store
+    /// ([`store::StoreKind::File`]): a third clock family, wall-clock
+    /// seconds off real `pread`s, reported *next to* — never replacing —
+    /// the virtual fields above.
+    pub measured: Option<MeasuredIo>,
+}
+
+/// Wall-clock accounting of one stripe's **measured** repair pass: the
+/// survivor byte ranges are read from the datanodes' on-disk block
+/// files through a real [`IoBackend`] and decoded chunk-granularly
+/// ([`RepairProgram::execute_chunk_pipelined`]) as ranges land, so read
+/// and decode genuinely overlap in wall time — the real-I/O counterpart
+/// of the virtual [`pipeline_completion`] model.
+///
+/// [`IoBackend`]: crate::store::IoBackend
+/// [`RepairProgram::execute_chunk_pipelined`]: crate::repair::RepairProgram::execute_chunk_pipelined
+#[derive(Clone, Debug, PartialEq)]
+pub struct MeasuredIo {
+    /// Which I/O backend ran ([`IoBackendKind::name`]).
+    pub backend: &'static str,
+    /// Chunk size the read plan and decode frontier were quantized to.
+    pub chunk_bytes: usize,
+    /// Wall-clock seconds the decode loop spent *blocked on I/O* (inside
+    /// the backend's completion wait). With a prefetching backend this
+    /// shrinks below the device read time: reads run ahead of decode.
+    pub read_s: f64,
+    /// Wall-clock seconds of the pipelined pass spent decoding (total
+    /// pass time minus `read_s`).
+    pub decode_s: f64,
+    /// Wall-clock seconds re-writing the reconstructed blocks into the
+    /// replacement datanodes' stores (crash-safe tmp+rename path).
+    pub wb_s: f64,
+    /// Bytes the backend actually read off disk (conservation-checked
+    /// against the decode stream under `strict-invariants`).
+    pub bytes_read: u64,
+    /// Chunk/column/early-fire counters from the chunk-granular
+    /// executor; `stats.early_ops > 0` is the proof that decode started
+    /// before the fetch set was fully resident.
+    pub stats: ChunkPipelineStats,
+    /// Measured cumulative-arrival curve of survivor bytes at the proxy
+    /// (same corner-point format as the simulated
+    /// [`crate::netsim::NetSim::run_traced`] trace, via
+    /// [`crate::netsim::arrival_curve`]) — what makes measured and
+    /// simulated overlap curves directly comparable in EXPERIMENTS.md.
+    pub arrival_curve: Vec<(f64, f64)>,
+}
+
+impl MeasuredIo {
+    /// Total measured wall time: overlapped read+decode plus write-back.
+    pub fn total_s(&self) -> f64 {
+        self.read_s + self.decode_s + self.wb_s
+    }
 }
 
 impl RepairReport {
@@ -612,6 +667,117 @@ impl Cluster {
         Ok((meta, DecodeJob { orig, program, outs_idx, blocks }))
     }
 
+    /// The **measured** repair pass for one prepared stripe: locate the
+    /// program's fetch set in the datanodes' on-disk stores, split the
+    /// survivor byte ranges into a round-robin chunk read plan, drive a
+    /// real [`IoBackend`](crate::store::IoBackend) of the requested
+    /// `kind` through the chunk-granular executor, and re-write the
+    /// reconstructed blocks into the (post-write-back) replacement
+    /// stores — all under wall clocks. Returns the measured report plus
+    /// the reconstructed blocks (in `meta.failed` order) so the caller
+    /// can cross-check them against the virtual pipeline's output.
+    ///
+    /// Uses `meta.stripe`, the *pre*-write-back placement snapshot:
+    /// survivors never move during a repair, so their locations are
+    /// valid both before and after stage 3. Fails with
+    /// [`RepairError::MissingBlock`] when a survivor cannot be located —
+    /// in particular for every non-file store, whose `locate` is `None`.
+    pub(crate) fn measured_repair_io(
+        &self,
+        meta: &JobMeta,
+        kind: IoBackendKind,
+        chunk_bytes: usize,
+    ) -> anyhow::Result<(MeasuredIo, Vec<Vec<u8>>)> {
+        let located: Vec<(usize, crate::store::BlockLocation)> = meta
+            .program
+            .fetch()
+            .iter()
+            .map(|&b| {
+                let key = BlockKey { stripe: meta.sid, index: b as u32 };
+                self.nodes[meta.stripe.block_nodes[b]]
+                    .locate(key)
+                    .map(|loc| (b, loc))
+                    .ok_or_else(|| {
+                        anyhow::Error::new(RepairError::MissingBlock {
+                            stripe: meta.sid,
+                            block: b,
+                        })
+                        .context(
+                            "measured I/O pass could not locate a survivor on disk \
+                             (sessions with .backend(..) need StoreKind::File)",
+                        )
+                    })
+            })
+            .collect::<anyhow::Result<_>>()?;
+
+        let mut backend = make_backend(kind);
+        backend.submit(plan_requests(&located, chunk_bytes))?;
+        let mut scratch = ScratchBuffers::new();
+        let t0 = Instant::now();
+        let mut stream = TimedChunkStream {
+            inner: BackendChunkStream::new(backend.as_mut()),
+            t0,
+            wait_s: 0.0,
+            arrivals: Vec::new(),
+        };
+        let (outs, stats) =
+            meta.program.execute_chunk_pipelined(&mut stream, &mut scratch, chunk_bytes)?;
+        let pass_s = t0.elapsed().as_secs_f64();
+        let (read_s, arrivals) = (stream.wait_s, stream.arrivals);
+        let rec: Vec<Vec<u8>> =
+            meta.outs_idx.iter().map(|&i| outs[i].to_vec()).collect();
+        drop(outs);
+        let bytes_read = backend.bytes_read();
+
+        // The virtual pipeline already wrote this stripe back; the
+        // measured decode must agree byte-for-byte before it overwrites
+        // anything (the two paths share a program but not an executor).
+        for (&b, content) in meta.failed.iter().zip(rec.iter()) {
+            let node = self
+                .meta
+                .stripes
+                .get(&meta.sid)
+                .map_or(meta.stripe.block_nodes[b], |si| si.block_nodes[b]);
+            let key = BlockKey { stripe: meta.sid, index: b as u32 };
+            anyhow::ensure!(
+                self.nodes[node].get(key).as_deref() == Some(content.as_slice()),
+                "measured decode of block {b} diverged from the in-memory pipeline"
+            );
+        }
+
+        // Timed write-back: idempotent re-put of the reconstructed
+        // blocks at their *current* (post-relocation) homes, through the
+        // stores' crash-safe tmp+rename path.
+        let twb = Instant::now();
+        for (&b, content) in meta.failed.iter().zip(rec.iter()) {
+            let node = self
+                .meta
+                .stripes
+                .get(&meta.sid)
+                .map_or(meta.stripe.block_nodes[b], |si| si.block_nodes[b]);
+            let key = BlockKey { stripe: meta.sid, index: b as u32 };
+            anyhow::ensure!(
+                self.nodes[node].put(key, content.clone()),
+                "measured write-back of block {b} to node {node} failed"
+            );
+        }
+        let wb_s = twb.elapsed().as_secs_f64();
+
+        Ok((
+            MeasuredIo {
+                backend: kind.name(),
+                chunk_bytes,
+                read_s,
+                decode_s: (pass_s - read_s).max(0.0),
+                wb_s,
+                bytes_read,
+                stats,
+                arrival_curve: crate::netsim::arrival_curve(&arrivals),
+            },
+            rec,
+        ))
+    }
+
     /// Verify stripe consistency (ops/scrub tool; also used by the
     /// integration tests): reconstruct every parity block from the
     /// stored data through the shared repair executor and compare with
@@ -736,9 +902,10 @@ struct Decoded {
 /// streams — so the wall-clock-optimal replay is the cache-blocked
 /// [`RepairProgram::execute`] (64 KiB L2-resident columns), not a
 /// whole-block at-arrival schedule. [`RepairProgram::execute_pipelined`]
-/// is reserved for sources that genuinely stream (real-network block
-/// sources); chunk-granular readiness that would merge both is a
-/// ROADMAP follow-up.
+/// is reserved for sources that genuinely stream; the measured real-I/O
+/// pass ([`Cluster::measured_repair_io`]) is where chunk-granular
+/// readiness ([`RepairProgram::execute_chunk_pipelined`]) runs against
+/// genuinely streaming disk reads.
 fn decode_job(
     job: DecodeJob,
     scratch: &mut ScratchBuffers,
@@ -752,6 +919,30 @@ fn decode_job(
             Decoded { rec, decode_cpu_s: t0.elapsed().as_secs_f64() }
         });
     (orig, res)
+}
+
+/// [`ChunkStream`] shim for the measured pass: forwards to a
+/// [`BackendChunkStream`] while accounting the wall time spent blocked
+/// inside the backend (`wait_s` — the measured `read_s`) and stamping
+/// each chunk's arrival `(seconds since pass start, payload bytes)` for
+/// the measured arrival curve.
+struct TimedChunkStream<'a> {
+    inner: BackendChunkStream<'a>,
+    t0: Instant,
+    wait_s: f64,
+    arrivals: Vec<(f64, u64)>,
+}
+
+impl ChunkStream for TimedChunkStream<'_> {
+    fn next_chunk(&mut self) -> anyhow::Result<Option<crate::repair::BlockChunk>> {
+        let t = Instant::now();
+        let chunk = self.inner.next_chunk();
+        self.wait_s += t.elapsed().as_secs_f64();
+        if let Ok(Some(c)) = &chunk {
+            self.arrivals.push((self.t0.elapsed().as_secs_f64(), c.data.len() as u64));
+        }
+        chunk
+    }
 }
 
 /// How a [`StripeFetcher`] accounts requests against its per-block

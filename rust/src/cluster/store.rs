@@ -7,6 +7,7 @@
 //!   persists across datanode "crashes" the way a real disk does.
 
 use super::metadata::BlockKey;
+use crate::repair::RepairError;
 use std::collections::HashMap;
 use std::path::PathBuf;
 
@@ -22,6 +23,14 @@ pub trait BlockStore: Send {
     fn is_empty(&self) -> bool {
         self.len() == 0
     }
+    /// Resolve a block to its on-disk extent so an
+    /// [`crate::store::IoBackend`] can read it directly, bypassing the
+    /// datanode's request loop. `None` for stores without a stable
+    /// file-backed extent (in-memory stores, absent blocks).
+    fn locate(&self, key: BlockKey) -> Option<crate::store::BlockLocation> {
+        let _ = key;
+        None
+    }
 }
 
 /// Storage backend selector for [`super::ClusterConfig`].
@@ -30,6 +39,11 @@ pub enum StoreKind {
     Mem,
     /// Root directory; each datanode gets `<root>/node-<id>/`.
     Disk(PathBuf),
+    /// Manifest-backed [`crate::store::FileStore`] under
+    /// `<root>/node-<id>/`: locatable extents (so repair sessions can
+    /// drive an [`crate::store::IoBackend`] straight at the block
+    /// files), crash-safe manifest, typed I/O errors.
+    File(PathBuf),
 }
 
 /// In-memory store.
@@ -154,6 +168,11 @@ impl BlockStore for DiskStore {
     fn len(&self) -> usize {
         self.index.len()
     }
+
+    fn locate(&self, key: BlockKey) -> Option<crate::store::BlockLocation> {
+        let &len = self.index.get(&key)?;
+        Some(crate::store::BlockLocation { path: self.path(key), offset: 0, len: len as u64 })
+    }
 }
 
 /// [`crate::repair::BlockSource`] over a single [`BlockStore`]: lets a
@@ -172,14 +191,35 @@ impl<'a> StoreSource<'a> {
     }
 }
 
+/// Lift a store-layer `io::Error` back into `anyhow`, recovering the
+/// typed [`RepairError`] a [`crate::store::FileStore`] tunnels as the
+/// inner error (truncated block file, vanished block file) so callers
+/// can `downcast_ref` instead of string-matching.
+fn lift_io(e: std::io::Error) -> anyhow::Error {
+    if e.get_ref().is_some_and(|r| r.is::<RepairError>()) {
+        let inner = e.into_inner().expect("get_ref was Some");
+        let re = inner.downcast::<RepairError>().expect("is::<RepairError> checked");
+        anyhow::Error::new(*re)
+    } else {
+        anyhow::Error::new(e)
+    }
+}
+
 impl StoreSource<'_> {
-    /// Read-through: cache block `b` from the store if absent.
+    /// Read-through: cache block `b` from the store if absent. Failures
+    /// are typed [`RepairError`]s — a fetch-set block the store doesn't
+    /// hold is [`RepairError::MissingBlock`], a short block file is
+    /// [`RepairError::TruncatedBlock`] — never a panic and never a
+    /// stringly-typed mystery.
     fn ensure(&mut self, b: usize) -> anyhow::Result<()> {
         if !self.cache.contains_key(&b) {
             let data = self
                 .store
-                .get(BlockKey { stripe: self.stripe, index: b as u32 })?
-                .ok_or_else(|| anyhow::anyhow!("block {b} absent from store"))?;
+                .get(BlockKey { stripe: self.stripe, index: b as u32 })
+                .map_err(lift_io)?
+                .ok_or_else(|| {
+                    anyhow::Error::new(RepairError::MissingBlock { stripe: self.stripe, block: b })
+                })?;
             self.cache.insert(b, data);
         }
         Ok(())
@@ -237,6 +277,10 @@ pub fn make_store(kind: &StoreKind, id: usize) -> Box<dyn BlockStore> {
         StoreKind::Mem => Box::new(MemStore::default()),
         StoreKind::Disk(root) => Box::new(
             DiskStore::open(root.join(format!("node-{id}"))).expect("open disk store"),
+        ),
+        StoreKind::File(root) => Box::new(
+            crate::store::FileStore::open(root.join(format!("node-{id}")))
+                .expect("open file store"),
         ),
     }
 }
@@ -316,6 +360,70 @@ mod tests {
         let mut scratch = ScratchBuffers::new();
         let out = program.execute(&mut source, &mut scratch).unwrap();
         assert_eq!(out[0], &stripe[0][..]);
+    }
+
+    #[test]
+    fn store_source_missing_block_is_a_typed_error() {
+        use crate::codes::{Scheme, SchemeKind};
+        use crate::repair::{RepairProgram, ScratchBuffers};
+        let scheme = Scheme::new(SchemeKind::AzureLrc, 6, 2, 2);
+        let program = RepairProgram::for_pattern(&scheme, &[0]).unwrap();
+        let store = MemStore::default(); // empty: every fetch misses
+        let mut source = StoreSource::new(&store, 11);
+        let mut scratch = ScratchBuffers::new();
+        let err = program.execute(&mut source, &mut scratch).unwrap_err();
+        let typed = err.chain().find_map(|c| c.downcast_ref::<RepairError>());
+        assert!(
+            matches!(typed, Some(&RepairError::MissingBlock { stripe: 11, .. })),
+            "expected typed MissingBlock, got {err:#}"
+        );
+    }
+
+    #[test]
+    fn store_source_truncated_file_is_a_typed_error() {
+        use crate::codec::StripeCodec;
+        use crate::codes::{Scheme, SchemeKind};
+        use crate::repair::{RepairProgram, ScratchBuffers};
+        let dir = std::env::temp_dir().join(format!("cp-lrc-trunc-src-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let codec = StripeCodec::new(Scheme::new(SchemeKind::AzureLrc, 6, 2, 2));
+        let mut rng = Prng::new(0x7A2);
+        let data: Vec<Vec<u8>> = (0..6).map(|_| rng.bytes(1024)).collect();
+        let stripe = codec.encode_stripe(&data);
+        let mut store = crate::store::FileStore::open(&dir).unwrap();
+        for (b, content) in stripe.iter().enumerate().skip(1) {
+            store.put(BlockKey { stripe: 4, index: b as u32 }, content.clone()).unwrap();
+        }
+        // Truncate one survivor's file behind the manifest's back.
+        let loc = BlockStore::locate(&store, BlockKey { stripe: 4, index: 1 }).unwrap();
+        std::fs::OpenOptions::new().write(true).open(&loc.path).unwrap().set_len(10).unwrap();
+        let program = RepairProgram::for_pattern(&codec.scheme, &[0]).unwrap();
+        let mut source = StoreSource::new(&store, 4);
+        let mut scratch = ScratchBuffers::new();
+        let err = program.execute(&mut source, &mut scratch).unwrap_err();
+        let typed = err.chain().find_map(|c| c.downcast_ref::<RepairError>());
+        assert!(
+            matches!(
+                typed,
+                Some(&RepairError::TruncatedBlock { stripe: 4, block: 1, expected: 1024, actual: 10 })
+            ),
+            "expected typed TruncatedBlock, got {err:#}"
+        );
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn file_store_kind_plugs_into_make_store() {
+        let dir = std::env::temp_dir().join(format!("cp-lrc-mkstore-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut s = make_store(&StoreKind::File(dir.clone()), 3);
+        exercise(s.as_mut());
+        // File-backed stores are locatable; in-memory ones are not.
+        let mut rng = Prng::new(5);
+        s.put(key(2), rng.bytes(64)).unwrap();
+        assert!(s.locate(key(2)).is_some());
+        assert!(MemStore::default().locate(key(2)).is_none());
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

@@ -46,10 +46,11 @@
 
 use super::degraded::{ReadMode, ReadReport};
 use super::metadata::{FileId, StripeId};
-use super::{decode_job, Cluster, DecodeJob, Decoded, JobMeta, RepairReport, PROXY};
+use super::{decode_job, Cluster, DecodeJob, Decoded, JobMeta, MeasuredIo, RepairReport, PROXY};
 use crate::netsim::{Flow, FlowResult, NetSim, NodeId, SessionSim};
 use crate::prng::Prng;
-use crate::repair::{RepairProgram, ScratchBuffers};
+use crate::repair::{RepairProgram, ScratchBuffers, DEFAULT_CHUNK_BYTES};
+use crate::store::IoBackendKind;
 use std::sync::{mpsc, Arc, Mutex};
 
 /// Stripes the fetch issuer keeps in flight per decode worker, for both
@@ -492,6 +493,8 @@ pub struct RepairSession<'c> {
     reads: Vec<(FileId, ReadMode)>,
     write_back: WriteBackMode,
     in_flight: Option<usize>,
+    backend: Option<IoBackendKind>,
+    chunk_bytes: usize,
 }
 
 impl<'c> RepairSession<'c> {
@@ -504,6 +507,8 @@ impl<'c> RepairSession<'c> {
             reads: Vec::new(),
             write_back: WriteBackMode::default(),
             in_flight: None,
+            backend: None,
+            chunk_bytes: DEFAULT_CHUNK_BYTES,
         }
     }
 
@@ -567,12 +572,44 @@ impl<'c> RepairSession<'c> {
         self
     }
 
+    /// Additionally run every repaired stripe through the **measured**
+    /// real-I/O pass: read the survivor byte ranges from the datanodes'
+    /// on-disk block files through a real I/O backend of the given
+    /// `kind`, decode chunk-granularly as ranges land, and time read /
+    /// decode / write-back under wall clocks. Each report's
+    /// [`RepairReport::measured`] is then `Some`. Requires a
+    /// file-backed cluster store
+    /// ([`crate::cluster::store::StoreKind::File`]) — with any other
+    /// store the session fails with a typed
+    /// [`crate::repair::RepairError::MissingBlock`].
+    pub fn backend(mut self, kind: IoBackendKind) -> Self {
+        self.backend = Some(kind);
+        self
+    }
+
+    /// Chunk size (bytes) of the measured pass's read plan and decode
+    /// frontier (default [`DEFAULT_CHUNK_BYTES`]; clamped to ≥ 1). Only
+    /// meaningful together with [`Self::backend`].
+    pub fn chunk_bytes(mut self, bytes: usize) -> Self {
+        self.chunk_bytes = bytes.max(1);
+        self
+    }
+
     /// Execute the session: wall-clock pipeline (fetch issuer →
     /// readiness-queue decode workers → write-back) plus the shared
     /// virtual timeline, returning the full [`SessionReport`].
     pub fn run(self) -> anyhow::Result<SessionReport> {
-        let RepairSession { cluster, jobs, threads, foreground, reads, write_back, in_flight } =
-            self;
+        let RepairSession {
+            cluster,
+            jobs,
+            threads,
+            foreground,
+            reads,
+            write_back,
+            in_flight,
+            backend,
+            chunk_bytes,
+        } = self;
         let jobs = match jobs {
             Some(jobs) => jobs,
             None => cluster.failed_jobs(),
@@ -587,6 +624,19 @@ impl<'c> RepairSession<'c> {
             .collect::<anyhow::Result<Vec<_>>>()?;
         // Wall-clock work: fetch, decode, write back, metadata updates.
         let finished = run_waves(cluster, &jobs, threads)?;
+
+        // Measured real-I/O pass (wall clocks off real reads), one
+        // stripe at a time so each stripe's read/decode overlap is
+        // attributable to its own backend run. Runs after stage 3 so
+        // the placement metadata already points at the replacement
+        // nodes the timed write-back re-puts to.
+        let measured: Vec<Option<MeasuredIo>> = match backend {
+            Some(kind) => finished
+                .iter()
+                .map(|fj| cluster.measured_repair_io(&fj.meta, kind, chunk_bytes).map(|(m, _)| Some(m)))
+                .collect::<anyhow::Result<_>>()?,
+            None => vec![None; finished.len()],
+        };
 
         // Shared virtual timeline, in both write-back modes (their
         // difference is the session's write-back-overlap accounting).
@@ -628,7 +678,9 @@ impl<'c> RepairSession<'c> {
         let mut reports = Vec::with_capacity(finished.len());
         let mut serial_s = 0.0f64;
         let mut contention_delay_s = 0.0f64;
-        for (fj, oc) in finished.into_iter().zip(chosen.jobs.iter()) {
+        for ((fj, oc), measured) in
+            finished.into_iter().zip(chosen.jobs.iter()).zip(measured)
+        {
             let FinishedJob { meta, decode_cpu_s, wb_s, .. } = fj;
             let report = RepairReport {
                 stripe: meta.sid,
@@ -645,6 +697,7 @@ impl<'c> RepairSession<'c> {
                 contended_read_s: oc.fetch_done_s - oc.issue_s,
                 session_done_s: oc.done_s,
                 local: meta.local,
+                measured,
             };
             serial_s += report.total_s();
             contention_delay_s += report.contention_delay_s();
@@ -1078,6 +1131,65 @@ mod tests {
         );
         c.restore_node(victim);
         assert!(c.scrub_stripe(sid).unwrap());
+    }
+
+    #[test]
+    fn backend_session_requires_a_file_backed_store() {
+        // `.backend(..)` against the default in-memory store must fail
+        // with the typed missing-block error, not a panic or a silent
+        // virtual-only report.
+        let mut c = Cluster::new(tiny_cfg(SchemeKind::CpAzure));
+        let sid = c.fill_random_stripes(1, 13)[0];
+        let victim = c.meta.stripes[&sid].block_nodes[0];
+        c.fail_node(victim);
+        let err = c.repair().backend(IoBackendKind::SyncPread).run().unwrap_err();
+        let typed = err
+            .chain()
+            .find_map(|c| c.downcast_ref::<crate::repair::RepairError>());
+        assert!(
+            matches!(typed, Some(crate::repair::RepairError::MissingBlock { .. })),
+            "expected a typed MissingBlock, got: {err:#}"
+        );
+    }
+
+    #[test]
+    fn backend_session_measures_real_io_next_to_the_virtual_clocks() {
+        use crate::cluster::store::StoreKind;
+        let root = std::env::temp_dir()
+            .join(format!("cp-lrc-traffic-measured-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        let mut cfg = tiny_cfg(SchemeKind::CpAzure);
+        cfg.store = StoreKind::File(root.clone());
+        let mut c = Cluster::new(cfg);
+        let sid = c.fill_random_stripes(1, 29)[0];
+        let victim = c.meta.stripes[&sid].block_nodes[0];
+        c.fail_node(victim);
+        let r = c
+            .repair()
+            .backend(IoBackendKind::ThreadPool { threads: 2 })
+            .chunk_bytes(512)
+            .run_single()
+            .unwrap();
+        let m = r.measured.as_ref().expect("backend session must measure");
+        assert_eq!(m.backend, "thread_pool");
+        assert_eq!(m.chunk_bytes, 512);
+        // Whole-block fetch policy: the measured pass reads exactly the
+        // bytes the virtual accounting charged.
+        assert_eq!(m.bytes_read, r.bytes_read);
+        assert_eq!(m.stats.bytes, m.bytes_read);
+        // 4096-byte blocks at 512-byte chunks: 8 chunks per survivor.
+        assert_eq!(m.stats.chunks, 8 * r.blocks_read);
+        assert!(m.read_s >= 0.0 && m.decode_s >= 0.0 && m.wb_s > 0.0);
+        assert!(m.total_s() > 0.0);
+        // The measured arrival curve ends at the full fetch set.
+        let &(t_last, bytes_last) = m.arrival_curve.last().unwrap();
+        assert_eq!(bytes_last, m.bytes_read as f64);
+        assert!(t_last > 0.0);
+        // And the virtual clocks are still there, untouched.
+        assert!(r.read_s > 0.0 && r.completion_s > 0.0);
+        c.restore_node(victim);
+        assert!(c.scrub_stripe(sid).unwrap());
+        std::fs::remove_dir_all(&root).unwrap();
     }
 
     #[test]

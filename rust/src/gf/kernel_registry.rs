@@ -55,6 +55,12 @@ pub const KERNELS: &[KernelEntry] = &[
         dispatch: "fused_gfni512_dispatch",
         pinning_test: "combine_fused_wide_lengths_cover_the_avx512_body_and_tails",
     },
+    KernelEntry {
+        name: "fused_gfni512_tail",
+        features: "gfni,avx512f,avx512bw",
+        dispatch: "fused_gfni512_tail_dispatch",
+        pinning_test: "gfni512_masked_tail_pinned_to_scalar_every_remainder",
+    },
 ];
 
 #[cfg(test)]
@@ -63,7 +69,7 @@ mod tests {
 
     #[test]
     fn registry_covers_the_full_kernel_ladder() {
-        assert_eq!(KERNELS.len(), 5, "add new kernel tiers to the registry");
+        assert_eq!(KERNELS.len(), 6, "add new kernel tiers to the registry");
     }
 
     #[test]

@@ -100,6 +100,7 @@ pub mod proptest_lite;
 pub mod reliability;
 pub mod repair;
 pub mod runtime;
+pub mod store;
 pub mod trace;
 
 /// The paper's evaluation parameter sets P1–P8 (Table II).

@@ -609,6 +609,31 @@ pub fn prefix_completion(trace: &[(f64, f64)], work_bytes: f64, rate_bps: f64) -
     t_done
 }
 
+/// Normalize discrete arrival events `(time_s, bytes)` — e.g. chunk
+/// completions stamped off a real I/O backend by the cluster's measured
+/// repair pass — into the cumulative corner-point format
+/// [`NetSim::run_traced`] and [`SessionSim::group_trace`] produce:
+/// sorted by time, starting at `(0, 0)`, each corner carrying the total
+/// bytes arrived by that instant. Events at equal times are merged into
+/// one corner, so the curve is strictly a function of time and can feed
+/// the same consumers ([`pipeline_completion`], the EXPERIMENTS.md
+/// overlap plots) as a simulated trace.
+pub fn arrival_curve(events: &[(f64, u64)]) -> Vec<(f64, f64)> {
+    let mut ev: Vec<(f64, u64)> = events.to_vec();
+    ev.sort_by(|a, b| a.0.total_cmp(&b.0));
+    let mut curve: Vec<(f64, f64)> = vec![(0.0, 0.0)];
+    let mut cum = 0.0f64;
+    for (t, b) in ev {
+        cum += b as f64;
+        let t = t.max(0.0);
+        match curve.last_mut() {
+            Some(corner) if corner.0 == t => corner.1 = cum,
+            _ => curve.push((t, cum)),
+        }
+    }
+    curve
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -618,6 +643,21 @@ mod tests {
     }
 
     const GBPS: f64 = 1e9 / 8.0;
+
+    #[test]
+    fn arrival_curve_normalizes_measured_events() {
+        // Out-of-order events, a duplicate timestamp, and a feed into
+        // pipeline_completion — the measured/simulated interop contract.
+        let curve = arrival_curve(&[(2.0, 100), (1.0, 50), (2.0, 30), (0.5, 20)]);
+        assert_eq!(curve, vec![(0.0, 0.0), (0.5, 20.0), (1.0, 70.0), (2.0, 200.0)]);
+        // Monotone in both coordinates by construction.
+        for w in curve.windows(2) {
+            assert!(w[1].0 > w[0].0 && w[1].1 >= w[0].1);
+        }
+        // An infinitely fast consumer finishes at the last arrival.
+        assert_eq!(pipeline_completion(&curve, 200.0, f64::INFINITY), 2.0);
+        assert_eq!(arrival_curve(&[]), vec![(0.0, 0.0)]);
+    }
 
     #[test]
     fn single_flow_takes_bytes_over_bandwidth() {

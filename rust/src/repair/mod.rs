@@ -24,7 +24,12 @@
 //!    ([`crate::gf::combine_into_fused`]). For sources that *stream*,
 //!    [`RepairProgram::execute_pipelined`] uses a compile-time
 //!    readiness frontier to fire each op as soon as its operands
-//!    arrive from a [`StreamingBlockSource`], and the cluster's
+//!    arrive from a [`StreamingBlockSource`];
+//!    [`RepairProgram::execute_chunk_pipelined`] pushes that frontier
+//!    *below* block granularity — byte ranges from a [`ChunkStream`]
+//!    fire individual op-columns the moment each column is resident
+//!    for all operands, so real-I/O reads overlap decode inside a
+//!    single block. The cluster's
 //!    whole-node repair sessions ([`crate::cluster::Cluster::repair`])
 //!    overlap fetch with decode at stripe granularity (readiness-queue
 //!    workers) and in the virtual clock (`EXPERIMENTS.md` §Overlap),
@@ -42,13 +47,46 @@ pub mod program;
 
 pub use cache::{CacheStats, PlanCache, DEFAULT_PLAN_CACHE_CAPACITY};
 pub use program::{
-    BlockSource, FetchOrderStream, IterStream, RepairProgram, ScratchBuffers, SliceSource,
-    StreamingBlockSource, DEFAULT_CHUNK_BYTES,
+    BlockChunk, BlockSource, ChunkPipelineStats, ChunkStream, FetchOrderStream, IterChunks,
+    IterStream, RepairProgram, ScratchBuffers, SliceSource, StreamingBlockSource,
+    DEFAULT_CHUNK_BYTES,
 };
 
 use crate::codec::StripeCodec;
 use crate::codes::{Equation, Scheme};
 use std::collections::BTreeSet;
+
+/// Typed I/O failures surfaced by block sources that read real storage
+/// (the file-backed datanode path). Carried inside `anyhow::Error` —
+/// callers that care downcast (`err.downcast_ref::<RepairError>()`);
+/// callers that don't still get a precise message instead of a panic.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RepairError {
+    /// A fetch-set block has no manifest entry / no block file.
+    MissingBlock { stripe: u64, block: usize },
+    /// A block file exists but is shorter than its manifest length —
+    /// a torn write or external truncation.
+    TruncatedBlock { stripe: u64, block: usize, expected: u64, actual: u64 },
+    /// The store directory exists but its manifest is absent.
+    MissingManifest { path: String },
+}
+
+impl std::fmt::Display for RepairError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::MissingBlock { stripe, block } => {
+                write!(f, "stripe {stripe}: block {block} absent from store")
+            }
+            Self::TruncatedBlock { stripe, block, expected, actual } => write!(
+                f,
+                "stripe {stripe}: block {block} truncated ({actual} of {expected} bytes)"
+            ),
+            Self::MissingManifest { path } => write!(f, "store manifest absent at {path}"),
+        }
+    }
+}
+
+impl std::error::Error for RepairError {}
 
 /// One peeling step: solve `block` from equation `eq` (index into the
 /// concatenation local_eqs ++ global_eqs).

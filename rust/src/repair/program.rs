@@ -155,6 +155,68 @@ impl<S: BlockSource> StreamingBlockSource for FetchOrderStream<'_, S> {
     }
 }
 
+/// One completed byte range of a fetch-set block, as delivered by a
+/// [`ChunkStream`]: the real-I/O unit of arrival (a backend range read
+/// that just finished), finer-grained than the whole blocks of
+/// [`StreamingBlockSource`].
+#[derive(Clone, Debug)]
+pub struct BlockChunk {
+    /// Block index (must be in the program's fetch set).
+    pub block: usize,
+    /// Byte offset of this range within the block.
+    pub offset: usize,
+    /// The range's bytes (`offset + data.len() <= block_len`).
+    pub data: Vec<u8>,
+    /// Total length of the block, repeated on every chunk so the
+    /// executor can size its buffers on first arrival. A zero-length
+    /// block is delivered as exactly one empty chunk.
+    pub block_len: usize,
+}
+
+/// Supplies survivor-block *byte ranges* as they become resident — the
+/// chunk-granular counterpart of [`StreamingBlockSource`], consumed by
+/// [`RepairProgram::execute_chunk_pipelined`]. This is the seam the
+/// real-I/O data plane ([`crate::store`]) delivers through: a backend
+/// completes range reads in arbitrary order (across blocks *and* within
+/// a block) and the executor fires each op-column as soon as that
+/// column's bytes are resident for all operands.
+pub trait ChunkStream {
+    /// Deliver the next completed range, or `None` once every fetch-set
+    /// block is fully delivered. Errors are real (failed read), never
+    /// flow control.
+    fn next_chunk(&mut self) -> anyhow::Result<Option<BlockChunk>>;
+}
+
+/// [`ChunkStream`] over any infallible iterator of [`BlockChunk`]s —
+/// scripted arrival orders, test fixtures, pre-collected completions.
+pub struct IterChunks<I>(pub I);
+
+impl<I: Iterator<Item = BlockChunk>> ChunkStream for IterChunks<I> {
+    fn next_chunk(&mut self) -> anyhow::Result<Option<BlockChunk>> {
+        Ok(self.0.next())
+    }
+}
+
+/// Aggregate statistics of one [`RepairProgram::execute_chunk_pipelined`]
+/// run — the observable evidence that decode genuinely overlapped the
+/// fetch instead of waiting for whole blocks.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ChunkPipelineStats {
+    /// Ranges delivered by the stream.
+    pub chunks: usize,
+    /// Bytes delivered by the stream (Σ chunk lengths — the
+    /// conservation quantity: equals fetch-set size × block length).
+    pub bytes: u64,
+    /// GF column fires (one fused combine per op per ready column).
+    pub columns_fired: usize,
+    /// Column fires that happened while the fetch set was still
+    /// partially resident — the chunk-granular overlap at work.
+    pub early_columns: usize,
+    /// Ops whose *first* column fired before every one of that op's own
+    /// input blocks was fully resident.
+    pub early_ops: usize,
+}
+
 /// [`BlockSource`] over an in-memory `Option`-indexed stripe — the view
 /// tests, benches and the degraded-read path already hold.
 pub struct SliceSource<'a> {
@@ -220,30 +282,86 @@ impl BlockSource for SliceSource<'_> {
 /// overwrites its `len`-byte window before anything reads it:
 /// [`gf::combine_into_fused`]'s first pass over a destination *stores*
 /// (it never loads `dst`), and ops only read windows of earlier ops.
-#[derive(Default)]
+///
+/// **Aligned mode** ([`ScratchBuffers::aligned`]): each buffer's live
+/// window starts at the first address with the requested alignment
+/// (4096 for the real-I/O data plane, so backend reads can land
+/// directly in decode scratch and the buffers are `O_DIRECT`-ready).
+/// Implemented in safe code by over-allocating `align - 1` slack bytes
+/// and slicing at the aligned offset; reallocation may move a buffer,
+/// shifting its offset — stale bytes then appear in the window, which
+/// the stale-contents contract above already makes sound. If the
+/// allocator's pointer phase cannot be determined (Miri), the window
+/// falls back to offset 0: correctness never depends on alignment.
 pub struct ScratchBuffers {
-    /// Each buffer's length is its high-water mark; executions use the
-    /// leading `len` bytes only.
+    /// Each buffer's length is its high-water mark; executions use
+    /// `len` bytes starting at the buffer's aligned offset.
     bufs: Vec<Vec<u8>>,
+    /// Per-buffer start of the live window, recomputed by `prepare`
+    /// (always 0 in unaligned mode).
+    offsets: Vec<usize>,
+    /// Requested window alignment in bytes (power of two; 1 = none).
+    align: usize,
+}
+
+impl Default for ScratchBuffers {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl ScratchBuffers {
     pub fn new() -> Self {
-        Self::default()
+        Self { bufs: Vec::new(), offsets: Vec::new(), align: 1 }
     }
 
-    /// Ensure `n` buffers of at least `len` bytes each (see the
-    /// stale-contents contract on the type: no zeroing except on
-    /// first-time growth, no truncation on shrink).
+    /// Scratch pool whose live windows start `align`-byte aligned (see
+    /// the aligned-mode notes on the type). `align` must be a power of
+    /// two; `aligned(1)` is equivalent to [`Self::new`].
+    pub fn aligned(align: usize) -> Self {
+        assert!(align.is_power_of_two(), "scratch alignment must be a power of two");
+        Self { bufs: Vec::new(), offsets: Vec::new(), align }
+    }
+
+    /// The window alignment this pool was built with.
+    pub fn alignment(&self) -> usize {
+        self.align
+    }
+
+    /// Ensure `n` buffers with at least `len` live-window bytes each
+    /// (see the stale-contents contract on the type: no zeroing except
+    /// on first-time growth, no truncation on shrink), then recompute
+    /// each window's aligned start offset.
     fn prepare(&mut self, n: usize, len: usize) {
         if self.bufs.len() < n {
             self.bufs.resize_with(n, Vec::new);
         }
-        for buf in &mut self.bufs[..n] {
-            if buf.len() < len {
-                buf.resize(len, 0);
-            }
+        if self.offsets.len() < n {
+            self.offsets.resize(n, 0);
         }
+        let want = len + (self.align - 1); // slack for any pointer phase
+        for (buf, off) in self.bufs[..n].iter_mut().zip(self.offsets[..n].iter_mut()) {
+            if buf.len() < want {
+                buf.resize(want, 0);
+            }
+            *off = if self.align > 1 {
+                // align_offset is allowed to return usize::MAX ("cannot
+                // be computed", e.g. under Miri) — fall back to an
+                // unaligned window rather than failing.
+                match buf.as_ptr().align_offset(self.align) {
+                    usize::MAX => 0,
+                    o => o,
+                }
+            } else {
+                0
+            };
+            debug_assert!(*off + len <= buf.len());
+        }
+    }
+
+    /// The `len`-byte live window of buffer `i` (valid after `prepare`).
+    fn window(&self, i: usize, len: usize) -> &[u8] {
+        &self.bufs[i][self.offsets[i]..self.offsets[i] + len]
     }
 }
 
@@ -612,7 +730,7 @@ impl RepairProgram {
         chunk_bytes: usize,
     ) -> anyhow::Result<Vec<&'s [u8]>> {
         let len = self.run_into_scratch(source, scratch, chunk_bytes, &self.fetch_order)?;
-        Ok(self.outputs.iter().map(|&i| &scratch.bufs[i][..len]).collect())
+        Ok(self.outputs.iter().map(|&i| scratch.window(i, len)).collect())
     }
 
     /// Readiness-driven execution: pull survivor blocks from a
@@ -684,14 +802,15 @@ impl RepairProgram {
                 let l = len.expect("len set on first arrival");
                 let op = &self.ops[i];
                 let (done, rest) = scratch.bufs.split_at_mut(i);
-                let dst = &mut rest[0][..l];
+                let off = scratch.offsets[i];
+                let dst = &mut rest[0][off..off + l];
                 let mut srcs: Vec<&[u8]> =
                     Vec::with_capacity(op.fetch_idx.len() + op.solved_idx.len());
                 for &fp in &self.op_fetch_pos[i] {
                     srcs.push(arrived[fp].as_deref().expect("readiness implies arrival"));
                 }
                 for &j in &op.solved_idx {
-                    srcs.push(&done[j][..l]);
+                    srcs.push(&done[j][scratch.offsets[j]..scratch.offsets[j] + l]);
                 }
                 gf::combine_into_fused(&op.coeffs, &srcs, dst);
                 executed += 1;
@@ -723,7 +842,170 @@ impl RepairProgram {
             "pipelined frontier left non-zero pending-input counters"
         );
         let len = len.context("program fetches nothing")?;
-        Ok(self.outputs.iter().map(|&i| &scratch.bufs[i][..len]).collect())
+        Ok(self.outputs.iter().map(|&i| scratch.window(i, len)).collect())
+    }
+
+    /// Chunk-granular readiness-driven execution: pull survivor-block
+    /// **byte ranges** from a [`ChunkStream`] in whatever order reads
+    /// complete — across blocks and within a block — and fire each GF
+    /// op-column the moment that column's bytes are resident for every
+    /// operand. This extends [`Self::execute_pipelined`]'s readiness
+    /// frontier below block granularity: on a real I/O path a column of
+    /// the first op runs while later ranges of the *same* blocks are
+    /// still on disk or in flight, so fetch/decode overlap happens
+    /// inside a single block, not just across blocks.
+    ///
+    /// Per-operand readiness is a contiguous-from-zero watermark: a
+    /// range landing at a block's current watermark advances it
+    /// (absorbing any buffered out-of-order ranges); an op's fireable
+    /// prefix is the minimum watermark over its fetched inputs and the
+    /// computed prefixes of its solved inputs, quantized to
+    /// `chunk_bytes` columns (the cache-blocking width; the final
+    /// column may be shorter). Single in-order sweeps reach the
+    /// fixpoint because the op list is topologically ordered.
+    ///
+    /// The stream must deliver exactly the [`Self::fetch`] set, every
+    /// byte of each block exactly once, all blocks of one common
+    /// length (a zero-length block is one empty chunk); anything else
+    /// is a real error. Outputs are byte-identical to
+    /// [`Self::execute`] (property-pinned) and returned with
+    /// [`ChunkPipelineStats`] — the evidence of sub-block overlap.
+    pub fn execute_chunk_pipelined<'s, S: ChunkStream>(
+        &self,
+        source: &mut S,
+        scratch: &'s mut ScratchBuffers,
+        chunk_bytes: usize,
+    ) -> anyhow::Result<(Vec<&'s [u8]>, ChunkPipelineStats)> {
+        let chunk = chunk_bytes.max(1);
+        let n_fetch = self.fetch_order.len();
+        let mut arrived: Vec<Vec<u8>> = vec![Vec::new(); n_fetch];
+        let mut seen = vec![false; n_fetch]; // first chunk of the block landed
+        let mut low = vec![0usize; n_fetch]; // contiguous-from-zero watermark
+        let mut received = vec![0usize; n_fetch]; // Σ delivered range lengths
+        // Out-of-order ranges buffered until the watermark reaches them.
+        let mut ahead: Vec<BTreeMap<usize, usize>> = vec![BTreeMap::new(); n_fetch];
+        let mut op_done = vec![0usize; self.ops.len()]; // computed prefix
+        let mut op_early = vec![false; self.ops.len()];
+        let mut len: Option<usize> = None;
+        let mut stats = ChunkPipelineStats::default();
+
+        while let Some(BlockChunk { block, offset, data, block_len }) = source.next_chunk()? {
+            let pos = self.fetch_order.binary_search(&block).map_err(|_| {
+                anyhow::anyhow!("stream delivered block {block} outside the fetch set")
+            })?;
+            match len {
+                None => {
+                    len = Some(block_len);
+                    scratch.prepare(self.ops.len(), block_len);
+                }
+                Some(l) => anyhow::ensure!(
+                    block_len == l,
+                    "ragged survivor block {block} ({block_len} bytes, expected {l})"
+                ),
+            }
+            anyhow::ensure!(
+                offset + data.len() <= block_len,
+                "chunk {offset}..{} of block {block} overruns its {block_len}-byte length",
+                offset + data.len()
+            );
+            anyhow::ensure!(
+                !data.is_empty() || block_len == 0,
+                "empty chunk for non-empty block {block}"
+            );
+            anyhow::ensure!(
+                received[pos] + data.len() <= block_len && offset >= low[pos],
+                "overlapping or duplicate chunk at {offset} of block {block}"
+            );
+            if !seen[pos] {
+                seen[pos] = true;
+                arrived[pos] = vec![0u8; block_len];
+            } else if block_len == 0 {
+                anyhow::bail!("zero-length block {block} delivered twice");
+            }
+            received[pos] += data.len();
+            stats.chunks += 1;
+            stats.bytes += data.len() as u64;
+            arrived[pos][offset..offset + data.len()].copy_from_slice(&data);
+            if offset == low[pos] {
+                low[pos] = offset + data.len();
+                // absorb any buffered ranges now contiguous with the low
+                while let Some(l2) = ahead[pos].remove(&low[pos]) {
+                    low[pos] += l2;
+                }
+            } else if ahead[pos].insert(offset, data.len()).is_some() {
+                anyhow::bail!("overlapping or duplicate chunk at {offset} of block {block}");
+            }
+
+            // Advance ops: one in-order sweep reaches the fixpoint since
+            // solved operands always have lower op indices.
+            let block_len = len.expect("len set above");
+            let fully_resident = low.iter().all(|&w| w == block_len);
+            for i in 0..self.ops.len() {
+                let mut wm = block_len;
+                for &fp in &self.op_fetch_pos[i] {
+                    wm = wm.min(low[fp]);
+                }
+                for &j in &self.ops[i].solved_idx {
+                    wm = wm.min(op_done[j]);
+                }
+                // Quantize to the column grid; the final (possibly
+                // short) column fires only when the watermark closes.
+                let fireable = if wm == block_len { block_len } else { wm - wm % chunk };
+                while op_done[i] < fireable {
+                    let lo = op_done[i];
+                    let hi = (lo + chunk - lo % chunk).min(fireable);
+                    let op = &self.ops[i];
+                    let (done, rest) = scratch.bufs.split_at_mut(i);
+                    let off = scratch.offsets[i];
+                    let dst = &mut rest[0][off + lo..off + hi];
+                    let mut srcs: Vec<&[u8]> =
+                        Vec::with_capacity(op.fetch_idx.len() + op.solved_idx.len());
+                    for &fp in &self.op_fetch_pos[i] {
+                        srcs.push(&arrived[fp][lo..hi]);
+                    }
+                    for &j in &op.solved_idx {
+                        srcs.push(&done[j][scratch.offsets[j] + lo..scratch.offsets[j] + hi]);
+                    }
+                    gf::combine_into_fused(&op.coeffs, &srcs, dst);
+                    op_done[i] = hi;
+                    stats.columns_fired += 1;
+                    if !fully_resident {
+                        stats.early_columns += 1;
+                        if !op_early[i]
+                            && self.op_dep_pos[i].iter().any(|&p| low[p] < block_len)
+                        {
+                            op_early[i] = true;
+                        }
+                    }
+                }
+            }
+        }
+
+        let len = len.context("stream delivered no chunks (program fetches nothing?)")?;
+        for (pos, &w) in low.iter().enumerate() {
+            anyhow::ensure!(
+                seen[pos] && w == len,
+                "stream ended with block {} at {w} of {len} bytes",
+                self.fetch_order[pos]
+            );
+        }
+        anyhow::ensure!(
+            op_done.iter().all(|&d| d == len),
+            "some op-columns never became fireable (broken chunk frontier)"
+        );
+        stats.early_ops = op_early.iter().filter(|&&e| e).count();
+        // strict-invariants: byte conservation — the stream delivered
+        // exactly one copy of every fetch-set byte, no more, no less.
+        #[cfg(feature = "strict-invariants")]
+        {
+            assert_eq!(
+                stats.bytes,
+                (n_fetch * len) as u64,
+                "chunk stream bytes != fetch set size × block length"
+            );
+            assert!(ahead.iter().all(BTreeMap::is_empty), "unabsorbed out-of-order ranges");
+        }
+        Ok((self.outputs.iter().map(|&i| scratch.window(i, len)).collect(), stats))
     }
 
     /// Execute the same compiled program over many stripes, reusing one
@@ -747,7 +1029,7 @@ impl RepairProgram {
                 .run_into_scratch(source, scratch, DEFAULT_CHUNK_BYTES, &self.fetch_order)
                 .with_context(|| format!("stripe {si} of batch"))?;
             let outs: Vec<&[u8]> =
-                self.outputs.iter().map(|&i| &scratch.bufs[i][..len]).collect();
+                self.outputs.iter().map(|&i| scratch.window(i, len)).collect();
             sink(si, &outs)?;
         }
         Ok(())
@@ -786,9 +1068,10 @@ impl RepairProgram {
                     .blocks_range(&op.fetch_idx, lo..hi)
                     .with_context(|| format!("reconstructing block {}", op.block))?;
                 let (done, rest) = scratch.bufs.split_at_mut(i);
-                let dst = &mut rest[0][lo..hi];
+                let off = scratch.offsets[i];
+                let dst = &mut rest[0][off + lo..off + hi];
                 for &j in &op.solved_idx {
-                    srcs.push(&done[j][lo..hi]);
+                    srcs.push(&done[j][scratch.offsets[j] + lo..scratch.offsets[j] + hi]);
                 }
                 gf::combine_into_fused(&op.coeffs, &srcs, dst);
             }
@@ -860,19 +1143,24 @@ mod tests {
 
     #[test]
     fn scratch_reuse_across_block_sizes_is_clean() {
-        // Shrinking then growing the block size must not leak stale bytes.
+        // Shrinking then growing the block size must not leak stale
+        // bytes — in both the plain pool and the aligned pool, where a
+        // realloc may additionally *shift* the live window's offset and
+        // expose different stale bytes (the stale-contents contract
+        // must hold regardless).
         let codec = StripeCodec::new(Scheme::new(SchemeKind::CpUniform, 6, 2, 2));
         let s = &codec.scheme;
         let mut rng = Prng::new(0x5C4A7C8);
         let program = RepairProgram::for_pattern(s, &[1, 8]).unwrap();
-        let mut scratch = ScratchBuffers::new();
-        for len in [1024usize, 64, 4096, 3] {
-            let data: Vec<Vec<u8>> = (0..s.k).map(|_| rng.bytes(len)).collect();
-            let stripe = codec.encode_stripe(&data);
-            let blocks = erase(&stripe, &[1, 8]);
-            let out = program.execute(&mut SliceSource::new(&blocks), &mut scratch).unwrap();
-            assert_eq!(out[0], &stripe[1][..], "len={len}");
-            assert_eq!(out[1], &stripe[8][..], "len={len}");
+        for mut scratch in [ScratchBuffers::new(), ScratchBuffers::aligned(4096)] {
+            for len in [1024usize, 64, 4096, 3] {
+                let data: Vec<Vec<u8>> = (0..s.k).map(|_| rng.bytes(len)).collect();
+                let stripe = codec.encode_stripe(&data);
+                let blocks = erase(&stripe, &[1, 8]);
+                let out = program.execute(&mut SliceSource::new(&blocks), &mut scratch).unwrap();
+                assert_eq!(out[0], &stripe[1][..], "len={len}");
+                assert_eq!(out[1], &stripe[8][..], "len={len}");
+            }
         }
     }
 
@@ -1148,6 +1436,222 @@ mod tests {
         assert!(program
             .execute_pipelined(&mut IterStream(ragged.into_iter()), &mut scratch)
             .is_err());
+    }
+
+    /// Split every fetch-set block of `blocks` into `chunk`-byte ranges,
+    /// in block-major order (callers reorder for interleaving tests). A
+    /// zero-length block becomes exactly one empty chunk.
+    fn chunk_deliveries(
+        fetch: &[usize],
+        blocks: &[Option<Vec<u8>>],
+        chunk: usize,
+    ) -> Vec<BlockChunk> {
+        let mut out = Vec::new();
+        for &b in fetch {
+            let data = blocks[b].as_ref().unwrap();
+            if data.is_empty() {
+                out.push(BlockChunk { block: b, offset: 0, data: Vec::new(), block_len: 0 });
+                continue;
+            }
+            let mut lo = 0;
+            while lo < data.len() {
+                let hi = (lo + chunk).min(data.len());
+                out.push(BlockChunk {
+                    block: b,
+                    offset: lo,
+                    data: data[lo..hi].to_vec(),
+                    block_len: data.len(),
+                });
+                lo = hi;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn chunk_pipelined_matches_execute_any_interleaving() {
+        // Byte-range deliveries in any order — across blocks and out of
+        // order within a block — must reproduce execute exactly, for
+        // column widths that do and don't divide the block length.
+        let codec = StripeCodec::new(Scheme::new(SchemeKind::CpAzure, 24, 2, 2));
+        let s = &codec.scheme;
+        let mut rng = Prng::new(0xC4D_57);
+        let data: Vec<Vec<u8>> = (0..s.k).map(|_| rng.bytes(777)).collect();
+        let stripe = codec.encode_stripe(&data);
+        let erased = vec![0usize, 26];
+        let program = RepairProgram::for_pattern(s, &erased).unwrap();
+        let blocks = erase(&stripe, &erased);
+        let fetch: Vec<usize> = program.fetch().iter().copied().collect();
+
+        let mut scratch = ScratchBuffers::new();
+        let want: Vec<Vec<u8>> = program
+            .execute(&mut SliceSource::new(&blocks), &mut scratch)
+            .unwrap()
+            .into_iter()
+            .map(<[u8]>::to_vec)
+            .collect();
+
+        for (trial, chunk) in [64usize, 100, 777, 1 << 20, 64, 100, 1].iter().enumerate() {
+            let mut deliveries = chunk_deliveries(&fetch, &blocks, *chunk);
+            if trial >= 4 {
+                rng.shuffle(&mut deliveries);
+            }
+            let mut scratch = ScratchBuffers::new();
+            let (got, stats) = program
+                .execute_chunk_pipelined(
+                    &mut IterChunks(deliveries.into_iter()),
+                    &mut scratch,
+                    *chunk,
+                )
+                .unwrap();
+            assert_eq!(got.len(), want.len());
+            for (g, w) in got.iter().zip(want.iter()) {
+                assert_eq!(*g, &w[..], "trial {trial} chunk {chunk}");
+            }
+            // byte conservation: one copy of every fetch-set byte
+            assert_eq!(stats.bytes, (fetch.len() * 777) as u64);
+        }
+    }
+
+    #[test]
+    fn chunk_pipelined_fires_ops_before_blocks_fully_resident() {
+        // ISSUE 7 acceptance: with ranges arriving round-robin across
+        // blocks (the shape a real prefetching backend produces), ops
+        // must start firing columns while every block is still partially
+        // resident — decode overlaps the reads of the *same* blocks.
+        let codec = StripeCodec::new(Scheme::new(SchemeKind::CpAzure, 24, 2, 2));
+        let s = &codec.scheme;
+        let mut rng = Prng::new(0xEA41_09);
+        let data: Vec<Vec<u8>> = (0..s.k).map(|_| rng.bytes(777)).collect();
+        let stripe = codec.encode_stripe(&data);
+        let erased = vec![0usize, 26]; // two-step cascade
+        let program = RepairProgram::for_pattern(s, &erased).unwrap();
+        let blocks = erase(&stripe, &erased);
+        let fetch: Vec<usize> = program.fetch().iter().copied().collect();
+
+        let chunk = 64usize;
+        let mut deliveries = chunk_deliveries(&fetch, &blocks, chunk);
+        // round-robin: chunk 0 of every block, then chunk 1 of every
+        // block, ... (stable sort keeps fetch order within a wave)
+        deliveries.sort_by_key(|c| c.offset);
+
+        let mut scratch = ScratchBuffers::new();
+        let (out, stats) = program
+            .execute_chunk_pipelined(&mut IterChunks(deliveries.into_iter()), &mut scratch, chunk)
+            .unwrap();
+        for (i, &e) in erased.iter().enumerate() {
+            assert_eq!(out[i], &stripe[e][..]);
+        }
+        assert!(
+            stats.early_ops >= 1,
+            "no op fired before its blocks were fully resident: {stats:?}"
+        );
+        assert!(stats.early_columns >= 1);
+        assert_eq!(stats.columns_fired % program.ops.len(), 0);
+        assert_eq!(stats.bytes, (fetch.len() * 777) as u64);
+    }
+
+    #[test]
+    fn chunk_pipelined_handles_zero_length_blocks() {
+        let codec = StripeCodec::new(Scheme::new(SchemeKind::AzureLrc, 6, 2, 2));
+        let s = &codec.scheme;
+        let data: Vec<Vec<u8>> = vec![Vec::new(); s.k];
+        let stripe = codec.encode_stripe(&data);
+        let program = RepairProgram::for_pattern(s, &[0]).unwrap();
+        let blocks = erase(&stripe, &[0]);
+        let fetch: Vec<usize> = program.fetch().iter().copied().collect();
+        let deliveries = chunk_deliveries(&fetch, &blocks, 64);
+        assert_eq!(deliveries.len(), fetch.len(), "one empty chunk per block");
+        let mut scratch = ScratchBuffers::new();
+        let (out, stats) = program
+            .execute_chunk_pipelined(&mut IterChunks(deliveries.into_iter()), &mut scratch, 64)
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        assert!(out[0].is_empty());
+        assert_eq!(stats.bytes, 0);
+        assert_eq!(stats.columns_fired, 0);
+    }
+
+    #[test]
+    fn chunk_pipelined_stream_misbehavior_is_a_real_error() {
+        let codec = StripeCodec::new(Scheme::new(SchemeKind::AzureLrc, 6, 2, 2));
+        let s = &codec.scheme;
+        let mut rng = Prng::new(0xC4D_BAD);
+        let data: Vec<Vec<u8>> = (0..s.k).map(|_| rng.bytes(128)).collect();
+        let stripe = codec.encode_stripe(&data);
+        let program = RepairProgram::for_pattern(s, &[0]).unwrap();
+        let blocks = erase(&stripe, &[0]);
+        let fetch: Vec<usize> = program.fetch().iter().copied().collect();
+        let run = |deliveries: Vec<BlockChunk>| {
+            let mut scratch = ScratchBuffers::new();
+            program
+                .execute_chunk_pipelined(&mut IterChunks(deliveries.into_iter()), &mut scratch, 64)
+                .map(|(out, stats)| (out.iter().map(|o| o.to_vec()).collect::<Vec<_>>(), stats))
+        };
+
+        // missing tail range of one block
+        let mut short = chunk_deliveries(&fetch, &blocks, 64);
+        short.pop();
+        assert!(run(short).is_err(), "truncated stream must fail");
+        // duplicate range
+        let mut dup = chunk_deliveries(&fetch, &blocks, 64);
+        dup.push(dup[0].clone());
+        assert!(run(dup).is_err(), "duplicate range must fail");
+        // range overruns the declared block length
+        let mut over = chunk_deliveries(&fetch, &blocks, 64);
+        over.last_mut().unwrap().offset += 1;
+        assert!(run(over).is_err(), "overrunning range must fail");
+        // inconsistent block_len across blocks
+        let mut ragged = chunk_deliveries(&fetch, &blocks, 64);
+        for c in ragged.iter_mut().filter(|c| c.block == fetch[0]) {
+            c.block_len = 200;
+        }
+        assert!(run(ragged).is_err(), "ragged block_len must fail");
+        // block outside the fetch set (block 0 is the erasure)
+        let mut foreign = chunk_deliveries(&fetch, &blocks, 64);
+        foreign[0].block = 0;
+        assert!(run(foreign).is_err(), "foreign block must fail");
+        // empty chunk for a non-empty block
+        let mut empty = chunk_deliveries(&fetch, &blocks, 64);
+        empty.push(BlockChunk { block: fetch[0], offset: 64, data: Vec::new(), block_len: 128 });
+        assert!(run(empty).is_err(), "empty chunk for non-empty block must fail");
+        // well-formed control: the same generator, unmodified, passes
+        let (out, _) = run(chunk_deliveries(&fetch, &blocks, 64)).unwrap();
+        assert_eq!(out[0], stripe[0]);
+    }
+
+    #[test]
+    fn aligned_scratch_output_windows_are_aligned_and_identical() {
+        // Aligned mode must be invisible in the output bytes, and (off
+        // Miri, where pointer phase is observable) every output window
+        // must start on the requested boundary.
+        let codec = StripeCodec::new(Scheme::new(SchemeKind::CpAzure, 12, 2, 2));
+        let s = &codec.scheme;
+        let mut rng = Prng::new(0xA119);
+        let erased = vec![0usize, s.local_parity(0)];
+        let program = RepairProgram::for_pattern(s, &erased).unwrap();
+        let mut plain = ScratchBuffers::new();
+        let mut aligned = ScratchBuffers::aligned(4096);
+        assert_eq!(aligned.alignment(), 4096);
+        for len in [4096usize, 100, 8192, 3] {
+            let data: Vec<Vec<u8>> = (0..s.k).map(|_| rng.bytes(len)).collect();
+            let stripe = codec.encode_stripe(&data);
+            let blocks = erase(&stripe, &erased);
+            let want = program.execute(&mut SliceSource::new(&blocks), &mut plain).unwrap();
+            for (i, &e) in erased.iter().enumerate() {
+                assert_eq!(want[i], &stripe[e][..], "len={len}");
+            }
+            let got = program.execute(&mut SliceSource::new(&blocks), &mut aligned).unwrap();
+            for (i, &e) in erased.iter().enumerate() {
+                assert_eq!(got[i], &stripe[e][..], "aligned len={len}");
+                #[cfg(not(miri))]
+                assert_eq!(
+                    got[i].as_ptr() as usize % 4096,
+                    0,
+                    "output window {i} not 4096-aligned (len={len})"
+                );
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,419 @@
+//! Real-I/O data plane: a file-backed datanode store behind pluggable
+//! I/O backends.
+//!
+//! Everything below the [`crate::repair::BlockSource`] seam was
+//! in-memory until this module — only the netsim's virtual clock
+//! "streamed", so the paper's repair-time wins (§VI, up to 41%
+//! single-node on the Alibaba Cloud setup) had no measured wall-clock
+//! counterpart. This module adds the missing bottom layer:
+//!
+//! * [`FileStore`] — one file per block under a node-local directory
+//!   plus a `MANIFEST` mapping `(stripe, block) → file/offset/len`.
+//!   Both block files and the manifest are written crash-safely
+//!   (tmp + rename), and every read is validated against the manifest
+//!   length so torn writes surface as typed
+//!   [`crate::repair::RepairError::TruncatedBlock`] errors instead of
+//!   silently feeding short bytes to the decoder.
+//! * [`IoBackend`] (see [`backend`]) — a pluggable range-read engine
+//!   with two std-only implementations: a sync pread-per-range
+//!   baseline and a thread-pool prefetch path that keeps range reads
+//!   in flight ahead of decode. Completed ranges convert directly into
+//!   [`crate::repair::BlockChunk`]s, so a backend drives
+//!   [`crate::repair::RepairProgram::execute_chunk_pipelined`] and
+//!   decode overlaps the reads of the *same* block.
+//!
+//! The dependency audit stays `root ⊆ {anyhow}`: no io_uring, no mmap
+//! crates — the backend seam is exactly where a richer engine would
+//! plug in later without touching the executor.
+
+pub mod backend;
+
+pub use backend::{
+    make_backend, plan_requests, BackendChunkStream, CompletedRead, IoBackend, IoBackendKind,
+    ReadRequest, SyncPreadBackend, ThreadPoolBackend,
+};
+
+use crate::cluster::metadata::BlockKey;
+use crate::repair::RepairError;
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// Where a block's bytes live on real storage: resolved from the
+/// manifest, consumed by [`IoBackend`] range reads. `offset`/`len`
+/// delimit the block *within* `path` (one file per block today, so
+/// `offset` is 0 — the manifest format keeps the field so a future
+/// segment-packed layout is a store-side change only).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BlockLocation {
+    pub path: PathBuf,
+    pub offset: u64,
+    pub len: u64,
+}
+
+/// One manifest row: block file (relative to the store root) + extent.
+#[derive(Clone, Debug, PartialEq, Eq)]
+struct ManifestEntry {
+    file: String,
+    offset: u64,
+    len: u64,
+}
+
+/// File-backed datanode store: one file per block, a crash-safe
+/// `MANIFEST`, typed I/O errors. See the module docs.
+pub struct FileStore {
+    root: PathBuf,
+    manifest: BTreeMap<BlockKey, ManifestEntry>,
+}
+
+const MANIFEST_NAME: &str = "MANIFEST";
+const MANIFEST_MAGIC: &str = "cp-lrc-store v1";
+
+impl FileStore {
+    /// Open (creating if absent) the store rooted at `root`. A missing
+    /// directory or manifest means a fresh, empty store.
+    pub fn open(root: impl Into<PathBuf>) -> anyhow::Result<Self> {
+        let root = root.into();
+        std::fs::create_dir_all(&root)?;
+        let manifest = match Self::read_manifest(&root) {
+            Ok(m) => m,
+            Err(e) if e.downcast_ref::<RepairError>().is_some() => BTreeMap::new(),
+            Err(e) => return Err(e),
+        };
+        Ok(Self { root, manifest })
+    }
+
+    /// Open an *existing* store: the manifest must be present. This is
+    /// the recovery-path entry point — repairing from a store whose
+    /// manifest is gone must fail loudly
+    /// ([`RepairError::MissingManifest`]), not resurface as an empty
+    /// store that reports every block missing.
+    pub fn load(root: impl Into<PathBuf>) -> anyhow::Result<Self> {
+        let root = root.into();
+        let manifest = Self::read_manifest(&root)?;
+        Ok(Self { root, manifest })
+    }
+
+    fn read_manifest(root: &Path) -> anyhow::Result<BTreeMap<BlockKey, ManifestEntry>> {
+        let path = root.join(MANIFEST_NAME);
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return Err(anyhow::Error::new(RepairError::MissingManifest {
+                    path: path.display().to_string(),
+                }));
+            }
+            Err(e) => return Err(e.into()),
+        };
+        let mut lines = text.lines();
+        anyhow::ensure!(
+            lines.next() == Some(MANIFEST_MAGIC),
+            "unrecognized manifest header in {}",
+            path.display()
+        );
+        let mut manifest = BTreeMap::new();
+        for line in lines {
+            if line.is_empty() {
+                continue;
+            }
+            let mut f = line.split_whitespace();
+            let (Some(s), Some(b), Some(file), Some(off), Some(len)) =
+                (f.next(), f.next(), f.next(), f.next(), f.next())
+            else {
+                anyhow::bail!("malformed manifest line {line:?} in {}", path.display());
+            };
+            let key = BlockKey {
+                stripe: u64::from_str_radix(s, 16)
+                    .map_err(|_| anyhow::anyhow!("bad stripe id in manifest line {line:?}"))?,
+                index: u32::from_str_radix(b, 16)
+                    .map_err(|_| anyhow::anyhow!("bad block index in manifest line {line:?}"))?,
+            };
+            manifest.insert(
+                key,
+                ManifestEntry { file: file.to_string(), offset: off.parse()?, len: len.parse()? },
+            );
+        }
+        Ok(manifest)
+    }
+
+    /// Rewrite the manifest crash-safely: full tmp write + rename, so a
+    /// crash leaves either the old or the new manifest, never a torn
+    /// one. O(blocks) per put is fine at datanode block counts; an
+    /// append-only log with compaction is a store-side upgrade.
+    fn write_manifest(&self) -> std::io::Result<()> {
+        let tmp = self.root.join(".tmp-MANIFEST");
+        {
+            let mut f = std::fs::File::create(&tmp)?;
+            let mut text = String::with_capacity(32 + self.manifest.len() * 48);
+            text.push_str(MANIFEST_MAGIC);
+            text.push('\n');
+            for (k, e) in &self.manifest {
+                text.push_str(&format!(
+                    "{:016x} {:08x} {} {} {}\n",
+                    k.stripe, k.index, e.file, e.offset, e.len
+                ));
+            }
+            f.write_all(text.as_bytes())?;
+            f.sync_all()?;
+        }
+        std::fs::rename(&tmp, self.root.join(MANIFEST_NAME))
+    }
+
+    fn block_file(key: BlockKey) -> String {
+        format!("{:016x}_{:08x}.blk", key.stripe, key.index)
+    }
+
+    /// Resolve a block to its on-disk extent (the [`IoBackend`] input).
+    pub fn locate(&self, key: BlockKey) -> Option<BlockLocation> {
+        self.manifest.get(&key).map(|e| BlockLocation {
+            path: self.root.join(&e.file),
+            offset: e.offset,
+            len: e.len,
+        })
+    }
+
+    /// The store's root directory.
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Read a block's full contents, validating length against the
+    /// manifest: a shorter file is a torn write and surfaces as
+    /// [`RepairError::TruncatedBlock`].
+    pub fn read_block(&self, key: BlockKey) -> anyhow::Result<Option<Vec<u8>>> {
+        let Some(loc) = self.locate(key) else { return Ok(None) };
+        let data = read_extent(&loc.path, loc.offset, loc.len).map_err(|e| {
+            truncation_or_io(e, key, loc.len, &loc.path)
+        })?;
+        Ok(Some(data))
+    }
+
+    fn put_block(&mut self, key: BlockKey, data: &[u8]) -> std::io::Result<()> {
+        let file = Self::block_file(key);
+        let tmp = self.root.join(format!(".tmp-{file}"));
+        std::fs::write(&tmp, data)?;
+        std::fs::rename(&tmp, self.root.join(&file))?;
+        self.manifest
+            .insert(key, ManifestEntry { file, offset: 0, len: data.len() as u64 });
+        self.write_manifest()
+    }
+}
+
+/// Lower an `anyhow` store error onto the [`BlockStore`]'s `io::Result`
+/// seam without losing the type: a [`RepairError`] rides as the
+/// `io::Error`'s inner error, so callers that lift the result back into
+/// `anyhow` can still find it with `err.chain()` + `downcast_ref`.
+fn to_io(e: anyhow::Error) -> std::io::Error {
+    match e.downcast::<RepairError>() {
+        Ok(re) => std::io::Error::other(re),
+        Err(e) => std::io::Error::other(format!("{e:#}")),
+    }
+}
+
+/// Map a read failure to a typed truncation error when the file was
+/// simply shorter than the manifest promised, else pass the I/O error
+/// through with context.
+fn truncation_or_io(
+    e: std::io::Error,
+    key: BlockKey,
+    expected: u64,
+    path: &Path,
+) -> anyhow::Error {
+    if e.kind() == std::io::ErrorKind::UnexpectedEof {
+        let actual = std::fs::metadata(path).map(|m| m.len()).unwrap_or(0);
+        anyhow::Error::new(RepairError::TruncatedBlock {
+            stripe: key.stripe,
+            block: key.index as usize,
+            expected,
+            actual,
+        })
+    } else if e.kind() == std::io::ErrorKind::NotFound {
+        anyhow::Error::new(RepairError::MissingBlock { stripe: key.stripe, block: key.index as usize })
+    } else {
+        anyhow::Error::new(e).context(format!("reading block file {}", path.display()))
+    }
+}
+
+/// Read exactly `[offset, offset+len)` of `path` (positioned read; no
+/// shared-cursor races, so backends can hit one file concurrently).
+pub(crate) fn read_extent(path: &Path, offset: u64, len: u64) -> std::io::Result<Vec<u8>> {
+    let f = std::fs::File::open(path)?;
+    let mut buf = vec![0u8; len as usize];
+    read_exact_at(&f, &mut buf, offset)?;
+    Ok(buf)
+}
+
+#[cfg(unix)]
+pub(crate) fn read_exact_at(
+    f: &std::fs::File,
+    buf: &mut [u8],
+    offset: u64,
+) -> std::io::Result<()> {
+    std::os::unix::fs::FileExt::read_exact_at(f, buf, offset)
+}
+
+#[cfg(not(unix))]
+pub(crate) fn read_exact_at(
+    mut f: &std::fs::File,
+    buf: &mut [u8],
+    offset: u64,
+) -> std::io::Result<()> {
+    use std::io::{Read, Seek, SeekFrom};
+    f.seek(SeekFrom::Start(offset))?;
+    f.read_exact(buf)
+}
+
+impl crate::cluster::store::BlockStore for FileStore {
+    fn put(&mut self, key: BlockKey, data: Vec<u8>) -> std::io::Result<()> {
+        self.put_block(key, &data)
+    }
+
+    fn get(&self, key: BlockKey) -> std::io::Result<Option<Vec<u8>>> {
+        self.read_block(key).map_err(to_io)
+    }
+
+    fn get_segment(
+        &self,
+        key: BlockKey,
+        off: usize,
+        len: usize,
+    ) -> std::io::Result<Option<Vec<u8>>> {
+        let Some(loc) = self.locate(key) else { return Ok(None) };
+        if (off + len) as u64 > loc.len {
+            return Ok(None);
+        }
+        read_extent(&loc.path, loc.offset + off as u64, len as u64)
+            .map(Some)
+            .map_err(|e| to_io(truncation_or_io(e, key, loc.len, &loc.path)))
+    }
+
+    fn delete(&mut self, key: BlockKey) -> std::io::Result<()> {
+        if let Some(e) = self.manifest.remove(&key) {
+            let _ = std::fs::remove_file(self.root.join(&e.file));
+            self.write_manifest()?;
+        }
+        Ok(())
+    }
+
+    fn len(&self) -> usize {
+        self.manifest.len()
+    }
+
+    fn locate(&self, key: BlockKey) -> Option<BlockLocation> {
+        FileStore::locate(self, key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::store::BlockStore;
+    use crate::prng::Prng;
+
+    fn tmp_root(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("cp-lrc-filestore-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn key(stripe: u64, i: u32) -> BlockKey {
+        BlockKey { stripe, index: i }
+    }
+
+    #[test]
+    fn file_store_put_get_delete_roundtrip() {
+        let root = tmp_root("roundtrip");
+        let mut s = FileStore::open(&root).unwrap();
+        let mut rng = Prng::new(0xF11E);
+        let data = rng.bytes(5000);
+        s.put(key(7, 0), data.clone()).unwrap();
+        assert_eq!(s.get(key(7, 0)).unwrap().unwrap(), data);
+        assert_eq!(s.get(key(7, 1)).unwrap(), None);
+        assert_eq!(s.get_segment(key(7, 0), 100, 50).unwrap().unwrap(), &data[100..150]);
+        assert_eq!(s.get_segment(key(7, 0), 4990, 50).unwrap(), None);
+        assert_eq!(s.len(), 1);
+        let loc = FileStore::locate(&s, key(7, 0)).unwrap();
+        assert_eq!(loc.len, 5000);
+        assert_eq!(loc.offset, 0);
+        assert!(loc.path.exists());
+        s.delete(key(7, 0)).unwrap();
+        assert_eq!(s.len(), 0);
+        assert_eq!(s.get(key(7, 0)).unwrap(), None);
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn file_store_manifest_survives_reopen() {
+        let root = tmp_root("reopen");
+        let mut rng = Prng::new(0xF12);
+        let data = rng.bytes(1234);
+        {
+            let mut s = FileStore::open(&root).unwrap();
+            s.put(key(1, 9), data.clone()).unwrap();
+            s.put(key(2, 3), rng.bytes(0)).unwrap(); // zero-length block
+        }
+        let s = FileStore::load(&root).unwrap();
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.get(key(1, 9)).unwrap().unwrap(), data);
+        assert_eq!(s.get(key(2, 3)).unwrap().unwrap(), Vec::<u8>::new());
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn load_without_manifest_is_a_typed_error() {
+        let root = tmp_root("nomanifest");
+        std::fs::create_dir_all(&root).unwrap();
+        let err = FileStore::load(&root).unwrap_err();
+        match err.downcast_ref::<RepairError>() {
+            Some(RepairError::MissingManifest { path }) => {
+                assert!(path.contains("MANIFEST"), "path was {path}")
+            }
+            other => panic!("expected MissingManifest, got {other:?} ({err})"),
+        }
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn truncated_block_file_is_a_typed_error() {
+        let root = tmp_root("trunc");
+        let mut s = FileStore::open(&root).unwrap();
+        let mut rng = Prng::new(0x7A);
+        s.put(key(5, 2), rng.bytes(4096)).unwrap();
+        // External truncation behind the manifest's back (torn write).
+        let loc = FileStore::locate(&s, key(5, 2)).unwrap();
+        let f = std::fs::OpenOptions::new().write(true).open(&loc.path).unwrap();
+        f.set_len(100).unwrap();
+        drop(f);
+        let err = s.read_block(key(5, 2)).unwrap_err();
+        match err.downcast_ref::<RepairError>() {
+            Some(&RepairError::TruncatedBlock { stripe, block, expected, actual }) => {
+                assert_eq!((stripe, block, expected, actual), (5, 2, 4096, 100));
+            }
+            other => panic!("expected TruncatedBlock, got {other:?} ({err})"),
+        }
+        // ... and the deleted-file case maps to MissingBlock.
+        std::fs::remove_file(&loc.path).unwrap();
+        let err = s.read_block(key(5, 2)).unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<RepairError>(),
+            Some(&RepairError::MissingBlock { stripe: 5, block: 2 })
+        ));
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn manifest_rejects_garbage() {
+        let root = tmp_root("garbage");
+        std::fs::create_dir_all(&root).unwrap();
+        std::fs::write(root.join(MANIFEST_NAME), "not a manifest\n").unwrap();
+        assert!(FileStore::load(&root).is_err());
+        std::fs::write(
+            root.join(MANIFEST_NAME),
+            format!("{MANIFEST_MAGIC}\n0001 zz file 0 10\n"),
+        )
+        .unwrap();
+        assert!(FileStore::load(&root).is_err());
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+}
