@@ -1,0 +1,159 @@
+//! Chaos-plane benchmarks: what resilience costs, and what hedging
+//! buys back, on the virtual repair clock. Recorded in
+//! `BENCH_chaos.json` at the workspace root.
+//!
+//! A whole-node repair session runs under a [`FaultPlan`] that turns
+//! one fetched survivor's node into a straggler; the session's
+//! `degraded_completion_s` is the chaos timeline's answer (per-fetch
+//! retry/backoff, hedged re-reads, re-planning all included). Two
+//! sweeps:
+//!
+//! * **straggler_sweep** — slowdown × {no hedge, hedge 1.5}: how the
+//!   degraded completion clock grows with the straggler, and how much
+//!   of that growth a hedged re-read claws back.
+//! * **hedge_sweep** — fixed slowdown 8×, hedge threshold swept: too
+//!   eager burns duplicate reads for nothing, too lazy waits out the
+//!   straggler; the knee is the operating point.
+//!
+//! Wall-clock stats per point measure the *cost of the chaos plane
+//! itself* (planning, injection bookkeeping, the private timeline), not
+//! disk time — the data plane here is the in-memory store.
+
+use cp_lrc::bench_harness::{Bench, Stats};
+use cp_lrc::chaos::FaultPlan;
+use cp_lrc::cluster::{Cluster, ClusterConfig};
+use cp_lrc::codes::SchemeKind;
+use cp_lrc::repair::RepairProgram;
+
+const BLOCK_BYTES: usize = 1 << 20;
+const STRIPES: usize = 4;
+
+fn cluster() -> Cluster {
+    let mut c = Cluster::new(ClusterConfig {
+        num_datanodes: 12,
+        gbps: 1.0,
+        latency_s: 0.001,
+        block_size: BLOCK_BYTES,
+        kind: SchemeKind::CpAzure,
+        k: 6,
+        r: 2,
+        p: 2,
+        ..Default::default()
+    });
+    c.fill_random_stripes(STRIPES, 0xC4A0);
+    c
+}
+
+/// One whole-node chaos repair: fail the node behind the lowest
+/// stripe's block 0, straggle the node of a fetched survivor, repair,
+/// restore. Returns (degraded_completion_s, hedges fired).
+fn chaos_session(c: &mut Cluster, slowdown: f64, hedge_threshold: f64) -> (f64, u64) {
+    let sid = *c.meta.stripes.keys().min().expect("stripes filled");
+    let victim = c.meta.stripes[&sid].block_nodes[0];
+    c.fail_node(victim);
+    let program = RepairProgram::for_pattern(c.scheme(), &[0]).expect("single erasure plans");
+    let slow = *program.fetch().iter().next().expect("non-empty fetch set");
+    let slow_node = c.meta.stripes[&sid].block_nodes[slow];
+    let mut plan = FaultPlan::new(0xBE).straggler(slow_node, slowdown);
+    if hedge_threshold > 0.0 {
+        plan = plan.with_hedge(hedge_threshold);
+    }
+    let s = c.repair().threads(2).chaos(plan).run().expect("chaos session");
+    c.restore_node(victim);
+    let cz = s.chaos.expect("chaos sessions report");
+    (cz.degraded_completion_s, cz.hedges)
+}
+
+fn json_stats(s: &Stats) -> String {
+    format!(
+        "{{\"mean_ns\": {:.1}, \"median_ns\": {:.1}, \"min_ns\": {:.1}, \"p95_ns\": {:.1}, \"iters\": {}}}",
+        s.mean_ns, s.median_ns, s.min_ns, s.p95_ns, s.iters
+    )
+}
+
+fn entry(
+    label: &str,
+    slowdown: f64,
+    hedge_threshold: f64,
+    degraded_s: f64,
+    hedges: u64,
+    wall: &Stats,
+) -> String {
+    format!(
+        "      {{\"label\": \"{label}\", \"slowdown\": {slowdown}, \
+         \"hedge_threshold\": {hedge_threshold}, \"block_bytes\": {BLOCK_BYTES}, \
+         \"stripes\": {STRIPES}, \"degraded_completion_s\": {degraded_s:.6}, \
+         \"hedges\": {hedges}, \"session_wallclock\": {}}}",
+        json_stats(wall)
+    )
+}
+
+fn main() {
+    let b = Bench::default();
+
+    let mut straggler_results: Vec<String> = Vec::new();
+    {
+        let mut c = cluster();
+        for slowdown in [1.0, 2.0, 4.0, 8.0, 16.0] {
+            for (tag, hedge) in [("no-hedge", 0.0), ("hedge-1.5", 1.5)] {
+                let mut last = (0.0, 0u64);
+                let wall = b.run(&format!("chaos/straggler/{slowdown}x/{tag}"), || {
+                    last = chaos_session(&mut c, slowdown, hedge);
+                });
+                if let Some(wall) = wall {
+                    straggler_results.push(entry(
+                        &format!("straggler-{slowdown}x-{tag}"),
+                        slowdown,
+                        hedge,
+                        last.0,
+                        last.1,
+                        &wall,
+                    ));
+                }
+            }
+        }
+    }
+
+    let mut hedge_results: Vec<String> = Vec::new();
+    {
+        let mut c = cluster();
+        let slowdown = 8.0;
+        for threshold in [1.1, 1.25, 1.5, 2.0, 3.0] {
+            let mut last = (0.0, 0u64);
+            let wall = b.run(&format!("chaos/hedge/t{threshold}"), || {
+                last = chaos_session(&mut c, slowdown, threshold);
+            });
+            if let Some(wall) = wall {
+                hedge_results.push(entry(
+                    &format!("hedge-threshold-{threshold}"),
+                    slowdown,
+                    threshold,
+                    last.0,
+                    last.1,
+                    &wall,
+                ));
+            }
+        }
+    }
+
+    if straggler_results.is_empty() && hedge_results.is_empty() {
+        return;
+    }
+    let doc = format!(
+        "{{\n  \"bench\": \"chaos\",\n  \
+         \"description\": \"chaos-plane repair sessions on the virtual clock: degraded \
+         completion time vs straggler slowdown (with and without hedged re-reads) and vs \
+         hedge threshold at a fixed 8x straggler; wall-clock stats measure the chaos plane's \
+         own overhead\",\n  \
+         \"unit\": \"s (virtual degraded clock) / ns (wall-clock stats)\",\n  \
+         \"regenerate\": \"cargo bench --bench chaos\",\n  \
+         \"sections\": {{\n    \"straggler_sweep\": [\n{}\n    ],\n    \
+         \"hedge_sweep\": [\n{}\n    ]\n  }}\n}}\n",
+        straggler_results.join(",\n"),
+        hedge_results.join(",\n")
+    );
+    match std::fs::write("BENCH_chaos.json", &doc) {
+        Ok(()) => println!("wrote BENCH_chaos.json"),
+        Err(e) => eprintln!("could not write BENCH_chaos.json: {e}"),
+    }
+}

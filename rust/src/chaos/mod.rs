@@ -1,0 +1,600 @@
+//! Fault-injection plane: deterministic, seeded chaos for the repair
+//! pipeline, injected at the three seams the data path already has —
+//! no production code changes shape to host a fault.
+//!
+//! * **Block fetches** ([`crate::repair::BlockSource`]): the
+//!   [`FaultyBlockSource`] wrapper fails a fetch transiently
+//!   ([`FetchFault::Transient`]), permanently ([`FetchFault::Lost`]),
+//!   corrupts the returned bytes ([`FetchFault::Corrupt`]) or truncates
+//!   them ([`FetchFault::Short`]).
+//! * **Real I/O** ([`crate::store::IoBackend`]): [`FaultyBackend`]
+//!   fails, truncates or stalls individual [`ReadRequest`] completions
+//!   before the chunk-granular executor sees them.
+//! * **The virtual network** ([`crate::netsim::SessionSim`]): a chaos
+//!   session slows a node's flows by a straggler factor
+//!   ([`FaultPlan::straggler`]) and kills a node at a virtual instant
+//!   ([`FaultPlan::kill_at`]) using the simulator's `timer`/`cancel`
+//!   primitives.
+//!
+//! A [`FaultPlan`] bundles the injections with the shared
+//! [`RetryPolicy`] and a hedge threshold; [`ChaosReport`] is what a
+//! chaos session hands back — retries, hedges, re-plans, detected
+//! corruptions and the degraded completion clock. The session itself
+//! lives in [`crate::cluster::traffic`] (`RepairSession::chaos`); the
+//! determinism contract and the injectable-seam catalog are documented
+//! in `EXPERIMENTS.md` §Fault-injection.
+//!
+//! Everything here is std-only and deterministic: corruption positions
+//! come from the repo's own [`Prng`] seeded by
+//! [`FaultPlan::seed`] `^` the block index, never from ambient
+//! randomness.
+
+pub mod retry;
+
+pub use retry::RetryPolicy;
+
+use crate::prng::Prng;
+use crate::repair::BlockSource;
+use crate::store::{CompletedRead, IoBackend, ReadRequest};
+use std::collections::BTreeMap;
+
+/// What happens to one block's fetch on the virtual repair path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FetchFault {
+    /// The first `fails` attempts error; the next succeeds (if the
+    /// retry budget reaches it).
+    Transient { fails: u32 },
+    /// The bytes arrive with one bit-flipped byte — only checksum
+    /// verification can tell.
+    Corrupt,
+    /// The bytes arrive truncated to half the block.
+    Short,
+    /// Every attempt errors — the block is gone.
+    Lost,
+}
+
+/// What happens to one block's completions inside an I/O backend.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IoFault {
+    /// The block's first completion surfaces as a read error.
+    FailRead,
+    /// The block's backing bytes end at absolute offset `at`: chunks
+    /// beyond it vanish, the chunk straddling it arrives short.
+    Truncate { at: usize },
+    /// Every completion of the block is delayed by a real sleep — a
+    /// slow device, not an error.
+    Stall { delay_ms: u64 },
+}
+
+/// A deterministic, declarative chaos scenario: which fetches fail and
+/// how, which nodes straggle or die on the virtual timeline, and the
+/// retry/hedge policy the session counters with. Build it fluently:
+///
+/// ```
+/// use cp_lrc::chaos::FaultPlan;
+/// let plan = FaultPlan::new(0xC4A05)
+///     .corrupt_fetch(0, 3)     // stripe 0, block 3 arrives corrupted
+///     .straggler(5, 4.0)       // node 5 serves at 1/4 rate
+///     .kill_at(7, 0.010)       // node 7 dies 10 ms into the session
+///     .with_hedge(2.0);        // hedge straggled fetches at 2× expected
+/// assert!(!plan.is_empty());
+/// ```
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    /// Seed of every derived corruption position.
+    pub seed: u64,
+    /// Per-`(stripe, block)` fetch faults.
+    pub fetch: BTreeMap<(u64, usize), FetchFault>,
+    /// Per-block I/O-backend faults (block index within the stripe).
+    pub io: BTreeMap<usize, IoFault>,
+    /// Per-node straggler slowdown (≥ 1; flows of this node move at
+    /// `1/slowdown` of their fair rate).
+    pub stragglers: BTreeMap<usize, f64>,
+    /// Per-node death instants on the session's virtual clock, seconds.
+    pub deaths: BTreeMap<usize, f64>,
+    /// Retry budget and backoff schedule applied to transient faults.
+    pub retry: RetryPolicy,
+    /// Hedge (speculative re-read) threshold as a multiple of a fetch's
+    /// expected isolated time; `<= 0` disables hedging.
+    pub hedge_threshold: f64,
+}
+
+impl FaultPlan {
+    pub fn new(seed: u64) -> Self {
+        Self { seed, hedge_threshold: 0.0, ..Self::default() }
+    }
+
+    /// No injections at all? (Policy knobs alone inject nothing, so a
+    /// plan that only tunes retry/hedge is still empty.)
+    pub fn is_empty(&self) -> bool {
+        self.fetch.is_empty()
+            && self.io.is_empty()
+            && self.stragglers.is_empty()
+            && self.deaths.is_empty()
+    }
+
+    /// Fail the first `fails` fetch attempts of `(stripe, block)`.
+    pub fn fail_fetch(mut self, stripe: u64, block: usize, fails: u32) -> Self {
+        self.fetch.insert((stripe, block), FetchFault::Transient { fails });
+        self
+    }
+
+    /// Deliver `(stripe, block)` with one corrupted byte.
+    pub fn corrupt_fetch(mut self, stripe: u64, block: usize) -> Self {
+        self.fetch.insert((stripe, block), FetchFault::Corrupt);
+        self
+    }
+
+    /// Deliver `(stripe, block)` truncated to half its length.
+    pub fn short_fetch(mut self, stripe: u64, block: usize) -> Self {
+        self.fetch.insert((stripe, block), FetchFault::Short);
+        self
+    }
+
+    /// Make every fetch of `(stripe, block)` fail.
+    pub fn lose_block(mut self, stripe: u64, block: usize) -> Self {
+        self.fetch.insert((stripe, block), FetchFault::Lost);
+        self
+    }
+
+    /// Inject an I/O-backend fault for `block`.
+    pub fn io_fault(mut self, block: usize, fault: IoFault) -> Self {
+        self.io.insert(block, fault);
+        self
+    }
+
+    /// Slow `node`'s flows by `slowdown` (clamped to ≥ 1).
+    pub fn straggler(mut self, node: usize, slowdown: f64) -> Self {
+        self.stragglers.insert(node, slowdown.max(1.0));
+        self
+    }
+
+    /// Kill `node` at virtual time `at_s`: its in-flight flows are
+    /// cancelled on the timeline and every fetch from it is lost.
+    pub fn kill_at(mut self, node: usize, at_s: f64) -> Self {
+        self.deaths.insert(node, at_s.max(0.0));
+        self
+    }
+
+    pub fn with_retry(mut self, retry: RetryPolicy) -> Self {
+        self.retry = retry;
+        self
+    }
+
+    /// Hedge a straggled fetch once it exceeds `threshold ×` its
+    /// expected isolated time.
+    pub fn with_hedge(mut self, threshold: f64) -> Self {
+        self.hedge_threshold = threshold;
+        self
+    }
+
+    /// The fetch faults of one stripe, keyed by block index.
+    pub fn stripe_faults(&self, stripe: u64) -> BTreeMap<usize, FetchFault> {
+        self.fetch
+            .range((stripe, 0)..=(stripe, usize::MAX))
+            .map(|(&(_, b), &f)| (b, f))
+            .collect()
+    }
+}
+
+/// What a chaos session experienced: each counter is nonzero exactly
+/// when the corresponding fault class was injected (pinned by the
+/// `chaos_matrix` integration test), and all of them are zero on an
+/// empty [`FaultPlan`].
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ChaosReport {
+    /// Failed fetch attempts that were retried (bounded by
+    /// [`RetryPolicy::max_attempts`]).
+    pub retries: u64,
+    /// Speculative re-reads issued for straggled fetches.
+    pub hedges: u64,
+    /// Mid-session recompiles down the local → cascaded → global
+    /// ladder after a survivor was lost, corrupted or truncated.
+    pub replans: u64,
+    /// Blocks whose bytes arrived but failed checksum verification.
+    pub corruptions_detected: u64,
+    /// Virtual completion of the session on the chaos timeline —
+    /// retries, stragglers, hedges and re-plan rounds included.
+    pub degraded_completion_s: f64,
+}
+
+/// Deterministically flip one byte of `data` (no-op on empty blocks):
+/// the canonical [`FetchFault::Corrupt`] payload, shared by the
+/// wrapper and the cluster's chaos session so a test can reproduce the
+/// exact corrupted image from `(seed, block)`.
+pub fn corrupt_in_place(seed: u64, block: usize, data: &mut [u8]) {
+    if data.is_empty() {
+        return;
+    }
+    let pos = Prng::new(seed ^ block as u64).below(data.len());
+    data[pos] ^= 0x5A;
+}
+
+/// Zero-cost-when-absent fault wrapper over any [`BlockSource`]: the
+/// production path never constructs one, so the unwrapped source is
+/// untouched; a chaos run wraps its source and gets per-block fetch
+/// faults keyed by block index.
+///
+/// Transient faults consume one failed attempt per `blocks()` call that
+/// touches the block; corrupt/short blocks are materialised once into
+/// owned mangled copies and served from them thereafter.
+pub struct FaultyBlockSource<S> {
+    inner: S,
+    faults: BTreeMap<usize, FetchFault>,
+    seed: u64,
+    /// Failed attempts consumed per transiently-failing block.
+    attempts: BTreeMap<usize, u32>,
+    /// Owned mangled copies of corrupt/short blocks.
+    owned: BTreeMap<usize, Vec<u8>>,
+    /// Total injected failures (for tests and counters).
+    injected: u64,
+}
+
+impl<S: BlockSource> FaultyBlockSource<S> {
+    pub fn new(inner: S, faults: BTreeMap<usize, FetchFault>, seed: u64) -> Self {
+        Self { inner, faults, seed, attempts: BTreeMap::new(), owned: BTreeMap::new(), injected: 0 }
+    }
+
+    /// Wrap with the fetch faults [`FaultPlan`] holds for `stripe`.
+    pub fn for_stripe(inner: S, plan: &FaultPlan, stripe: u64) -> Self {
+        Self::new(inner, plan.stripe_faults(stripe), plan.seed)
+    }
+
+    /// How many failures this wrapper has injected so far.
+    pub fn injected_failures(&self) -> u64 {
+        self.injected
+    }
+
+    pub fn into_inner(self) -> S {
+        self.inner
+    }
+}
+
+impl<S: BlockSource> BlockSource for FaultyBlockSource<S> {
+    fn blocks(&mut self, idx: &[usize]) -> anyhow::Result<Vec<&[u8]>> {
+        // Gate: hard failures first, so a faulted call does no work.
+        for &b in idx {
+            match self.faults.get(&b) {
+                Some(FetchFault::Lost) => {
+                    self.injected += 1;
+                    anyhow::bail!("injected loss of block {b}");
+                }
+                Some(FetchFault::Transient { fails }) => {
+                    let seen = self.attempts.entry(b).or_insert(0);
+                    if *seen < *fails {
+                        *seen += 1;
+                        self.injected += 1;
+                        anyhow::bail!(
+                            "injected transient fetch failure for block {b} (attempt {seen})"
+                        );
+                    }
+                }
+                _ => {}
+            }
+        }
+        // Materialise mangled copies for corrupt/short blocks.
+        for &b in idx {
+            match self.faults.get(&b) {
+                Some(FetchFault::Corrupt) if !self.owned.contains_key(&b) => {
+                    let mut data = self.inner.blocks(&[b])?[0].to_vec();
+                    corrupt_in_place(self.seed, b, &mut data);
+                    self.injected += 1;
+                    self.owned.insert(b, data);
+                }
+                Some(FetchFault::Short) if !self.owned.contains_key(&b) => {
+                    let data = self.inner.blocks(&[b])?[0].to_vec();
+                    let half = data.len() / 2;
+                    self.injected += 1;
+                    self.owned.insert(b, data[..half].to_vec());
+                }
+                _ => {}
+            }
+        }
+        // Serve: clean blocks straight from the inner source, mangled
+        // ones from the owned copies, back in request order.
+        let clean: Vec<usize> =
+            idx.iter().copied().filter(|b| !self.owned.contains_key(b)).collect();
+        let inner_refs = self.inner.blocks(&clean)?;
+        let mut clean_iter = inner_refs.into_iter();
+        idx.iter()
+            .map(|b| match self.owned.get(b) {
+                Some(d) => Ok(d.as_slice()),
+                None => clean_iter
+                    .next()
+                    .ok_or_else(|| anyhow::anyhow!("inner source under-delivered block {b}")),
+            })
+            .collect()
+    }
+}
+
+/// Fault wrapper over a real [`IoBackend`]: intercepts completions on
+/// their way to the chunk-granular executor. Like
+/// [`FaultyBlockSource`], production code never constructs one — the
+/// unwrapped backend path is byte-for-byte what it was.
+pub struct FaultyBackend {
+    inner: Box<dyn IoBackend>,
+    faults: BTreeMap<usize, IoFault>,
+    injected: u64,
+}
+
+impl FaultyBackend {
+    pub fn new(inner: Box<dyn IoBackend>, faults: BTreeMap<usize, IoFault>) -> Self {
+        Self { inner, faults, injected: 0 }
+    }
+
+    pub fn injected_failures(&self) -> u64 {
+        self.injected
+    }
+}
+
+impl IoBackend for FaultyBackend {
+    fn submit(&mut self, requests: Vec<ReadRequest>) -> anyhow::Result<()> {
+        self.inner.submit(requests)
+    }
+
+    fn next(&mut self) -> anyhow::Result<Option<CompletedRead>> {
+        loop {
+            let Some(mut c) = self.inner.next()? else { return Ok(None) };
+            match self.faults.get(&c.block) {
+                Some(IoFault::FailRead) => {
+                    self.injected += 1;
+                    anyhow::bail!("injected I/O read failure on block {}", c.block);
+                }
+                Some(IoFault::Truncate { at }) => {
+                    if c.offset >= *at {
+                        // chunk entirely past the torn end: vanishes
+                        self.injected += 1;
+                        continue;
+                    }
+                    if c.offset + c.data.len() > *at {
+                        self.injected += 1;
+                        c.data.truncate(at - c.offset);
+                    }
+                    return Ok(Some(c));
+                }
+                Some(IoFault::Stall { delay_ms }) => {
+                    std::thread::sleep(std::time::Duration::from_millis(*delay_ms));
+                    return Ok(Some(c));
+                }
+                None => return Ok(Some(c)),
+            }
+        }
+    }
+
+    fn bytes_read(&self) -> u64 {
+        self.inner.bytes_read()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codec::StripeCodec;
+    use crate::codes::{Scheme, SchemeKind};
+    use crate::prng::Prng;
+    use crate::repair::{RepairProgram, ScratchBuffers, SliceSource};
+    use crate::store::{crc32, BackendChunkStream, BlockLocation};
+    use std::collections::VecDeque;
+
+    fn sample_stripe(block_bytes: usize) -> (StripeCodec, Vec<Vec<u8>>) {
+        let codec = StripeCodec::new(Scheme::new(SchemeKind::AzureLrc, 6, 2, 2));
+        let mut rng = Prng::new(0xC4A05);
+        let data: Vec<Vec<u8>> = (0..codec.scheme.k).map(|_| rng.bytes(block_bytes)).collect();
+        let stripe = codec.encode_stripe(&data);
+        (codec, stripe)
+    }
+
+    fn erase(stripe: &[Vec<u8>], erased: &[usize]) -> Vec<Option<Vec<u8>>> {
+        let mut blocks: Vec<Option<Vec<u8>>> = stripe.iter().cloned().map(Some).collect();
+        for &e in erased {
+            blocks[e] = None;
+        }
+        blocks
+    }
+
+    #[test]
+    fn plan_builders_scope_and_clamp() {
+        let plan = FaultPlan::new(3)
+            .fail_fetch(0, 1, 2)
+            .lose_block(1, 4)
+            .straggler(2, 0.5)
+            .kill_at(3, -1.0);
+        assert!(!plan.is_empty());
+        assert_eq!(plan.stragglers[&2], 1.0, "slowdown clamps to >= 1");
+        assert_eq!(plan.deaths[&3], 0.0, "death instant clamps to >= 0");
+        let s0 = plan.stripe_faults(0);
+        assert_eq!(s0.len(), 1, "stripe 1's loss must not leak into stripe 0");
+        assert_eq!(s0[&1], FetchFault::Transient { fails: 2 });
+        assert!(plan.stripe_faults(7).is_empty());
+        // Policy knobs alone inject nothing.
+        assert!(FaultPlan::new(9).with_hedge(2.0).with_retry(RetryPolicy::tcp()).is_empty());
+    }
+
+    #[test]
+    fn transient_fault_fails_exactly_n_times_then_delivers() {
+        let (_, stripe) = sample_stripe(256);
+        let blocks = erase(&stripe, &[]);
+        let mut faults = BTreeMap::new();
+        faults.insert(1usize, FetchFault::Transient { fails: 2 });
+        let mut src = FaultyBlockSource::new(SliceSource::new(&blocks), faults, 7);
+        assert!(src.blocks(&[1]).is_err());
+        assert!(src.blocks(&[1]).is_err());
+        let got = src.blocks(&[1]).unwrap();
+        assert_eq!(got[0], &stripe[1][..], "post-retry bytes are pristine");
+        assert_eq!(src.injected_failures(), 2);
+    }
+
+    #[test]
+    fn lost_block_errors_forever_but_clean_blocks_still_serve() {
+        let (_, stripe) = sample_stripe(128);
+        let blocks = erase(&stripe, &[]);
+        let mut faults = BTreeMap::new();
+        faults.insert(2usize, FetchFault::Lost);
+        let mut src = FaultyBlockSource::new(SliceSource::new(&blocks), faults, 7);
+        for _ in 0..4 {
+            assert!(src.blocks(&[2]).is_err());
+            assert!(src.blocks(&[0, 2, 3]).is_err(), "a lost member poisons the whole call");
+        }
+        let got = src.blocks(&[0, 3]).unwrap();
+        assert_eq!(got[0], &stripe[0][..]);
+        assert_eq!(got[1], &stripe[3][..]);
+    }
+
+    #[test]
+    fn corrupt_fetch_is_crc_detectable_and_reproducible() {
+        let (_, stripe) = sample_stripe(512);
+        let blocks = erase(&stripe, &[]);
+        let mut faults = BTreeMap::new();
+        faults.insert(4usize, FetchFault::Corrupt);
+        let seed = 0xBAD5EED;
+        let mut src = FaultyBlockSource::new(SliceSource::new(&blocks), faults, seed);
+        let got = src.blocks(&[4]).unwrap();
+        assert_eq!(got[0].len(), stripe[4].len(), "corruption is silent about length");
+        assert_ne!(crc32(got[0]), crc32(&stripe[4]), "checksum catches it");
+        let diff = got[0].iter().zip(stripe[4].iter()).filter(|(a, b)| a != b).count();
+        assert_eq!(diff, 1, "exactly one mangled byte");
+        // The corrupted image is a pure function of (seed, block).
+        let mut copy = stripe[4].clone();
+        corrupt_in_place(seed, 4, &mut copy);
+        assert_eq!(got[0], &copy[..]);
+        // ... and empty blocks are a no-op, not a panic.
+        corrupt_in_place(seed, 4, &mut []);
+    }
+
+    #[test]
+    fn short_fetch_halves_the_block_and_breaks_the_executor() {
+        let (codec, stripe) = sample_stripe(256);
+        let s = &codec.scheme;
+        let program = RepairProgram::for_pattern(s, &[0]).unwrap();
+        let victim = *program.fetch().iter().next().unwrap();
+        let blocks = erase(&stripe, &[0]);
+        let mut faults = BTreeMap::new();
+        faults.insert(victim, FetchFault::Short);
+        let mut src = FaultyBlockSource::new(SliceSource::new(&blocks), faults, 1);
+        let got = src.blocks(&[victim]).unwrap();
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0], &stripe[victim][..128], "truncated to the front half");
+        let mut scratch = ScratchBuffers::new();
+        assert!(
+            program.execute(&mut src, &mut scratch).is_err(),
+            "ragged short block must fail loudly, never decode garbage"
+        );
+    }
+
+    #[test]
+    fn faultless_wrapper_is_transparent() {
+        let (codec, stripe) = sample_stripe(300);
+        let program = RepairProgram::for_pattern(&codec.scheme, &[0]).unwrap();
+        let blocks = erase(&stripe, &[0]);
+        let mut src = FaultyBlockSource::new(SliceSource::new(&blocks), BTreeMap::new(), 9);
+        let mut scratch = ScratchBuffers::new();
+        let out = program.execute(&mut src, &mut scratch).unwrap();
+        assert_eq!(out[0], &stripe[0][..]);
+        assert_eq!(src.injected_failures(), 0);
+    }
+
+    /// In-memory [`IoBackend`] double: serves ranges straight out of a
+    /// `Vec<Vec<u8>>` stripe image, FIFO like [`SyncPreadBackend`].
+    ///
+    /// [`SyncPreadBackend`]: crate::store::SyncPreadBackend
+    struct MemBackend {
+        blocks: Vec<Vec<u8>>,
+        queue: VecDeque<ReadRequest>,
+        bytes: u64,
+    }
+
+    impl IoBackend for MemBackend {
+        fn submit(&mut self, requests: Vec<ReadRequest>) -> anyhow::Result<()> {
+            self.queue.extend(requests);
+            Ok(())
+        }
+
+        fn next(&mut self) -> anyhow::Result<Option<CompletedRead>> {
+            let Some(r) = self.queue.pop_front() else { return Ok(None) };
+            let data = self.blocks[r.block][r.offset..r.offset + r.len].to_vec();
+            self.bytes += data.len() as u64;
+            Ok(Some(CompletedRead {
+                block: r.block,
+                offset: r.offset,
+                block_len: r.block_len,
+                data,
+            }))
+        }
+
+        fn bytes_read(&self) -> u64 {
+            self.bytes
+        }
+    }
+
+    fn mem_requests(fetch: &[usize], stripe: &[Vec<u8>], chunk: usize) -> Vec<ReadRequest> {
+        let located: Vec<(usize, BlockLocation)> = fetch
+            .iter()
+            .map(|&b| {
+                let loc = BlockLocation {
+                    path: std::path::PathBuf::new(),
+                    offset: 0,
+                    len: stripe[b].len() as u64,
+                };
+                (b, loc)
+            })
+            .collect();
+        crate::store::plan_requests(&located, chunk)
+    }
+
+    fn faulty_pipeline(
+        stripe: &[Vec<u8>],
+        program: &RepairProgram,
+        faults: BTreeMap<usize, IoFault>,
+        scratch: &mut ScratchBuffers,
+    ) -> (anyhow::Result<Vec<u8>>, u64, u64) {
+        let fetch: Vec<usize> = program.fetch().iter().copied().collect();
+        let inner = MemBackend { blocks: stripe.to_vec(), queue: VecDeque::new(), bytes: 0 };
+        let mut be = FaultyBackend::new(Box::new(inner), faults);
+        be.submit(mem_requests(&fetch, stripe, 64)).unwrap();
+        let mut stream = BackendChunkStream::new(&mut be);
+        let out = program
+            .execute_chunk_pipelined(&mut stream, scratch, 64)
+            .map(|(out, _)| out[0].to_vec());
+        (out, be.injected_failures(), be.bytes_read())
+    }
+
+    #[test]
+    fn backend_fail_read_surfaces_as_an_executor_error() {
+        let (codec, stripe) = sample_stripe(256);
+        let program = RepairProgram::for_pattern(&codec.scheme, &[0]).unwrap();
+        let victim = *program.fetch().iter().next().unwrap();
+        let mut scratch = ScratchBuffers::new();
+        let faults = BTreeMap::from([(victim, IoFault::FailRead)]);
+        let (out, injected, _) = faulty_pipeline(&stripe, &program, faults, &mut scratch);
+        let err = out.unwrap_err().to_string();
+        assert!(err.contains("injected I/O read failure"), "got: {err}");
+        assert_eq!(injected, 1);
+    }
+
+    #[test]
+    fn backend_truncation_never_decodes_garbage() {
+        let (codec, stripe) = sample_stripe(256);
+        let program = RepairProgram::for_pattern(&codec.scheme, &[0]).unwrap();
+        let victim = *program.fetch().iter().next().unwrap();
+        let mut scratch = ScratchBuffers::new();
+        // Torn at 96: the 64..128 chunk arrives short, 128+ vanishes.
+        let faults = BTreeMap::from([(victim, IoFault::Truncate { at: 96 })]);
+        let (out, injected, _) = faulty_pipeline(&stripe, &program, faults, &mut scratch);
+        assert!(out.is_err(), "incomplete block must be a typed failure, not silence");
+        assert!(injected >= 1);
+    }
+
+    #[test]
+    fn backend_stall_delays_but_stays_correct() {
+        let (codec, stripe) = sample_stripe(256);
+        let program = RepairProgram::for_pattern(&codec.scheme, &[0]).unwrap();
+        let victim = *program.fetch().iter().next().unwrap();
+        let mut scratch = ScratchBuffers::new();
+        let faults = BTreeMap::from([(victim, IoFault::Stall { delay_ms: 1 })]);
+        let (out, injected, bytes) = faulty_pipeline(&stripe, &program, faults, &mut scratch);
+        assert_eq!(out.unwrap(), stripe[0], "a stall is slow, never wrong");
+        assert_eq!(injected, 0, "stalls delay completions, they do not fail them");
+        let expected: u64 = program.fetch().iter().map(|&b| stripe[b].len() as u64).sum();
+        assert_eq!(bytes, expected, "bytes_read forwards through the wrapper");
+    }
+}

@@ -1,0 +1,93 @@
+//! Bounded retry with capped exponential backoff — the one retry
+//! policy every resilient path in the crate shares: the datanode RPC
+//! client ([`crate::cluster::datanode`]) sleeps real wall-clock
+//! backoffs, the chaos session ([`crate::chaos::FaultPlan`]) charges
+//! the same schedule on the virtual timeline, so measured and simulated
+//! retry costs are the same curve.
+
+use std::time::Duration;
+
+/// Retry budget and backoff schedule: up to [`Self::max_attempts`]
+/// tries total (the first attempt included), with attempt `i`'s retry
+/// preceded by a `min(base · 2^i, max)` backoff.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RetryPolicy {
+    /// Total attempts, first try included. Clamped to ≥ 1 wherever the
+    /// policy is applied.
+    pub max_attempts: u32,
+    /// Backoff before the first retry, seconds.
+    pub base_backoff_s: f64,
+    /// Ceiling the exponential schedule saturates at, seconds.
+    pub max_backoff_s: f64,
+}
+
+impl Default for RetryPolicy {
+    /// Three attempts, 10 ms → 200 ms capped doubling — the virtual
+    /// fetch path's default.
+    fn default() -> Self {
+        Self { max_attempts: 3, base_backoff_s: 0.010, max_backoff_s: 0.200 }
+    }
+}
+
+impl RetryPolicy {
+    pub const fn new(max_attempts: u32, base_backoff_s: f64, max_backoff_s: f64) -> Self {
+        Self { max_attempts, base_backoff_s, max_backoff_s }
+    }
+
+    /// The datanode TCP client's schedule: quick, short retries — an
+    /// RPC round trip is milliseconds, so waiting longer than ~50 ms
+    /// just stalls the repair pipeline.
+    pub const fn tcp() -> Self {
+        Self { max_attempts: 3, base_backoff_s: 0.001, max_backoff_s: 0.050 }
+    }
+
+    /// Backoff before retry `retry` (0-based: `backoff_s(0)` precedes
+    /// the second attempt), capped at [`Self::max_backoff_s`].
+    pub fn backoff_s(&self, retry: u32) -> f64 {
+        let exp = retry.min(62) as i32;
+        (self.base_backoff_s * 2f64.powi(exp)).min(self.max_backoff_s)
+    }
+
+    /// [`Self::backoff_s`] as a wall-clock [`Duration`] (for paths that
+    /// really sleep, like the TCP client).
+    pub fn backoff(&self, retry: u32) -> Duration {
+        Duration::from_secs_f64(self.backoff_s(retry).max(0.0))
+    }
+
+    /// Total backoff a fully-exhausted budget pays, seconds (the
+    /// virtual timeline charges this when every attempt fails).
+    pub fn total_backoff_s(&self) -> f64 {
+        (0..self.max_attempts.max(1) - 1).map(|i| self.backoff_s(i)).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_doubles_then_saturates() {
+        let p = RetryPolicy::new(6, 0.010, 0.050);
+        assert_eq!(p.backoff_s(0), 0.010);
+        assert_eq!(p.backoff_s(1), 0.020);
+        assert_eq!(p.backoff_s(2), 0.040);
+        assert_eq!(p.backoff_s(3), 0.050, "capped");
+        assert_eq!(p.backoff_s(40), 0.050, "stays capped");
+        assert_eq!(p.backoff(1), Duration::from_millis(20));
+    }
+
+    #[test]
+    fn huge_retry_indices_do_not_overflow() {
+        let p = RetryPolicy::new(3, 1e-3, 0.5);
+        assert_eq!(p.backoff_s(u32::MAX), 0.5);
+    }
+
+    #[test]
+    fn total_backoff_sums_the_exhausted_schedule() {
+        let p = RetryPolicy::new(3, 0.010, 1.0);
+        // two retries: 10 ms + 20 ms
+        assert!((p.total_backoff_s() - 0.030).abs() < 1e-12);
+        let one = RetryPolicy::new(1, 0.010, 1.0);
+        assert_eq!(one.total_backoff_s(), 0.0, "no retries, no backoff");
+    }
+}

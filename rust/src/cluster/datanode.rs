@@ -15,6 +15,7 @@
 use super::metadata::BlockKey;
 use super::store::{make_store, BlockStore, StoreKind};
 use super::wire::{self, Frame};
+use crate::chaos::RetryPolicy;
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Sender};
@@ -315,30 +316,49 @@ impl Drop for TcpDataNode {
 }
 
 /// Client to a TCP datanode with the same call surface as
-/// [`DataNodeHandle`]. Keeps one connection, reconnecting on error.
+/// [`DataNodeHandle`]. Keeps one connection; broken connections (and
+/// failed connects) are retried under [`RetryPolicy::tcp`]'s bounded
+/// budget with capped exponential backoff — the same schedule the
+/// chaos plane ([`crate::chaos::FaultPlan`]) charges on the virtual
+/// timeline.
 pub struct TcpNodeClient {
     pub addr: std::net::SocketAddr,
     conn: std::sync::Mutex<Option<TcpStream>>,
+    retry: RetryPolicy,
 }
 
 impl TcpNodeClient {
     pub fn connect(addr: std::net::SocketAddr) -> Self {
-        Self { addr, conn: std::sync::Mutex::new(None) }
+        Self { addr, conn: std::sync::Mutex::new(None), retry: RetryPolicy::tcp() }
+    }
+
+    /// Override the retry budget/backoff schedule (tests use tighter
+    /// schedules; callers talking across real networks may want more
+    /// attempts).
+    pub fn with_retry(mut self, retry: RetryPolicy) -> Self {
+        self.retry = retry;
+        self
     }
 
     fn rpc(&self, frame: Frame) -> Option<Frame> {
         let mut guard = self.conn.lock().unwrap();
-        for _attempt in 0..2 {
+        let attempts = self.retry.max_attempts.max(1);
+        for attempt in 0..attempts {
+            if attempt > 0 {
+                std::thread::sleep(self.retry.backoff(attempt - 1));
+            }
             if guard.is_none() {
                 *guard = TcpStream::connect(self.addr).ok();
             }
-            let Some(conn) = guard.as_mut() else { return None };
+            // A failed connect burns the attempt and backs off like any
+            // other failure: the node may be mid-restart.
+            let Some(conn) = guard.as_mut() else { continue };
             if frame.write_to(conn).is_ok() {
                 if let Ok(Some(resp)) = Frame::read_from(conn) {
                     return Some(resp);
                 }
             }
-            *guard = None; // drop broken connection, retry once
+            *guard = None; // drop the broken connection; the next attempt reconnects
         }
         None
     }
@@ -479,6 +499,44 @@ mod tests {
         assert_eq!(client.get(key(0)), None);
         server.set_alive(true);
         assert_eq!(client.get(key(0)), Some(data));
+    }
+
+    #[test]
+    fn tcp_client_retries_through_a_flaky_listener() {
+        use std::sync::atomic::AtomicUsize;
+        // A flaky double: accepts and immediately slams the door on the
+        // first two connections, then serves one honest ping.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let drops = Arc::new(AtomicUsize::new(2));
+        let drops2 = drops.clone();
+        let server = std::thread::spawn(move || loop {
+            let Ok((mut conn, _)) = listener.accept() else { return };
+            if drops2.load(Ordering::SeqCst) > 0 {
+                drops2.fetch_sub(1, Ordering::SeqCst);
+                drop(conn); // flaky: connection dies before any frame
+                continue;
+            }
+            if let Ok(Some(f)) = Frame::read_from(&mut conn) {
+                assert_eq!(f.op, wire::OP_PING);
+                let _ = Frame::new(wire::RESP_OK).write_to(&mut conn);
+            }
+            return;
+        });
+        let client = TcpNodeClient::connect(addr).with_retry(RetryPolicy::new(3, 0.0005, 0.002));
+        assert!(client.ping(), "two dropped connections fit inside a 3-attempt budget");
+        assert_eq!(drops.load(Ordering::SeqCst), 0, "both flaky drops were consumed");
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn tcp_client_gives_up_after_the_budget() {
+        // Bind then drop: the port now refuses connections, so every
+        // attempt (including reconnects) fails and the bounded budget
+        // must surface `None` instead of spinning.
+        let addr = TcpListener::bind("127.0.0.1:0").unwrap().local_addr().unwrap();
+        let client = TcpNodeClient::connect(addr).with_retry(RetryPolicy::new(2, 0.0002, 0.001));
+        assert!(!client.ping(), "exhausted budget reports failure");
     }
 
     #[test]

@@ -16,8 +16,17 @@ use super::{Cluster, SessionReport};
 pub struct FailureDetector {
     /// Consecutive missed probes per node.
     missed: Vec<u32>,
+    /// Consecutive healthy probes each *declared-failed* node has
+    /// answered — the flap-damping state.
+    healthy_streak: Vec<u32>,
     /// Probes missed before a node is declared failed.
     pub threshold: u32,
+    /// Healthy sweeps a declared-failed node must answer consecutively
+    /// before it is declared recovered (flap damping: an oscillating
+    /// heartbeat stays in the suspect set instead of thrashing the
+    /// repair queue). `1` recovers on the first healthy probe — the
+    /// historical behaviour and the default.
+    pub recovery_threshold: u32,
     /// Probe interval in (virtual) seconds — reported, not slept.
     pub interval_s: f64,
     /// Total sweeps performed.
@@ -37,7 +46,21 @@ pub struct SweepReport {
 
 impl FailureDetector {
     pub fn new(num_nodes: usize, threshold: u32, interval_s: f64) -> Self {
-        Self { missed: vec![0; num_nodes], threshold, interval_s, sweeps: 0 }
+        Self {
+            missed: vec![0; num_nodes],
+            healthy_streak: vec![0; num_nodes],
+            threshold,
+            recovery_threshold: 1,
+            interval_s,
+            sweeps: 0,
+        }
+    }
+
+    /// Set the flap-damping budget ([`Self::recovery_threshold`]),
+    /// clamped to ≥ 1.
+    pub fn with_recovery_threshold(mut self, sweeps: u32) -> Self {
+        self.recovery_threshold = sweeps.max(1);
+        self
     }
 
     /// [`Self::sweep`], then — if the sweep declared any node failed —
@@ -70,11 +93,23 @@ impl FailureDetector {
             let ok = cluster.nodes[id].ping();
             if ok {
                 if self.missed[id] >= self.threshold && !cluster.meta.nodes[id].alive {
-                    report.recovered.push(id);
-                    cluster.meta.nodes[id].alive = true;
+                    // Declared failed: a single healthy probe is not
+                    // enough — the node must stay healthy for
+                    // `recovery_threshold` consecutive sweeps before it
+                    // leaves the suspect set (flap damping).
+                    self.healthy_streak[id] += 1;
+                    if self.healthy_streak[id] >= self.recovery_threshold.max(1) {
+                        report.recovered.push(id);
+                        cluster.meta.nodes[id].alive = true;
+                        self.missed[id] = 0;
+                        self.healthy_streak[id] = 0;
+                    }
+                } else {
+                    self.missed[id] = 0;
+                    self.healthy_streak[id] = 0;
                 }
-                self.missed[id] = 0;
             } else {
+                self.healthy_streak[id] = 0;
                 self.missed[id] += 1;
                 if self.missed[id] == self.threshold {
                     report.newly_failed.push(id);
@@ -130,6 +165,34 @@ mod tests {
         let rep = fd.sweep(&mut c);
         assert_eq!(rep.recovered, vec![2]);
         assert!(c.meta.nodes[2].alive);
+    }
+
+    #[test]
+    fn oscillating_heartbeat_stays_suspect_under_flap_damping() {
+        let mut c = cluster();
+        let mut fd = FailureDetector::new(12, 1, 1.0).with_recovery_threshold(3);
+        c.nodes[5].set_alive(false);
+        assert_eq!(fd.sweep(&mut c).newly_failed, vec![5]);
+        // The node oscillates: one healthy beat, one miss, repeatedly.
+        // Damping must keep it in the suspect set throughout.
+        for _ in 0..4 {
+            c.nodes[5].set_alive(true);
+            assert!(fd.sweep(&mut c).recovered.is_empty(), "one beat is not a recovery");
+            c.nodes[5].set_alive(false);
+            let rep = fd.sweep(&mut c);
+            assert!(rep.recovered.is_empty());
+            assert!(rep.newly_failed.is_empty(), "already-suspect node is not re-declared");
+        }
+        assert!(!c.meta.nodes[5].alive, "oscillating node stays suspect");
+        // Three consecutive healthy sweeps finally clear it.
+        c.nodes[5].set_alive(true);
+        assert!(fd.sweep(&mut c).recovered.is_empty());
+        assert!(fd.sweep(&mut c).recovered.is_empty());
+        assert_eq!(fd.sweep(&mut c).recovered, vec![5]);
+        assert!(c.meta.nodes[5].alive);
+        // ...and a fresh crash after a real recovery is re-declared.
+        c.nodes[5].set_alive(false);
+        assert_eq!(fd.sweep(&mut c).newly_failed, vec![5]);
     }
 
     #[test]

@@ -27,6 +27,14 @@ pub struct StripeInfo {
     /// `block_nodes[i]` = datanode storing block i (0..n).
     pub block_nodes: Vec<NodeId>,
     pub block_size: usize,
+    /// `block_crcs[i]` = CRC-32 ([`crate::store::crc32`]) of block i as
+    /// sealed, recorded by the coordinator so any corruption picked up
+    /// on the fetch path — disk bit-rot, a faulty transport, an
+    /// injected chaos fault — is caught *before* decode and routed
+    /// through the re-plan ladder. Empty for stripes sealed before the
+    /// checksum column existed: fetches then go unverified, matching
+    /// the store's legacy five-field manifest behaviour.
+    pub block_crcs: Vec<u32>,
 }
 
 impl StripeInfo {
@@ -144,6 +152,7 @@ mod tests {
                     p: 0,
                     block_nodes: vec![0; 8],
                     block_size: block as usize,
+                    block_crcs: vec![0; 8],
                 },
             );
             for b in 0..8u32 {
@@ -193,6 +202,7 @@ mod tests {
             p: 1,
             block_nodes: vec![0, 1, 2, 3],
             block_size: 64,
+            block_crcs: Vec::new(),
         };
         assert!(md.failed_blocks(&s).is_empty());
         md.nodes[2].alive = false;

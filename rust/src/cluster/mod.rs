@@ -359,11 +359,15 @@ impl Cluster {
         let data: Vec<Vec<u8>> = (0..k).map(|i| region[i * bs..(i + 1) * bs].to_vec()).collect();
         let parity = self.codec.encode(&data);
 
-        // (3) Data storage: place blocks on distinct datanodes.
+        // (3) Data storage: place blocks on distinct datanodes. The
+        // coordinator records each block's CRC-32 as sealed — the
+        // integrity reference every later fetch is verified against.
         let n = self.scheme().n();
         let placement = self.cfg.placement.place(sid, n, self.cfg.num_datanodes);
+        let mut block_crcs = Vec::with_capacity(n);
         for (b, content) in data.iter().chain(parity.iter()).enumerate() {
             let key = BlockKey { stripe: sid, index: b as u32 };
+            block_crcs.push(crate::store::crc32(content));
             assert!(self.nodes[placement[b]].put(key, content.clone()), "datanode write failed");
         }
         self.meta.stripes.insert(
@@ -376,6 +380,7 @@ impl Cluster {
                 p: self.cfg.p,
                 block_nodes: placement,
                 block_size: bs,
+                block_crcs,
             },
         );
         for o in objects {

@@ -45,13 +45,20 @@
 //! [`RepairProgram`]: crate::repair::RepairProgram
 
 use super::degraded::{ReadMode, ReadReport};
-use super::metadata::{FileId, StripeId};
-use super::{decode_job, Cluster, DecodeJob, Decoded, JobMeta, MeasuredIo, RepairReport, PROXY};
-use crate::netsim::{Flow, FlowResult, NetSim, NodeId, SessionSim};
+use super::metadata::{FileId, StripeId, StripeInfo};
+use super::{
+    decode_job, net_id, Cluster, DecodeJob, Decoded, JobMeta, MeasuredIo, RepairReport, PROXY,
+};
+use crate::chaos::{ChaosReport, FaultPlan, FetchFault};
+use crate::netsim::{pipeline_completion, Flow, FlowResult, NetSim, NodeId, SessionSim};
 use crate::prng::Prng;
-use crate::repair::{RepairProgram, ScratchBuffers, DEFAULT_CHUNK_BYTES};
+use crate::repair::{
+    RepairError, RepairProgram, ScratchBuffers, SliceSource, DEFAULT_CHUNK_BYTES,
+};
 use crate::store::IoBackendKind;
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::{mpsc, Arc, Mutex};
+use std::time::Instant;
 
 /// Stripes the fetch issuer keeps in flight per decode worker, for both
 /// the wall-clock pipeline (bounds resident bytes at
@@ -476,6 +483,11 @@ pub struct SessionReport {
     pub write_back_overlap_s: f64,
     /// Present when a foreground generator ran.
     pub foreground: Option<ForegroundReport>,
+    /// Present when the session ran under a [`FaultPlan`]
+    /// ([`RepairSession::chaos`]), even an empty one: the
+    /// retry/hedge/replan/corruption counters and the degraded
+    /// completion clock. `None` on plain sessions.
+    pub chaos: Option<ChaosReport>,
 }
 
 /// Builder-style repair session — the single entry point to the repair
@@ -495,6 +507,7 @@ pub struct RepairSession<'c> {
     in_flight: Option<usize>,
     backend: Option<IoBackendKind>,
     chunk_bytes: usize,
+    chaos: Option<FaultPlan>,
 }
 
 impl<'c> RepairSession<'c> {
@@ -509,6 +522,7 @@ impl<'c> RepairSession<'c> {
             in_flight: None,
             backend: None,
             chunk_bytes: DEFAULT_CHUNK_BYTES,
+            chaos: None,
         }
     }
 
@@ -595,10 +609,39 @@ impl<'c> RepairSession<'c> {
         self
     }
 
+    /// Run the session under a chaos [`FaultPlan`]: injected fetch
+    /// faults, stragglers and mid-session node deaths, answered by the
+    /// plan's resilience policies — bounded retry with capped
+    /// exponential backoff, hedged re-reads past the straggler
+    /// threshold, and **mid-session re-planning** down the
+    /// local → cascaded → global ladder when a survivor is lost after
+    /// ops already fired. [`SessionReport::chaos`] is then `Some`.
+    ///
+    /// An *empty* plan (no injections, whatever the policy knobs say)
+    /// runs the plain session — reports identical to no chaos at all —
+    /// with all counters zero: the bit-identity contract
+    /// `tests/chaos_matrix.rs` pins.
+    pub fn chaos(mut self, plan: FaultPlan) -> Self {
+        self.chaos = Some(plan);
+        self
+    }
+
     /// Execute the session: wall-clock pipeline (fetch issuer →
     /// readiness-queue decode workers → write-back) plus the shared
     /// virtual timeline, returning the full [`SessionReport`].
-    pub fn run(self) -> anyhow::Result<SessionReport> {
+    pub fn run(mut self) -> anyhow::Result<SessionReport> {
+        match self.chaos.take() {
+            None => self.run_plain(None),
+            // Nothing to inject: the plain executor IS the chaos
+            // executor's zero-fault limit — run it, report zeroed
+            // counters.
+            Some(p) if p.is_empty() => self.run_plain(Some(ChaosReport::default())),
+            Some(p) => self.run_chaos(p),
+        }
+    }
+
+    /// The fault-free executor (every pre-chaos session).
+    fn run_plain(self, chaos: Option<ChaosReport>) -> anyhow::Result<SessionReport> {
         let RepairSession {
             cluster,
             jobs,
@@ -609,6 +652,7 @@ impl<'c> RepairSession<'c> {
             in_flight,
             backend,
             chunk_bytes,
+            chaos: _,
         } = self;
         let jobs = match jobs {
             Some(jobs) => jobs,
@@ -723,6 +767,119 @@ impl<'c> RepairSession<'c> {
             threads,
             reports,
             reads,
+            chaos: chaos.map(|mut c| {
+                // An empty-plan run degrades nothing: its "degraded"
+                // clock is the plain completion.
+                c.degraded_completion_s = chosen.completion_s;
+                c
+            }),
+        })
+    }
+
+    /// The chaos executor: the same data movement and metadata updates
+    /// as the plain session, but every survivor fetch runs under the
+    /// [`FaultPlan`]'s injections, and the session's resilience answers
+    /// them round by round:
+    ///
+    /// 1. compile the current erasure pattern (plan cache — recompiles
+    ///    are cheap) and attempt its fetch set;
+    /// 2. transient failures retry under the plan's [`RetryPolicy`];
+    ///    corrupt arrivals are caught by the sealed-stripe CRC-32
+    ///    column ([`StripeInfo::block_crcs`]), short arrivals by the
+    ///    length check — both waste their transfer and lose the block;
+    /// 3. any block lost this round (death, loss, exhausted retries,
+    ///    rejected bytes) joins the erased set and the stripe
+    ///    **re-plans** against the remaining survivors, stepping down
+    ///    the local → cascaded → global ladder — blocks already fetched
+    ///    are kept and fed to the new program;
+    /// 4. when a round loses nothing, decode, verify nothing else is
+    ///    owed, and write back.
+    ///
+    /// The virtual cost of every round — full transfers for wasted
+    /// bytes, latency + capped exponential backoff per retry, straggler
+    /// slowdowns, hedged re-reads, death discovery — replays on a
+    /// [`SessionSim`] timeline per stripe ([`chaos_timeline`]), and the
+    /// session's [`ChaosReport`] carries the counters.
+    ///
+    /// Scope: chaos sessions cover the repair path. Foreground load,
+    /// in-session reads and measured backends are plain-session
+    /// features and are rejected up front rather than silently ignored.
+    ///
+    /// [`RetryPolicy`]: crate::chaos::RetryPolicy
+    /// [`StripeInfo::block_crcs`]: super::metadata::StripeInfo::block_crcs
+    fn run_chaos(self, plan: FaultPlan) -> anyhow::Result<SessionReport> {
+        let RepairSession { cluster, jobs, threads, foreground, reads, backend, .. } = self;
+        anyhow::ensure!(
+            foreground.is_none() && reads.is_empty() && backend.is_none(),
+            "chaos sessions do not combine with foreground load, in-session reads or \
+             measured backends"
+        );
+        let jobs = match jobs {
+            Some(jobs) => jobs,
+            None => cluster.failed_jobs(),
+        };
+        // Deaths take effect *after* job resolution: a stripe degraded
+        // only by a mid-session death fails while the session runs, it
+        // is not on the initial job list.
+        for &n in plan.deaths.keys() {
+            if n < cluster.nodes.len() && cluster.nodes[n].is_alive() {
+                cluster.fail_node(n);
+            }
+        }
+        let scheme = cluster.scheme().clone();
+        let decode_bps = cluster.cfg.decode_gbps * 1e9 / 8.0;
+        let gap = cluster.cfg.latency_s;
+        let mut chaos = ChaosReport::default();
+        let mut reports = Vec::with_capacity(jobs.len());
+        let mut serial_s = 0.0f64;
+        let mut contention_delay_s = 0.0f64;
+        let mut completion_s = 0.0f64;
+        for (j, (sid, failed)) in jobs.iter().enumerate() {
+            let issue_s = j as f64 * gap;
+            let done = chaos_repair_one(cluster, &plan, *sid, failed, &scheme, &mut chaos)?;
+            let fetch_clock = chaos_timeline(&cluster.net, &plan, &done.rounds, &mut chaos);
+            // Isolated-pass accounting over the *useful* flows, exactly
+            // as the plain session charges a stripe.
+            let plane = TrafficPlane::new(&cluster.net);
+            let (_, read_s, trace) = plane.cost_traced(&done.flows, PROXY);
+            let done_s = pipeline_completion(&trace, done.bytes_read as f64, decode_bps);
+            let report = RepairReport {
+                stripe: *sid,
+                blocks_repaired: done.erased,
+                blocks_read: done.fetched,
+                bytes_read: done.bytes_read,
+                read_s,
+                wb_s: done.wb_s,
+                sim_time_s: read_s + done.wb_s,
+                decode_sim_s: done.bytes_read as f64 / decode_bps,
+                decode_cpu_s: done.decode_cpu_s,
+                completion_s: done_s + done.wb_s,
+                issue_s,
+                contended_read_s: fetch_clock,
+                session_done_s: issue_s
+                    + fetch_clock
+                    + done.bytes_read as f64 / decode_bps
+                    + done.wb_s,
+                local: done.local,
+                measured: None,
+            };
+            serial_s += report.total_s();
+            contention_delay_s += report.contention_delay_s();
+            completion_s = completion_s.max(report.session_done_s);
+            reports.push(report);
+        }
+        chaos.degraded_completion_s = completion_s;
+        Ok(SessionReport {
+            completion_s,
+            completion_serial_wb_s: completion_s,
+            serial_s,
+            contention_delay_s,
+            write_back_overlap_s: 0.0,
+            foreground: None,
+            threads,
+            reports,
+            reads: Vec::new(),
+            chaos: Some(chaos),
         })
     }
 
@@ -737,6 +894,408 @@ impl<'c> RepairSession<'c> {
         );
         Ok(session.reports.pop().expect("length checked"))
     }
+}
+
+/// One survivor fetch as the chaos data plane resolved it and the chaos
+/// timeline replays it.
+struct ChaosFetch {
+    /// Datanode the fetch targeted.
+    node: usize,
+    /// Block bytes the transfer would move.
+    bytes: u64,
+    /// Injected failed attempts preceding the outcome; each pays one
+    /// RPC latency plus its slot of the capped-exponential backoff
+    /// schedule on the timeline.
+    failed_attempts: u32,
+    outcome: FetchOutcome,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum FetchOutcome {
+    /// Bytes arrived and passed verification.
+    Delivered,
+    /// The node died at this absolute virtual instant: the in-flight
+    /// transfer is cancelled there and the block is lost.
+    Died(f64),
+    /// Bytes fully arrived but were rejected (corrupt or short): the
+    /// transfer is paid, the block is lost.
+    Wasted,
+    /// No bytes ever moved (lost block / exhausted retry budget): the
+    /// round learns at RPC-latency-plus-backoff cost only.
+    Vanished,
+}
+
+/// One re-plan round: every fetch attempted against one compiled
+/// program (later rounds hold only the *new* blocks — partial state
+/// from earlier rounds is reused, not re-fetched).
+struct ChaosRound {
+    fetches: Vec<ChaosFetch>,
+}
+
+/// The data-plane outcome of one stripe repaired under chaos.
+struct ChaosJobDone {
+    /// Final erasure pattern (original failures + mid-session losses),
+    /// in program output order.
+    erased: Vec<usize>,
+    rounds: Vec<ChaosRound>,
+    /// Delivered (useful) bytes; wasted transfers appear only on the
+    /// chaos timeline.
+    bytes_read: u64,
+    /// Delivered block count.
+    fetched: usize,
+    /// One survivor→proxy flow per delivered block, for the
+    /// isolated-pass accounting.
+    flows: Vec<Flow>,
+    decode_cpu_s: f64,
+    wb_s: f64,
+    local: bool,
+}
+
+/// Repair one stripe under the fault plan: fetch → verify → re-plan
+/// rounds until a round loses nothing, then decode and write back. See
+/// [`RepairSession::run`] (chaos path) for the contract.
+fn chaos_repair_one(
+    cluster: &mut Cluster,
+    plan: &FaultPlan,
+    sid: StripeId,
+    failed: &[usize],
+    scheme: &Arc<crate::codes::Scheme>,
+    chaos: &mut ChaosReport,
+) -> anyhow::Result<ChaosJobDone> {
+    let stripe: StripeInfo = cluster
+        .meta
+        .stripes
+        .get(&sid)
+        .cloned()
+        .ok_or_else(|| anyhow::anyhow!("unknown stripe {sid}"))?;
+    let faults = plan.stripe_faults(sid);
+    let budget = plan.retry.max_attempts.max(1);
+    let mut erased: BTreeSet<usize> = failed.iter().copied().collect();
+    // Blocks fetched and verified so far — partial state that survives
+    // re-planning: a new program reuses whatever the old one fetched.
+    let mut have: BTreeMap<usize, Vec<u8>> = BTreeMap::new();
+    let mut rounds: Vec<ChaosRound> = Vec::new();
+    let mut flows: Vec<Flow> = Vec::new();
+    let mut bytes_read = 0u64;
+    let program = loop {
+        let erased_vec: Vec<usize> = erased.iter().copied().collect();
+        if crate::repair::plan(scheme, &erased_vec).is_none() {
+            // Past the bottom rung of the ladder: typed, so callers can
+            // tell "cannot" from "crashed".
+            return Err(anyhow::Error::new(RepairError::Unrecoverable {
+                stripe: sid,
+                erased: erased_vec,
+            }));
+        }
+        let program = cluster.programs.lock().unwrap().get_or_compile(scheme, &erased_vec)?;
+        let mut round = ChaosRound { fetches: Vec::new() };
+        let mut newly_lost: Vec<usize> = Vec::new();
+        for &b in program.fetch() {
+            if have.contains_key(&b) {
+                continue;
+            }
+            let node = stripe.block_nodes[b];
+            let bytes = stripe.block_size as u64;
+            // A dead node dominates any per-fetch fault: the survivor
+            // is gone mid-flight, retries included.
+            if let Some(&td) = plan.deaths.get(&node) {
+                round.fetches.push(ChaosFetch {
+                    node,
+                    bytes,
+                    failed_attempts: 0,
+                    outcome: FetchOutcome::Died(td),
+                });
+                newly_lost.push(b);
+                continue;
+            }
+            let fault = faults.get(&b).copied();
+            // How many injected attempt-failures precede success — or
+            // the whole budget, when nothing would ever succeed.
+            let failed_attempts = match fault {
+                Some(FetchFault::Lost) => budget,
+                Some(FetchFault::Transient { fails }) => fails.min(budget),
+                _ => 0,
+            };
+            let exhausted = match fault {
+                Some(FetchFault::Lost) => true,
+                Some(FetchFault::Transient { fails }) => fails >= budget,
+                _ => false,
+            };
+            chaos.retries += u64::from(if exhausted {
+                budget - 1
+            } else {
+                failed_attempts
+            });
+            if exhausted {
+                round.fetches.push(ChaosFetch {
+                    node,
+                    bytes,
+                    failed_attempts: budget,
+                    outcome: FetchOutcome::Vanished,
+                });
+                newly_lost.push(b);
+                continue;
+            }
+            let mut data = cluster.fetch_block(&stripe, b).ok_or_else(|| {
+                anyhow::Error::new(RepairError::MissingBlock { stripe: sid, block: b })
+            })?;
+            if matches!(fault, Some(FetchFault::Corrupt)) {
+                crate::chaos::corrupt_in_place(plan.seed, b, &mut data);
+            }
+            if matches!(fault, Some(FetchFault::Short)) {
+                let half = data.len() / 2;
+                data.truncate(half);
+            }
+            // Verification gate: length first, then the sealed-stripe
+            // CRC column (stripes sealed before the column existed go
+            // unverified — matching the store's legacy manifests).
+            let length_ok = data.len() == stripe.block_size;
+            let crc_ok = match stripe.block_crcs.get(b) {
+                Some(&crc) => crate::store::crc32(&data) == crc,
+                None => true,
+            };
+            if length_ok && !crc_ok {
+                chaos.corruptions_detected += 1;
+            }
+            if !(length_ok && crc_ok) {
+                // Full transfer paid, bytes rejected: the block is as
+                // good as lost — re-plan around it.
+                round.fetches.push(ChaosFetch {
+                    node,
+                    bytes,
+                    failed_attempts,
+                    outcome: FetchOutcome::Wasted,
+                });
+                newly_lost.push(b);
+                continue;
+            }
+            bytes_read += data.len() as u64;
+            flows.push(Flow {
+                src: net_id(node),
+                dst: PROXY,
+                bytes: data.len() as u64,
+                start: 0.0,
+            });
+            have.insert(b, data);
+            round.fetches.push(ChaosFetch {
+                node,
+                bytes,
+                failed_attempts,
+                outcome: FetchOutcome::Delivered,
+            });
+        }
+        let lost_this_round = !newly_lost.is_empty();
+        rounds.push(round);
+        if !lost_this_round {
+            break program;
+        }
+        // Mid-session re-plan: the lost survivors join the erased set
+        // and the next iteration compiles the next rung down the
+        // ladder. `have` is kept — already-fetched state is reused.
+        chaos.replans += 1;
+        erased.extend(newly_lost);
+    };
+
+    // Decode against the final program, under the shared scratch.
+    let mut blocks: Vec<Option<Vec<u8>>> = vec![None; stripe.n()];
+    for (b, data) in have {
+        blocks[b] = Some(data);
+    }
+    let erased_vec: Vec<usize> = program.erased().to_vec();
+    let t0 = Instant::now();
+    let rec: Vec<Vec<u8>> = {
+        let mut scratch = cluster.scratch.lock().unwrap();
+        let outs = program.execute(&mut SliceSource::new(&blocks), &mut scratch)?;
+        erased_vec
+            .iter()
+            .map(|&e| {
+                let i = program
+                    .output_index(e)
+                    .ok_or_else(|| anyhow::anyhow!("program has no output for block {e}"))?;
+                Ok(outs[i].to_vec())
+            })
+            .collect::<anyhow::Result<_>>()?
+    };
+    let decode_cpu_s = t0.elapsed().as_secs_f64();
+    let (wb_s, _wb_flows) = cluster.write_back(sid, &stripe, &erased_vec, &rec)?;
+    Ok(ChaosJobDone {
+        erased: erased_vec,
+        rounds,
+        bytes_read,
+        fetched: flows.len(),
+        flows,
+        decode_cpu_s,
+        wb_s,
+        local: program.plan.fully_local(),
+    })
+}
+
+/// Per-flow role on the chaos timeline, indexed by [`SessionSim`] flow
+/// id (admissions and timers share one id space, assigned in call
+/// order).
+#[derive(Clone, Copy)]
+enum ChaosRole {
+    /// A fetch's primary transfer; completes its entry.
+    Primary { f: usize },
+    /// A speculative re-read racing a straggled primary.
+    Hedge { f: usize },
+    /// Alarm at the hedge threshold: fires the hedge if the primary is
+    /// still in flight.
+    HedgeTimer { f: usize },
+    /// Alarm at a node's death instant: cancels the entry's transfers.
+    DeathTimer { f: usize },
+    /// A wasted (rejected) transfer: extends the round barrier only.
+    Ghost,
+}
+
+#[derive(Clone, Copy)]
+struct ChaosEntry {
+    done: bool,
+    primary: usize,
+    hedge: Option<usize>,
+}
+
+/// Replay one stripe's chaos rounds on a private [`SessionSim`]
+/// timeline; returns the stripe's fetch clock (issue → last useful
+/// arrival or give-up, re-plan rounds serialized) and counts hedges as
+/// they actually fire.
+///
+/// Deliberate simplifications, on record: each stripe replays on its
+/// own timeline (chaos sessions measure degradation, not cross-stripe
+/// contention); a straggler's slowdown scales its transfer's bytes;
+/// hedges arm only for straggler-flagged nodes (the trigger is relative
+/// lateness, and on this timeline only stragglers run late); a hedged
+/// re-read is served at full rate. Retries cost one RPC latency plus
+/// their [`RetryPolicy`](crate::chaos::RetryPolicy) backoff slot —
+/// failed attempts move no bytes.
+fn chaos_timeline(
+    net: &NetSim,
+    plan: &FaultPlan,
+    rounds: &[ChaosRound],
+    chaos: &mut ChaosReport,
+) -> f64 {
+    let rate = net.nodes[PROXY].ingress_bps;
+    let latency = net.latency_s;
+    let iso = |bytes: f64| bytes / rate + latency;
+    let retry_delay = |attempts: u32| -> f64 {
+        (0..attempts)
+            .map(|i| latency + plan.retry.backoff_s(i))
+            .sum()
+    };
+    let mut t = 0.0f64;
+    for round in rounds {
+        let mut sim = SessionSim::new(net, PROXY, 1);
+        let mut roles: Vec<ChaosRole> = Vec::new();
+        let mut entries: Vec<ChaosEntry> =
+            vec![ChaosEntry { done: true, primary: usize::MAX, hedge: None }; round.fetches.len()];
+        // Give-up instants with no flow behind them (vanished fetches)
+        // bound the barrier analytically.
+        let mut barrier = 0.0f64;
+        for (f, cf) in round.fetches.iter().enumerate() {
+            let slowdown = plan.stragglers.get(&cf.node).copied().unwrap_or(1.0);
+            let scaled = ((cf.bytes as f64 * slowdown) as u64).max(1);
+            match cf.outcome {
+                FetchOutcome::Delivered => {
+                    let delay = retry_delay(cf.failed_attempts);
+                    let id = sim.admit(
+                        Flow { src: net_id(cf.node), dst: PROXY, bytes: scaled, start: delay },
+                        usize::MAX,
+                    );
+                    roles.push(ChaosRole::Primary { f });
+                    entries[f] = ChaosEntry { done: false, primary: id, hedge: None };
+                    if plan.hedge_threshold > 0.0 && slowdown > 1.0 {
+                        sim.timer(delay + plan.hedge_threshold * iso(cf.bytes as f64));
+                        roles.push(ChaosRole::HedgeTimer { f });
+                    }
+                }
+                FetchOutcome::Wasted => {
+                    let delay = retry_delay(cf.failed_attempts);
+                    sim.admit(
+                        Flow { src: net_id(cf.node), dst: PROXY, bytes: scaled, start: delay },
+                        usize::MAX,
+                    );
+                    roles.push(ChaosRole::Ghost);
+                }
+                FetchOutcome::Died(td) => {
+                    let id = sim.admit(
+                        Flow { src: net_id(cf.node), dst: PROXY, bytes: scaled, start: 0.0 },
+                        usize::MAX,
+                    );
+                    roles.push(ChaosRole::Primary { f });
+                    entries[f] = ChaosEntry { done: false, primary: id, hedge: None };
+                    // Death is absolute session time; this round starts
+                    // at `t`. An already-dead node still costs one RPC
+                    // latency to discover (the timer clamps to that).
+                    sim.timer((td - t).max(0.0));
+                    roles.push(ChaosRole::DeathTimer { f });
+                }
+                FetchOutcome::Vanished => {
+                    // budget attempts, each an RPC latency, with the
+                    // backoff schedule between them.
+                    let attempts = cf.failed_attempts.max(1);
+                    let give_up = attempts as f64 * latency
+                        + (0..attempts.saturating_sub(1))
+                            .map(|i| plan.retry.backoff_s(i))
+                            .sum::<f64>();
+                    barrier = barrier.max(give_up);
+                }
+            }
+        }
+        while let Some(ev) = sim.next_event() {
+            match roles[ev.id] {
+                ChaosRole::Primary { f } => {
+                    if !entries[f].done {
+                        entries[f].done = true;
+                        barrier = barrier.max(ev.finish);
+                        if let Some(h) = entries[f].hedge {
+                            sim.cancel(h);
+                        }
+                    }
+                }
+                ChaosRole::Hedge { f } => {
+                    if !entries[f].done {
+                        entries[f].done = true;
+                        barrier = barrier.max(ev.finish);
+                        sim.cancel(entries[f].primary);
+                    }
+                }
+                ChaosRole::HedgeTimer { f } => {
+                    if !entries[f].done {
+                        // The primary is late past the threshold: race
+                        // a full-rate re-read against it.
+                        chaos.hedges += 1;
+                        let cf = &round.fetches[f];
+                        let id = sim.admit(
+                            Flow {
+                                src: net_id(cf.node),
+                                dst: PROXY,
+                                bytes: cf.bytes.max(1),
+                                start: ev.finish,
+                            },
+                            usize::MAX,
+                        );
+                        roles.push(ChaosRole::Hedge { f });
+                        entries[f].hedge = Some(id);
+                    }
+                }
+                ChaosRole::DeathTimer { f } => {
+                    if !entries[f].done {
+                        entries[f].done = true;
+                        sim.cancel(entries[f].primary);
+                        if let Some(h) = entries[f].hedge {
+                            sim.cancel(h);
+                        }
+                        barrier = barrier.max(ev.finish);
+                    }
+                }
+                ChaosRole::Ghost => barrier = barrier.max(ev.finish),
+            }
+        }
+        // Rounds serialize: the re-plan happens only once the round's
+        // last outcome is known.
+        t += barrier;
+    }
+    t
 }
 
 /// One stripe through the wall-clock pipeline, ready for reporting and
@@ -1190,6 +1749,192 @@ mod tests {
         c.restore_node(victim);
         assert!(c.scrub_stripe(sid).unwrap());
         std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn empty_fault_plan_is_bit_identical_to_a_plain_session() {
+        // The zero-fault contract: a chaos session with nothing to
+        // inject produces the exact plain-session reports (wall-clock
+        // decode_cpu_s aside) plus zeroed counters.
+        let build = || {
+            let mut c = Cluster::new(tiny_cfg(SchemeKind::CpAzure));
+            let sids = c.fill_random_stripes(2, 41);
+            let v = c.meta.stripes[&sids[0]].block_nodes[0];
+            c.fail_node(v);
+            c
+        };
+        let mut c1 = build();
+        let plain = c1.repair().threads(2).run().unwrap();
+        let mut c2 = build();
+        let chaotic = c2.repair().threads(2).chaos(FaultPlan::new(1)).run().unwrap();
+        assert!(plain.chaos.is_none(), "plain sessions carry no chaos report");
+        let cz = chaotic.chaos.as_ref().unwrap();
+        assert_eq!(cz.retries + cz.hedges + cz.replans + cz.corruptions_detected, 0);
+        assert_eq!(cz.degraded_completion_s, chaotic.completion_s);
+        assert_eq!(plain.completion_s, chaotic.completion_s);
+        assert_eq!(plain.serial_s, chaotic.serial_s);
+        assert_eq!(plain.reports.len(), chaotic.reports.len());
+        for (p, q) in plain.reports.iter().zip(chaotic.reports.iter()) {
+            assert_eq!(p.stripe, q.stripe);
+            assert_eq!(p.blocks_repaired, q.blocks_repaired);
+            assert_eq!(p.blocks_read, q.blocks_read);
+            assert_eq!(p.bytes_read, q.bytes_read);
+            assert_eq!(p.read_s, q.read_s);
+            assert_eq!(p.wb_s, q.wb_s);
+            assert_eq!(p.completion_s, q.completion_s);
+            assert_eq!(p.issue_s, q.issue_s);
+            assert_eq!(p.contended_read_s, q.contended_read_s);
+            assert_eq!(p.session_done_s, q.session_done_s);
+        }
+    }
+
+    #[test]
+    fn transient_faults_retry_within_budget_without_replanning() {
+        let mut c = Cluster::new(tiny_cfg(SchemeKind::CpAzure));
+        let sid = c.fill_random_stripes(1, 91)[0];
+        let victim = c.meta.stripes[&sid].block_nodes[0];
+        c.fail_node(victim);
+        let program = RepairProgram::for_pattern(c.scheme(), &[0]).unwrap();
+        let flaky = *program.fetch().iter().next().unwrap();
+        let s = c.repair().chaos(FaultPlan::new(2).fail_fetch(sid, flaky, 2)).run().unwrap();
+        let cz = s.chaos.as_ref().unwrap();
+        assert_eq!(cz.retries, 2, "two injected failures, two retries");
+        assert_eq!(cz.replans, 0, "a retry-recoverable fault must not re-plan");
+        assert_eq!(cz.corruptions_detected, 0);
+        let r = &s.reports[0];
+        assert!(
+            r.contended_read_s > r.read_s + 1e-9,
+            "retries must cost time on the chaos clock ({} vs {})",
+            r.contended_read_s,
+            r.read_s
+        );
+        c.restore_node(victim);
+        assert!(c.scrub_stripe(sid).unwrap(), "repair under retries must byte-match");
+    }
+
+    #[test]
+    fn mid_session_death_replans_down_the_ladder() {
+        let mut c = Cluster::new(tiny_cfg(SchemeKind::CpAzure));
+        let sid = c.fill_random_stripes(1, 53)[0];
+        let victim = c.meta.stripes[&sid].block_nodes[0];
+        c.fail_node(victim);
+        // Kill the node of a survivor the local plan fetches, 2 ms into
+        // the session: the fetch dies mid-flight and the stripe must
+        // re-plan with that survivor in the erased set.
+        let program = RepairProgram::for_pattern(c.scheme(), &[0]).unwrap();
+        let doomed = *program.fetch().iter().next().unwrap();
+        let doomed_node = c.meta.stripes[&sid].block_nodes[doomed];
+        let s = c
+            .repair()
+            .stripe(sid, &[0])
+            .chaos(FaultPlan::new(7).kill_at(doomed_node, 0.002))
+            .run()
+            .unwrap();
+        let cz = s.chaos.as_ref().unwrap();
+        assert!(cz.replans >= 1, "death of a fetched survivor must force a re-plan");
+        assert_eq!(s.reports.len(), 1);
+        let r = &s.reports[0];
+        assert!(r.blocks_repaired.contains(&0));
+        assert!(
+            r.blocks_repaired.contains(&doomed),
+            "the dead survivor joins the repair: {:?}",
+            r.blocks_repaired
+        );
+        assert!(
+            r.contended_read_s >= r.read_s - 1e-9,
+            "re-plan rounds cannot beat the one-shot fetch"
+        );
+        assert!((cz.degraded_completion_s - s.completion_s).abs() < 1e-12);
+        c.restore_node(victim);
+        assert!(c.scrub_stripe(sid).unwrap(), "post-death repair must byte-match");
+    }
+
+    #[test]
+    fn corrupt_fetch_is_detected_and_replanned_around() {
+        let mut c = Cluster::new(tiny_cfg(SchemeKind::AzureLrc));
+        let sid = c.fill_random_stripes(1, 61)[0];
+        let victim = c.meta.stripes[&sid].block_nodes[0];
+        c.fail_node(victim);
+        let program = RepairProgram::for_pattern(c.scheme(), &[0]).unwrap();
+        let bad = *program.fetch().iter().next().unwrap();
+        let s =
+            c.repair().stripe(sid, &[0]).chaos(FaultPlan::new(3).corrupt_fetch(sid, bad)).run().unwrap();
+        let cz = s.chaos.as_ref().unwrap();
+        assert_eq!(cz.corruptions_detected, 1, "the CRC column must catch the flip");
+        assert!(cz.replans >= 1, "a rejected block is a loss: re-plan around it");
+        assert!(s.reports[0].blocks_repaired.contains(&bad));
+        c.restore_node(victim);
+        assert!(c.scrub_stripe(sid).unwrap(), "corruption must never reach the repaired bytes");
+    }
+
+    #[test]
+    fn straggler_hedge_fires_and_beats_the_slow_path() {
+        // 1 MiB blocks so transfers dominate latency and the hedge has
+        // something real to win.
+        let build = || {
+            let mut cfg = tiny_cfg(SchemeKind::CpAzure);
+            cfg.block_size = 1 << 20;
+            let mut c = Cluster::new(cfg);
+            let sid = c.fill_random_stripes(1, 71)[0];
+            let v = c.meta.stripes[&sid].block_nodes[0];
+            c.fail_node(v);
+            (c, sid)
+        };
+        let (mut c1, sid) = build();
+        let program = RepairProgram::for_pattern(c1.scheme(), &[0]).unwrap();
+        let slow = *program.fetch().iter().next().unwrap();
+        let slow_node = c1.meta.stripes[&sid].block_nodes[slow];
+        let unhedged =
+            c1.repair().chaos(FaultPlan::new(5).straggler(slow_node, 8.0)).run().unwrap();
+        let (mut c2, _) = build();
+        let hedged = c2
+            .repair()
+            .chaos(FaultPlan::new(5).straggler(slow_node, 8.0).with_hedge(1.5))
+            .run()
+            .unwrap();
+        assert_eq!(unhedged.chaos.as_ref().unwrap().hedges, 0, "no threshold, no hedges");
+        assert_eq!(hedged.chaos.as_ref().unwrap().hedges, 1, "one straggled fetch, one hedge");
+        assert!(
+            hedged.reports[0].contended_read_s < unhedged.reports[0].contended_read_s - 1e-9,
+            "the hedged re-read must beat the straggler ({} vs {})",
+            hedged.reports[0].contended_read_s,
+            unhedged.reports[0].contended_read_s
+        );
+        assert!(c1.scrub_stripe(sid).is_ok());
+    }
+
+    #[test]
+    fn exhausted_ladder_is_a_typed_unrecoverable_error() {
+        let mut c = Cluster::new(tiny_cfg(SchemeKind::AzureLrc));
+        let sid = c.fill_random_stripes(1, 83)[0];
+        c.fail_node(c.meta.stripes[&sid].block_nodes[0]);
+        // Every other block of the stripe is lost: no rung of the
+        // ladder can decode, and the session must say so, typed.
+        let mut plan = FaultPlan::new(11);
+        let n = c.meta.stripes[&sid].n();
+        for b in 1..n {
+            plan = plan.lose_block(sid, b);
+        }
+        let err = c.repair().stripe(sid, &[0]).chaos(plan).run().unwrap_err();
+        let typed = err.chain().find_map(|e| e.downcast_ref::<RepairError>());
+        assert!(
+            matches!(typed, Some(RepairError::Unrecoverable { .. })),
+            "expected a typed Unrecoverable, got: {err:#}"
+        );
+    }
+
+    #[test]
+    fn chaos_rejects_plain_session_extras() {
+        let mut c = Cluster::new(tiny_cfg(SchemeKind::CpAzure));
+        let sid = c.fill_random_stripes(1, 97)[0];
+        c.fail_node(c.meta.stripes[&sid].block_nodes[0]);
+        let err = c
+            .repair()
+            .foreground(ForegroundLoad::fraction(0.25))
+            .chaos(FaultPlan::new(1).straggler(1, 2.0))
+            .run()
+            .unwrap_err();
+        assert!(err.to_string().contains("chaos sessions"), "got: {err:#}");
     }
 
     #[test]

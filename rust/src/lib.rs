@@ -88,6 +88,7 @@
 #![deny(unsafe_op_in_unsafe_fn)]
 
 pub mod bench_harness;
+pub mod chaos;
 pub mod cluster;
 pub mod experiments;
 pub mod codec;

@@ -487,6 +487,63 @@ impl<'a> SessionSim<'a> {
         }
     }
 
+    /// Admit a zero-byte **timer** flow: it moves no bytes, distorts no
+    /// fair share (a zero-remaining flow completes in a zero-length
+    /// instant), and its completion event fires at
+    /// `max(at, now + latency)` — a virtual alarm clock. The chaos
+    /// scheduler uses timers for retry-backoff wakeups, hedge-threshold
+    /// checks and mid-session node-death triggers. The timer's group is
+    /// `usize::MAX`, so it is never traced.
+    pub fn timer(&mut self, at: f64) -> usize {
+        self.admit(
+            Flow {
+                src: self.trace_dst,
+                dst: self.trace_dst,
+                bytes: 0,
+                start: (at - self.net.latency_s).max(0.0),
+            },
+            usize::MAX,
+        )
+    }
+
+    /// Cancel an admitted-but-unfinished flow at the current virtual
+    /// clock — the netsim seam for **mid-session node death** and
+    /// abandoned hedged fetches. Bytes the flow already delivered stay
+    /// delivered (they really arrived, and remain on the trace); bytes
+    /// it would still have moved are released and never complete, and no
+    /// completion event is emitted for the flow. Returns `true` if the
+    /// flow was still pending or active, `false` if it already finished
+    /// (its completion event may still be queued) or the id is unknown.
+    pub fn cancel(&mut self, id: usize) -> bool {
+        if let Some(pos) = self.active.iter().position(|f| f.id == id) {
+            let f = self.active.swap_remove(pos);
+            #[cfg(feature = "strict-invariants")]
+            if f.dst == self.trace_dst && f.group < self.strict.dst_bytes.len() {
+                // Conservation compares arrivals against admitted bytes;
+                // the cancelled remainder will never arrive, so it is no
+                // longer owed. The delivered portion stays admitted.
+                self.strict.dst_bytes[f.group] -= f.remaining;
+            }
+            let _ = f;
+            return true;
+        }
+        if self.pending.iter().any(|p| p.0.id == id) {
+            let mut v = std::mem::take(&mut self.pending).into_vec();
+            let pos = v.iter().position(|p| p.0.id == id).expect("checked above");
+            let p = v.swap_remove(pos);
+            #[cfg(feature = "strict-invariants")]
+            if p.0.dst == self.trace_dst && p.0.group < self.strict.dst_bytes.len() {
+                // Never activated: nothing of it was ever owed.
+                self.strict.dst_bytes[p.0.group] -= p.0.remaining;
+                self.strict.dst_flows[p.0.group] -= 1;
+            }
+            let _ = p;
+            self.pending = v.into();
+            return true;
+        }
+        false
+    }
+
     /// The uninstrumented advance loop behind [`Self::next_event`].
     fn advance(&mut self) -> Option<SessionEvent> {
         if let Some(ev) = self.done.pop_front() {
@@ -926,6 +983,65 @@ mod tests {
         assert_eq!(ev2.id, wb);
         assert!((ev2.finish - 1.5).abs() < 1e-6, "wb at {}", ev2.finish);
         assert!(sess.next_event().is_none());
+    }
+
+    #[test]
+    fn timer_fires_at_requested_time_without_moving_bytes() {
+        let s = sim(3);
+        let mut sess = SessionSim::new(&s, 2, 1);
+        sess.admit(Flow { src: 0, dst: 2, bytes: GBPS as u64, start: 0.0 }, 0);
+        let t = sess.timer(0.25);
+        let ev = sess.next_event().unwrap();
+        assert_eq!(ev.id, t);
+        assert!((ev.finish - 0.25).abs() < 1e-9, "timer at {}", ev.finish);
+        // The data flow is untouched by the timer: full rate throughout.
+        let ev = sess.next_event().unwrap();
+        assert!((ev.finish - 1.0).abs() < 1e-6, "flow at {}", ev.finish);
+        assert!(sess.next_event().is_none());
+    }
+
+    #[test]
+    fn cancel_active_flow_frees_its_bandwidth_share() {
+        // A and B share dst ingress at rate 1/2 each. A timer yields
+        // control at t = 0.5 (0.25 GB each delivered); cancelling B
+        // there leaves A alone at full rate: 0.75 GB left → done 1.25.
+        let s = sim(3);
+        let mut sess = SessionSim::new(&s, 2, 2);
+        let a = sess.admit(Flow { src: 0, dst: 2, bytes: GBPS as u64, start: 0.0 }, 0);
+        let b = sess.admit(Flow { src: 1, dst: 2, bytes: GBPS as u64, start: 0.0 }, 1);
+        let t = sess.timer(0.5);
+        let ev = sess.next_event().unwrap();
+        assert_eq!(ev.id, t);
+        assert!(sess.cancel(b), "B is mid-transfer");
+        let ev = sess.next_event().unwrap();
+        assert_eq!(ev.id, a);
+        assert!((ev.finish - 1.25).abs() < 1e-5, "A at {}", ev.finish);
+        // B never completes; the timeline drains cleanly (under
+        // strict-invariants this also checks byte conservation with the
+        // cancelled remainder released).
+        assert!(sess.next_event().is_none());
+        // B's trace keeps the bytes it really delivered before death.
+        let (_, b_arrived) = *sess.group_trace(1).last().unwrap();
+        assert!((b_arrived - GBPS * 0.25).abs() < 1e-3 * GBPS, "B arrived {b_arrived}");
+    }
+
+    #[test]
+    fn cancel_pending_flow_never_runs_and_unknown_ids_are_false() {
+        let s = sim(3);
+        let mut sess = SessionSim::new(&s, 2, 2);
+        let a = sess.admit(Flow { src: 0, dst: 2, bytes: (GBPS / 2.0) as u64, start: 0.0 }, 0);
+        let b = sess.admit(Flow { src: 1, dst: 2, bytes: GBPS as u64, start: 5.0 }, 1);
+        assert!(sess.cancel(b), "still pending");
+        assert!(!sess.cancel(b), "already cancelled");
+        assert!(!sess.cancel(999), "never admitted");
+        let ev = sess.next_event().unwrap();
+        assert_eq!(ev.id, a);
+        assert!((ev.finish - 0.5).abs() < 1e-6);
+        assert!(sess.next_event().is_none());
+        let (_, b_arrived) = *sess.group_trace(1).last().unwrap();
+        assert_eq!(b_arrived, 0.0, "a cancelled pending flow moves nothing");
+        // Cancelling a finished flow is also false.
+        assert!(!sess.cancel(a));
     }
 
     #[test]

@@ -69,6 +69,19 @@ pub enum RepairError {
     TruncatedBlock { stripe: u64, block: usize, expected: u64, actual: u64 },
     /// The store directory exists but its manifest is absent.
     MissingManifest { path: String },
+    /// A block's bytes failed checksum verification (manifest CRC-32 or
+    /// the coordinator's sealed-stripe CRC): right length, wrong
+    /// contents. The chaos-hardened session treats this exactly like a
+    /// loss — the block joins the erased set and the repair re-plans.
+    CorruptBlock { stripe: u64, block: usize },
+    /// Mid-session losses pushed the stripe past what any rung of the
+    /// local → cascaded → global ladder can decode.
+    Unrecoverable { stripe: u64, erased: Vec<usize> },
+    /// A [`ChunkStream`] violated the chunk-delivery protocol
+    /// (duplicate, overlapping or overrunning ranges, empty chunks for
+    /// non-empty blocks). The executor aborts rather than decode from
+    /// ambiguous bytes.
+    ChunkProtocol { block: usize, detail: String },
 }
 
 impl std::fmt::Display for RepairError {
@@ -82,6 +95,16 @@ impl std::fmt::Display for RepairError {
                 "stripe {stripe}: block {block} truncated ({actual} of {expected} bytes)"
             ),
             Self::MissingManifest { path } => write!(f, "store manifest absent at {path}"),
+            Self::CorruptBlock { stripe, block } => {
+                write!(f, "stripe {stripe}: block {block} failed checksum verification")
+            }
+            Self::Unrecoverable { stripe, erased } => write!(
+                f,
+                "stripe {stripe}: erasure pattern {erased:?} exceeds every repair class"
+            ),
+            Self::ChunkProtocol { block, detail } => {
+                write!(f, "chunk stream protocol violation at block {block}: {detail}")
+            }
         }
     }
 }

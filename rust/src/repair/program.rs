@@ -56,6 +56,15 @@ use std::ops::Range;
 /// overhead is noise.
 pub const DEFAULT_CHUNK_BYTES: usize = 64 * 1024;
 
+/// Build the typed error for a [`ChunkStream`] protocol violation —
+/// duplicate, overlapping, overrunning, or empty ranges. Typed so
+/// resilience layers can tell a *misbehaving* stream (a bug or an
+/// injected fault in the I/O backend) apart from an honest read
+/// failure; see [`crate::repair::RepairError::ChunkProtocol`].
+fn chunk_protocol(block: usize, detail: String) -> anyhow::Error {
+    anyhow::Error::new(super::RepairError::ChunkProtocol { block, detail })
+}
+
 /// Supplies survivor-block bytes to [`RepairProgram::execute`].
 ///
 /// Implementations may fetch lazily (and account for network cost as a
@@ -903,24 +912,34 @@ impl RepairProgram {
                     "ragged survivor block {block} ({block_len} bytes, expected {l})"
                 ),
             }
-            anyhow::ensure!(
-                offset + data.len() <= block_len,
-                "chunk {offset}..{} of block {block} overruns its {block_len}-byte length",
-                offset + data.len()
-            );
-            anyhow::ensure!(
-                !data.is_empty() || block_len == 0,
-                "empty chunk for non-empty block {block}"
-            );
-            anyhow::ensure!(
-                received[pos] + data.len() <= block_len && offset >= low[pos],
-                "overlapping or duplicate chunk at {offset} of block {block}"
-            );
+            // Protocol violations are typed (`RepairError::ChunkProtocol`)
+            // so callers can distinguish a misbehaving I/O backend from
+            // a genuine read failure — and they abort *before* any byte
+            // of the offending chunk touches `arrived`, so output is
+            // never built from ambiguous data.
+            if offset + data.len() > block_len {
+                return Err(chunk_protocol(
+                    block,
+                    format!(
+                        "chunk {offset}..{} overruns the {block_len}-byte block",
+                        offset + data.len()
+                    ),
+                ));
+            }
+            if data.is_empty() && block_len != 0 {
+                return Err(chunk_protocol(block, "empty chunk for a non-empty block".into()));
+            }
+            if received[pos] + data.len() > block_len || offset < low[pos] {
+                return Err(chunk_protocol(
+                    block,
+                    format!("overlapping or duplicate chunk at offset {offset}"),
+                ));
+            }
             if !seen[pos] {
                 seen[pos] = true;
                 arrived[pos] = vec![0u8; block_len];
             } else if block_len == 0 {
-                anyhow::bail!("zero-length block {block} delivered twice");
+                return Err(chunk_protocol(block, "zero-length block delivered twice".into()));
             }
             received[pos] += data.len();
             stats.chunks += 1;
@@ -933,7 +952,10 @@ impl RepairProgram {
                     low[pos] += l2;
                 }
             } else if ahead[pos].insert(offset, data.len()).is_some() {
-                anyhow::bail!("overlapping or duplicate chunk at {offset} of block {block}");
+                return Err(chunk_protocol(
+                    block,
+                    format!("overlapping or duplicate chunk at offset {offset}"),
+                ));
             }
 
             // Advance ops: one in-order sweep reaches the fixpoint since
@@ -1618,6 +1640,141 @@ mod tests {
         // well-formed control: the same generator, unmodified, passes
         let (out, _) = run(chunk_deliveries(&fetch, &blocks, 64)).unwrap();
         assert_eq!(out[0], stripe[0]);
+    }
+
+    #[test]
+    fn chunk_protocol_violations_downcast_to_typed_errors() {
+        // Every range-level protocol violation — duplicate, overlap,
+        // overrun, empty chunk, zero-length block twice — must surface
+        // as RepairError::ChunkProtocol naming the offending block, so
+        // resilience layers can tell a misbehaving stream from an
+        // honest read failure.
+        let codec = StripeCodec::new(Scheme::new(SchemeKind::AzureLrc, 6, 2, 2));
+        let s = &codec.scheme;
+        let mut rng = Prng::new(0x7E57_BAD);
+        let data: Vec<Vec<u8>> = (0..s.k).map(|_| rng.bytes(128)).collect();
+        let stripe = codec.encode_stripe(&data);
+        let program = RepairProgram::for_pattern(s, &[0]).unwrap();
+        let blocks = erase(&stripe, &[0]);
+        let fetch: Vec<usize> = program.fetch().iter().copied().collect();
+        let typed = |deliveries: Vec<BlockChunk>| -> (usize, String) {
+            let mut scratch = ScratchBuffers::new();
+            let err = program
+                .execute_chunk_pipelined(&mut IterChunks(deliveries.into_iter()), &mut scratch, 64)
+                .unwrap_err();
+            match err.chain().find_map(|c| c.downcast_ref::<repair::RepairError>()) {
+                Some(repair::RepairError::ChunkProtocol { block, detail }) => {
+                    (*block, detail.clone())
+                }
+                other => panic!("expected ChunkProtocol, got {other:?} ({err:#})"),
+            }
+        };
+
+        // exact duplicate of an already-absorbed range
+        let mut dup = chunk_deliveries(&fetch, &blocks, 64);
+        dup.push(dup[0].clone());
+        let (block, detail) = typed(dup);
+        assert_eq!(block, fetch[0]);
+        assert!(detail.contains("duplicate"), "{detail}");
+
+        // duplicate of a range still parked in the out-of-order buffer
+        let mut parked = chunk_deliveries(&fetch, &blocks, 64);
+        parked.swap(0, 1); // offset-64 range arrives first, waits in `ahead`
+        let again = parked[0].clone();
+        parked.insert(1, again);
+        let (block, detail) = typed(parked);
+        assert_eq!(block, fetch[0]);
+        assert!(detail.contains("duplicate"), "{detail}");
+
+        // range straddling the contiguous watermark
+        let mut overlap = chunk_deliveries(&fetch, &blocks, 64);
+        let straddle =
+            BlockChunk { block: fetch[0], offset: 32, data: vec![0u8; 64], block_len: 128 };
+        overlap.insert(1, straddle);
+        let (block, detail) = typed(overlap);
+        assert_eq!(block, fetch[0]);
+        assert!(detail.contains("overlapping"), "{detail}");
+
+        // range overrunning the declared block length
+        let mut over = chunk_deliveries(&fetch, &blocks, 64);
+        over[0].offset = 96; // 96 + 64 > 128
+        let (block, detail) = typed(over);
+        assert_eq!(block, fetch[0]);
+        assert!(detail.contains("overruns"), "{detail}");
+
+        // empty chunk for a non-empty block
+        let mut empty = chunk_deliveries(&fetch, &blocks, 64);
+        empty.insert(0, BlockChunk { block: fetch[0], offset: 0, data: Vec::new(), block_len: 128 });
+        let (block, detail) = typed(empty);
+        assert_eq!(block, fetch[0]);
+        assert!(detail.contains("empty chunk"), "{detail}");
+
+        // zero-length block delivered twice (needs an all-empty stripe)
+        let zdata: Vec<Vec<u8>> = vec![Vec::new(); s.k];
+        let zstripe = codec.encode_stripe(&zdata);
+        let zblocks = erase(&zstripe, &[0]);
+        let mut ztwice = chunk_deliveries(&fetch, &zblocks, 64);
+        ztwice.push(ztwice[0].clone());
+        let (block, detail) = typed(ztwice);
+        assert_eq!(block, fetch[0]);
+        assert!(detail.contains("twice"), "{detail}");
+    }
+
+    /// A [`ChunkStream`] that delivers a prefix of well-formed ranges
+    /// and then fails like a broken I/O backend mid-flight.
+    struct FailAfter {
+        chunks: std::vec::IntoIter<BlockChunk>,
+        remaining: usize,
+    }
+
+    impl ChunkStream for FailAfter {
+        fn next_chunk(&mut self) -> anyhow::Result<Option<BlockChunk>> {
+            if self.remaining == 0 {
+                anyhow::bail!("injected mid-stream read failure");
+            }
+            self.remaining -= 1;
+            Ok(self.chunks.next())
+        }
+    }
+
+    #[test]
+    fn chunk_pipelined_stream_error_after_first_column_fired() {
+        // A stream that dies *after* the readiness frontier has already
+        // fired columns must propagate its own error (not a protocol
+        // violation), return no output, and leave scratch reusable.
+        let codec = StripeCodec::new(Scheme::new(SchemeKind::AzureLrc, 6, 2, 2));
+        let s = &codec.scheme;
+        let mut rng = Prng::new(0x5AD_F10);
+        let data: Vec<Vec<u8>> = (0..s.k).map(|_| rng.bytes(256)).collect();
+        let stripe = codec.encode_stripe(&data);
+        let program = RepairProgram::for_pattern(s, &[0]).unwrap();
+        let blocks = erase(&stripe, &[0]);
+        let fetch: Vec<usize> = program.fetch().iter().copied().collect();
+        let chunk = 64usize;
+        let mut deliveries = chunk_deliveries(&fetch, &blocks, chunk);
+        // Round-robin across blocks: after the first |fetch| deliveries
+        // every block's watermark is one column deep, so the (single)
+        // local-repair op has fired its first column — exactly then the
+        // stream fails.
+        deliveries.sort_by_key(|c| c.offset);
+        let mut stream = FailAfter { chunks: deliveries.into_iter(), remaining: fetch.len() };
+        let mut scratch = ScratchBuffers::new();
+        let err = program.execute_chunk_pipelined(&mut stream, &mut scratch, chunk).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("injected mid-stream read failure"),
+            "stream's own error must propagate: {err:#}"
+        );
+        assert!(
+            err.chain().find_map(|c| c.downcast_ref::<repair::RepairError>()).is_none(),
+            "an honest stream failure must not masquerade as a protocol violation"
+        );
+        // The failed run handed back no output; the same scratch then
+        // decodes a clean stream to oracle bytes (no poisoned state).
+        let clean = chunk_deliveries(&fetch, &blocks, chunk);
+        let (out, _) = program
+            .execute_chunk_pipelined(&mut IterChunks(clean.into_iter()), &mut scratch, chunk)
+            .unwrap();
+        assert_eq!(out[0], &stripe[0][..]);
     }
 
     #[test]

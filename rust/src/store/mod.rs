@@ -27,11 +27,13 @@
 //! plug in later without touching the executor.
 
 pub mod backend;
+pub mod crc32;
 
 pub use backend::{
     make_backend, plan_requests, BackendChunkStream, CompletedRead, IoBackend, IoBackendKind,
     ReadRequest, SyncPreadBackend, ThreadPoolBackend,
 };
+pub use crc32::crc32;
 
 use crate::cluster::metadata::BlockKey;
 use crate::repair::RepairError;
@@ -51,12 +53,16 @@ pub struct BlockLocation {
     pub len: u64,
 }
 
-/// One manifest row: block file (relative to the store root) + extent.
+/// One manifest row: block file (relative to the store root) + extent
+/// + the block's CRC-32 ([`crc32::crc32`]). `crc` is `None` only for
+/// rows parsed from a pre-CRC (five-field) manifest — such blocks are
+/// served unverified; every write records the checksum.
 #[derive(Clone, Debug, PartialEq, Eq)]
 struct ManifestEntry {
     file: String,
     offset: u64,
     len: u64,
+    crc: Option<u32>,
 }
 
 /// File-backed datanode store: one file per block, a crash-safe
@@ -87,11 +93,31 @@ impl FileStore {
     /// the recovery-path entry point — repairing from a store whose
     /// manifest is gone must fail loudly
     /// ([`RepairError::MissingManifest`]), not resurface as an empty
-    /// store that reports every block missing.
+    /// store that reports every block missing. Crash recovery: orphaned
+    /// `.tmp-*` files left by a crash mid-`put` (the write died before
+    /// its `rename`) are swept and deleted — the manifest never pointed
+    /// at them, so they are garbage by construction — and a torn
+    /// *final* manifest line (the file does not end in a newline) is
+    /// tolerated as the pre-crash state; torn interior lines still
+    /// error, they mean real corruption, not a crash.
     pub fn load(root: impl Into<PathBuf>) -> anyhow::Result<Self> {
         let root = root.into();
         let manifest = Self::read_manifest(&root)?;
+        Self::sweep_orphan_tmp(&root);
         Ok(Self { root, manifest })
+    }
+
+    /// Delete `.tmp-*` orphans under `root`. Best-effort: an unreadable
+    /// directory or a vanished entry is not an error — the files are
+    /// garbage whether or not this pass removes them.
+    fn sweep_orphan_tmp(root: &Path) {
+        let Ok(entries) = std::fs::read_dir(root) else { return };
+        for entry in entries.flatten() {
+            let name = entry.file_name();
+            if name.to_string_lossy().starts_with(".tmp-") {
+                let _ = std::fs::remove_file(entry.path());
+            }
+        }
     }
 
     fn read_manifest(root: &Path) -> anyhow::Result<BTreeMap<BlockKey, ManifestEntry>> {
@@ -105,35 +131,67 @@ impl FileStore {
             }
             Err(e) => return Err(e.into()),
         };
-        let mut lines = text.lines();
         anyhow::ensure!(
-            lines.next() == Some(MANIFEST_MAGIC),
+            text.lines().next() == Some(MANIFEST_MAGIC),
             "unrecognized manifest header in {}",
             path.display()
         );
         let mut manifest = BTreeMap::new();
-        for line in lines {
+        // A line may be torn by a crash only if it is the last one and
+        // the file lost its trailing newline with it.
+        let torn_tail_ok = !text.ends_with('\n');
+        let body: Vec<&str> = text.lines().skip(1).collect();
+        for (i, line) in body.iter().enumerate() {
             if line.is_empty() {
                 continue;
             }
-            let mut f = line.split_whitespace();
-            let (Some(s), Some(b), Some(file), Some(off), Some(len)) =
-                (f.next(), f.next(), f.next(), f.next(), f.next())
-            else {
-                anyhow::bail!("malformed manifest line {line:?} in {}", path.display());
-            };
-            let key = BlockKey {
-                stripe: u64::from_str_radix(s, 16)
-                    .map_err(|_| anyhow::anyhow!("bad stripe id in manifest line {line:?}"))?,
-                index: u32::from_str_radix(b, 16)
-                    .map_err(|_| anyhow::anyhow!("bad block index in manifest line {line:?}"))?,
-            };
-            manifest.insert(
-                key,
-                ManifestEntry { file: file.to_string(), offset: off.parse()?, len: len.parse()? },
-            );
+            let last = i + 1 == body.len();
+            match Self::parse_manifest_line(line) {
+                Ok((key, entry)) => {
+                    manifest.insert(key, entry);
+                }
+                Err(_) if last && torn_tail_ok => {
+                    // Torn tail from a crash mid-write: the entry never
+                    // committed; recover to the pre-crash state.
+                    continue;
+                }
+                Err(e) => {
+                    return Err(e.context(format!(
+                        "malformed manifest line {line:?} in {}",
+                        path.display()
+                    )))
+                }
+            }
         }
         Ok(manifest)
+    }
+
+    /// Parse one manifest row: `stripe index file offset len [crc]`.
+    /// Five fields is the pre-CRC format (`crc: None`); six fields
+    /// carry the block's CRC-32 in hex.
+    fn parse_manifest_line(line: &str) -> anyhow::Result<(BlockKey, ManifestEntry)> {
+        let f: Vec<&str> = line.split_whitespace().collect();
+        anyhow::ensure!(
+            f.len() == 5 || f.len() == 6,
+            "expected 5 or 6 fields, got {}",
+            f.len()
+        );
+        let key = BlockKey {
+            stripe: u64::from_str_radix(f[0], 16)
+                .map_err(|_| anyhow::anyhow!("bad stripe id"))?,
+            index: u32::from_str_radix(f[1], 16)
+                .map_err(|_| anyhow::anyhow!("bad block index"))?,
+        };
+        let crc = match f.get(5) {
+            Some(c) => Some(
+                u32::from_str_radix(c, 16).map_err(|_| anyhow::anyhow!("bad block crc"))?,
+            ),
+            None => None,
+        };
+        Ok((
+            key,
+            ManifestEntry { file: f[2].to_string(), offset: f[3].parse()?, len: f[4].parse()?, crc },
+        ))
     }
 
     /// Rewrite the manifest crash-safely: full tmp write + rename, so a
@@ -148,10 +206,19 @@ impl FileStore {
             text.push_str(MANIFEST_MAGIC);
             text.push('\n');
             for (k, e) in &self.manifest {
-                text.push_str(&format!(
-                    "{:016x} {:08x} {} {} {}\n",
-                    k.stripe, k.index, e.file, e.offset, e.len
-                ));
+                match e.crc {
+                    Some(crc) => text.push_str(&format!(
+                        "{:016x} {:08x} {} {} {} {:08x}\n",
+                        k.stripe, k.index, e.file, e.offset, e.len, crc
+                    )),
+                    // Legacy row loaded from a pre-CRC manifest: keep it
+                    // in the old format rather than inventing a checksum
+                    // the bytes were never verified against.
+                    None => text.push_str(&format!(
+                        "{:016x} {:08x} {} {} {}\n",
+                        k.stripe, k.index, e.file, e.offset, e.len
+                    )),
+                }
             }
             f.write_all(text.as_bytes())?;
             f.sync_all()?;
@@ -177,14 +244,31 @@ impl FileStore {
         &self.root
     }
 
-    /// Read a block's full contents, validating length against the
-    /// manifest: a shorter file is a torn write and surfaces as
-    /// [`RepairError::TruncatedBlock`].
+    /// Read a block's full contents, validating length and checksum
+    /// against the manifest: a shorter file is a torn write and
+    /// surfaces as [`RepairError::TruncatedBlock`]; right-length wrong
+    /// bytes are bit-rot and surface as [`RepairError::CorruptBlock`]
+    /// (pre-CRC manifest rows are served unverified). Sub-range reads
+    /// ([`crate::cluster::store::BlockStore::get_segment`]) cannot
+    /// verify a whole-block checksum and stay length-validated only.
     pub fn read_block(&self, key: BlockKey) -> anyhow::Result<Option<Vec<u8>>> {
-        let Some(loc) = self.locate(key) else { return Ok(None) };
+        let Some(entry) = self.manifest.get(&key) else { return Ok(None) };
+        let loc = BlockLocation {
+            path: self.root.join(&entry.file),
+            offset: entry.offset,
+            len: entry.len,
+        };
         let data = read_extent(&loc.path, loc.offset, loc.len).map_err(|e| {
             truncation_or_io(e, key, loc.len, &loc.path)
         })?;
+        if let Some(want) = entry.crc {
+            if crc32(&data) != want {
+                return Err(anyhow::Error::new(RepairError::CorruptBlock {
+                    stripe: key.stripe,
+                    block: key.index as usize,
+                }));
+            }
+        }
         Ok(Some(data))
     }
 
@@ -193,8 +277,10 @@ impl FileStore {
         let tmp = self.root.join(format!(".tmp-{file}"));
         std::fs::write(&tmp, data)?;
         std::fs::rename(&tmp, self.root.join(&file))?;
-        self.manifest
-            .insert(key, ManifestEntry { file, offset: 0, len: data.len() as u64 });
+        self.manifest.insert(
+            key,
+            ManifestEntry { file, offset: 0, len: data.len() as u64, crc: Some(crc32(data)) },
+        );
         self.write_manifest()
     }
 }
@@ -399,6 +485,95 @@ mod tests {
             err.downcast_ref::<RepairError>(),
             Some(&RepairError::MissingBlock { stripe: 5, block: 2 })
         ));
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn crash_recovery_sweeps_tmp_orphans_and_tolerates_a_torn_tail() {
+        let root = tmp_root("crash");
+        let mut rng = Prng::new(0xC7A5);
+        let (a, b) = (rng.bytes(700), rng.bytes(900));
+        {
+            let mut s = FileStore::open(&root).unwrap();
+            s.put(key(1, 0), a.clone()).unwrap();
+            s.put(key(1, 1), b.clone()).unwrap();
+        }
+        // Simulate a crash mid-put: an orphaned tmp block file and a
+        // torn (newline-less) manifest line for the entry that never
+        // committed.
+        let orphan = root.join(".tmp-00000000000000ff_00000002.blk");
+        std::fs::write(&orphan, b"half a block").unwrap();
+        let manifest_path = root.join(MANIFEST_NAME);
+        let mut text = std::fs::read_to_string(&manifest_path).unwrap();
+        text.push_str("00000000000000ff 000000"); // torn mid-field, no newline
+        std::fs::write(&manifest_path, &text).unwrap();
+
+        let s = FileStore::load(&root).unwrap();
+        assert!(!orphan.exists(), "load must sweep orphaned tmp files");
+        assert_eq!(s.len(), 2, "the torn entry never committed");
+        assert_eq!(s.get(key(1, 0)).unwrap().unwrap(), a);
+        assert_eq!(s.get(key(1, 1)).unwrap().unwrap(), b);
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn torn_interior_line_is_still_an_error() {
+        let root = tmp_root("interior");
+        std::fs::create_dir_all(&root).unwrap();
+        // A malformed line that is NOT the tail is corruption, not a
+        // crash artifact — the newline after it proves a later write
+        // succeeded.
+        std::fs::write(
+            root.join(MANIFEST_NAME),
+            format!("{MANIFEST_MAGIC}\n0001 000000\n0002 00000001 f.blk 0 10 00000000\n"),
+        )
+        .unwrap();
+        assert!(FileStore::load(&root).is_err());
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn corrupt_block_file_is_a_typed_error() {
+        let root = tmp_root("corrupt");
+        let mut s = FileStore::open(&root).unwrap();
+        let mut rng = Prng::new(0xC0);
+        let data = rng.bytes(2048);
+        s.put(key(9, 4), data.clone()).unwrap();
+        // Flip one byte in place: length still matches the manifest, so
+        // only the checksum can catch it.
+        let loc = FileStore::locate(&s, key(9, 4)).unwrap();
+        let mut on_disk = std::fs::read(&loc.path).unwrap();
+        on_disk[1000] ^= 0x40;
+        std::fs::write(&loc.path, &on_disk).unwrap();
+        let err = s.read_block(key(9, 4)).unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<RepairError>(),
+            Some(&RepairError::CorruptBlock { stripe: 9, block: 4 })
+        ));
+        // The typed error also tunnels through the BlockStore io seam.
+        let io_err = s.get(key(9, 4)).unwrap_err();
+        let lifted = anyhow::Error::new(io_err);
+        assert!(lifted
+            .chain()
+            .any(|c| matches!(
+                c.downcast_ref::<RepairError>(),
+                Some(RepairError::CorruptBlock { .. })
+            )));
+        std::fs::remove_dir_all(&root).unwrap();
+    }
+
+    #[test]
+    fn legacy_five_field_manifest_loads_and_serves_unverified() {
+        let root = tmp_root("legacy");
+        std::fs::create_dir_all(&root).unwrap();
+        std::fs::write(root.join("legacy.blk"), b"0123456789").unwrap();
+        std::fs::write(
+            root.join(MANIFEST_NAME),
+            format!("{MANIFEST_MAGIC}\n0000000000000003 00000001 legacy.blk 0 10\n"),
+        )
+        .unwrap();
+        let s = FileStore::load(&root).unwrap();
+        assert_eq!(s.get(key(3, 1)).unwrap().unwrap(), b"0123456789".to_vec());
         std::fs::remove_dir_all(&root).unwrap();
     }
 

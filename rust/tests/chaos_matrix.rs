@@ -1,0 +1,363 @@
+//! The chaos matrix (acceptance test for the fault-injection plane):
+//! every injected fault kind × repair class × all six LRC
+//! constructions.
+//!
+//! For every recoverable combination the chaos session must finish
+//! with the repaired stripe **byte-identical to the pre-fault
+//! snapshot** (checked block-by-block against the datanodes *and* by
+//! a full equation scrub), and the [`ChaosReport`] counters must be
+//! nonzero exactly for the fault class that was injected. Lost causes
+//! surface as typed [`RepairError::Unrecoverable`], never as silent
+//! corruption. A zero-fault plan reproduces the plain session's
+//! reports bit-for-bit (wall-clock `decode_cpu_s` aside).
+//!
+//! The I/O-backend seam ([`FaultyBackend`] over the real file-backed
+//! read path) is swept separately at the bottom: failed, truncated and
+//! stalled reads across every construction.
+//!
+//! [`ChaosReport`]: cp_lrc::chaos::ChaosReport
+//! [`FaultyBackend`]: cp_lrc::chaos::FaultyBackend
+
+use cp_lrc::chaos::{FaultPlan, FaultyBackend, IoFault};
+use cp_lrc::cluster::metadata::{BlockKey, StripeId};
+use cp_lrc::cluster::{Cluster, ClusterConfig};
+use cp_lrc::codec::StripeCodec;
+use cp_lrc::codes::{Scheme, SchemeKind};
+use cp_lrc::prng::Prng;
+use cp_lrc::repair::{RepairError, RepairProgram, ScratchBuffers, SliceSource};
+use cp_lrc::store::{
+    make_backend, plan_requests, BackendChunkStream, BlockLocation, IoBackendKind,
+};
+use std::collections::BTreeMap;
+
+fn cfg(kind: SchemeKind) -> ClusterConfig {
+    ClusterConfig {
+        num_datanodes: 20,
+        gbps: 1.0,
+        latency_s: 0.001,
+        block_size: 2048,
+        kind,
+        k: 6,
+        r: 2,
+        p: 2,
+        ..Default::default()
+    }
+}
+
+/// Read every block of `sid` off its current datanode.
+fn snapshot(c: &Cluster, sid: StripeId) -> Vec<Vec<u8>> {
+    let info = c.meta.stripes[&sid].clone();
+    (0..info.n())
+        .map(|b| {
+            let node = info.block_nodes[b];
+            c.nodes[node]
+                .get(BlockKey { stripe: sid, index: b as u32 })
+                .unwrap_or_else(|| panic!("block {b} of stripe {sid} unreadable"))
+        })
+        .collect()
+}
+
+/// The fault kinds the fetch-seam matrix sweeps.
+const FAULTS: [&str; 6] = ["transient", "corrupt", "short", "lost", "straggler", "death"];
+
+/// Pick a fetched survivor whose additional loss keeps the pattern
+/// recoverable (the re-plan ladder needs somewhere to step down to).
+fn expendable_survivor(
+    scheme: &Scheme,
+    program: &RepairProgram,
+    erased: &[usize],
+) -> Option<usize> {
+    program.fetch().iter().copied().find(|&b| {
+        let mut worse: Vec<usize> = erased.to_vec();
+        worse.push(b);
+        worse.sort_unstable();
+        scheme.recoverable(&worse)
+    })
+}
+
+#[test]
+fn chaos_matrix_every_fault_every_construction_byte_matches_the_oracle() {
+    for (ki, kind) in SchemeKind::ALL_LRC.into_iter().enumerate() {
+        for (fi, &fault) in FAULTS.iter().enumerate() {
+            let seed = (ki * FAULTS.len() + fi) as u64 + 1;
+            let mut c = Cluster::new(cfg(kind));
+            let sid = c.fill_random_stripes(1, 0xC4A0 + seed)[0];
+            let want = snapshot(&c, sid);
+            let victim = c.meta.stripes[&sid].block_nodes[0];
+            c.fail_node(victim);
+
+            let program = RepairProgram::for_pattern(c.scheme(), &[0]).unwrap();
+            let target = match fault {
+                // Faults that escalate to a second erasure need a
+                // survivor whose loss stays recoverable.
+                "corrupt" | "short" | "lost" | "death" => {
+                    match expendable_survivor(c.scheme().as_ref(), &program, &[0]) {
+                        Some(b) => b,
+                        None => continue, // no rung to step down to
+                    }
+                }
+                _ => *program.fetch().iter().next().unwrap(),
+            };
+            let target_node = c.meta.stripes[&sid].block_nodes[target];
+
+            let plan = match fault {
+                "transient" => FaultPlan::new(seed).fail_fetch(sid, target, 2),
+                "corrupt" => FaultPlan::new(seed).corrupt_fetch(sid, target),
+                "short" => FaultPlan::new(seed).short_fetch(sid, target),
+                "lost" => FaultPlan::new(seed).lose_block(sid, target),
+                "straggler" => {
+                    FaultPlan::new(seed).straggler(target_node, 50.0).with_hedge(1.2)
+                }
+                "death" => FaultPlan::new(seed).kill_at(target_node, 0.0005),
+                _ => unreachable!(),
+            };
+
+            let s = c.repair().stripe(sid, &[0]).chaos(plan).run().unwrap_or_else(|e| {
+                panic!("{kind:?}/{fault}: recoverable pattern failed: {e:#}")
+            });
+            let cz = s.chaos.as_ref().expect("chaos session carries a report");
+            let ctx = format!("{kind:?}/{fault}: {cz:?}");
+
+            // Counters are nonzero exactly for the injected fault class.
+            match fault {
+                "transient" => {
+                    assert_eq!(cz.retries, 2, "{ctx}");
+                    assert_eq!(cz.replans, 0, "{ctx}");
+                }
+                "corrupt" => {
+                    assert_eq!(cz.corruptions_detected, 1, "{ctx}");
+                    assert!(cz.replans >= 1, "{ctx}");
+                }
+                "short" => {
+                    // A short block trips the length check, not the CRC.
+                    assert_eq!(cz.corruptions_detected, 0, "{ctx}");
+                    assert!(cz.replans >= 1, "{ctx}");
+                }
+                "lost" => {
+                    assert!(cz.retries >= 1, "{ctx}: exhausting the budget burns retries");
+                    assert!(cz.replans >= 1, "{ctx}");
+                }
+                "straggler" => {
+                    assert!(cz.hedges >= 1, "{ctx}: slowdown 50 must trip hedge 1.2");
+                    assert_eq!(cz.replans, 0, "{ctx}");
+                }
+                "death" => {
+                    assert!(cz.replans >= 1, "{ctx}");
+                    assert_eq!(cz.corruptions_detected, 0, "{ctx}");
+                }
+                _ => unreachable!(),
+            }
+            if fault != "straggler" {
+                assert_eq!(cz.hedges, 0, "{ctx}: hedges only arm for stragglers");
+            }
+            if !matches!(fault, "transient" | "lost") {
+                assert_eq!(cz.retries, 0, "{ctx}: only retryable faults burn retries");
+            }
+            assert!(cz.degraded_completion_s > 0.0, "{ctx}");
+            assert_eq!(
+                cz.degraded_completion_s, s.completion_s,
+                "{ctx}: the degraded clock is the session completion"
+            );
+
+            // The oracle: every block of the stripe, wherever repair
+            // relocated it, is byte-identical to the pre-fault bytes.
+            let info = c.meta.stripes[&sid].clone();
+            for (b, w) in want.iter().enumerate() {
+                let got = c.nodes[info.block_nodes[b]]
+                    .get(BlockKey { stripe: sid, index: b as u32 })
+                    .unwrap_or_else(|| panic!("{ctx}: block {b} missing after repair"));
+                assert_eq!(&got, w, "{ctx}: block {b} differs from the oracle");
+            }
+            assert!(c.scrub_stripe(sid).unwrap(), "{ctx}: scrub after chaos");
+        }
+    }
+}
+
+#[test]
+fn deeper_repair_classes_survive_faults_down_the_ladder() {
+    // Start one rung down already (two erasures) and corrupt a fetched
+    // survivor, pushing the ladder further toward global repair.
+    for kind in SchemeKind::ALL_LRC {
+        let scheme = Scheme::new(kind, 6, 2, 2);
+        let erased = vec![0usize, 1];
+        if !scheme.recoverable(&erased) {
+            continue;
+        }
+        let mut c = Cluster::new(cfg(kind));
+        let sid = c.fill_random_stripes(1, 0xDEE9)[0];
+        let want = snapshot(&c, sid);
+        let victim = c.meta.stripes[&sid].block_nodes[0];
+        c.fail_node(victim);
+        let program = RepairProgram::for_pattern(c.scheme(), &erased).unwrap();
+        let Some(target) = expendable_survivor(c.scheme().as_ref(), &program, &erased) else {
+            continue;
+        };
+        let s = c
+            .repair()
+            .stripe(sid, &erased)
+            .chaos(FaultPlan::new(0xD0 + sid).corrupt_fetch(sid, target))
+            .run()
+            .unwrap_or_else(|e| panic!("{kind:?}: {e:#}"));
+        let cz = s.chaos.as_ref().unwrap();
+        assert_eq!(cz.corruptions_detected, 1, "{kind:?}");
+        assert!(cz.replans >= 1, "{kind:?}");
+        let info = c.meta.stripes[&sid].clone();
+        for (b, w) in want.iter().enumerate() {
+            let got = c.nodes[info.block_nodes[b]]
+                .get(BlockKey { stripe: sid, index: b as u32 })
+                .unwrap();
+            assert_eq!(&got, w, "{kind:?}: block {b} differs after ladder descent");
+        }
+        assert!(c.scrub_stripe(sid).unwrap(), "{kind:?}");
+    }
+}
+
+#[test]
+fn unrecoverable_patterns_surface_typed_errors_for_every_construction() {
+    for kind in SchemeKind::ALL_LRC {
+        let mut c = Cluster::new(cfg(kind));
+        let sid = c.fill_random_stripes(1, 0xBAD)[0];
+        let n = c.meta.stripes[&sid].n();
+        c.fail_node(c.meta.stripes[&sid].block_nodes[0]);
+        let mut plan = FaultPlan::new(13);
+        for b in 1..n {
+            plan = plan.lose_block(sid, b);
+        }
+        let err = c.repair().stripe(sid, &[0]).chaos(plan).run().unwrap_err();
+        let typed = err.chain().find_map(|e| e.downcast_ref::<RepairError>());
+        assert!(
+            matches!(typed, Some(RepairError::Unrecoverable { .. })),
+            "{kind:?}: expected typed Unrecoverable, got: {err:#}"
+        );
+    }
+}
+
+#[test]
+fn zero_fault_chaos_sessions_are_bit_identical_for_every_construction() {
+    for kind in SchemeKind::ALL_LRC {
+        let build = || {
+            let mut c = Cluster::new(cfg(kind));
+            let sids = c.fill_random_stripes(2, 0x2E80)[..].to_vec();
+            let v = c.meta.stripes[&sids[0]].block_nodes[0];
+            c.fail_node(v);
+            c
+        };
+        let mut c1 = build();
+        let plain = c1.repair().threads(2).run().unwrap();
+        let mut c2 = build();
+        let chaotic = c2.repair().threads(2).chaos(FaultPlan::new(99)).run().unwrap();
+        assert!(plain.chaos.is_none(), "{kind:?}");
+        let cz = chaotic.chaos.as_ref().unwrap();
+        assert_eq!(
+            cz.retries + cz.hedges + cz.replans + cz.corruptions_detected,
+            0,
+            "{kind:?}"
+        );
+        assert_eq!(cz.degraded_completion_s, chaotic.completion_s, "{kind:?}");
+        assert_eq!(plain.completion_s, chaotic.completion_s, "{kind:?}");
+        assert_eq!(plain.serial_s, chaotic.serial_s, "{kind:?}");
+        assert_eq!(plain.contention_delay_s, chaotic.contention_delay_s, "{kind:?}");
+        assert_eq!(plain.reports.len(), chaotic.reports.len(), "{kind:?}");
+        for (p, q) in plain.reports.iter().zip(chaotic.reports.iter()) {
+            assert_eq!(p.stripe, q.stripe);
+            assert_eq!(p.blocks_repaired, q.blocks_repaired);
+            assert_eq!(p.blocks_read, q.blocks_read);
+            assert_eq!(p.bytes_read, q.bytes_read);
+            assert_eq!(p.read_s, q.read_s);
+            assert_eq!(p.wb_s, q.wb_s);
+            assert_eq!(p.sim_time_s, q.sim_time_s);
+            assert_eq!(p.decode_sim_s, q.decode_sim_s);
+            assert_eq!(p.completion_s, q.completion_s);
+            assert_eq!(p.issue_s, q.issue_s);
+            assert_eq!(p.contended_read_s, q.contended_read_s);
+            assert_eq!(p.session_done_s, q.session_done_s);
+        }
+    }
+}
+
+// ------------------------------------------------- I/O-backend seam
+
+fn stripe_on_disk(
+    rng: &mut Prng,
+    codec: &StripeCodec,
+    program: &RepairProgram,
+    len: usize,
+    erased: &[usize],
+    dir: &std::path::Path,
+) -> (Vec<Option<Vec<u8>>>, Vec<(usize, BlockLocation)>) {
+    let data: Vec<Vec<u8>> = (0..codec.scheme.k).map(|_| rng.bytes(len)).collect();
+    let stripe = codec.encode_stripe(&data);
+    let blocks: Vec<Option<Vec<u8>>> = stripe
+        .iter()
+        .enumerate()
+        .map(|(b, blk)| if erased.contains(&b) { None } else { Some(blk.clone()) })
+        .collect();
+    let located = program
+        .fetch()
+        .iter()
+        .map(|&b| {
+            let path = dir.join(format!("block-{b}.blk"));
+            std::fs::write(&path, &stripe[b]).unwrap();
+            (b, BlockLocation { path, offset: 0, len: stripe[b].len() as u64 })
+        })
+        .collect();
+    (blocks, located)
+}
+
+#[test]
+fn io_backend_faults_error_or_match_never_corrupt() {
+    let dir =
+        std::env::temp_dir().join(format!("cp-lrc-chaos-io-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut rng = Prng::new(0x10C4A05);
+    let chunk = 512usize;
+    let len = 2048usize;
+    for kind in SchemeKind::ALL_LRC {
+        let scheme = Scheme::new(kind, 6, 2, 2);
+        let codec = StripeCodec::new(scheme.clone());
+        let erased = vec![0usize];
+        let program = RepairProgram::for_pattern(&scheme, &erased).unwrap();
+        let (blocks, located) =
+            stripe_on_disk(&mut rng, &codec, &program, len, &erased, &dir);
+        let mut oracle_scratch = ScratchBuffers::new();
+        let want: Vec<Vec<u8>> = program
+            .execute(&mut SliceSource::new(&blocks), &mut oracle_scratch)
+            .unwrap()
+            .iter()
+            .map(|o| o.to_vec())
+            .collect();
+        let victim = *program.fetch().iter().next().unwrap();
+        for fault in [
+            IoFault::FailRead,
+            IoFault::Truncate { at: chunk / 2 },
+            IoFault::Stall { delay_ms: 1 },
+        ] {
+            let mut inner = make_backend(IoBackendKind::SyncPread);
+            inner.submit(plan_requests(&located, chunk)).unwrap();
+            let mut backend =
+                FaultyBackend::new(inner, BTreeMap::from([(victim, fault)]));
+            let mut scratch = ScratchBuffers::new();
+            let mut stream = BackendChunkStream::new(&mut backend);
+            let result = program.execute_chunk_pipelined(&mut stream, &mut scratch, chunk);
+            match fault {
+                IoFault::Stall { .. } => {
+                    // A stalled read is only late, never wrong.
+                    let (got, _) = result.unwrap_or_else(|e| panic!("{kind:?}: {e:#}"));
+                    for (g, w) in got.iter().zip(want.iter()) {
+                        assert_eq!(*g, w.as_slice(), "{kind:?}: stall corrupted output");
+                    }
+                    assert_eq!(backend.injected_failures(), 0, "{kind:?}");
+                }
+                _ => {
+                    assert!(
+                        result.is_err(),
+                        "{kind:?}/{fault:?}: lost bytes must error, not decode garbage"
+                    );
+                    assert!(backend.injected_failures() >= 1, "{kind:?}/{fault:?}");
+                }
+            }
+        }
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
