@@ -1,0 +1,149 @@
+//! Failure-domain benchmarks: what the rack/spine hierarchy costs and
+//! what rack-aware planning buys back. Recorded in
+//! `BENCH_topology.json` at the workspace root.
+//!
+//! Two sweeps over the worked 16-node / 4-rack / RackSpread geometry:
+//!
+//! * **cross_rack_sweep** — whole-node repair with rack-aware vs
+//!   rack-oblivious replacement selection, per CP scheme: cross-rack
+//!   repair bytes (the shared-uplink traffic the tentpole minimizes)
+//!   and the session completion clock, at identical plan cost.
+//! * **oversubscription_sweep** — the same rack-aware repair as the
+//!   top-of-rack uplinks thin from full bisection (1:1) to 16:1;
+//!   completion grows as the shared uplinks become the bottleneck.
+//!
+//! Wall-clock stats per point measure the session machinery itself
+//! (planning, the fair-share solve with uplink rows, bookkeeping), not
+//! disk time — the data plane here is the in-memory store.
+
+use cp_lrc::bench_harness::{Bench, Stats};
+use cp_lrc::cluster::placement::PlacementPolicy;
+use cp_lrc::cluster::{Cluster, ClusterConfig, RackConfig};
+use cp_lrc::codes::SchemeKind;
+
+const BLOCK_BYTES: usize = 1 << 20;
+const STRIPES: usize = 4;
+const RACKS: usize = 4;
+const NODES: usize = 16;
+
+fn cluster(kind: SchemeKind, rack_aware: bool, oversubscription: f64) -> Cluster {
+    let rc = RackConfig::new(RACKS, oversubscription);
+    let mut c = Cluster::new(ClusterConfig {
+        num_datanodes: NODES,
+        gbps: 1.0,
+        latency_s: 0.001,
+        block_size: BLOCK_BYTES,
+        kind,
+        k: 6,
+        r: 2,
+        p: 2,
+        placement: PlacementPolicy::RackSpread { racks: RACKS, max_per_rack: 3 },
+        topology: Some(if rack_aware { rc } else { rc.oblivious() }),
+        ..Default::default()
+    });
+    c.fill_random_stripes(STRIPES, 0x7090);
+    c
+}
+
+/// One whole-node repair: fail the node behind the lowest stripe's
+/// block 4, repair every affected stripe, restore. Returns
+/// (cross_rack_bytes, bytes_read, completion_s).
+fn session(c: &mut Cluster) -> (u64, u64, f64) {
+    let sid = *c.meta.stripes.keys().min().expect("stripes filled");
+    let victim = c.meta.stripes[&sid].block_nodes[4];
+    c.fail_node(victim);
+    let s = c.repair().threads(2).run().expect("repair session");
+    c.restore_node(victim);
+    let cross: u64 = s.reports.iter().map(|r| r.cross_rack_bytes).sum();
+    let bytes: u64 = s.reports.iter().map(|r| r.bytes_read).sum();
+    (cross, bytes, s.completion_s)
+}
+
+fn json_stats(s: &Stats) -> String {
+    format!(
+        "{{\"mean_ns\": {:.1}, \"median_ns\": {:.1}, \"min_ns\": {:.1}, \"p95_ns\": {:.1}, \"iters\": {}}}",
+        s.mean_ns, s.median_ns, s.min_ns, s.p95_ns, s.iters
+    )
+}
+
+fn entry(
+    label: &str,
+    rack_aware: bool,
+    oversubscription: f64,
+    point: (u64, u64, f64),
+    wall: &Stats,
+) -> String {
+    let (cross, bytes, completion_s) = point;
+    format!(
+        "      {{\"label\": \"{label}\", \"rack_aware\": {rack_aware}, \
+         \"oversubscription\": {oversubscription}, \"racks\": {RACKS}, \
+         \"block_bytes\": {BLOCK_BYTES}, \"stripes\": {STRIPES}, \
+         \"cross_rack_bytes\": {cross}, \"bytes_read\": {bytes}, \
+         \"repair_completion_s\": {completion_s:.6}, \"session_wallclock\": {}}}",
+        json_stats(wall)
+    )
+}
+
+fn main() {
+    let b = Bench::default();
+
+    let mut cross_results: Vec<String> = Vec::new();
+    for kind in [SchemeKind::CpAzure, SchemeKind::CpUniform] {
+        for rack_aware in [true, false] {
+            let mut c = cluster(kind, rack_aware, 4.0);
+            let mut last = (0u64, 0u64, 0.0f64);
+            let tag = if rack_aware { "aware" } else { "oblivious" };
+            let wall = b.run(&format!("topology/cross_rack/{}/{tag}", kind.name()), || {
+                last = session(&mut c);
+            });
+            if let Some(wall) = wall {
+                cross_results.push(entry(
+                    &format!("{}-{tag}", kind.name()),
+                    rack_aware,
+                    4.0,
+                    last,
+                    &wall,
+                ));
+            }
+        }
+    }
+
+    let mut oversub_results: Vec<String> = Vec::new();
+    for oversubscription in [1.0, 2.0, 4.0, 8.0, 16.0] {
+        let mut c = cluster(SchemeKind::CpAzure, true, oversubscription);
+        let mut last = (0u64, 0u64, 0.0f64);
+        let wall = b.run(&format!("topology/oversub/{oversubscription}x"), || {
+            last = session(&mut c);
+        });
+        if let Some(wall) = wall {
+            oversub_results.push(entry(
+                &format!("oversub-{oversubscription}x"),
+                true,
+                oversubscription,
+                last,
+                &wall,
+            ));
+        }
+    }
+
+    if cross_results.is_empty() && oversub_results.is_empty() {
+        return;
+    }
+    let doc = format!(
+        "{{\n  \"bench\": \"topology\",\n  \
+         \"description\": \"failure-domain repair on the hierarchical rack/spine network: \
+         cross-rack repair bytes and completion for rack-aware vs rack-oblivious whole-node \
+         repair (CP-Azure and CP-Uniform), and completion vs top-of-rack uplink \
+         oversubscription; wall-clock stats measure the session machinery itself\",\n  \
+         \"unit\": \"bytes (uplink traffic) / s (virtual completion clock) / ns (wall-clock stats)\",\n  \
+         \"regenerate\": \"cargo bench --bench topology\",\n  \
+         \"sections\": {{\n    \"cross_rack_sweep\": [\n{}\n    ],\n    \
+         \"oversubscription_sweep\": [\n{}\n    ]\n  }}\n}}\n",
+        cross_results.join(",\n"),
+        oversub_results.join(",\n")
+    );
+    match std::fs::write("BENCH_topology.json", &doc) {
+        Ok(()) => println!("wrote BENCH_topology.json"),
+        Err(e) => eprintln!("could not write BENCH_topology.json: {e}"),
+    }
+}

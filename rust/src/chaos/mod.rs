@@ -61,8 +61,12 @@ pub enum IoFault {
     /// The block's backing bytes end at absolute offset `at`: chunks
     /// beyond it vanish, the chunk straddling it arrives short.
     Truncate { at: usize },
-    /// Every completion of the block is delayed by a real sleep — a
-    /// slow device, not an error.
+    /// A slow device, not an error. In the measured path every
+    /// completion of the block sleeps for real (`delay_ms` per chunk);
+    /// on the virtual chaos clock the block's fetch starts `delay_ms`
+    /// late, charged once per block and counted in
+    /// [`ChaosReport::io_stall_s`] — deterministic, no wall clock
+    /// involved.
     Stall { delay_ms: u64 },
 }
 
@@ -156,6 +160,47 @@ impl FaultPlan {
         self
     }
 
+    /// Correlated fault: kill every datanode of `rack` at virtual time
+    /// `at_s` — a whole-rack power/ToR loss. Racks follow the cluster
+    /// convention ([`crate::cluster::placement::rack_of`]: node `i` →
+    /// rack `i % racks`) over datanodes `0..num_nodes`; each member
+    /// expands to a [`Self::kill_at`] entry, so the session's ladder
+    /// re-planning sees an ordinary (if large) burst of deaths.
+    pub fn kill_rack(mut self, rack: usize, racks: usize, num_nodes: usize, at_s: f64) -> Self {
+        for n in (0..num_nodes).filter(|&n| crate::cluster::placement::rack_of(n, racks) == rack) {
+            self = self.kill_at(n, at_s);
+        }
+        self
+    }
+
+    /// Correlated fault: every datanode of `rack` serves at
+    /// `1/slowdown` of its fair rate — a rack-wide straggler burst
+    /// (congested ToR, rack-local GC storm). Same striping as
+    /// [`Self::kill_rack`]; expands to per-node [`Self::straggler`]
+    /// entries.
+    pub fn straggle_rack(
+        mut self,
+        rack: usize,
+        racks: usize,
+        num_nodes: usize,
+        slowdown: f64,
+    ) -> Self {
+        for n in (0..num_nodes).filter(|&n| crate::cluster::placement::rack_of(n, racks) == rack) {
+            self = self.straggler(n, slowdown);
+        }
+        self
+    }
+
+    /// Correlated fault: zone power-loss — kill every datanode of
+    /// `zone` (under [`crate::cluster::placement::zone_of`], the same
+    /// striping) at virtual time `at_s`.
+    pub fn kill_zone(mut self, zone: usize, zones: usize, num_nodes: usize, at_s: f64) -> Self {
+        for n in (0..num_nodes).filter(|&n| crate::cluster::placement::zone_of(n, zones) == zone) {
+            self = self.kill_at(n, at_s);
+        }
+        self
+    }
+
     pub fn with_retry(mut self, retry: RetryPolicy) -> Self {
         self.retry = retry;
         self
@@ -193,6 +238,16 @@ pub struct ChaosReport {
     pub replans: u64,
     /// Blocks whose bytes arrived but failed checksum verification.
     pub corruptions_detected: u64,
+    /// Timeline bytes handed back when a hedge race's loser was
+    /// cancelled mid-flight: the undelivered remainder of the losing
+    /// transfer (straggler-scaled, like the transfer itself), refunded
+    /// via [`crate::netsim::SessionSim::cancel_remaining`] so a won
+    /// race stops paying for the path it abandoned.
+    pub hedge_bytes_refunded: u64,
+    /// Deterministic virtual seconds of [`IoFault::Stall`] charged on
+    /// the chaos clock (once per stalled block fetch) — the virtual
+    /// twin of the measured path's real sleeps.
+    pub io_stall_s: f64,
     /// Virtual completion of the session on the chaos timeline —
     /// retries, stragglers, hedges and re-plan rounds included.
     pub degraded_completion_s: f64,
@@ -315,15 +370,24 @@ pub struct FaultyBackend {
     inner: Box<dyn IoBackend>,
     faults: BTreeMap<usize, IoFault>,
     injected: u64,
+    stall_s: f64,
 }
 
 impl FaultyBackend {
     pub fn new(inner: Box<dyn IoBackend>, faults: BTreeMap<usize, IoFault>) -> Self {
-        Self { inner, faults, injected: 0 }
+        Self { inner, faults, injected: 0, stall_s: 0.0 }
     }
 
     pub fn injected_failures(&self) -> u64 {
         self.injected
+    }
+
+    /// Deterministic seconds of [`IoFault::Stall`] delay injected so
+    /// far (sum of `delay_ms` over stalled completions) — what the
+    /// stalls *must* have cost, independent of how long the real sleeps
+    /// took.
+    pub fn injected_stall_s(&self) -> f64 {
+        self.stall_s
     }
 }
 
@@ -353,6 +417,7 @@ impl IoBackend for FaultyBackend {
                     return Ok(Some(c));
                 }
                 Some(IoFault::Stall { delay_ms }) => {
+                    self.stall_s += *delay_ms as f64 / 1e3;
                     std::thread::sleep(std::time::Duration::from_millis(*delay_ms));
                     return Ok(Some(c));
                 }
@@ -408,6 +473,27 @@ mod tests {
         assert!(plan.stripe_faults(7).is_empty());
         // Policy knobs alone inject nothing.
         assert!(FaultPlan::new(9).with_hedge(2.0).with_retry(RetryPolicy::tcp()).is_empty());
+    }
+
+    #[test]
+    fn correlated_builders_expand_to_per_node_entries() {
+        // 12 datanodes striped over 4 racks: rack r holds r, r+4, r+8.
+        let plan = FaultPlan::new(1)
+            .kill_rack(1, 4, 12, 0.01)
+            .straggle_rack(2, 4, 12, 3.0)
+            .kill_zone(0, 3, 9, 0.5);
+        assert!(!plan.is_empty());
+        for n in [1usize, 5, 9] {
+            assert_eq!(plan.deaths[&n], 0.01, "rack 1 member {n}");
+        }
+        for n in [2usize, 6, 10] {
+            assert_eq!(plan.stragglers[&n], 3.0, "rack 2 member {n}");
+        }
+        for n in [0usize, 3, 6] {
+            assert_eq!(plan.deaths[&n], 0.5, "zone 0 member {n}");
+        }
+        assert_eq!(plan.deaths.len(), 6, "3 rack deaths + 3 zone deaths, no strays");
+        assert_eq!(plan.stragglers.len(), 3);
     }
 
     #[test]
@@ -546,7 +632,7 @@ mod tests {
         program: &RepairProgram,
         faults: BTreeMap<usize, IoFault>,
         scratch: &mut ScratchBuffers,
-    ) -> (anyhow::Result<Vec<u8>>, u64, u64) {
+    ) -> (anyhow::Result<Vec<u8>>, u64, u64, f64) {
         let fetch: Vec<usize> = program.fetch().iter().copied().collect();
         let inner = MemBackend { blocks: stripe.to_vec(), queue: VecDeque::new(), bytes: 0 };
         let mut be = FaultyBackend::new(Box::new(inner), faults);
@@ -555,7 +641,7 @@ mod tests {
         let out = program
             .execute_chunk_pipelined(&mut stream, scratch, 64)
             .map(|(out, _)| out[0].to_vec());
-        (out, be.injected_failures(), be.bytes_read())
+        (out, be.injected_failures(), be.bytes_read(), be.injected_stall_s())
     }
 
     #[test]
@@ -565,7 +651,7 @@ mod tests {
         let victim = *program.fetch().iter().next().unwrap();
         let mut scratch = ScratchBuffers::new();
         let faults = BTreeMap::from([(victim, IoFault::FailRead)]);
-        let (out, injected, _) = faulty_pipeline(&stripe, &program, faults, &mut scratch);
+        let (out, injected, _, _) = faulty_pipeline(&stripe, &program, faults, &mut scratch);
         let err = out.unwrap_err().to_string();
         assert!(err.contains("injected I/O read failure"), "got: {err}");
         assert_eq!(injected, 1);
@@ -579,7 +665,7 @@ mod tests {
         let mut scratch = ScratchBuffers::new();
         // Torn at 96: the 64..128 chunk arrives short, 128+ vanishes.
         let faults = BTreeMap::from([(victim, IoFault::Truncate { at: 96 })]);
-        let (out, injected, _) = faulty_pipeline(&stripe, &program, faults, &mut scratch);
+        let (out, injected, _, _) = faulty_pipeline(&stripe, &program, faults, &mut scratch);
         assert!(out.is_err(), "incomplete block must be a typed failure, not silence");
         assert!(injected >= 1);
     }
@@ -591,9 +677,13 @@ mod tests {
         let victim = *program.fetch().iter().next().unwrap();
         let mut scratch = ScratchBuffers::new();
         let faults = BTreeMap::from([(victim, IoFault::Stall { delay_ms: 1 })]);
-        let (out, injected, bytes) = faulty_pipeline(&stripe, &program, faults, &mut scratch);
+        let (out, injected, bytes, stall_s) =
+            faulty_pipeline(&stripe, &program, faults, &mut scratch);
         assert_eq!(out.unwrap(), stripe[0], "a stall is slow, never wrong");
         assert_eq!(injected, 0, "stalls delay completions, they do not fail them");
+        // 256-byte block at 64-byte chunks: 4 stalled completions of
+        // 1 ms each, accounted deterministically.
+        assert!((stall_s - 0.004).abs() < 1e-12, "got {stall_s}");
         let expected: u64 = program.fetch().iter().map(|&b| stripe[b].len() as u64).sum();
         assert_eq!(bytes, expected, "bytes_read forwards through the wrapper");
     }

@@ -23,19 +23,57 @@ pub use traffic::{
 
 use crate::codec::StripeCodec;
 use crate::codes::{Scheme, SchemeKind};
-use crate::netsim::{pipeline_completion, Flow, NetSim};
+use crate::netsim::{pipeline_completion, Flow, NetSim, Topology};
 use crate::prng::Prng;
 use crate::repair::{
     BlockSource, CacheStats, ChunkPipelineStats, ChunkStream, PlanCache, RepairError,
     RepairProgram, ScratchBuffers, SliceSource,
 };
-use crate::store::{make_backend, plan_requests, BackendChunkStream, IoBackendKind};
+use crate::store::{make_backend, plan_requests, BackendChunkStream, IoBackend, IoBackendKind};
 use datanode::DataNodeHandle;
 use metadata::{BlockKey, Extent, FileId, Metadata, NodeInfo, ObjectInfo, StripeId, StripeInfo};
 use std::collections::HashMap;
 use std::ops::Range;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
+
+/// Hierarchical failure-domain layout: datanode `d` lives in rack
+/// `d % racks` (the [`placement::rack_of`] convention, matching
+/// [`placement::PlacementPolicy::RackSpread`]); the proxy is
+/// spine-attached, so every survivor→proxy fetch crosses its source
+/// rack's shared uplink and every write-back crosses the destination
+/// rack's. Uplinks are sized from the rack's aggregate NIC capacity
+/// divided by `oversubscription` — the factor by which top-of-rack
+/// switches are undersized relative to the hosts below them.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RackConfig {
+    /// Number of racks (≥ 1).
+    pub racks: usize,
+    /// Uplink oversubscription: rack uplink capacity =
+    /// (nodes-in-rack × NIC) / oversubscription. `1.0` = full bisection.
+    pub oversubscription: f64,
+    /// Rank candidate survivor sets and replacement targets by
+    /// cross-rack bytes (the tentpole's locality-aware repair). When
+    /// `false` the planner and write-back stay rack-oblivious while the
+    /// topology still shapes contention and the cross-rack accounting —
+    /// the baseline the topology bench compares against.
+    pub rack_aware: bool,
+}
+
+impl RackConfig {
+    /// `racks` racks at the given oversubscription, rack-aware repair on.
+    pub fn new(racks: usize, oversubscription: f64) -> Self {
+        assert!(racks >= 1, "topology needs at least one rack");
+        assert!(oversubscription > 0.0, "oversubscription must be positive");
+        Self { racks, oversubscription, rack_aware: true }
+    }
+
+    /// The same topology with rack-oblivious planning (baseline).
+    pub fn oblivious(mut self) -> Self {
+        self.rack_aware = false;
+        self
+    }
+}
 
 /// Cluster configuration (defaults = the paper's §VI-B setup).
 #[derive(Clone, Debug)]
@@ -60,6 +98,10 @@ pub struct ClusterConfig {
     /// clock; the measured wall-clock decode rate is reported separately
     /// and benchmarked in EXPERIMENTS.md §Perf).
     pub decode_gbps: f64,
+    /// Optional rack/spine hierarchy. `None` (the default) keeps the
+    /// historical flat network — every pre-topology session is
+    /// bit-identical.
+    pub topology: Option<RackConfig>,
 }
 
 impl Default for ClusterConfig {
@@ -76,6 +118,7 @@ impl Default for ClusterConfig {
             placement: placement::PlacementPolicy::RoundRobin,
             store: store::StoreKind::Mem,
             decode_gbps: 8.0,
+            topology: None,
         }
     }
 }
@@ -97,6 +140,12 @@ pub struct RepairReport {
     /// Distinct blocks fetched over the network.
     pub blocks_read: usize,
     pub bytes_read: u64,
+    /// Fetch bytes sourced outside this repair's destination rack —
+    /// they crossed a shared uplink (XORing Elephants' scarce resource).
+    /// Always 0 on flat clusters ([`ClusterConfig::topology`] = `None`);
+    /// accounted under both rack-aware and rack-oblivious planning so
+    /// the two modes compare directly.
+    pub cross_rack_bytes: u64,
     /// Isolated-pass makespan of the survivor reads, seconds.
     pub read_s: f64,
     /// Isolated-pass write-back time, seconds.
@@ -257,7 +306,25 @@ impl Cluster {
                 alive: true,
             });
         }
-        let net = NetSim::homogeneous(cfg.num_datanodes + 1, cfg.gbps, cfg.latency_s);
+        let mut net = NetSim::homogeneous(cfg.num_datanodes + 1, cfg.gbps, cfg.latency_s);
+        if let Some(rc) = &cfg.topology {
+            let q = rc.racks;
+            let mut rack_nodes = vec![0usize; q];
+            for d in 0..cfg.num_datanodes {
+                rack_nodes[placement::rack_of(d, q)] += 1;
+            }
+            let nic_bytes = cfg.gbps * 1e9 / 8.0;
+            let uplinks: Vec<f64> = rack_nodes
+                .iter()
+                .map(|&c| c.max(1) as f64 * nic_bytes / rc.oversubscription)
+                .collect();
+            // netsim node 0 is the proxy (spine-attached); datanode d is
+            // netsim node d + 1.
+            let rack_of: Vec<Option<usize>> = std::iter::once(None)
+                .chain((0..cfg.num_datanodes).map(|d| Some(placement::rack_of(d, q))))
+                .collect();
+            net = net.with_topology(Topology::new(rack_of, uplinks));
+        }
         Self {
             cfg,
             codec,
@@ -541,14 +608,12 @@ impl Cluster {
         failed_blocks: &[usize],
         reconstructed: &[Vec<u8>],
     ) -> anyhow::Result<(f64, Vec<Flow>)> {
-        let mut used: Vec<usize> = stripe.block_nodes.clone();
+        let targets = self.replacement_targets(stripe, failed_blocks);
         let mut wb_flows = Vec::new();
         let mut new_nodes: HashMap<usize, usize> = HashMap::new();
-        for (&b, content) in failed_blocks.iter().zip(reconstructed.iter()) {
-            let target = (0..self.cfg.num_datanodes)
-                .find(|nid| self.nodes[*nid].is_alive() && !used.contains(nid))
-                .unwrap_or_else(|| stripe.block_nodes[b]); // fall back: same node restored
-            used.push(target);
+        for ((&b, content), &target) in
+            failed_blocks.iter().zip(reconstructed.iter()).zip(targets.iter())
+        {
             let key = BlockKey { stripe: sid, index: b as u32 };
             anyhow::ensure!(self.nodes[target].put(key, content.clone()), "write-back failed");
             wb_flows.push(Flow {
@@ -568,6 +633,134 @@ impl Cluster {
             }
         }
         Ok((wb_time, wb_flows))
+    }
+
+    /// The replacement datanode for each failed block, in order — the
+    /// one targeting rule shared by fetch-time accounting
+    /// ([`Self::prepare_repair`] predicts the repair's destination rack
+    /// from it) and the actual [`Self::write_back`], so predicted and
+    /// real destinations agree. Rack-oblivious (no topology, or
+    /// [`RackConfig::rack_aware`] off): first alive node not already
+    /// holding a block of this stripe — the historical rule, verbatim.
+    /// Rack-aware: racks are tried in descending order of alive-survivor
+    /// count (ties → lower rack id), skipping racks the placement
+    /// policy's [`placement::PlacementPolicy::rack_cap`] would overfill,
+    /// so the reconstructed block lands next to the bulk of its
+    /// survivors without breaking the spread invariant. Either way the
+    /// fallback is the block's old node ("transient" failure restored).
+    fn replacement_targets(&self, stripe: &StripeInfo, failed: &[usize]) -> Vec<usize> {
+        let mut used: Vec<usize> = stripe.block_nodes.clone();
+        let mut out = Vec::with_capacity(failed.len());
+        let oblivious = |used: &[usize], b: usize| {
+            (0..self.cfg.num_datanodes)
+                .find(|nid| self.nodes[*nid].is_alive() && !used.contains(nid))
+                .unwrap_or(stripe.block_nodes[b])
+        };
+        match self.cfg.topology.as_ref().filter(|rc| rc.rack_aware) {
+            None => {
+                for &b in failed {
+                    let t = oblivious(&used, b);
+                    used.push(t);
+                    out.push(t);
+                }
+            }
+            Some(rc) => {
+                let q = rc.racks;
+                let cap = self.cfg.placement.rack_cap(stripe.n()).unwrap_or(usize::MAX);
+                // Blocks the stripe keeps per rack (failed blocks move):
+                // the spread-cap budget replacements must respect.
+                let mut load = vec![0usize; q];
+                for (blk, &nid) in stripe.block_nodes.iter().enumerate() {
+                    if !failed.contains(&blk) {
+                        load[placement::rack_of(nid, q)] += 1;
+                    }
+                }
+                // Rack affinity: survivors of the pattern's (locality-
+                // oblivious) fetch set per rack — the blocks this repair
+                // will actually read weigh, bystanders don't. The fetch
+                // set is destination-independent, so fetch-time
+                // prediction and write-back rank racks identically.
+                // Unplannable patterns (mid-chaos wrecks) fall back to
+                // counting all alive survivors.
+                let mut score = vec![0usize; q];
+                let fetch: Option<Vec<usize>> = self
+                    .programs
+                    .lock()
+                    .unwrap()
+                    .get_or_compile(self.scheme(), failed)
+                    .ok()
+                    .map(|p| p.fetch().iter().copied().collect());
+                let weigh: Vec<usize> = match fetch {
+                    Some(f) => f,
+                    None => (0..stripe.n()).filter(|b| !failed.contains(b)).collect(),
+                };
+                for &blk in &weigh {
+                    let nid = stripe.block_nodes[blk];
+                    if self.nodes[nid].is_alive() {
+                        score[placement::rack_of(nid, q)] += 1;
+                    }
+                }
+                for &b in failed {
+                    let mut ranked: Vec<usize> = (0..q).collect();
+                    ranked.sort_by_key(|&r| (std::cmp::Reverse(score[r]), r));
+                    let target = ranked
+                        .iter()
+                        .filter(|&&r| load[r] < cap)
+                        .find_map(|&r| {
+                            (0..self.cfg.num_datanodes)
+                                .filter(|&nid| placement::rack_of(nid, q) == r)
+                                .find(|&nid| {
+                                    self.nodes[nid].is_alive() && !used.contains(&nid)
+                                })
+                        })
+                        .unwrap_or_else(|| oblivious(&used, b));
+                    used.push(target);
+                    load[placement::rack_of(target, q)] += 1;
+                    out.push(target);
+                }
+            }
+        }
+        out
+    }
+
+    /// Per-block cross-rack fetch weight for one repair job: a
+    /// survivor's window bytes when it sits outside the job's
+    /// destination rack (the first replacement target's rack), zero
+    /// inside it. `None` when no rack-aware topology is configured —
+    /// the planner then stays on the cached locality-oblivious path.
+    fn repair_xcost(&self, stripe: &StripeInfo, failed: &[usize]) -> Option<Vec<u64>> {
+        let rc = self.cfg.topology.as_ref().filter(|rc| rc.rack_aware)?;
+        let dest = placement::rack_of(self.replacement_targets(stripe, failed)[0], rc.racks);
+        let bytes = stripe.block_size as u64;
+        Some(
+            stripe
+                .block_nodes
+                .iter()
+                .map(|&nid| if placement::rack_of(nid, rc.racks) == dest { 0 } else { bytes })
+                .collect(),
+        )
+    }
+
+    /// Bytes of `fetch` that cross a rack uplink on their way to this
+    /// repair's destination rack (0 without a topology). Computed at
+    /// fetch time against the predicted [`Self::replacement_targets`];
+    /// reported per stripe ([`RepairReport::cross_rack_bytes`]) and
+    /// accounted for *both* rack-aware and rack-oblivious planning so
+    /// the two are directly comparable under one topology.
+    fn cross_rack_fetch_bytes(
+        &self,
+        stripe: &StripeInfo,
+        failed: &[usize],
+        fetch: &[usize],
+        window_len: usize,
+    ) -> u64 {
+        let Some(rc) = self.cfg.topology.as_ref() else { return 0 };
+        let dest = placement::rack_of(self.replacement_targets(stripe, failed)[0], rc.racks);
+        fetch
+            .iter()
+            .filter(|&&b| placement::rack_of(stripe.block_nodes[b], rc.racks) != dest)
+            .map(|_| window_len as u64)
+            .sum()
     }
 
     /// Repair every stripe affected by currently-failed nodes; returns
@@ -622,7 +815,16 @@ impl Cluster {
             .cloned()
             .ok_or_else(|| anyhow::anyhow!("unknown stripe {sid}"))?;
         anyhow::ensure!(!failed.is_empty(), "nothing to repair in stripe {sid}");
-        let program = self.programs.lock().unwrap().get_or_compile(scheme, failed)?;
+        // Rack-aware jobs compile per placement (the locality weights
+        // depend on where this stripe's survivors live, not just on the
+        // erasure pattern), so they bypass the pattern-keyed [`PlanCache`]
+        // rather than poison it.
+        let program = match self.repair_xcost(&stripe, failed) {
+            None => self.programs.lock().unwrap().get_or_compile(scheme, failed)?,
+            Some(xcost) => {
+                Arc::new(RepairProgram::for_pattern_with_locality(scheme, failed, &xcost)?)
+            }
+        };
         // One netsim charge for exactly the program's read set, through
         // the shared fetcher (whole-block window).
         let fetch_idx: Vec<usize> = program.fetch().iter().copied().collect();
@@ -642,6 +844,8 @@ impl Cluster {
         // blocks at offset 0) moves to the worker as the executor's
         // source shape.
         let window_len = fetcher.window.len();
+        let cross_rack_bytes =
+            self.cross_rack_fetch_bytes(&stripe, failed, &fetch_idx, window_len);
         let StripeFetcher { cache, flows, .. } = fetcher;
         let blocks: Vec<Option<Vec<u8>>> =
             cache.into_iter().map(|slot| slot.map(|(_, data)| data)).collect();
@@ -663,6 +867,7 @@ impl Cluster {
             done_s,
             bytes_read,
             fetched: fetch_idx.len(),
+            cross_rack_bytes,
             local: program.plan.fully_local(),
             flows,
             program: program.clone(),
@@ -693,18 +898,46 @@ impl Cluster {
         kind: IoBackendKind,
         chunk_bytes: usize,
     ) -> anyhow::Result<(MeasuredIo, Vec<Vec<u8>>)> {
-        let located: Vec<(usize, crate::store::BlockLocation)> = meta
-            .program
+        let mut backend = make_backend(kind);
+        self.measured_repair_io_on(
+            meta.sid,
+            &meta.stripe,
+            &meta.failed,
+            &meta.program,
+            &meta.outs_idx,
+            backend.as_mut(),
+            kind.name(),
+            chunk_bytes,
+        )
+    }
+
+    /// [`Self::measured_repair_io`] against a caller-supplied backend —
+    /// the seam chaos sessions use to interpose a
+    /// [`crate::chaos::FaultyBackend`] between the chunk executor and
+    /// the real store.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn measured_repair_io_on(
+        &self,
+        sid: StripeId,
+        stripe: &StripeInfo,
+        failed: &[usize],
+        program: &RepairProgram,
+        outs_idx: &[usize],
+        backend: &mut dyn IoBackend,
+        backend_name: &'static str,
+        chunk_bytes: usize,
+    ) -> anyhow::Result<(MeasuredIo, Vec<Vec<u8>>)> {
+        let located: Vec<(usize, crate::store::BlockLocation)> = program
             .fetch()
             .iter()
             .map(|&b| {
-                let key = BlockKey { stripe: meta.sid, index: b as u32 };
-                self.nodes[meta.stripe.block_nodes[b]]
+                let key = BlockKey { stripe: sid, index: b as u32 };
+                self.nodes[stripe.block_nodes[b]]
                     .locate(key)
                     .map(|loc| (b, loc))
                     .ok_or_else(|| {
                         anyhow::Error::new(RepairError::MissingBlock {
-                            stripe: meta.sid,
+                            stripe: sid,
                             block: b,
                         })
                         .context(
@@ -715,35 +948,34 @@ impl Cluster {
             })
             .collect::<anyhow::Result<_>>()?;
 
-        let mut backend = make_backend(kind);
         backend.submit(plan_requests(&located, chunk_bytes))?;
         let mut scratch = ScratchBuffers::new();
         let t0 = Instant::now();
         let mut stream = TimedChunkStream {
-            inner: BackendChunkStream::new(backend.as_mut()),
+            inner: BackendChunkStream::new(&mut *backend),
             t0,
             wait_s: 0.0,
             arrivals: Vec::new(),
         };
         let (outs, stats) =
-            meta.program.execute_chunk_pipelined(&mut stream, &mut scratch, chunk_bytes)?;
+            program.execute_chunk_pipelined(&mut stream, &mut scratch, chunk_bytes)?;
         let pass_s = t0.elapsed().as_secs_f64();
         let (read_s, arrivals) = (stream.wait_s, stream.arrivals);
         let rec: Vec<Vec<u8>> =
-            meta.outs_idx.iter().map(|&i| outs[i].to_vec()).collect();
+            outs_idx.iter().map(|&i| outs[i].to_vec()).collect();
         drop(outs);
         let bytes_read = backend.bytes_read();
 
         // The virtual pipeline already wrote this stripe back; the
         // measured decode must agree byte-for-byte before it overwrites
         // anything (the two paths share a program but not an executor).
-        for (&b, content) in meta.failed.iter().zip(rec.iter()) {
+        for (&b, content) in failed.iter().zip(rec.iter()) {
             let node = self
                 .meta
                 .stripes
-                .get(&meta.sid)
-                .map_or(meta.stripe.block_nodes[b], |si| si.block_nodes[b]);
-            let key = BlockKey { stripe: meta.sid, index: b as u32 };
+                .get(&sid)
+                .map_or(stripe.block_nodes[b], |si| si.block_nodes[b]);
+            let key = BlockKey { stripe: sid, index: b as u32 };
             anyhow::ensure!(
                 self.nodes[node].get(key).as_deref() == Some(content.as_slice()),
                 "measured decode of block {b} diverged from the in-memory pipeline"
@@ -754,13 +986,13 @@ impl Cluster {
         // blocks at their *current* (post-relocation) homes, through the
         // stores' crash-safe tmp+rename path.
         let twb = Instant::now();
-        for (&b, content) in meta.failed.iter().zip(rec.iter()) {
+        for (&b, content) in failed.iter().zip(rec.iter()) {
             let node = self
                 .meta
                 .stripes
-                .get(&meta.sid)
-                .map_or(meta.stripe.block_nodes[b], |si| si.block_nodes[b]);
-            let key = BlockKey { stripe: meta.sid, index: b as u32 };
+                .get(&sid)
+                .map_or(stripe.block_nodes[b], |si| si.block_nodes[b]);
+            let key = BlockKey { stripe: sid, index: b as u32 };
             anyhow::ensure!(
                 self.nodes[node].put(key, content.clone()),
                 "measured write-back of block {b} to node {node} failed"
@@ -770,7 +1002,7 @@ impl Cluster {
 
         Ok((
             MeasuredIo {
-                backend: kind.name(),
+                backend: backend_name,
                 chunk_bytes,
                 read_s,
                 decode_s: (pass_s - read_s).max(0.0),
@@ -865,6 +1097,9 @@ struct JobMeta {
     done_s: f64,
     bytes_read: u64,
     fetched: usize,
+    /// Fetch bytes crossing a rack uplink toward the predicted
+    /// destination rack (0 on flat clusters).
+    cross_rack_bytes: u64,
     local: bool,
     /// The stripe's fetch flows (issue-relative `start = 0`), in sorted
     /// fetch-set order — re-admitted on the session's shared timeline.
@@ -1526,5 +1761,81 @@ mod tests {
         // dead node.
         assert_ne!(c.meta.stripes[&sid].block_nodes[3], victim);
         assert!(c.scrub_stripe(sid).unwrap());
+    }
+
+    #[test]
+    fn flat_cluster_reports_zero_cross_rack_bytes() {
+        let mut c = Cluster::new(tiny_cfg(SchemeKind::CpAzure));
+        let sid = c.fill_random_stripes(1, 51)[0];
+        let victim = c.meta.stripes[&sid].block_nodes[0];
+        c.fail_node(victim);
+        let rep = c.repair().run().unwrap().reports.remove(0);
+        assert_eq!(rep.cross_rack_bytes, 0, "flat topology must not account uplink bytes");
+        c.restore_node(victim);
+        assert!(c.scrub_stripe(sid).unwrap());
+    }
+
+    /// 16 datanodes in 4 racks of 4, RackSpread placement: stripe 0
+    /// lands block `b` on node `b`, so group 1 of CP-Azure (6,2,2) —
+    /// D4,D5,D6,L2 on nodes 3,4,5,9 — spans racks {3,0,1,1}.
+    fn racked_cfg(rack_aware: bool) -> ClusterConfig {
+        let rc = RackConfig::new(4, 4.0);
+        ClusterConfig {
+            num_datanodes: 16,
+            topology: Some(if rack_aware { rc } else { rc.oblivious() }),
+            placement: placement::PlacementPolicy::RackSpread { racks: 4, max_per_rack: 3 },
+            ..tiny_cfg(SchemeKind::CpAzure)
+        }
+    }
+
+    #[test]
+    fn rack_aware_repair_reduces_cross_rack_bytes_and_stays_correct() {
+        // Same cluster + topology, same single-node failure; the only
+        // difference is RackConfig::rack_aware. Repairing D5 reads
+        // D4,D6,L2 (racks 3,1,1); rack 1 is at its spread cap, so the
+        // aware planner lands the replacement in rack 3 (1 in-rack read)
+        // while the oblivious first-free rule lands in rack 2 (0
+        // in-rack reads) — strictly fewer uplink bytes, same plan cost.
+        let run = |rack_aware: bool| {
+            let mut c = Cluster::new(racked_cfg(rack_aware));
+            let sid = c.fill_random_stripes(1, 52)[0];
+            let victim = c.meta.stripes[&sid].block_nodes[4];
+            c.fail_node(victim);
+            let rep = c.repair().run().unwrap().reports.remove(0);
+            c.restore_node(victim);
+            assert!(c.scrub_stripe(sid).unwrap(), "rack_aware={rack_aware}");
+            rep
+        };
+        let aware = run(true);
+        let oblivious = run(false);
+        assert_eq!(aware.blocks_read, oblivious.blocks_read, "cost model must not change");
+        assert!(
+            aware.cross_rack_bytes < oblivious.cross_rack_bytes,
+            "rack-aware {} must beat oblivious {}",
+            aware.cross_rack_bytes,
+            oblivious.cross_rack_bytes
+        );
+    }
+
+    #[test]
+    fn rack_aware_replacement_lands_near_the_fetch_set() {
+        let mut c = Cluster::new(racked_cfg(true));
+        let sid = c.fill_random_stripes(1, 53)[0];
+        let stripe = c.meta.stripes[&sid].clone();
+        let victim = stripe.block_nodes[4];
+        c.fail_node(victim);
+        let targets = c.replacement_targets(&stripe, &[4]);
+        // D5's fetch set is D4,D6,L2 on racks {3,1,1}; rack 1 is at the
+        // spread cap (blocks 1,5,9), so the best feasible rack is 3.
+        assert_eq!(placement::rack_of(targets[0], 4), 3);
+        // And the spread invariant holds after the move.
+        let cap = c.cfg.placement.rack_cap(stripe.n()).unwrap();
+        let mut per_rack = vec![0usize; 4];
+        for (blk, &nid) in stripe.block_nodes.iter().enumerate() {
+            let home = if blk == 4 { targets[0] } else { nid };
+            per_rack[placement::rack_of(home, 4)] += 1;
+        }
+        assert!(per_rack.iter().all(|&n| n <= cap), "{per_rack:?}");
+        c.restore_node(victim);
     }
 }

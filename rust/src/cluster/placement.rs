@@ -15,6 +15,13 @@ pub enum PlacementPolicy {
     /// zones so each zone holds ⌈n/zones⌉ blocks at most (the Alibaba
     /// Zones I/J/K/L layout).
     ZoneSpread { zones: usize },
+    /// Failure-domain-aware spread: nodes are striped across `racks`
+    /// racks (node `i` → rack `i % racks`, the [`rack_of`] convention),
+    /// and no rack receives more than `max_per_rack` blocks of any one
+    /// stripe — set it to the code's tolerated failures per domain so a
+    /// whole-rack loss stays decodable. Panics at placement time when
+    /// `racks × max_per_rack < n` (the invariant is unsatisfiable).
+    RackSpread { racks: usize, max_per_rack: usize },
 }
 
 impl PlacementPolicy {
@@ -59,6 +66,50 @@ impl PlacementPolicy {
                 }
                 out
             }
+            PlacementPolicy::RackSpread { racks, max_per_rack } => {
+                let q = (*racks).max(1);
+                let cap = (*max_per_rack).max(1);
+                assert!(
+                    q * cap >= n,
+                    "stripe width {n} cannot spread over {q} racks at {cap} blocks/rack"
+                );
+                // Rotate racks like ZoneSpread, but skip racks already
+                // at their cap (or out of nodes); q consecutive skips
+                // mean the cluster cannot satisfy the spread.
+                let mut next_in_rack: Vec<usize> = (0..q).collect();
+                let mut placed = vec![0usize; q];
+                let mut out = Vec::with_capacity(n);
+                let mut rack = (stripe_id as usize) % q;
+                let mut skipped = 0usize;
+                while out.len() < n {
+                    let cand = next_in_rack[rack];
+                    if placed[rack] < cap && cand < num_nodes {
+                        out.push(cand);
+                        next_in_rack[rack] = cand + q;
+                        placed[rack] += 1;
+                        skipped = 0;
+                    } else {
+                        skipped += 1;
+                        assert!(
+                            skipped <= q,
+                            "not enough nodes across {q} racks for width {n} at {cap} blocks/rack"
+                        );
+                    }
+                    rack = (rack + 1) % q;
+                }
+                out
+            }
+        }
+    }
+
+    /// The per-rack block cap this policy guarantees for width-`n`
+    /// stripes, when it guarantees one: the spread invariant tests and
+    /// the rack-aware replacement targeting both consult it.
+    pub fn rack_cap(&self, n: usize) -> Option<usize> {
+        match self {
+            PlacementPolicy::RackSpread { max_per_rack, .. } => Some((*max_per_rack).max(1)),
+            PlacementPolicy::ZoneSpread { zones } => Some(n.div_ceil((*zones).max(1))),
+            _ => None,
         }
     }
 }
@@ -66,6 +117,12 @@ impl PlacementPolicy {
 /// Zone of a node under the ZoneSpread convention.
 pub fn zone_of(node: usize, zones: usize) -> usize {
     node % zones.max(1)
+}
+
+/// Rack of a node under the RackSpread / cluster-topology convention
+/// (same striping as [`zone_of`]: node `i` → rack `i % racks`).
+pub fn rack_of(node: usize, racks: usize) -> usize {
+    node % racks.max(1)
 }
 
 #[cfg(test)]
@@ -126,5 +183,46 @@ mod tests {
     #[should_panic(expected = "exceeds cluster size")]
     fn too_wide_panics() {
         PlacementPolicy::RoundRobin.place(0, 10, 5);
+    }
+
+    #[test]
+    fn rack_spread_respects_the_per_rack_cap() {
+        let p = PlacementPolicy::RackSpread { racks: 5, max_per_rack: 2 };
+        assert_eq!(p.rack_cap(10), Some(2));
+        for sid in 0..20u64 {
+            let v = p.place(sid, 10, 30);
+            assert_distinct(&v, 30);
+            let mut per_rack = [0usize; 5];
+            for &node in &v {
+                per_rack[rack_of(node, 5)] += 1;
+            }
+            assert!(
+                per_rack.iter().all(|&c| c <= 2),
+                "stripe {sid} breaks the cap: {per_rack:?}"
+            );
+        }
+        // Deterministic, and rotated across stripes.
+        assert_eq!(p.place(3, 10, 30), p.place(3, 10, 30));
+        assert_ne!(p.place(0, 10, 30)[0], p.place(1, 10, 30)[0]);
+    }
+
+    #[test]
+    fn rack_spread_tight_cluster_still_spreads() {
+        // 12 nodes, 4 racks of 3: a width-10 stripe at cap 3 must fit
+        // and never exceed 3 per rack.
+        let p = PlacementPolicy::RackSpread { racks: 4, max_per_rack: 3 };
+        let v = p.place(7, 10, 12);
+        assert_distinct(&v, 12);
+        let mut per_rack = [0usize; 4];
+        for &node in &v {
+            per_rack[rack_of(node, 4)] += 1;
+        }
+        assert!(per_rack.iter().all(|&c| c <= 3), "{per_rack:?}");
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot spread")]
+    fn rack_spread_unsatisfiable_cap_panics() {
+        PlacementPolicy::RackSpread { racks: 3, max_per_rack: 2 }.place(0, 10, 30);
     }
 }

@@ -731,6 +731,7 @@ impl<'c> RepairSession<'c> {
                 blocks_repaired: meta.failed,
                 blocks_read: meta.fetched,
                 bytes_read: meta.bytes_read,
+                cross_rack_bytes: meta.cross_rack_bytes,
                 read_s: meta.read_s,
                 wb_s,
                 sim_time_s: meta.read_s + wb_s,
@@ -801,18 +802,24 @@ impl<'c> RepairSession<'c> {
     /// [`SessionSim`] timeline per stripe ([`chaos_timeline`]), and the
     /// session's [`ChaosReport`] carries the counters.
     ///
-    /// Scope: chaos sessions cover the repair path. Foreground load,
-    /// in-session reads and measured backends are plain-session
-    /// features and are rejected up front rather than silently ignored.
+    /// Scope: chaos sessions cover the repair path. Foreground load and
+    /// in-session reads are plain-session features and are rejected up
+    /// front rather than silently ignored. Measured backends compose:
+    /// with [`Self::backend`] set, each stripe's measured pass runs
+    /// through a [`FaultyBackend`](crate::chaos::FaultyBackend) carrying
+    /// the plan's [`IoFault`](crate::chaos::IoFault)s, and
+    /// [`IoFault::Stall`](crate::chaos::IoFault::Stall) is additionally
+    /// charged deterministically on the virtual chaos clock
+    /// ([`ChaosReport::io_stall_s`]).
     ///
     /// [`RetryPolicy`]: crate::chaos::RetryPolicy
     /// [`StripeInfo::block_crcs`]: super::metadata::StripeInfo::block_crcs
     fn run_chaos(self, plan: FaultPlan) -> anyhow::Result<SessionReport> {
-        let RepairSession { cluster, jobs, threads, foreground, reads, backend, .. } = self;
+        let RepairSession { cluster, jobs, threads, foreground, reads, backend, chunk_bytes, .. } =
+            self;
         anyhow::ensure!(
-            foreground.is_none() && reads.is_empty() && backend.is_none(),
-            "chaos sessions do not combine with foreground load, in-session reads or \
-             measured backends"
+            foreground.is_none() && reads.is_empty(),
+            "chaos sessions do not combine with foreground load or in-session reads"
         );
         let jobs = match jobs {
             Some(jobs) => jobs,
@@ -836,7 +843,8 @@ impl<'c> RepairSession<'c> {
         let mut completion_s = 0.0f64;
         for (j, (sid, failed)) in jobs.iter().enumerate() {
             let issue_s = j as f64 * gap;
-            let done = chaos_repair_one(cluster, &plan, *sid, failed, &scheme, &mut chaos)?;
+            let done =
+                chaos_repair_one(cluster, &plan, *sid, failed, &scheme, backend, chunk_bytes, &mut chaos)?;
             let fetch_clock = chaos_timeline(&cluster.net, &plan, &done.rounds, &mut chaos);
             // Isolated-pass accounting over the *useful* flows, exactly
             // as the plain session charges a stripe.
@@ -848,6 +856,7 @@ impl<'c> RepairSession<'c> {
                 blocks_repaired: done.erased,
                 blocks_read: done.fetched,
                 bytes_read: done.bytes_read,
+                cross_rack_bytes: done.cross_rack_bytes,
                 read_s,
                 wb_s: done.wb_s,
                 sim_time_s: read_s + done.wb_s,
@@ -861,7 +870,7 @@ impl<'c> RepairSession<'c> {
                     + done.bytes_read as f64 / decode_bps
                     + done.wb_s,
                 local: done.local,
-                measured: None,
+                measured: done.measured,
             };
             serial_s += report.total_s();
             contention_delay_s += report.contention_delay_s();
@@ -907,6 +916,11 @@ struct ChaosFetch {
     /// RPC latency plus its slot of the capped-exponential backoff
     /// schedule on the timeline.
     failed_attempts: u32,
+    /// Deterministic [`IoFault::Stall`](crate::chaos::IoFault::Stall)
+    /// charge: the transfer starts this many virtual seconds late
+    /// (charged once per block on the chaos clock; the measured path
+    /// additionally sleeps per chunk).
+    stall_s: f64,
     outcome: FetchOutcome,
 }
 
@@ -943,23 +957,33 @@ struct ChaosJobDone {
     bytes_read: u64,
     /// Delivered block count.
     fetched: usize,
+    /// Delivered bytes that crossed a rack uplink toward the predicted
+    /// destination rack (0 on flat clusters), over the *final* erasure
+    /// pattern — mid-session losses included.
+    cross_rack_bytes: u64,
     /// One survivor→proxy flow per delivered block, for the
     /// isolated-pass accounting.
     flows: Vec<Flow>,
     decode_cpu_s: f64,
     wb_s: f64,
     local: bool,
+    /// The measured real-I/O pass, when the session asked for one —
+    /// run under the plan's I/O faults.
+    measured: Option<MeasuredIo>,
 }
 
 /// Repair one stripe under the fault plan: fetch → verify → re-plan
 /// rounds until a round loses nothing, then decode and write back. See
 /// [`RepairSession::run`] (chaos path) for the contract.
+#[allow(clippy::too_many_arguments)]
 fn chaos_repair_one(
     cluster: &mut Cluster,
     plan: &FaultPlan,
     sid: StripeId,
     failed: &[usize],
     scheme: &Arc<crate::codes::Scheme>,
+    backend: Option<IoBackendKind>,
+    chunk_bytes: usize,
     chaos: &mut ChaosReport,
 ) -> anyhow::Result<ChaosJobDone> {
     let stripe: StripeInfo = cluster
@@ -996,6 +1020,10 @@ fn chaos_repair_one(
             }
             let node = stripe.block_nodes[b];
             let bytes = stripe.block_size as u64;
+            let stall_s = match plan.io.get(&b) {
+                Some(crate::chaos::IoFault::Stall { delay_ms }) => *delay_ms as f64 / 1e3,
+                _ => 0.0,
+            };
             // A dead node dominates any per-fetch fault: the survivor
             // is gone mid-flight, retries included.
             if let Some(&td) = plan.deaths.get(&node) {
@@ -1003,6 +1031,7 @@ fn chaos_repair_one(
                     node,
                     bytes,
                     failed_attempts: 0,
+                    stall_s,
                     outcome: FetchOutcome::Died(td),
                 });
                 newly_lost.push(b);
@@ -1031,6 +1060,7 @@ fn chaos_repair_one(
                     node,
                     bytes,
                     failed_attempts: budget,
+                    stall_s,
                     outcome: FetchOutcome::Vanished,
                 });
                 newly_lost.push(b);
@@ -1064,6 +1094,7 @@ fn chaos_repair_one(
                     node,
                     bytes,
                     failed_attempts,
+                    stall_s,
                     outcome: FetchOutcome::Wasted,
                 });
                 newly_lost.push(b);
@@ -1081,6 +1112,7 @@ fn chaos_repair_one(
                 node,
                 bytes,
                 failed_attempts,
+                stall_s,
                 outcome: FetchOutcome::Delivered,
             });
         }
@@ -1097,11 +1129,16 @@ fn chaos_repair_one(
     };
 
     // Decode against the final program, under the shared scratch.
+    let fetch_idx: Vec<usize> = have.keys().copied().collect();
     let mut blocks: Vec<Option<Vec<u8>>> = vec![None; stripe.n()];
     for (b, data) in have {
         blocks[b] = Some(data);
     }
     let erased_vec: Vec<usize> = program.erased().to_vec();
+    // Charged against the *final* pattern (what the write-back below
+    // will actually target), before it relocates anything.
+    let cross_rack_bytes =
+        cluster.cross_rack_fetch_bytes(&stripe, &erased_vec, &fetch_idx, stripe.block_size);
     let t0 = Instant::now();
     let rec: Vec<Vec<u8>> = {
         let mut scratch = cluster.scratch.lock().unwrap();
@@ -1118,15 +1155,45 @@ fn chaos_repair_one(
     };
     let decode_cpu_s = t0.elapsed().as_secs_f64();
     let (wb_s, _wb_flows) = cluster.write_back(sid, &stripe, &erased_vec, &rec)?;
+
+    // Measured real-I/O pass, after write-back like the plain session —
+    // through a FaultyBackend so the plan's I/O faults hit the real
+    // chunk pipeline too.
+    let measured = match backend {
+        None => None,
+        Some(kind) => {
+            let outs_idx: Vec<usize> = erased_vec
+                .iter()
+                .map(|&e| program.output_index(e).expect("decode above resolved every output"))
+                .collect();
+            let mut be = crate::chaos::FaultyBackend::new(
+                crate::store::make_backend(kind),
+                plan.io.clone(),
+            );
+            let (m, _) = cluster.measured_repair_io_on(
+                sid,
+                &stripe,
+                &erased_vec,
+                &program,
+                &outs_idx,
+                &mut be,
+                kind.name(),
+                chunk_bytes,
+            )?;
+            Some(m)
+        }
+    };
     Ok(ChaosJobDone {
         erased: erased_vec,
         rounds,
         bytes_read,
         fetched: flows.len(),
+        cross_rack_bytes,
         flows,
         decode_cpu_s,
         wb_s,
         local: program.plan.fully_local(),
+        measured,
     })
 }
 
@@ -1167,7 +1234,14 @@ struct ChaosEntry {
 /// lateness, and on this timeline only stragglers run late); a hedged
 /// re-read is served at full rate. Retries cost one RPC latency plus
 /// their [`RetryPolicy`](crate::chaos::RetryPolicy) backoff slot —
-/// failed attempts move no bytes.
+/// failed attempts move no bytes. When a hedge race resolves, the
+/// loser is cancelled with
+/// [`SessionSim::cancel_remaining`](crate::netsim::SessionSim::cancel_remaining)
+/// and its undelivered bytes are refunded
+/// ([`ChaosReport::hedge_bytes_refunded`]); a stalled device
+/// ([`IoFault::Stall`](crate::chaos::IoFault::Stall)) delays its
+/// block's transfer start deterministically
+/// ([`ChaosReport::io_stall_s`]).
 fn chaos_timeline(
     net: &NetSim,
     plan: &FaultPlan,
@@ -1196,7 +1270,11 @@ fn chaos_timeline(
             let scaled = ((cf.bytes as f64 * slowdown) as u64).max(1);
             match cf.outcome {
                 FetchOutcome::Delivered => {
-                    let delay = retry_delay(cf.failed_attempts);
+                    // A stalled device delays the transfer's start on
+                    // the virtual clock — deterministic, unlike the
+                    // measured path's real sleeps.
+                    chaos.io_stall_s += cf.stall_s;
+                    let delay = retry_delay(cf.failed_attempts) + cf.stall_s;
                     let id = sim.admit(
                         Flow { src: net_id(cf.node), dst: PROXY, bytes: scaled, start: delay },
                         usize::MAX,
@@ -1209,7 +1287,8 @@ fn chaos_timeline(
                     }
                 }
                 FetchOutcome::Wasted => {
-                    let delay = retry_delay(cf.failed_attempts);
+                    chaos.io_stall_s += cf.stall_s;
+                    let delay = retry_delay(cf.failed_attempts) + cf.stall_s;
                     sim.admit(
                         Flow { src: net_id(cf.node), dst: PROXY, bytes: scaled, start: delay },
                         usize::MAX,
@@ -1248,7 +1327,11 @@ fn chaos_timeline(
                         entries[f].done = true;
                         barrier = barrier.max(ev.finish);
                         if let Some(h) = entries[f].hedge {
-                            sim.cancel(h);
+                            // The race's loser stops mid-flight: its
+                            // undelivered bytes are refunded, not paid.
+                            if let Some(refund) = sim.cancel_remaining(h) {
+                                chaos.hedge_bytes_refunded += refund.round() as u64;
+                            }
                         }
                     }
                 }
@@ -1256,7 +1339,9 @@ fn chaos_timeline(
                     if !entries[f].done {
                         entries[f].done = true;
                         barrier = barrier.max(ev.finish);
-                        sim.cancel(entries[f].primary);
+                        if let Some(refund) = sim.cancel_remaining(entries[f].primary) {
+                            chaos.hedge_bytes_refunded += refund.round() as u64;
+                        }
                     }
                 }
                 ChaosRole::HedgeTimer { f } => {
@@ -1769,7 +1854,11 @@ mod tests {
         let chaotic = c2.repair().threads(2).chaos(FaultPlan::new(1)).run().unwrap();
         assert!(plain.chaos.is_none(), "plain sessions carry no chaos report");
         let cz = chaotic.chaos.as_ref().unwrap();
-        assert_eq!(cz.retries + cz.hedges + cz.replans + cz.corruptions_detected, 0);
+        assert_eq!(
+            cz.retries + cz.hedges + cz.replans + cz.corruptions_detected + cz.hedge_bytes_refunded,
+            0
+        );
+        assert_eq!(cz.io_stall_s, 0.0);
         assert_eq!(cz.degraded_completion_s, chaotic.completion_s);
         assert_eq!(plain.completion_s, chaotic.completion_s);
         assert_eq!(plain.serial_s, chaotic.serial_s);
@@ -1892,8 +1981,26 @@ mod tests {
             .chaos(FaultPlan::new(5).straggler(slow_node, 8.0).with_hedge(1.5))
             .run()
             .unwrap();
-        assert_eq!(unhedged.chaos.as_ref().unwrap().hedges, 0, "no threshold, no hedges");
-        assert_eq!(hedged.chaos.as_ref().unwrap().hedges, 1, "one straggled fetch, one hedge");
+        let ucz = unhedged.chaos.as_ref().unwrap();
+        let hcz = hedged.chaos.as_ref().unwrap();
+        assert_eq!(ucz.hedges, 0, "no threshold, no hedges");
+        assert_eq!(ucz.hedge_bytes_refunded, 0, "no race, nothing to refund");
+        assert_eq!(hcz.hedges, 1, "one straggled fetch, one hedge");
+        // ISSUE 9 satellite (ROADMAP 4a): the race's loser — here the
+        // 8×-straggled primary — is cancelled mid-flight and its
+        // undelivered (slowdown-scaled) bytes come back. The hedge wins
+        // well before the primary moves half its scaled transfer, so
+        // more than half of 8 × 1 MiB must be refunded.
+        assert!(
+            hcz.hedge_bytes_refunded > 4 * (1 << 20),
+            "refund too small: {}",
+            hcz.hedge_bytes_refunded
+        );
+        assert!(
+            hcz.hedge_bytes_refunded < 8 * (1 << 20),
+            "refund cannot exceed the loser's whole scaled transfer: {}",
+            hcz.hedge_bytes_refunded
+        );
         assert!(
             hedged.reports[0].contended_read_s < unhedged.reports[0].contended_read_s - 1e-9,
             "the hedged re-read must beat the straggler ({} vs {})",
@@ -1901,6 +2008,58 @@ mod tests {
             unhedged.reports[0].contended_read_s
         );
         assert!(c1.scrub_stripe(sid).is_ok());
+    }
+
+    #[test]
+    fn io_stall_charges_the_virtual_clock_deterministically() {
+        // ISSUE 9 satellite: `IoFault::Stall` used to exist only as a
+        // real sleep in the measured path. On the chaos clock the
+        // stalled block's fetch now starts `delay_ms` late — pure
+        // virtual time, reproducible without any real I/O.
+        let build = || {
+            let mut c = Cluster::new(tiny_cfg(SchemeKind::CpAzure));
+            let sid = c.fill_random_stripes(1, 37)[0];
+            let v = c.meta.stripes[&sid].block_nodes[0];
+            c.fail_node(v);
+            (c, sid, v)
+        };
+        let (mut c1, sid, _) = build();
+        let program = RepairProgram::for_pattern(c1.scheme(), &[0]).unwrap();
+        let stalled = *program.fetch().iter().next().unwrap();
+        // A lone straggler keeps the plan non-empty without stalling, as
+        // the baseline; 50 ms of injected device stall on top.
+        let base = c1.repair().chaos(FaultPlan::new(13).straggler(1, 1.0)).run().unwrap();
+        assert_eq!(base.chaos.as_ref().unwrap().io_stall_s, 0.0);
+        let (mut c2, _, victim) = build();
+        let stalled_s = c2
+            .repair()
+            .chaos(
+                FaultPlan::new(13)
+                    .io_fault(stalled, crate::chaos::IoFault::Stall { delay_ms: 50 }),
+            )
+            .run()
+            .unwrap();
+        let cz = stalled_s.chaos.as_ref().unwrap();
+        assert!((cz.io_stall_s - 0.050).abs() < 1e-12, "got {}", cz.io_stall_s);
+        assert_eq!(cz.retries + cz.replans + cz.hedges, 0, "a stall is not a failure");
+        let (rb, rs) = (&base.reports[0], &stalled_s.reports[0]);
+        // The stalled transfer cannot finish before it starts, and the
+        // stall dwarfs the sub-millisecond fetch it delays (the delta
+        // dips just below 50 ms because the un-stalled flows clear the
+        // ingress while the stalled one waits).
+        assert!(
+            rs.contended_read_s >= 0.050,
+            "the stalled fetch clock must carry the stall: {}",
+            rs.contended_read_s
+        );
+        assert!(
+            rs.contended_read_s > rb.contended_read_s + 0.045,
+            "the stall must dominate the fetch clock ({} vs {})",
+            rs.contended_read_s,
+            rb.contended_read_s
+        );
+        c2.restore_node(victim);
+        assert!(c2.scrub_stripe(sid).unwrap(), "a stall is slow, never wrong");
     }
 
     #[test]

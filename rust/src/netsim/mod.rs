@@ -14,9 +14,73 @@
 //!
 //! Time is virtual (f64 seconds): experiments are deterministic and run
 //! in microseconds of wall-clock regardless of simulated transfer sizes.
+//!
+//! An optional hierarchical [`Topology`] (node ↔ rack ↔ spine) adds two
+//! constraint rows per rack — the shared uplink toward the spine, one
+//! direction each — so cross-rack flows contend on oversubscribed rack
+//! uplinks in the same max-min allocation. Without a topology the model
+//! is bit-identical to the original flat one: the progressive-filling
+//! loop sees exactly the same links in the same order.
 
 /// Index of a node in the simulation.
 pub type NodeId = usize;
+
+/// Hierarchical node ↔ rack ↔ spine structure for the fluid model.
+///
+/// Every node is either attached to a rack's top-of-rack switch
+/// (`Some(rack)`) or directly to the spine (`None` — the cluster's
+/// proxy/coordinator). Traffic between two nodes of the same rack stays
+/// under the ToR and sees only the NIC constraints; traffic crossing a
+/// rack boundary additionally shares that rack's uplink — `uplink_bps`
+/// capacity in each direction, typically the rack's aggregate NIC
+/// bandwidth divided by an oversubscription factor.
+#[derive(Clone, Debug)]
+pub struct Topology {
+    rack_of: Vec<Option<usize>>,
+    uplink_bps: Vec<f64>,
+}
+
+impl Topology {
+    /// Build a topology from each node's rack assignment and the
+    /// per-rack uplink capacity (bytes/second, symmetric). Panics when
+    /// a rack index is out of range or an uplink capacity is not
+    /// positive — both are construction bugs, not runtime conditions.
+    pub fn new(rack_of: Vec<Option<usize>>, uplink_bps: Vec<f64>) -> Self {
+        for r in rack_of.iter().flatten() {
+            assert!(
+                *r < uplink_bps.len(),
+                "node assigned to rack {r} but only {} racks have uplinks",
+                uplink_bps.len()
+            );
+        }
+        for (q, &u) in uplink_bps.iter().enumerate() {
+            assert!(u > 0.0, "rack {q} uplink capacity must be positive, got {u}");
+        }
+        Self { rack_of, uplink_bps }
+    }
+
+    /// Rack of `node` (`None` for spine-attached nodes and nodes beyond
+    /// the assignment vector).
+    pub fn rack_of(&self, node: NodeId) -> Option<usize> {
+        self.rack_of.get(node).copied().flatten()
+    }
+
+    pub fn num_racks(&self) -> usize {
+        self.uplink_bps.len()
+    }
+
+    /// Uplink capacity of rack `q`, bytes/second per direction.
+    pub fn uplink_bps(&self, q: usize) -> f64 {
+        self.uplink_bps[q]
+    }
+
+    /// Does a `src → dst` flow cross a rack boundary (and therefore use
+    /// at least one rack uplink)? Spine ↔ spine traffic crosses none.
+    pub fn crosses_racks(&self, src: NodeId, dst: NodeId) -> bool {
+        let (rs, rd) = (self.rack_of(src), self.rack_of(dst));
+        rs != rd && (rs.is_some() || rd.is_some())
+    }
+}
 
 /// A node's NIC capacities, in bytes/second.
 #[derive(Clone, Copy, Debug)]
@@ -56,16 +120,34 @@ pub struct NetSim {
     pub nodes: Vec<NodeCaps>,
     /// Fixed per-flow latency in seconds (request RTT + disk seek model).
     pub latency_s: f64,
+    topology: Option<Topology>,
 }
 
 impl NetSim {
     pub fn new(nodes: Vec<NodeCaps>, latency_s: f64) -> Self {
-        Self { nodes, latency_s }
+        Self { nodes, latency_s, topology: None }
     }
 
     /// Homogeneous cluster of `n` nodes at `gbps` each.
     pub fn homogeneous(n: usize, gbps: f64, latency_s: f64) -> Self {
         Self::new(vec![NodeCaps::symmetric_gbps(gbps); n], latency_s)
+    }
+
+    /// Attach a hierarchical [`Topology`]: cross-rack flows then contend
+    /// on the per-rack uplinks in every allocation this sim computes.
+    pub fn with_topology(mut self, topology: Topology) -> Self {
+        assert!(
+            topology.rack_of.len() == self.nodes.len(),
+            "topology assigns {} nodes but the sim has {}",
+            topology.rack_of.len(),
+            self.nodes.len()
+        );
+        self.topology = Some(topology);
+        self
+    }
+
+    pub fn topology(&self) -> Option<&Topology> {
+        self.topology.as_ref()
     }
 
     /// Run a set of flows to completion; returns per-flow finish times and
@@ -187,33 +269,66 @@ impl NetSim {
     }
 
     /// Max-min fair allocation for flows given as parallel src/dst arrays
-    /// (two constraint sets: source egress, destination ingress),
-    /// computed by progressive filling.
+    /// (constraint sets: source egress, destination ingress, and — under
+    /// a [`Topology`] — the uplink of each rack a flow leaves or
+    /// enters), computed by progressive filling. Without a topology the
+    /// rack rows are absent and the arithmetic is exactly the original
+    /// flat model's.
     fn fair_rates_impl(&self, srcs: &[NodeId], dsts: &[NodeId]) -> Vec<f64> {
         let nf = srcs.len();
         let nn = self.nodes.len();
-        // Link capacities: 0..nn egress, nn..2nn ingress.
-        let mut cap = vec![0.0f64; 2 * nn];
+        let nr = self.topology.as_ref().map_or(0, |t| t.num_racks());
+        // Link capacities: 0..nn egress, nn..2nn ingress, then (topology
+        // only) 2nn..2nn+nr rack uplink-out, 2nn+nr..2nn+2nr uplink-in.
+        let mut cap = vec![0.0f64; 2 * nn + 2 * nr];
         for (i, n) in self.nodes.iter().enumerate() {
             cap[i] = n.egress_bps;
             cap[nn + i] = n.ingress_bps;
+        }
+        // Per-flow uplink rows (usize::MAX = the flow uses none): the
+        // source rack's uplink-out and the destination rack's uplink-in,
+        // only when the flow actually crosses the rack boundary.
+        const NO_LINK: usize = usize::MAX;
+        let mut up_out = vec![NO_LINK; nf];
+        let mut up_in = vec![NO_LINK; nf];
+        if let Some(t) = &self.topology {
+            for (q, &u) in t.uplink_bps.iter().enumerate() {
+                cap[2 * nn + q] = u;
+                cap[2 * nn + nr + q] = u;
+            }
+            for f in 0..nf {
+                if t.crosses_racks(srcs[f], dsts[f]) {
+                    if let Some(q) = t.rack_of(srcs[f]) {
+                        up_out[f] = 2 * nn + q;
+                    }
+                    if let Some(q) = t.rack_of(dsts[f]) {
+                        up_in[f] = 2 * nn + nr + q;
+                    }
+                }
+            }
         }
         let mut fixed = vec![false; nf];
         let mut rate = vec![0.0f64; nf];
         loop {
             // Count unfixed flows per link.
-            let mut count = vec![0usize; 2 * nn];
+            let mut count = vec![0usize; 2 * nn + 2 * nr];
             for f in 0..nf {
                 if !fixed[f] {
                     count[srcs[f]] += 1;
                     count[nn + dsts[f]] += 1;
+                    if up_out[f] != NO_LINK {
+                        count[up_out[f]] += 1;
+                    }
+                    if up_in[f] != NO_LINK {
+                        count[up_in[f]] += 1;
+                    }
                 }
             }
             // Bottleneck link: min cap/count over links with unfixed flows.
             let mut best: Option<(f64, usize)> = None;
-            for l in 0..2 * nn {
-                if count[l] > 0 {
-                    let share = cap[l] / count[l] as f64;
+            for (l, &c) in count.iter().enumerate() {
+                if c > 0 {
+                    let share = cap[l] / c as f64;
                     if best.map_or(true, |(s, _)| share < s) {
                         best = Some((share, l));
                     }
@@ -225,12 +340,21 @@ impl NetSim {
                 if fixed[f] {
                     continue;
                 }
-                let through = srcs[f] == link || nn + dsts[f] == link;
+                let through = srcs[f] == link
+                    || nn + dsts[f] == link
+                    || up_out[f] == link
+                    || up_in[f] == link;
                 if through {
                     fixed[f] = true;
                     rate[f] = share;
                     cap[srcs[f]] -= share;
                     cap[nn + dsts[f]] -= share;
+                    if up_out[f] != NO_LINK {
+                        cap[up_out[f]] -= share;
+                    }
+                    if up_in[f] != NO_LINK {
+                        cap[up_in[f]] -= share;
+                    }
                 }
             }
             // Numerical hygiene.
@@ -515,6 +639,16 @@ impl<'a> SessionSim<'a> {
     /// flow was still pending or active, `false` if it already finished
     /// (its completion event may still be queued) or the id is unknown.
     pub fn cancel(&mut self, id: usize) -> bool {
+        self.cancel_remaining(id).is_some()
+    }
+
+    /// [`Self::cancel`] that additionally reports the bytes the flow had
+    /// **not yet delivered** at cancellation — the refundable remainder
+    /// a scheduler can credit back (the chaos timeline's hedge-win byte
+    /// refund). `Some(bytes)` when the flow was still pending (its full
+    /// size) or active (its unfinished tail), `None` when it already
+    /// finished or the id is unknown.
+    pub fn cancel_remaining(&mut self, id: usize) -> Option<f64> {
         if let Some(pos) = self.active.iter().position(|f| f.id == id) {
             let f = self.active.swap_remove(pos);
             #[cfg(feature = "strict-invariants")]
@@ -524,8 +658,7 @@ impl<'a> SessionSim<'a> {
                 // longer owed. The delivered portion stays admitted.
                 self.strict.dst_bytes[f.group] -= f.remaining;
             }
-            let _ = f;
-            return true;
+            return Some(f.remaining.max(0.0));
         }
         if self.pending.iter().any(|p| p.0.id == id) {
             let mut v = std::mem::take(&mut self.pending).into_vec();
@@ -537,11 +670,12 @@ impl<'a> SessionSim<'a> {
                 self.strict.dst_bytes[p.0.group] -= p.0.remaining;
                 self.strict.dst_flows[p.0.group] -= 1;
             }
+            let remaining = p.0.remaining.max(0.0);
             let _ = p;
             self.pending = v.into();
-            return true;
+            return Some(remaining);
         }
-        false
+        None
     }
 
     /// The uninstrumented advance loop behind [`Self::next_event`].
@@ -1042,6 +1176,109 @@ mod tests {
         assert_eq!(b_arrived, 0.0, "a cancelled pending flow moves nothing");
         // Cancelling a finished flow is also false.
         assert!(!sess.cancel(a));
+    }
+
+    /// 4 datanodes in 2 racks (2 each) + a spine-attached proxy at
+    /// node 4, all 1 Gbps NICs, each rack uplink at `uplink` bytes/s.
+    fn racked(uplink: f64) -> NetSim {
+        sim(5).with_topology(Topology::new(
+            vec![Some(0), Some(0), Some(1), Some(1), None],
+            vec![uplink, uplink],
+        ))
+    }
+
+    #[test]
+    fn cross_rack_flows_contend_on_the_rack_uplink() {
+        // Two rack-0 nodes send 0.25 GB each to the spine proxy. Flat:
+        // they share the proxy's 1 Gbps ingress → done at 0.5 s. With a
+        // half-rate rack-0 uplink they share 0.5 Gbps → done at 1.0 s.
+        let flows: Vec<Flow> = (0..2)
+            .map(|i| Flow { src: i, dst: 4, bytes: (GBPS / 4.0) as u64, start: 0.0 })
+            .collect();
+        let (_, flat) = sim(5).run(&flows);
+        assert!((flat - 0.5).abs() < 1e-6, "flat={flat}");
+        let (_, constrained) = racked(GBPS / 2.0).run(&flows);
+        assert!((constrained - 1.0).abs() < 1e-6, "constrained={constrained}");
+        // A non-binding uplink reproduces the flat allocation exactly.
+        let (_, wide) = racked(8.0 * GBPS).run(&flows);
+        assert_eq!(wide, flat, "non-binding uplinks must not perturb rates");
+    }
+
+    #[test]
+    fn in_rack_flows_ignore_the_uplink() {
+        // node 0 → node 1 stays under the rack-0 ToR: even a tiny
+        // uplink leaves it at full NIC rate.
+        let s = racked(GBPS / 100.0);
+        let t = s.topology().unwrap();
+        assert!(!t.crosses_racks(0, 1));
+        assert!(t.crosses_racks(0, 2));
+        assert!(t.crosses_racks(0, 4), "rack → spine uses the uplink");
+        assert!(!t.crosses_racks(4, 4), "spine → spine uses none");
+        let (res, _) = s.run(&[Flow { src: 0, dst: 1, bytes: GBPS as u64, start: 0.0 }]);
+        assert!((res[0].finish - 1.0).abs() < 1e-6, "in-rack at {}", res[0].finish);
+    }
+
+    #[test]
+    fn uplink_in_constrains_spine_to_rack_traffic() {
+        // Proxy → both rack-1 nodes (write-back shape): the flows cross
+        // into rack 1 and share its uplink-in.
+        let flows: Vec<Flow> = (2..4)
+            .map(|i| Flow { src: 4, dst: i, bytes: (GBPS / 4.0) as u64, start: 0.0 })
+            .collect();
+        // Flat bottleneck is the proxy's 1 Gbps egress → 0.5 s.
+        let (_, flat) = sim(5).run(&flows);
+        assert!((flat - 0.5).abs() < 1e-6, "flat={flat}");
+        let (_, constrained) = racked(GBPS / 2.0).run(&flows);
+        assert!((constrained - 1.0).abs() < 1e-6, "constrained={constrained}");
+    }
+
+    #[test]
+    fn session_sim_under_topology_matches_run() {
+        let s = racked(GBPS / 2.0);
+        let flows = vec![
+            Flow { src: 0, dst: 4, bytes: (GBPS / 4.0) as u64, start: 0.0 },
+            Flow { src: 1, dst: 4, bytes: (GBPS / 4.0) as u64, start: 0.0 },
+            Flow { src: 2, dst: 4, bytes: (GBPS / 8.0) as u64, start: 0.2 },
+        ];
+        let (want, makespan) = s.run(&flows);
+        let mut sess = SessionSim::new(&s, 4, flows.len());
+        for (g, f) in flows.iter().enumerate() {
+            sess.admit(*f, g);
+        }
+        let mut got = vec![0.0f64; flows.len()];
+        while let Some(ev) = sess.next_event() {
+            got[ev.id] = ev.finish;
+        }
+        for (a, b) in want.iter().zip(got.iter()) {
+            assert!((a.finish - b).abs() < 1e-9, "{} vs {b}", a.finish);
+        }
+        assert!((sess.now() - makespan).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cancel_remaining_reports_the_undelivered_tail() {
+        // Same scenario as cancel_active_flow_frees_its_bandwidth_share:
+        // at t = 0.5 flow B has delivered 0.25 GB of 1 GB — cancelling
+        // it must refund the 0.75 GB tail.
+        let s = sim(3);
+        let mut sess = SessionSim::new(&s, 2, 2);
+        let a = sess.admit(Flow { src: 0, dst: 2, bytes: GBPS as u64, start: 0.0 }, 0);
+        let b = sess.admit(Flow { src: 1, dst: 2, bytes: GBPS as u64, start: 0.0 }, 1);
+        let t = sess.timer(0.5);
+        assert_eq!(sess.next_event().unwrap().id, t);
+        let refund = sess.cancel_remaining(b).expect("B is mid-transfer");
+        assert!(
+            (refund - 0.75 * GBPS).abs() < 1e-3 * GBPS,
+            "refund {refund} vs {}",
+            0.75 * GBPS
+        );
+        assert!(sess.cancel_remaining(b).is_none(), "already cancelled");
+        // A pending flow refunds its full size.
+        let c = sess.admit(Flow { src: 1, dst: 2, bytes: 1000, start: 99.0 }, 1);
+        assert_eq!(sess.cancel_remaining(c), Some(1000.0));
+        let ev = sess.next_event().unwrap();
+        assert_eq!(ev.id, a);
+        assert!(sess.next_event().is_none());
     }
 
     #[test]

@@ -17,6 +17,16 @@
 //!
 //! MTTDL = expected absorption time from the all-healthy state, solved
 //! from the fundamental linear system of the chain.
+//!
+//! **Correlated bursts** (ISSUE 9): [`BurstParams`] adds a rack-loss
+//! mode — at rate `rate` a whole failure domain dies, taking `size` of
+//! the stripe's blocks in one jump f → f+size (split between the
+//! recoverable successor and data loss by the same decodability
+//! census). The chain is then a birth–death process with upward jumps;
+//! its stationary distribution still solves exactly by *cut balance*
+//! (repairs only ever step down by one, so the only downward flow
+//! across the cut {0..f} | {f+1..} is `π_{f+1}·repair_{f+1}`), and the
+//! recursion stays all-positive — no catastrophic cancellation.
 
 use crate::codes::Scheme;
 use crate::metrics;
@@ -149,19 +159,51 @@ fn enumerate_combinations(
     }
 }
 
+/// Correlated rack-failure mode: on top of i.i.d. node failures, a
+/// whole failure domain holding `size` of the stripe's blocks is lost
+/// at `rate` events per year (aggregate over the stripe's racks — a ToR
+/// or rack-power event, §ISSUE 9). The lost blocks are approximated as
+/// a uniform `size`-subset of the stripe: under the RackSpread rotation
+/// a rack's blocks are spread across groups, and the same marginal
+/// census already underlies the single-step transitions.
+#[derive(Clone, Copy, Debug)]
+pub struct BurstParams {
+    /// Rack-loss events per year affecting this stripe.
+    pub rate: f64,
+    /// Stripe blocks co-located per failure domain (the placement's
+    /// per-rack cap; clamped to ≥ 1).
+    pub size: usize,
+}
+
 /// The chain description for one scheme, with all rates resolved.
 #[derive(Clone, Debug)]
 pub struct MarkovChain {
     /// Failure-transition rates: `fail[f]` = rate f → f+1 (recoverable part).
     pub fail: Vec<f64>,
-    /// Data-loss rates: `loss[f]` = rate f → DL.
+    /// Data-loss rates: `loss[f]` = rate f → DL (single-step *and*
+    /// burst-induced loss).
     pub loss: Vec<f64>,
     /// Repair rates: `repair[f]` = rate f → f−1 (defined for f ≥ 1).
     pub repair: Vec<f64>,
+    /// Correlated-burst rates: `burst[f]` = rate f → f+`burst_size`
+    /// (recoverable part). Empty under i.i.d. loss.
+    pub burst: Vec<f64>,
+    /// Upward jump width of the burst transitions (0 = i.i.d. chain).
+    pub burst_size: usize,
 }
 
-/// Build the chain for scheme `s` under `params`.
+/// Build the chain for scheme `s` under `params` (i.i.d. loss).
 pub fn build_chain(s: &Scheme, params: &ReliabilityParams, seed: u64) -> MarkovChain {
+    build_chain_with_burst(s, params, None, seed)
+}
+
+/// [`build_chain`] with an optional correlated rack-failure mode.
+pub fn build_chain_with_burst(
+    s: &Scheme,
+    params: &ReliabilityParams,
+    burst: Option<BurstParams>,
+    seed: u64,
+) -> MarkovChain {
     let n = s.n();
     let fmax = s.r + s.p; // beyond this the stripe is lost regardless
     let arc1 = metrics::arc1(s);
@@ -182,6 +224,8 @@ pub fn build_chain(s: &Scheme, params: &ReliabilityParams, seed: u64) -> MarkovC
     let mut fail = vec![0.0; fmax + 1];
     let mut loss = vec![0.0; fmax + 1];
     let mut repair = vec![0.0; fmax + 1];
+    let burst_size = burst.map_or(0, |b| b.size.max(1));
+    let mut burst_rates = vec![0.0; if burst.is_some() { fmax + 1 } else { 0 }];
     // Years per second, to keep all rates in 1/years.
     let spy = 365.25 * 24.0 * 3600.0;
     for f in 0..=fmax {
@@ -193,6 +237,17 @@ pub fn build_chain(s: &Scheme, params: &ReliabilityParams, seed: u64) -> MarkovC
         } else {
             fail[f] = rate * (1.0 - q_next);
             loss[f] = rate * q_next;
+        }
+        if let Some(b) = burst {
+            // A rack loss jumps f → f+size, split by the census at the
+            // landing state; past the parity budget it is certain loss.
+            if f + burst_size > fmax {
+                loss[f] += b.rate;
+            } else {
+                let q_land = undecodable_fraction(&loss_scheme, f + burst_size, params, seed);
+                burst_rates[f] = b.rate * (1.0 - q_land);
+                loss[f] += b.rate * q_land;
+            }
         }
         if f >= 1 {
             // Average blocks transferred to leave state f.
@@ -206,28 +261,41 @@ pub fn build_chain(s: &Scheme, params: &ReliabilityParams, seed: u64) -> MarkovC
             repair[f] = spy / secs;
         }
     }
-    MarkovChain { fail, loss, repair }
+    MarkovChain { fail, loss, repair, burst: burst_rates, burst_size }
 }
 
 /// MTTDL in years, from the chain's quasi-steady state — the paper's own
 /// formulation ("MTTDL is computed from the steady-state probability
 /// distribution of this Markov chain", §II-B).
 ///
-/// The repairable part of the chain is a birth–death process, so its
-/// stationary distribution follows from detailed balance
-/// (`π_{f+1} = π_f · fail_f / repair_{f+1}`); the mean time to data loss
-/// is the inverse of the stationary loss flux `Σ_f π_f · loss_f`.
+/// The repairable part of the chain is a birth–death process (plus
+/// upward burst jumps), so its stationary distribution follows from
+/// cut balance across {0..f} | {f+1..}: repairs only step down by one,
+/// so the downward flow is `π_{f+1}·repair_{f+1}` and the upward flow
+/// is `π_f·fail_f` plus every burst jump that clears the cut,
+/// `Σ_{i=max(0,f+1−b)}^{f} π_i·burst_i`. The mean time to data loss is
+/// the inverse of the stationary loss flux `Σ_f π_f · loss_f`.
 ///
 /// (A direct first-passage tridiagonal solve is numerically hopeless
 /// here: T-value *differences* are ~1e-23 of their ~1e17 magnitude, far
-/// below f64 resolution; the flux formulation never subtracts.)
+/// below f64 resolution; the flux/cut-balance formulation is
+/// all-positive and never subtracts.)
 pub fn mttdl_years(chain: &MarkovChain) -> f64 {
     let m = chain.fail.len();
+    let b = chain.burst_size;
     let mut pi = vec![0.0f64; m];
     pi[0] = 1.0;
     for f in 0..m - 1 {
         if chain.repair[f + 1] > 0.0 {
-            pi[f + 1] = pi[f] * chain.fail[f] / chain.repair[f + 1];
+            let mut up = pi[f] * chain.fail[f];
+            if b > 0 {
+                // Burst jumps from i land at i+b > f exactly when
+                // i ≥ f+1−b: they cross the cut.
+                for i in (f + 1).saturating_sub(b)..=f {
+                    up += pi[i] * chain.burst.get(i).copied().unwrap_or(0.0);
+                }
+            }
+            pi[f + 1] = up / chain.repair[f + 1];
         }
     }
     let total: f64 = pi.iter().sum();
@@ -241,6 +309,16 @@ pub fn mttdl_years(chain: &MarkovChain) -> f64 {
 /// Convenience: MTTDL for a scheme under the given environment.
 pub fn mttdl(s: &Scheme, params: &ReliabilityParams, seed: u64) -> f64 {
     mttdl_years(&build_chain(s, params, seed))
+}
+
+/// [`mttdl`] under correlated rack bursts.
+pub fn mttdl_burst(
+    s: &Scheme,
+    params: &ReliabilityParams,
+    burst: BurstParams,
+    seed: u64,
+) -> f64 {
+    mttdl_years(&build_chain_with_burst(s, params, Some(burst), seed))
 }
 
 #[cfg(test)]
@@ -331,6 +409,57 @@ mod tests {
         let slow = ReliabilityParams::default();
         let sc = s(SchemeKind::AzureLrc, 6, 2, 2);
         assert!(mttdl(&sc, &fast, 3) > mttdl(&sc, &slow, 3));
+    }
+
+    #[test]
+    fn correlated_rack_bursts_degrade_mttdl_but_keep_the_cp_ordering() {
+        // A rack-loss burst takes out several blocks of a stripe at once;
+        // MTTDL must drop relative to i.i.d. failures, but because the
+        // burst rates are scheme-independent (BaselineCensus) the CP
+        // repair advantage must survive the sweep.
+        let params = ReliabilityParams::default();
+        let burst = BurstParams { rate: 0.05, size: 2 };
+        let azure = s(SchemeKind::AzureLrc, 6, 2, 2);
+        let uniform = s(SchemeKind::UniformCauchy, 6, 2, 2);
+        let cp_azure = s(SchemeKind::CpAzure, 6, 2, 2);
+        let cp_uniform = s(SchemeKind::CpUniform, 6, 2, 2);
+
+        let m = |sc: &Scheme| mttdl_burst(sc, &params, burst, 7);
+        let (b_azure, b_cp_azure) = (m(&azure), m(&cp_azure));
+        let (b_uniform, b_cp_uniform) = (m(&uniform), m(&cp_uniform));
+        for (label, v) in [
+            ("azure", b_azure),
+            ("cp_azure", b_cp_azure),
+            ("uniform", b_uniform),
+            ("cp_uniform", b_cp_uniform),
+        ] {
+            assert!(v.is_finite() && v > 0.0, "{label} burst mttdl={v}");
+        }
+
+        // Bursts can only hurt.
+        assert!(b_azure < mttdl(&azure, &params, 7));
+        assert!(b_cp_azure < mttdl(&cp_azure, &params, 7));
+
+        // Table VI ordering survives correlated loss.
+        assert!(b_cp_azure > b_azure, "{b_cp_azure:.3e} !> {b_azure:.3e}");
+        assert!(
+            b_cp_uniform > b_uniform,
+            "{b_cp_uniform:.3e} !> {b_uniform:.3e}"
+        );
+
+        // More frequent bursts are strictly worse.
+        let frequent = BurstParams { rate: 0.5, size: 2 };
+        assert!(mttdl_burst(&azure, &params, frequent, 7) < b_azure);
+
+        // A burst wider than the full tolerance (r+p=4) is certain loss
+        // from every state: MTTDL collapses to ~1/rate regardless of code.
+        let fatal = BurstParams { rate: 0.05, size: 5 };
+        let m_fatal = mttdl_burst(&azure, &params, fatal, 7);
+        assert!(
+            m_fatal < b_azure / 1e3,
+            "fatal bursts should dominate: {m_fatal:.3e} vs {b_azure:.3e}"
+        );
+        assert!(m_fatal < 25.0, "1/rate bound: {m_fatal:.3e}");
     }
 
     #[test]

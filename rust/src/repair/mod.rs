@@ -133,6 +133,14 @@ pub struct RepairPlan {
     /// `true` if any step used a global-parity definition equation or the
     /// global decode fallback — the paper's "global repair" class.
     pub used_global: bool,
+    /// Per-block cross-domain fetch weight (e.g. bytes crossing a rack
+    /// uplink to read this survivor), used as a **tie-break only** when
+    /// ranking candidate survivor sets. Empty means no preference — the
+    /// planner then behaves exactly like the locality-oblivious
+    /// original. Set by [`plan_with_locality`] and carried on the plan
+    /// so the compiled program's global-decode rows honor the same
+    /// preference.
+    pub locality: Vec<u64>,
 }
 
 impl RepairPlan {
@@ -178,7 +186,13 @@ pub(crate) fn global_decode_rows(
 ) -> anyhow::Result<Vec<usize>> {
     let mut cand: Vec<usize> =
         (0..scheme.n()).filter(|b| !plan.erased.contains(b)).collect();
-    cand.sort_by_key(|&b| (!plan.reads.contains(&b), !scheme.is_data(b), b));
+    // The locality weight slots between the paper's reuse/data-first
+    // rules and the index tie-break: an empty weight vector (every
+    // weight 0) reproduces the original ordering exactly.
+    cand.sort_by_key(|&b| {
+        let w = plan.locality.get(b).copied().unwrap_or(0);
+        (!plan.reads.contains(&b), !scheme.is_data(b), w, b)
+    });
     crate::codec::choose_invertible_rows(&scheme.generator, &cand, scheme.k).ok_or_else(|| {
         anyhow::anyhow!(
             "survivors of erasure pattern {:?} do not span the data space",
@@ -191,7 +205,24 @@ pub(crate) fn global_decode_rows(
 /// recoverable (≤ guaranteed tolerance, or any pattern that happens to be
 /// decodable); otherwise `None`.
 pub fn plan(scheme: &Scheme, erased: &[usize]) -> Option<RepairPlan> {
+    plan_with_locality(scheme, erased, &[])
+}
+
+/// [`plan`] with a per-block cross-domain fetch weight (`xcost[b]`, e.g.
+/// bytes that reading survivor `b` would move across a rack uplink).
+/// The weight is a **tie-break only**: candidate equations are still
+/// ranked local-first then fewest-new-reads — exactly the paper's
+/// policy, so every §IV cost pin is unchanged — and the weight decides
+/// only between candidates equal under those rules (and seeds the
+/// global-decode survivor ordering via [`RepairPlan::locality`]). An
+/// empty `xcost` (or all zeros) is bit-identical to [`plan`].
+pub fn plan_with_locality(
+    scheme: &Scheme,
+    erased: &[usize],
+    xcost: &[u64],
+) -> Option<RepairPlan> {
     assert!(!erased.is_empty());
+    let weight = |b: usize| xcost.get(b).copied().unwrap_or(0);
     let eqs: Vec<&Equation> = scheme.all_eqs().collect();
     let n_local = scheme.local_eqs.len();
     let mut unsolved: BTreeSet<usize> = erased.iter().copied().collect();
@@ -200,9 +231,11 @@ pub fn plan(scheme: &Scheme, erased: &[usize]) -> Option<RepairPlan> {
     let mut steps: Vec<PeelStep> = Vec::new();
     let mut used_global = false;
 
-    // Peel to fixpoint. Prefer local equations, then fewest new reads.
+    // Peel to fixpoint. Prefer local equations, then fewest new reads,
+    // then (locality-aware runs only) the cheapest cross-domain bytes.
     loop {
-        let mut best: Option<(usize, usize, usize, bool)> = None; // (new_reads, eq_idx, block, is_local)
+        // (new_reads, new_xcost, eq_idx, block, is_local)
+        let mut best: Option<(usize, u64, usize, usize, bool)> = None;
         for (ei, eq) in eqs.iter().enumerate() {
             let erased_members: Vec<usize> = eq
                 .terms
@@ -215,23 +248,29 @@ pub fn plan(scheme: &Scheme, erased: &[usize]) -> Option<RepairPlan> {
             }
             let target = erased_members[0];
             let is_local = ei < n_local;
-            let new_reads = eq
-                .others(target)
-                .filter(|b| !solved.contains(b) && !reads.contains(b))
-                .count();
-            let cand = (new_reads, ei, target, is_local);
+            let mut new_reads = 0usize;
+            let mut new_x = 0u64;
+            for b in eq.others(target) {
+                if !solved.contains(&b) && !reads.contains(&b) {
+                    new_reads += 1;
+                    new_x += weight(b);
+                }
+            }
+            let cand = (new_reads, new_x, ei, target, is_local);
             let better = match best {
                 None => true,
-                Some((br, bei, _, bl)) => {
-                    // local beats global; then fewer new reads; then stable order
-                    (is_local && !bl) || (is_local == bl && (new_reads, ei) < (br, bei))
+                Some((br, bx, bei, _, bl)) => {
+                    // local beats global; then fewer new reads; then
+                    // cheaper cross-domain bytes; then stable order.
+                    (is_local && !bl)
+                        || (is_local == bl && (new_reads, new_x, ei) < (br, bx, bei))
                 }
             };
             if better {
                 best = Some(cand);
             }
         }
-        let Some((_, ei, target, is_local)) = best else { break };
+        let Some((_, _, ei, target, is_local)) = best else { break };
         for b in eqs[ei].others(target) {
             if !solved.contains(&b) {
                 debug_assert!(!unsolved.contains(&b));
@@ -264,7 +303,14 @@ pub fn plan(scheme: &Scheme, erased: &[usize]) -> Option<RepairPlan> {
         // enumerations stay cheap.
     }
 
-    Some(RepairPlan { erased: erased.to_vec(), steps, global_blocks, reads, used_global })
+    Some(RepairPlan {
+        erased: erased.to_vec(),
+        steps,
+        global_blocks,
+        reads,
+        used_global,
+        locality: xcost.to_vec(),
+    })
 }
 
 /// Plan the repair of a single block, as the coordinator does for
@@ -453,6 +499,87 @@ mod tests {
                     assert_eq!(pl.cost(k), g.min(p), "{kind:?} Lj costs min(g,p)");
                 }
             }
+        }
+    }
+
+    #[test]
+    fn zero_locality_plans_are_identical_to_plain_plans() {
+        // `plan_with_locality` with no weights (or all-zero weights) must
+        // reproduce `plan` exactly — steps, reads, decode rows and all —
+        // so flat-topology clusters stay bit-identical to pre-topology
+        // builds.
+        let mut rng = Prng::new(0x7AC7);
+        for kind in SchemeKind::ALL_LRC {
+            for &(k, r, p) in &crate::PARAMS[..5] {
+                let s = scheme(kind, k, r, p);
+                for _ in 0..12 {
+                    let f = 1 + rng.below(3);
+                    let erased = rng.distinct(s.n(), f);
+                    let base = plan(&s, &erased);
+                    let zeros = vec![0u64; s.n()];
+                    for xcost in [&[][..], &zeros[..]] {
+                        let loc = plan_with_locality(&s, &erased, xcost);
+                        match (&base, &loc) {
+                            (None, None) => {}
+                            (Some(a), Some(b)) => {
+                                assert_eq!(a.steps, b.steps, "{kind:?} {erased:?}");
+                                assert_eq!(a.reads, b.reads, "{kind:?} {erased:?}");
+                                assert_eq!(a.global_blocks, b.global_blocks);
+                                assert_eq!(a.used_global, b.used_global);
+                                assert_eq!(
+                                    a.fetch_set(&s).unwrap(),
+                                    b.fetch_set(&s).unwrap(),
+                                    "{kind:?} {erased:?}"
+                                );
+                            }
+                            _ => panic!("{kind:?} {erased:?}: plan/None disagreement"),
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn locality_weight_steers_ties_without_changing_cost() {
+        // CP-Azure (6,2,2), whole first group's data erased: peeling
+        // stalls, global decode needs k=6 of the 7 survivors — the one
+        // it skips is a pure tie. Weighting a survivor as "cross-rack
+        // expensive" must steer the decode away from it without
+        // changing the plan cost.
+        let s = scheme(SchemeKind::CpAzure, 6, 2, 2);
+        let erased = vec![0, 1, 2];
+        let base = plan(&s, &erased).unwrap();
+        assert_eq!(base.cost(6), 6);
+        // Weight survivor L1 (block 8) as expensive; the decode can
+        // always swap it for L2 (block 9).
+        let mut xcost = vec![0u64; s.n()];
+        xcost[8] = 1 << 20;
+        let steered = plan_with_locality(&s, &erased, &xcost).unwrap();
+        assert_eq!(steered.cost(6), 6, "locality must never change repair cost");
+        let base_fetch = base.fetch_set(&s).unwrap();
+        let steered_fetch = steered.fetch_set(&s).unwrap();
+        assert!(
+            base_fetch.contains(&8),
+            "tie-break order should put L1 in the unweighted decode: {base_fetch:?}"
+        );
+        assert!(
+            !steered_fetch.contains(&8),
+            "weighted decode must avoid L1: {steered_fetch:?}"
+        );
+        // The steered plan still reconstructs the right bytes.
+        use crate::codec::StripeCodec;
+        let codec = StripeCodec::new(scheme(SchemeKind::CpAzure, 6, 2, 2));
+        let mut rng = Prng::new(0xD00F);
+        let data: Vec<Vec<u8>> = (0..6).map(|_| rng.bytes(64)).collect();
+        let stripe = codec.encode_stripe(&data);
+        let mut blocks: Vec<Option<Vec<u8>>> = stripe.iter().cloned().map(Some).collect();
+        for &e in &erased {
+            blocks[e] = None;
+        }
+        let rec = execute(&codec, &steered, &blocks).unwrap();
+        for (i, &e) in erased.iter().enumerate() {
+            assert_eq!(rec[i], stripe[e]);
         }
     }
 }

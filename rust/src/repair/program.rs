@@ -631,7 +631,20 @@ impl RepairProgram {
 
     /// Convenience: plan + compile in one call.
     pub fn for_pattern(scheme: &Scheme, erased: &[usize]) -> anyhow::Result<RepairProgram> {
-        let plan = super::plan(scheme, erased)
+        Self::for_pattern_with_locality(scheme, erased, &[])
+    }
+
+    /// [`Self::for_pattern`] with a per-block cross-domain fetch weight
+    /// (see [`super::plan_with_locality`]): same repair costs, but ties —
+    /// including the global-decode survivor choice — break toward blocks
+    /// with smaller `xcost`. Empty `xcost` is identical to
+    /// [`Self::for_pattern`].
+    pub fn for_pattern_with_locality(
+        scheme: &Scheme,
+        erased: &[usize],
+        xcost: &[u64],
+    ) -> anyhow::Result<RepairProgram> {
+        let plan = super::plan_with_locality(scheme, erased, xcost)
             .ok_or_else(|| anyhow::anyhow!("pattern {erased:?} is unrecoverable"))?;
         Self::compile(scheme, &plan)
     }

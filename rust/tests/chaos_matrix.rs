@@ -275,6 +275,66 @@ fn zero_fault_chaos_sessions_are_bit_identical_for_every_construction() {
     }
 }
 
+#[test]
+fn measured_backend_sessions_compose_with_chaos_plans() {
+    // A `.backend(..)` chaos session: the virtual path absorbs a
+    // transient fetch fault and a deterministic Stall charge, and the
+    // measured pass re-reads the same fetch set through a FaultyBackend
+    // carrying the same I/O faults — stalled but never wrong.
+    use cp_lrc::cluster::store::StoreKind;
+    let root =
+        std::env::temp_dir().join(format!("cp-lrc-chaos-measured-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    let mut config = cfg(SchemeKind::CpAzure);
+    config.store = StoreKind::File(root.clone());
+    let mut c = Cluster::new(config);
+    let sid = c.fill_random_stripes(1, 0x3EA5)[0];
+    let want = snapshot(&c, sid);
+    let victim = c.meta.stripes[&sid].block_nodes[0];
+    c.fail_node(victim);
+
+    let program = RepairProgram::for_pattern(c.scheme(), &[0]).unwrap();
+    let mut fetched = program.fetch().iter().copied();
+    let flaky = fetched.next().unwrap();
+    let stalled = fetched.next().unwrap_or(flaky);
+    let plan = FaultPlan::new(0x10)
+        .fail_fetch(sid, flaky, 2)
+        .io_fault(stalled, IoFault::Stall { delay_ms: 1 });
+
+    let s = c
+        .repair()
+        .stripe(sid, &[0])
+        .backend(IoBackendKind::SyncPread)
+        .chunk_bytes(512)
+        .chaos(plan)
+        .run()
+        .unwrap();
+    let cz = s.chaos.as_ref().expect("chaos session carries a report");
+    assert_eq!(cz.retries, 2, "{cz:?}");
+    assert_eq!(cz.replans, 0, "{cz:?}");
+    // One stalled block fetch, charged once on the virtual clock.
+    assert!((cz.io_stall_s - 0.001).abs() < 1e-12, "{cz:?}");
+
+    let r = &s.reports[0];
+    let m = r.measured.as_ref().expect("backend chaos session must measure");
+    assert_eq!(m.backend, "sync_pread");
+    assert_eq!(m.chunk_bytes, 512);
+    assert_eq!(m.bytes_read, r.bytes_read, "measured pass reads the same fetch set");
+    // 2048-byte blocks at 512-byte chunks.
+    assert_eq!(m.stats.chunks, 4 * r.blocks_read);
+
+    let info = c.meta.stripes[&sid].clone();
+    for (b, w) in want.iter().enumerate() {
+        let got = c.nodes[info.block_nodes[b]]
+            .get(BlockKey { stripe: sid, index: b as u32 })
+            .unwrap_or_else(|| panic!("block {b} missing after measured chaos"));
+        assert_eq!(&got, w, "block {b} differs from the oracle");
+    }
+    assert!(c.scrub_stripe(sid).unwrap());
+    drop(c); // release the datanode threads' file handles before cleanup
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
 // ------------------------------------------------- I/O-backend seam
 
 fn stripe_on_disk(

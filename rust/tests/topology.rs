@@ -1,0 +1,260 @@
+//! Failure-domain acceptance tests (the ISSUE 9 tentpole): hierarchical
+//! rack topology, correlated rack kills driving the mid-session re-plan
+//! ladder, rack-aware survivor/replacement selection, and the placement
+//! spread invariant.
+//!
+//! The worked geometry (shared with the cluster unit tests): 16
+//! datanodes in 4 racks of 4 (`rack_of(n, 4) = n % 4`), RackSpread
+//! placement with a 3-blocks-per-rack cap, so stripe 0 of a (6,2,2)
+//! scheme lands block `b` on node `b` and racks hold blocks
+//! {0,4,8} / {1,5,9} / {2,6} / {3,7}.
+
+use cp_lrc::chaos::FaultPlan;
+use cp_lrc::cluster::metadata::{BlockKey, StripeId};
+use cp_lrc::cluster::placement::{rack_of, PlacementPolicy};
+use cp_lrc::cluster::{Cluster, ClusterConfig, RackConfig};
+use cp_lrc::codes::{Scheme, SchemeKind};
+use cp_lrc::repair::RepairProgram;
+use std::collections::BTreeSet;
+
+const RACKS: usize = 4;
+const NODES: usize = 16;
+
+fn racked_cfg(kind: SchemeKind, rack_aware: bool) -> ClusterConfig {
+    let rc = RackConfig::new(RACKS, 4.0);
+    ClusterConfig {
+        num_datanodes: NODES,
+        gbps: 1.0,
+        latency_s: 0.001,
+        block_size: 4096,
+        kind,
+        k: 6,
+        r: 2,
+        p: 2,
+        placement: PlacementPolicy::RackSpread { racks: RACKS, max_per_rack: 3 },
+        topology: Some(if rack_aware { rc } else { rc.oblivious() }),
+        ..Default::default()
+    }
+}
+
+/// Read every block of `sid` off its current datanode.
+fn snapshot(c: &Cluster, sid: StripeId) -> Vec<Vec<u8>> {
+    let info = c.meta.stripes[&sid].clone();
+    (0..info.n())
+        .map(|b| {
+            let node = info.block_nodes[b];
+            c.nodes[node]
+                .get(BlockKey { stripe: sid, index: b as u32 })
+                .unwrap_or_else(|| panic!("block {b} of stripe {sid} unreadable"))
+        })
+        .collect()
+}
+
+/// Walk the chaos re-plan ladder by hand: starting from `start`, every
+/// not-yet-fetched survivor homed on a `dead` node joins the erased set
+/// and the next rung compiles, until a program's outstanding fetches all
+/// live on alive nodes (returns the converged pattern) or the pattern
+/// stops being plannable (`None`). Mirrors `chaos_repair_one`, including
+/// the reuse of blocks fetched on earlier rungs.
+fn ladder_fixpoint(
+    scheme: &Scheme,
+    block_nodes: &[usize],
+    dead: &BTreeSet<usize>,
+    start: &[usize],
+) -> Option<Vec<usize>> {
+    let mut erased: BTreeSet<usize> = start.iter().copied().collect();
+    let mut have: BTreeSet<usize> = BTreeSet::new();
+    loop {
+        let ev: Vec<usize> = erased.iter().copied().collect();
+        let program = RepairProgram::for_pattern(scheme, &ev).ok()?;
+        let mut lost: Vec<usize> = Vec::new();
+        for &b in program.fetch() {
+            if have.contains(&b) {
+                continue;
+            }
+            if dead.contains(&block_nodes[b]) {
+                lost.push(b);
+            } else {
+                have.insert(b);
+            }
+        }
+        if lost.is_empty() {
+            return Some(ev);
+        }
+        erased.extend(lost);
+    }
+}
+
+#[test]
+fn rack_kill_mid_session_replans_and_byte_matches_the_oracle() {
+    for kind in SchemeKind::ALL_LRC {
+        let mut c = Cluster::new(racked_cfg(kind, true));
+        let sid = c.fill_random_stripes(1, 0x7A11)[0];
+        let want = snapshot(&c, sid);
+        let stripe = c.meta.stripes[&sid].clone();
+        let victim = stripe.block_nodes[0];
+        c.fail_node(victim);
+
+        // Pick a rack whose death overlaps the fetch set (so the session
+        // must re-plan) while the escalated pattern stays on the ladder.
+        let mut choice = None;
+        for rack in 0..RACKS {
+            let dead: BTreeSet<usize> =
+                (0..NODES).filter(|&n| rack_of(n, RACKS) == rack).collect();
+            if let Some(ev) =
+                ladder_fixpoint(c.scheme(), &stripe.block_nodes, &dead, &[0])
+            {
+                if ev.len() > 1 {
+                    choice = Some((rack, ev));
+                    break;
+                }
+            }
+        }
+        let (rack, expect_erased) = choice
+            .unwrap_or_else(|| panic!("{kind:?}: no rack kill leaves a recoverable overlap"));
+
+        let s = c
+            .repair()
+            .stripe(sid, &[0])
+            .chaos(FaultPlan::new(0xAC).kill_rack(rack, RACKS, NODES, 0.002))
+            .run()
+            .unwrap_or_else(|e| panic!("{kind:?}: rack {rack} kill: {e:#}"));
+        let cz = s.chaos.as_ref().expect("chaos session carries a report");
+        assert!(cz.replans >= 1, "{kind:?}: a rack kill must force a re-plan: {cz:?}");
+        let mut repaired = s.reports[0].blocks_repaired.clone();
+        repaired.sort_unstable();
+        assert_eq!(
+            repaired, expect_erased,
+            "{kind:?}: the session must land on the hand-walked ladder fixpoint"
+        );
+
+        // The kills were transient: restore the rack (blocks not in the
+        // fetch set kept their homes there) and the original victim.
+        for n in (0..NODES).filter(|&n| rack_of(n, RACKS) == rack) {
+            c.restore_node(n);
+        }
+        c.restore_node(victim);
+        let info = c.meta.stripes[&sid].clone();
+        for (b, w) in want.iter().enumerate() {
+            let got = c.nodes[info.block_nodes[b]]
+                .get(BlockKey { stripe: sid, index: b as u32 })
+                .unwrap_or_else(|| panic!("{kind:?}: block {b} missing after rack kill"));
+            assert_eq!(&got, w, "{kind:?}: block {b} differs from the pre-fault oracle");
+        }
+        assert!(c.scrub_stripe(sid).unwrap(), "{kind:?}: scrub after rack kill");
+    }
+}
+
+#[test]
+fn rack_spread_placement_respects_the_domain_tolerance() {
+    // Property: when the spread cap is set to the code's guaranteed
+    // tolerance, no stripe puts more blocks in one rack than the code
+    // can certainly lose — every single-rack failure pattern decodes.
+    for kind in SchemeKind::ALL_LRC {
+        let scheme = Scheme::new(kind, 6, 2, 2);
+        let cap = scheme.guaranteed_tolerance;
+        let n = scheme.n();
+        assert!(cap >= 2, "{kind:?}: sweep assumes tolerance >= 2, got {cap}");
+        let racks = n.div_ceil(cap) + 1; // slack so rotation never wedges
+        let mut cfg = racked_cfg(kind, true);
+        cfg.num_datanodes = racks * 4;
+        cfg.placement = PlacementPolicy::RackSpread { racks, max_per_rack: cap };
+        cfg.topology = Some(RackConfig::new(racks, 4.0));
+        let mut c = Cluster::new(cfg);
+        for sid in c.fill_random_stripes(6, 0x5EED + kind as u64) {
+            let stripe = c.meta.stripes[&sid].clone();
+            assert_eq!(c.cfg.placement.rack_cap(stripe.n()), Some(cap));
+            for rack in 0..racks {
+                let on_rack: Vec<usize> = (0..stripe.n())
+                    .filter(|&b| rack_of(stripe.block_nodes[b], racks) == rack)
+                    .collect();
+                assert!(
+                    on_rack.len() <= cap,
+                    "{kind:?} stripe {sid}: rack {rack} holds {on_rack:?} > cap {cap}"
+                );
+                assert!(
+                    scheme.recoverable(&on_rack),
+                    "{kind:?} stripe {sid}: losing rack {rack} ({on_rack:?}) loses data"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn rack_aware_planning_strictly_reduces_cross_rack_bytes_on_node_repair() {
+    // Whole-node repair on the worked geometry, pinned per scheme:
+    //  - CP-Azure, victim node 4 (D5): fetch {3,5,9} on racks {3,1,1};
+    //    rack 1 is at the spread cap, so the aware planner lands in rack
+    //    3 (2 uplink crossings) while oblivious first-free lands on node
+    //    10 in rack 2 (3 crossings).
+    //  - CP-Uniform, victim node 6 (G1, in group 2 = {D4,D5,D6,G1}):
+    //    fetch {3,4,5,9} on racks {3,0,1,1}; racks 0 and 1 are capped,
+    //    so aware lands in rack 3 (1 in-rack read, 3 crossings) while
+    //    oblivious node 10 in rack 2 pays all 4.
+    for (kind, victim_block) in [(SchemeKind::CpAzure, 4), (SchemeKind::CpUniform, 6)] {
+        let run = |rack_aware: bool| {
+            let mut c = Cluster::new(racked_cfg(kind, rack_aware));
+            let sid = c.fill_random_stripes(1, 0xAB1E)[0];
+            let victim = c.meta.stripes[&sid].block_nodes[victim_block];
+            c.fail_node(victim);
+            let s = c.repair().run().unwrap();
+            let blocks: usize = s.reports.iter().map(|r| r.blocks_read).sum();
+            let cross: u64 = s.reports.iter().map(|r| r.cross_rack_bytes).sum();
+            c.restore_node(victim);
+            assert!(c.scrub_stripe(sid).unwrap(), "{kind:?} rack_aware={rack_aware}");
+            (blocks, cross)
+        };
+        let (aware_blocks, aware_cross) = run(true);
+        let (obliv_blocks, obliv_cross) = run(false);
+        assert_eq!(
+            aware_blocks, obliv_blocks,
+            "{kind:?}: locality must tie-break, never change the plan cost"
+        );
+        assert!(
+            aware_cross < obliv_cross,
+            "{kind:?}: rack-aware {aware_cross} must strictly beat oblivious {obliv_cross}"
+        );
+    }
+}
+
+#[test]
+fn flat_sessions_stay_rack_free() {
+    // No topology => no uplink accounting, in plain and chaos sessions.
+    let mut cfg = racked_cfg(SchemeKind::CpAzure, true);
+    cfg.topology = None;
+    let mut c = Cluster::new(cfg.clone());
+    let sids = c.fill_random_stripes(2, 0xF1A7);
+    let victim = c.meta.stripes[&sids[0]].block_nodes[0];
+    c.fail_node(victim);
+    let plain = c.repair().run().unwrap();
+    assert!(plain.reports.iter().all(|r| r.cross_rack_bytes == 0));
+
+    let mut c2 = Cluster::new(cfg);
+    c2.fill_random_stripes(2, 0xF1A7);
+    c2.fail_node(victim);
+    let chaotic = c2.repair().chaos(FaultPlan::new(5)).run().unwrap();
+    assert!(chaotic.reports.iter().all(|r| r.cross_rack_bytes == 0));
+    assert_eq!(plain.completion_s, chaotic.completion_s, "flat chaos stays bit-identical");
+}
+
+#[test]
+fn oversubscription_throttles_repair_completion() {
+    // The same repair through a 16:1-oversubscribed spine must finish
+    // strictly later than through full bisection: shared uplinks bind.
+    let run = |oversubscription: f64| {
+        let mut cfg = racked_cfg(SchemeKind::CpAzure, true);
+        cfg.topology = Some(RackConfig::new(RACKS, oversubscription));
+        let mut c = Cluster::new(cfg);
+        let sid = c.fill_random_stripes(1, 0x0BE5)[0];
+        let victim = c.meta.stripes[&sid].block_nodes[4];
+        c.fail_node(victim);
+        c.repair().run().unwrap().completion_s
+    };
+    let fat = run(1.0);
+    let thin = run(16.0);
+    assert!(
+        thin > fat,
+        "16x oversubscription ({thin}) must be slower than full bisection ({fat})"
+    );
+}
