@@ -818,7 +818,9 @@ impl Cluster {
         // Rack-aware jobs compile per placement (the locality weights
         // depend on where this stripe's survivors live, not just on the
         // erasure pattern), so they bypass the pattern-keyed [`PlanCache`]
-        // rather than poison it.
+        // rather than poison it. Not just a convention: under
+        // `strict-invariants` the cache itself asserts no
+        // locality-planned program is ever inserted.
         let program = match self.repair_xcost(&stripe, failed) {
             None => self.programs.lock().unwrap().get_or_compile(scheme, failed)?,
             Some(xcost) => {

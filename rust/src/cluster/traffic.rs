@@ -1523,6 +1523,149 @@ fn run_wave(
     Ok(())
 }
 
+/// Bounded abstract replica of the session scheduler for the
+/// schedule-space model checker ([`crate::verify::schedule`]).
+///
+/// The real [`RepairSession`] interleaves virtual-timeline events with
+/// wall-clock worker threads, so its event order cannot be permuted
+/// deterministically. This replica keeps exactly the scheduling
+/// skeleton the checker needs to explore — the fetch issuer's
+/// `in_flight` admission window, per-job fetch fan-in, write-back
+/// issued at fetch-complete — driven through the *same*
+/// [`SessionSim`] timeline, with two explicit nondeterminism seams:
+/// the job **issue order** and a **tie permutation** applied to every
+/// batch of simultaneous completions
+/// ([`SessionSim::next_simultaneous_batch`]). Exploring all seam
+/// values and asserting outcome equivalence bounds the schedule space
+/// the way DPOR bounds a real scheduler.
+#[cfg(feature = "model-check")]
+pub mod model {
+    use super::PROXY;
+    use crate::netsim::{Flow, NetSim, SessionSim};
+    use std::collections::HashMap;
+
+    /// One bounded repair job: survivor fetches `(source node, bytes)`
+    /// fanning into the proxy, then one write-back
+    /// `(destination node, bytes)` issued when the last fetch lands.
+    #[derive(Clone, Debug)]
+    pub struct ModelJob {
+        pub fetches: Vec<(usize, u64)>,
+        pub writeback: (usize, u64),
+    }
+
+    /// One observed completion: `fetch = Some(i)` for the job's i-th
+    /// fetch, `None` for its write-back.
+    #[derive(Clone, Debug, PartialEq)]
+    pub struct ModelEvent {
+        pub job: usize,
+        pub fetch: Option<usize>,
+        pub finish: f64,
+    }
+
+    /// Everything a bounded session run observes.
+    #[derive(Clone, Debug, PartialEq)]
+    pub struct ModelOutcome {
+        /// Completions in processing order.
+        pub events: Vec<ModelEvent>,
+        /// Virtual time the timeline drained.
+        pub completion: f64,
+    }
+
+    /// Run one bounded session: admit jobs in `issue_order` under an
+    /// `in_flight` window, drive the [`SessionSim`] to quiescence, and
+    /// process each simultaneous-completion batch in the order selected
+    /// by `tie_perm` (a mixed-radix Lehmer code: each batch of size m
+    /// consumes `tie_perm % m!`-worth of digits). Errors on a stalled
+    /// timeline (the bounded-exploration budget) — a deadlock witness.
+    pub fn run_bounded_session(
+        net: &NetSim,
+        jobs: &[ModelJob],
+        in_flight: usize,
+        issue_order: &[usize],
+        mut tie_perm: u64,
+    ) -> anyhow::Result<ModelOutcome> {
+        assert!(in_flight >= 1);
+        assert_eq!(issue_order.len(), jobs.len());
+        for job in jobs {
+            assert!(!job.fetches.is_empty(), "model jobs must fetch something");
+        }
+        let mut sim = SessionSim::new(net, PROXY, 1);
+        // flow id → (job, Some(fetch index) | None for write-back)
+        let mut of: HashMap<usize, (usize, Option<usize>)> = HashMap::new();
+        let mut remaining: Vec<usize> = jobs.iter().map(|j| j.fetches.len()).collect();
+        let mut next_issue = 0usize;
+        for _ in 0..in_flight.min(jobs.len()) {
+            admit_job(&mut sim, &mut of, jobs, issue_order[next_issue]);
+            next_issue += 1;
+        }
+
+        let mut events: Vec<ModelEvent> = Vec::new();
+        let mut completion = 0.0f64;
+        let mut rounds = 0usize;
+        loop {
+            let batch = sim.next_simultaneous_batch();
+            if batch.is_empty() {
+                break;
+            }
+            rounds += 1;
+            anyhow::ensure!(
+                rounds <= 10_000,
+                "bounded session exceeded its exploration budget (livelock?)"
+            );
+            // Lehmer-decode this batch's processing order from tie_perm.
+            let mut avail = batch;
+            while !avail.is_empty() {
+                let m = avail.len() as u64;
+                let pick = (tie_perm % m) as usize;
+                tie_perm /= m;
+                let ev = avail.remove(pick);
+                completion = completion.max(ev.finish);
+                let (job, fetch) = *of
+                    .get(&ev.id)
+                    .ok_or_else(|| anyhow::anyhow!("completion for unknown flow {}", ev.id))?;
+                events.push(ModelEvent { job, fetch, finish: ev.finish });
+                if fetch.is_some() {
+                    remaining[job] -= 1;
+                    if remaining[job] == 0 {
+                        // Fetch fan-in complete: write-back departs and
+                        // the issuer window admits the next job — the
+                        // two wakeups whose loss the checker hunts.
+                        let (dst, bytes) = jobs[job].writeback;
+                        let wid = sim.admit(
+                            Flow { src: PROXY, dst, bytes, start: sim.now() },
+                            0,
+                        );
+                        of.insert(wid, (job, None));
+                        if next_issue < issue_order.len() {
+                            admit_job(&mut sim, &mut of, jobs, issue_order[next_issue]);
+                            next_issue += 1;
+                        }
+                    }
+                }
+            }
+        }
+        anyhow::ensure!(
+            next_issue == jobs.len(),
+            "timeline drained with {} of {} jobs never issued (lost wakeup)",
+            jobs.len() - next_issue,
+            jobs.len()
+        );
+        Ok(ModelOutcome { events, completion })
+    }
+
+    fn admit_job(
+        sim: &mut SessionSim<'_>,
+        of: &mut HashMap<usize, (usize, Option<usize>)>,
+        jobs: &[ModelJob],
+        jix: usize,
+    ) {
+        for (f, &(src, bytes)) in jobs[jix].fetches.iter().enumerate() {
+            let id = sim.admit(Flow { src, dst: PROXY, bytes, start: sim.now() }, 0);
+            of.insert(id, (jix, Some(f)));
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -7,6 +7,10 @@
 //! somewhere in the tree. Conversely, every `#[target_feature]`
 //! function in the tree must appear here. Adding a kernel tier without
 //! registering + dispatching + pinning it fails the lint.
+//!
+//! The same contract covers the GF(2^16) surface: every top-level
+//! `pub fn` in `gf/w16.rs` must appear in [`W16_ENTRY_POINTS`] with an
+//! existing scalar-pinning test.
 
 /// One SIMD kernel tier and the evidence that makes it shippable.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -63,6 +67,33 @@ pub const KERNELS: &[KernelEntry] = &[
     },
 ];
 
+/// One public GF(2^16) entry point and its scalar-pinning evidence.
+///
+/// The w16 field (`gf::w16`, ROADMAP item 2's ultra-wide-stripe
+/// substrate) has no SIMD tiers yet, but its *public surface* gets the
+/// same registry treatment as the kernel ladder: `cargo xtask lint`
+/// checks that every top-level `pub fn` in `gf/w16.rs` appears here and
+/// that each named pinning test exists in the tree, so a new w16 entry
+/// point cannot land unpinned.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GfEntryPoint {
+    /// Top-level `pub fn` name in `gf/w16.rs`.
+    pub name: &'static str,
+    /// Test pinning the entry point to the scalar/slow reference.
+    pub pinning_test: &'static str,
+}
+
+/// Every public GF(2^16) entry point, each mapped to the test that pins
+/// it against the `mul_slow` bitwise reference.
+pub const W16_ENTRY_POINTS: &[GfEntryPoint] = &[
+    GfEntryPoint { name: "get", pinning_test: "tables_match_slow_multiply_sampled" },
+    GfEntryPoint { name: "mul", pinning_test: "tables_match_slow_multiply_sampled" },
+    GfEntryPoint { name: "mul_slow", pinning_test: "tables_match_slow_multiply_sampled" },
+    GfEntryPoint { name: "inv", pinning_test: "field_axioms_sampled" },
+    GfEntryPoint { name: "div", pinning_test: "field_axioms_sampled" },
+    GfEntryPoint { name: "mul_acc_slice16", pinning_test: "mul_acc_slice16_matches_scalar" },
+];
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -70,6 +101,19 @@ mod tests {
     #[test]
     fn registry_covers_the_full_kernel_ladder() {
         assert_eq!(KERNELS.len(), 6, "add new kernel tiers to the registry");
+    }
+
+    #[test]
+    fn w16_entry_points_are_unique_and_complete() {
+        for (i, e) in W16_ENTRY_POINTS.iter().enumerate() {
+            assert!(!e.name.is_empty());
+            assert!(!e.pinning_test.is_empty());
+            assert!(
+                W16_ENTRY_POINTS[..i].iter().all(|o| o.name != e.name),
+                "duplicate w16 entry point {}",
+                e.name
+            );
+        }
     }
 
     #[test]

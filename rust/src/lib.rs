@@ -77,10 +77,13 @@
 //!
 //! Correctness is enforced in tiers — tier-1 tests, `cargo xtask lint`
 //! (unsafe boundary, SAFETY comments, the kernel registry), a Miri
-//! subset, AddressSanitizer/ThreadSanitizer jobs, and the
-//! `strict-invariants` feature's runtime checks. `VERIFICATION.md` at
-//! the repo root documents every tier and the conventions (SAFETY
-//! comments, [`gf::kernel_registry`]) contributors must follow.
+//! subset, AddressSanitizer/ThreadSanitizer jobs, the
+//! `strict-invariants` feature's runtime checks, and the **proof
+//! plane** (`cargo xtask prove`, [`verify`]): a symbolic decodability
+//! prover, a plan-optimality auditor and a schedule-space model
+//! checker (`model-check` feature). `VERIFICATION.md` at the repo root
+//! documents every tier and the conventions (SAFETY comments,
+//! [`gf::kernel_registry`]) contributors must follow.
 
 // Belt-and-braces twin of the [lints.rust] table in Cargo.toml: unsafe
 // bodies must wrap their unsafe operations in explicit blocks even if
@@ -103,6 +106,7 @@ pub mod repair;
 pub mod runtime;
 pub mod store;
 pub mod trace;
+pub mod verify;
 
 /// The paper's evaluation parameter sets P1–P8 (Table II).
 pub const PARAMS: [(usize, usize, usize); 8] = [

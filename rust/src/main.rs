@@ -72,12 +72,21 @@ fn main() {
                 std::process::exit(1);
             }
         }
+        "prove" => {
+            // The proof plane (VERIFICATION.md tier 6); `cargo xtask
+            // prove` lands here with the model-check feature enabled.
+            if let Err(e) = cp_lrc::verify::run_prove() {
+                eprintln!("prove failed: {e:#}");
+                std::process::exit(1);
+            }
+        }
         _ => {
             println!("repro — CP-LRC paper reproduction driver");
             println!("  repro tables --id 1|3|4|5|6     regenerate a paper table");
             println!("  repro figure --id 6|7|8|9|10 [--quick]  regenerate a figure");
             println!("  repro metrics --scheme cp-azure --k 24 --r 2 --p 2");
             println!("  repro cluster [--scheme S --k K --r R --p P --stripes N --block-kib B --nodes M --kill F]");
+            println!("  repro prove                     run the proof plane (see VERIFICATION.md)");
             println!("  repro params                    list P1..P8");
         }
     }

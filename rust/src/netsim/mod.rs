@@ -678,6 +678,28 @@ impl<'a> SessionSim<'a> {
         None
     }
 
+    /// Model-check seam: drain the next completion **batch** — every
+    /// event sharing the next completion instant (within the 1e-12
+    /// simultaneity threshold [`advance`] itself uses). The timeline
+    /// hands simultaneous completions out in an internal, incidental
+    /// order; the schedule-space model checker
+    /// ([`crate::verify::schedule`]) re-permutes each batch to prove no
+    /// downstream behavior depends on that order. Every event still
+    /// flows through [`SessionSim::next_event`], so the
+    /// strict-invariants checks keep running during exploration.
+    ///
+    /// [`advance`]: Self::advance
+    #[cfg(feature = "model-check")]
+    pub fn next_simultaneous_batch(&mut self) -> Vec<SessionEvent> {
+        let Some(first) = self.next_event() else { return Vec::new() };
+        let t = first.finish;
+        let mut batch = vec![first];
+        while self.done.front().is_some_and(|e| (e.finish - t).abs() <= 1e-12) {
+            batch.push(self.next_event().expect("peeked simultaneous completion"));
+        }
+        batch
+    }
+
     /// The uninstrumented advance loop behind [`Self::next_event`].
     fn advance(&mut self) -> Option<SessionEvent> {
         if let Some(ev) = self.done.pop_front() {

@@ -23,6 +23,12 @@ use crate::prng::Prng;
 pub const REGRESSION_SEEDS: &[u64] = &[
     // Canary: exercises the replay-first path on every run.
     0x0123_4567_89AB_CDEF,
+    // Proof-plane model checker (tests/proof_plane.rs,
+    // `session_outcomes_are_tie_order_independent_replayable`): pins a
+    // session-schedule case — narrow admission window, reversed issue
+    // order, large tie permutation — so the bounded-session sweep keeps
+    // replaying a maximally reordered schedule on every run.
+    0x5EED_0010_C0DE_CAFE,
 ];
 
 /// Replay override parsed from `CP_LRC_PROPTEST_SEED` (decimal or 0x

@@ -110,12 +110,47 @@ impl PlanCache {
             return Ok(entry.program.clone());
         }
         let program = Arc::new(RepairProgram::for_pattern(scheme, &key.1)?);
+        Self::assert_pattern_keyed(&program);
         self.stats.misses += 1;
         if self.map.len() >= self.capacity {
             self.evict_lru();
         }
         self.map.insert(key, Entry { program: program.clone(), last_used: self.tick });
         Ok(program)
+    }
+
+    /// Guard on the cache's keying invariant: entries are keyed by
+    /// `(scheme, pattern)` **only**, so a locality-planned program
+    /// (compiled via `for_pattern_with_locality` with nonzero
+    /// cross-domain weights — its op list and global-decode rows depend
+    /// on where one particular stripe's survivors live) must never be
+    /// inserted, or later stripes with the same pattern but different
+    /// placements would replay the wrong survivor choice. The
+    /// coordinator bypasses the cache for such programs
+    /// (`cluster::prepare_repair`); this assertion enforces the bypass
+    /// under `strict-invariants`.
+    fn assert_pattern_keyed(program: &RepairProgram) {
+        #[cfg(feature = "strict-invariants")]
+        assert!(
+            program.plan.locality.iter().all(|&w| w == 0),
+            "locality-planned program (pattern {:?}) entered the pattern-keyed PlanCache",
+            program.plan.erased
+        );
+        #[cfg(not(feature = "strict-invariants"))]
+        let _ = program;
+    }
+
+    /// Test seam: insert an externally compiled program through the
+    /// same invariant gate `get_or_compile` applies.
+    #[cfg(test)]
+    pub(crate) fn insert_for_test(&mut self, scheme: &Scheme, program: Arc<RepairProgram>) {
+        Self::assert_pattern_keyed(&program);
+        let mut pattern = program.plan.erased.clone();
+        pattern.sort_unstable();
+        pattern.dedup();
+        self.tick += 1;
+        self.map
+            .insert((scheme.id(), pattern), Entry { program, last_used: self.tick });
     }
 
     /// Drop the least-recently-used entry. Linear scan: capacity is
@@ -218,6 +253,37 @@ mod tests {
         assert_eq!(cache.stats().misses, 4);
         assert_eq!(cache.stats().evictions, 2);
         assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn cached_programs_are_never_locality_planned() {
+        let s = Scheme::new(SchemeKind::CpAzure, 12, 2, 2);
+        let mut cache = PlanCache::new();
+        for pat in [vec![0], vec![0, 14], vec![12, 13]] {
+            let p = cache.get_or_compile(&s, &pat).unwrap();
+            assert!(
+                p.plan.locality.iter().all(|&w| w == 0),
+                "pattern-keyed cache holds a locality-planned program for {pat:?}"
+            );
+        }
+        // A pattern-planned program passes the same gate explicitly.
+        let p = Arc::new(RepairProgram::for_pattern(&s, &[1]).unwrap());
+        cache.insert_for_test(&s, p);
+        assert_eq!(cache.len(), 4);
+    }
+
+    #[cfg(feature = "strict-invariants")]
+    #[test]
+    #[should_panic(expected = "pattern-keyed PlanCache")]
+    fn locality_planned_program_is_rejected_by_the_cache() {
+        let s = Scheme::new(SchemeKind::CpAzure, 12, 2, 2);
+        // Nonzero cross-domain weights: the compiled program is
+        // placement-specific and must not enter the cache.
+        let xcost = vec![7u64; s.n()];
+        let p =
+            Arc::new(RepairProgram::for_pattern_with_locality(&s, &[0, 14], &xcost).unwrap());
+        let mut cache = PlanCache::new();
+        cache.insert_for_test(&s, p);
     }
 
     #[test]

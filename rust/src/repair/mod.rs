@@ -48,8 +48,8 @@ pub mod program;
 pub use cache::{CacheStats, PlanCache, DEFAULT_PLAN_CACHE_CAPACITY};
 pub use program::{
     BlockChunk, BlockSource, ChunkPipelineStats, ChunkStream, FetchOrderStream, IterChunks,
-    IterStream, RepairProgram, ScratchBuffers, SliceSource, StreamingBlockSource,
-    DEFAULT_CHUNK_BYTES,
+    IterStream, RepairProgram, ScratchBuffers, SliceSource, StreamingBlockSource, SymOperand,
+    SymbolicOp, SymbolicProgram, DEFAULT_CHUNK_BYTES,
 };
 
 use crate::codec::StripeCodec;

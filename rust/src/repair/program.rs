@@ -392,6 +392,46 @@ struct GfOp {
     coeffs: Vec<u8>,
 }
 
+/// One operand of a [`SymbolicOp`]: a survivor block fetched from the
+/// [`BlockSource`], or the output of an earlier op in the list.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SymOperand {
+    /// A stored survivor block, by block index.
+    Fetched(usize),
+    /// An earlier op's output, by op-list index.
+    Solved(usize),
+}
+
+/// One compiled GF op in symbolic form: `block` is reconstructed as the
+/// GF(2^8) combination `Σ coeff · operand` over `terms` — exactly the
+/// fused vector the byte executors replay, with no data attached.
+#[derive(Clone, Debug)]
+pub struct SymbolicOp {
+    /// Block index this op reconstructs.
+    pub block: usize,
+    /// `(operand, coefficient)` pairs, fetched operands first, in the
+    /// fused-combine order of [`RepairProgram::execute`].
+    pub terms: Vec<(SymOperand, u8)>,
+}
+
+/// A compiled program's op list in symbolic form — the read-only view
+/// the proof plane's symbolic decodability prover
+/// ([`crate::verify::symbolic`]) interprets over formal generator rows
+/// instead of bytes. Because the view is exactly what every executor
+/// replays, a property proved over it holds for all of them at once.
+/// Mutating a copy (a flipped coefficient, a reordered dependent op) is
+/// how the prover's seeded-violation self-tests confirm the checker
+/// rejects wrong programs.
+#[derive(Clone, Debug)]
+pub struct SymbolicProgram {
+    /// The erasure pattern, in output order.
+    pub erased: Vec<usize>,
+    /// `outputs[i]` = index of the op whose result is `erased[i]`.
+    pub outputs: Vec<usize>,
+    /// The straight-line op list, in execution order.
+    pub ops: Vec<SymbolicOp>,
+}
+
 /// A repair plan lowered to straight-line GF ops with precomputed
 /// coefficients. Compile once per `(scheme, erasure pattern)`, execute
 /// per stripe (or per batch of stripes).
@@ -665,6 +705,34 @@ impl RepairProgram {
     /// returned by [`Self::execute`]).
     pub fn output_index(&self, block: usize) -> Option<usize> {
         self.plan.erased.iter().position(|&e| e == block)
+    }
+
+    /// The compiled op list as a [`SymbolicProgram`]: the hook the proof
+    /// plane's symbolic decodability prover pushes formal GF(2^8)
+    /// generator rows through (`cargo xtask prove`, VERIFICATION.md
+    /// tier 6). The view carries the same fused coefficients, operand
+    /// edges and output map the byte executors use, so symbolic
+    /// verdicts transfer to every executor.
+    pub fn symbolic_program(&self) -> SymbolicProgram {
+        let ops = self
+            .ops
+            .iter()
+            .map(|op| {
+                let mut terms = Vec::with_capacity(op.coeffs.len());
+                for (i, &b) in op.fetch_idx.iter().enumerate() {
+                    terms.push((SymOperand::Fetched(b), op.coeffs[i]));
+                }
+                for (i, &j) in op.solved_idx.iter().enumerate() {
+                    terms.push((SymOperand::Solved(j), op.coeffs[op.fetch_idx.len() + i]));
+                }
+                SymbolicOp { block: op.block, terms }
+            })
+            .collect();
+        SymbolicProgram {
+            erased: self.plan.erased.clone(),
+            outputs: self.outputs.clone(),
+            ops,
+        }
     }
 
     /// Virtual time each output finishes decoding, in [`Self::erased`]

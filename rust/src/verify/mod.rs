@@ -1,0 +1,373 @@
+//! The **proof plane** (`cargo xtask prove`, VERIFICATION.md tier 6):
+//! static verification of the repair pipeline, alongside the source
+//! lints of `cargo xtask lint`.
+//!
+//! The differential tiers sample the behavior space with random bytes —
+//! a wrong GF(2^8) coefficient survives any single byte comparison with
+//! probability 1/256. The analyses here close that gap by quantifying
+//! over *structure* instead of samples:
+//!
+//! 1. **Symbolic decodability prover** ([`symbolic`]) — every stored
+//!    block is its formal generator row over the k message symbols;
+//!    pushing those rows through a compiled [`RepairProgram`]'s op list
+//!    and comparing each output row to the erased block's exact
+//!    generator row proves the program correct *for all 2^(8k) message
+//!    values at once*. Run exhaustively over the [`proved_set`]
+//!    (every pattern up to `guaranteed_tolerance` for all six LRC
+//!    constructions, the full r+p space for the small scheme, and the
+//!    paper's P6 (48,4,3) wide stripe), plus the cascaded identity of
+//!    Theorem 1 checked directly on the generator.
+//! 2. **Plan-optimality auditor** ([`optimality`]) — per pattern, the
+//!    planner must pick the cheapest admissible repair class
+//!    (local/cascaded before global) and every [`RepairPlan`]'s reads
+//!    and cost must match the §IV closed forms, re-derived here
+//!    independently of the planner. The paper's worked cost examples
+//!    become theorems over whole schemes rather than spot pins.
+//! 3. **Schedule-space model checker** (`schedule`, behind the
+//!    `model-check` cargo feature) — a DPOR-lite harness that
+//!    exhaustively permutes delivery orders through the pipelined
+//!    executors and admission/completion event orders through a bounded
+//!    [`crate::netsim::SessionSim`] fetch-issuer → decode-worker →
+//!    write-back pipeline, asserting byte-identity of outputs, event
+//!    conservation, and happens-before consistency via vector clocks.
+//!
+//! Each analysis carries xtask-style seeded-violation self-tests: a
+//! perturbed coefficient, a mispriced plan, a reordered dependent op
+//! and a dropped readiness edge each make the corresponding checker
+//! fail. Std-only (deps ⊆ {anyhow}), like the rest of the crate.
+//!
+//! [`RepairProgram`]: crate::repair::RepairProgram
+//! [`RepairPlan`]: crate::repair::RepairPlan
+
+pub mod optimality;
+#[cfg(feature = "model-check")]
+pub mod schedule;
+pub mod symbolic;
+
+use crate::codes::{Scheme, SchemeKind};
+use crate::prng::Prng;
+
+/// Outcome of one proof-plane analysis: how many objects were checked
+/// and every violation found (empty = proved clean at this bound).
+#[derive(Clone, Debug, Default)]
+pub struct AnalysisReport {
+    /// Objects verified (patterns, plans, schedules — per analysis).
+    pub checked: usize,
+    /// Human-readable violations; any entry fails `cargo xtask prove`.
+    pub violations: Vec<String>,
+}
+
+impl AnalysisReport {
+    fn absorb(&mut self, other: AnalysisReport) {
+        self.checked += other.checked;
+        self.violations.extend(other.violations);
+    }
+}
+
+/// Roll-up of every analysis `prove` ran.
+#[derive(Clone, Debug, Default)]
+pub struct ProofReport {
+    /// Symbolic decodability prover (patterns × schemes + identities).
+    pub symbolic: AnalysisReport,
+    /// Plan-optimality auditor (plans + closed forms).
+    pub optimality: AnalysisReport,
+    /// Schedule-space model checker; `None` when the `model-check`
+    /// feature is compiled out.
+    pub schedule: Option<AnalysisReport>,
+}
+
+impl ProofReport {
+    /// Total violation count across every analysis.
+    pub fn total_violations(&self) -> usize {
+        self.symbolic.violations.len()
+            + self.optimality.violations.len()
+            + self.schedule.as_ref().map_or(0, |s| s.violations.len())
+    }
+}
+
+/// One entry of the proved set: a scheme instantiation plus how deep
+/// its erasure-pattern space is enumerated.
+#[derive(Clone, Copy, Debug)]
+pub struct ProvedCase {
+    pub kind: SchemeKind,
+    pub k: usize,
+    pub r: usize,
+    pub p: usize,
+    /// Enumerate the **full r+p space** (exhaustive past the guaranteed
+    /// tolerance, where the prover additionally checks the planner
+    /// refuses exactly the rank-deficient patterns).
+    pub full_space: bool,
+    /// For wide stripes: patterns sizes 1–2 stay exhaustive, deeper
+    /// sizes up to the tolerance are covered by this many seeded
+    /// samples per size *plus* every group-concentrated adversarial
+    /// pattern. `0` = fully exhaustive up to the tolerance.
+    pub sample: usize,
+}
+
+impl ProvedCase {
+    /// `"CpAzure (48,4,3)"`-style display label.
+    pub fn label(&self) -> String {
+        format!("{:?} ({},{},{})", self.kind, self.k, self.r, self.p)
+    }
+}
+
+/// The proved set: all six LRC constructions at P1 (full r+p space) and
+/// P2 (exhaustive to tolerance), plus the P6 (48,4,3) wide stripe for
+/// both CP schemes (exhaustive sizes 1–2, sampled + adversarial up to
+/// full tolerance). See VERIFICATION.md §Proof plane for how to extend.
+pub fn proved_set() -> Vec<ProvedCase> {
+    let mut cases = Vec::new();
+    for kind in SchemeKind::ALL_LRC {
+        cases.push(ProvedCase { kind, k: 6, r: 2, p: 2, full_space: true, sample: 0 });
+        cases.push(ProvedCase { kind, k: 12, r: 2, p: 2, full_space: false, sample: 0 });
+    }
+    for kind in [SchemeKind::CpAzure, SchemeKind::CpUniform] {
+        cases.push(ProvedCase { kind, k: 48, r: 4, p: 3, full_space: false, sample: 144 });
+    }
+    cases
+}
+
+/// All size-`f` subsets of `0..n`, lexicographic. Empty for `f == 0`
+/// or `f > n`.
+pub(crate) fn patterns_of_size(n: usize, f: usize) -> Vec<Vec<usize>> {
+    if f == 0 || f > n {
+        return Vec::new();
+    }
+    let mut idx: Vec<usize> = (0..f).collect();
+    let mut out = Vec::new();
+    loop {
+        out.push(idx.clone());
+        let mut advanced = false;
+        let mut i = f;
+        while i > 0 {
+            i -= 1;
+            if idx[i] < n - f + i {
+                idx[i] += 1;
+                for j in i + 1..f {
+                    idx[j] = idx[j - 1] + 1;
+                }
+                advanced = true;
+                break;
+            }
+        }
+        if !advanced {
+            return out;
+        }
+    }
+}
+
+/// Every pattern one [`ProvedCase`] commits to verifying.
+fn enumerate_case(case: &ProvedCase, scheme: &Scheme) -> Vec<Vec<usize>> {
+    let n = scheme.n();
+    let tol = scheme.guaranteed_tolerance;
+    let exhaustive_to = if case.full_space {
+        scheme.r + scheme.p
+    } else if case.sample > 0 {
+        tol.min(2)
+    } else {
+        tol
+    };
+    let mut patterns = Vec::new();
+    for f in 1..=exhaustive_to {
+        patterns.extend(patterns_of_size(n, f));
+    }
+    if case.sample > 0 {
+        // Deterministic seed per case so runs are reproducible.
+        let seed = 0xCA5C_ADE0_0000_0000
+            ^ ((case.k as u64) << 24)
+            ^ ((case.r as u64) << 16)
+            ^ ((case.p as u64) << 8)
+            ^ case.kind as u64;
+        let mut rng = Prng::new(seed);
+        for f in exhaustive_to + 1..=tol {
+            // Adversarial: concentrate failures inside one group (the
+            // worst case for local repair), padded with that group's
+            // local parity.
+            for (j, g) in scheme.groups.iter().enumerate() {
+                let mut pat: Vec<usize> = g.iter().copied().take(f - 1).collect();
+                pat.push(scheme.local_parity(j));
+                pat.sort_unstable();
+                pat.dedup();
+                if pat.len() == f {
+                    patterns.push(pat);
+                }
+            }
+            for _ in 0..case.sample {
+                let mut pat = rng.distinct(n, f);
+                pat.sort_unstable();
+                patterns.push(pat);
+            }
+        }
+    }
+    patterns
+}
+
+/// Run the symbolic prover and the plan auditor over one proved-set
+/// entry. The two per-pattern reports are returned separately so the
+/// roll-up attributes violations to the right analysis.
+pub fn prove_case(case: &ProvedCase) -> (AnalysisReport, AnalysisReport) {
+    let scheme = Scheme::new(case.kind, case.k, case.r, case.p);
+    let label = case.label();
+    let mut sym = AnalysisReport::default();
+    let mut opt = AnalysisReport::default();
+
+    // Structural premises, once per scheme: every defining equation
+    // annihilates the generator, and (CP schemes) Theorem 1's cascaded
+    // identity holds column by column.
+    sym.checked += 1;
+    if let Err(e) = symbolic::check_equations(&scheme) {
+        sym.violations.push(format!("{label}: {e}"));
+    }
+    if symbolic::is_cascaded(&scheme) {
+        sym.checked += 1;
+        if let Err(e) = symbolic::check_cascade_identity(&scheme) {
+            sym.violations.push(format!("{label}: {e}"));
+        }
+    }
+
+    let tol = scheme.guaranteed_tolerance;
+    for pat in enumerate_case(case, &scheme) {
+        let plan = crate::repair::plan(&scheme, &pat);
+        sym.checked += 1;
+        match plan {
+            None => {
+                if pat.len() <= tol {
+                    sym.violations.push(format!(
+                        "{label}: pattern {pat:?} within guaranteed tolerance {tol} \
+                         has no plan"
+                    ));
+                } else if scheme.recoverable(&pat) {
+                    sym.violations.push(format!(
+                        "{label}: recoverable pattern {pat:?} was refused by the planner"
+                    ));
+                }
+            }
+            Some(plan) => {
+                if pat.len() > tol && !scheme.recoverable(&pat) {
+                    sym.violations.push(format!(
+                        "{label}: planner accepted rank-deficient pattern {pat:?}"
+                    ));
+                    continue;
+                }
+                if let Err(e) = symbolic::check_pattern(&scheme, &pat) {
+                    sym.violations.push(format!("{label}: pattern {pat:?}: {e}"));
+                }
+                opt.checked += 1;
+                if let Err(e) = optimality::audit_plan(&scheme, &plan) {
+                    opt.violations.push(format!("{label}: pattern {pat:?}: {e}"));
+                }
+            }
+        }
+    }
+
+    // §IV closed forms over every single failure of the scheme.
+    match optimality::audit_single_failures(&scheme) {
+        Ok(n) => opt.checked += n,
+        Err(e) => opt.violations.push(format!("{label}: {e}")),
+    }
+
+    (sym, opt)
+}
+
+/// Run every analysis over the whole proved set.
+pub fn prove() -> ProofReport {
+    let mut report = ProofReport::default();
+    for case in proved_set() {
+        let (sym, opt) = prove_case(&case);
+        report.symbolic.absorb(sym);
+        report.optimality.absorb(opt);
+    }
+    match optimality::audit_paper_examples() {
+        Ok(n) => report.optimality.checked += n,
+        Err(e) => report.optimality.violations.push(e),
+    }
+    #[cfg(feature = "model-check")]
+    {
+        report.schedule = Some(schedule::model_check());
+    }
+    report
+}
+
+/// [`prove`], printed for `cargo xtask prove` / `repro prove`: one line
+/// per analysis, every violation listed, `Err` if anything failed.
+pub fn run_prove() -> anyhow::Result<()> {
+    let report = prove();
+    let line = |name: &str, a: &AnalysisReport| {
+        if a.violations.is_empty() {
+            println!("prove: {name}: {} checked, clean", a.checked);
+        } else {
+            println!("prove: {name}: {} checked, {} VIOLATION(S)", a.checked, a.violations.len());
+            for v in &a.violations {
+                println!("  {v}");
+            }
+        }
+    };
+    line("symbolic decodability", &report.symbolic);
+    line("plan optimality", &report.optimality);
+    match &report.schedule {
+        Some(s) => line("schedule model check", s),
+        None => println!(
+            "prove: schedule model check: skipped (build with --features model-check)"
+        ),
+    }
+    let bad = report.total_violations();
+    anyhow::ensure!(bad == 0, "proof plane found {bad} violation(s)");
+    println!("prove: proof plane clean");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pattern_enumeration_counts_match_binomials() {
+        assert_eq!(patterns_of_size(5, 1).len(), 5);
+        assert_eq!(patterns_of_size(5, 2).len(), 10);
+        assert_eq!(patterns_of_size(6, 3).len(), 20);
+        assert_eq!(patterns_of_size(4, 4), vec![vec![0, 1, 2, 3]]);
+        assert!(patterns_of_size(3, 4).is_empty());
+        assert!(patterns_of_size(3, 0).is_empty());
+        // Lexicographic and duplicate-free.
+        let pats = patterns_of_size(10, 3);
+        for w in pats.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+    }
+
+    #[test]
+    fn proved_set_includes_the_p6_wide_stripe() {
+        let cases = proved_set();
+        assert!(cases
+            .iter()
+            .any(|c| c.kind == SchemeKind::CpUniform && (c.k, c.r, c.p) == (48, 4, 3)));
+        assert!(cases
+            .iter()
+            .any(|c| c.kind == SchemeKind::CpAzure && (c.k, c.r, c.p) == (48, 4, 3)));
+        // Every ALL_LRC construction appears at both small sizes.
+        for kind in SchemeKind::ALL_LRC {
+            assert_eq!(cases.iter().filter(|c| c.kind == kind && c.k == 6).count(), 1);
+            assert_eq!(cases.iter().filter(|c| c.kind == kind && c.k == 12).count(), 1);
+        }
+    }
+
+    #[test]
+    fn the_small_full_space_case_proves_clean() {
+        // One representative end-to-end run: CP-Azure P1 over the full
+        // r+p pattern space, symbolically proved and cost-audited.
+        let case = ProvedCase {
+            kind: SchemeKind::CpAzure,
+            k: 6,
+            r: 2,
+            p: 2,
+            full_space: true,
+            sample: 0,
+        };
+        let (sym, opt) = prove_case(&case);
+        assert!(sym.violations.is_empty(), "{:?}", sym.violations);
+        assert!(opt.violations.is_empty(), "{:?}", opt.violations);
+        // 10 + 45 + 120 + 210 patterns, plus the premises.
+        assert!(sym.checked > 385);
+        assert!(opt.checked > 0);
+    }
+}

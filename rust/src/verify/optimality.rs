@@ -1,0 +1,314 @@
+//! Plan-optimality auditor.
+//!
+//! [`RepairPlan`]s carry derived state (reads, class flags, cost) that
+//! downstream layers — the cluster coordinator, the §IV metric tables,
+//! the traffic model — trust blindly. This module re-derives all of it
+//! from first principles, independently of the planner's own
+//! bookkeeping:
+//!
+//! * **Replay** ([`audit_plan`]): re-execute the peeling steps against
+//!   the scheme's equations, checking each step is well-formed (its
+//!   equation exists, contains the solved block, and reads only alive
+//!   or previously-solved blocks), that the re-derived read set and
+//!   residual global blocks match the plan's, and that
+//!   [`RepairPlan::cost`] equals the re-derived value.
+//! * **Class optimality**: the planner must use the cheapest admissible
+//!   repair class — a plan is fully local *iff* an independent
+//!   local-equations-only peeling fixpoint solves the pattern
+//!   ([`locally_peelable`]; peeling is monotone, so the fixpoint is
+//!   order-independent and the equivalence is exact in both
+//!   directions).
+//! * **Closed forms** ([`audit_single_failures`],
+//!   [`audit_paper_examples`]): §IV's repair costs — group size for
+//!   grouped blocks, `min(|g_j|, p)` for local parities, `p` for the
+//!   decomposed global, `k` for everything else — hold for every
+//!   single failure, and the paper's worked examples pin exact values.
+//!
+//! [`RepairPlan`]: crate::repair::RepairPlan
+//! [`RepairPlan::cost`]: crate::repair::RepairPlan::cost
+
+use std::collections::BTreeSet;
+
+use crate::codes::{Equation, Scheme, SchemeKind};
+use crate::repair::{plan, plan_single, RepairPlan};
+
+/// Independent local-repair oracle: can `erased` be fully solved by
+/// peeling **local equations only**? Runs the fixpoint directly on
+/// `scheme.local_eqs`, sharing no code with the planner. Peeling is
+/// monotone (solving a block never disables an equation), so any
+/// greedy order reaches the same fixpoint.
+pub fn locally_peelable(scheme: &Scheme, erased: &[usize]) -> bool {
+    let mut unsolved: BTreeSet<usize> = erased.iter().copied().collect();
+    loop {
+        let before = unsolved.len();
+        if before == 0 {
+            return true;
+        }
+        let solvable: Vec<usize> = scheme
+            .local_eqs
+            .iter()
+            .filter_map(|eq| {
+                let mut members = eq.terms.iter().map(|&(b, _)| b).filter(|b| unsolved.contains(b));
+                let first = members.next()?;
+                members.next().is_none().then_some(first)
+            })
+            .collect();
+        for b in solvable {
+            unsolved.remove(&b);
+        }
+        if unsolved.len() == before {
+            return false;
+        }
+    }
+}
+
+/// Replay-audit one plan against its scheme (see module docs). Returns
+/// the re-derived cost on success.
+pub fn audit_plan(scheme: &Scheme, plan: &RepairPlan) -> Result<usize, String> {
+    let eqs: Vec<&Equation> = scheme.all_eqs().collect();
+    let n_local = scheme.local_eqs.len();
+    let erased: BTreeSet<usize> = plan.erased.iter().copied().collect();
+
+    // Replay the peeling schedule.
+    let mut solved: BTreeSet<usize> = BTreeSet::new();
+    let mut derived_reads: BTreeSet<usize> = BTreeSet::new();
+    let mut derived_global_step = false;
+    for (i, step) in plan.steps.iter().enumerate() {
+        let eq = eqs
+            .get(step.eq)
+            .ok_or_else(|| format!("step {i} uses nonexistent equation {}", step.eq))?;
+        if eq.coeff(step.block).is_none() {
+            return Err(format!(
+                "step {i} solves block {} from an equation not containing it",
+                step.block
+            ));
+        }
+        if !erased.contains(&step.block) || solved.contains(&step.block) {
+            return Err(format!(
+                "step {i} solves block {} which is not an outstanding erasure",
+                step.block
+            ));
+        }
+        for b in eq.others(step.block) {
+            if erased.contains(&b) && !solved.contains(&b) {
+                return Err(format!(
+                    "step {i} reads block {b}, still erased at that point"
+                ));
+            }
+            if !solved.contains(&b) {
+                derived_reads.insert(b);
+            }
+        }
+        if step.eq >= n_local {
+            derived_global_step = true;
+        }
+        solved.insert(step.block);
+    }
+
+    // Residual erasures must be exactly the plan's global-decode set.
+    let derived_global: BTreeSet<usize> =
+        erased.iter().copied().filter(|b| !solved.contains(b)).collect();
+    let plan_global: BTreeSet<usize> = plan.global_blocks.iter().copied().collect();
+    if derived_global != plan_global {
+        return Err(format!(
+            "global-decode residue mismatch: replay leaves {derived_global:?}, \
+             plan claims {plan_global:?}"
+        ));
+    }
+
+    // Derived state must match the plan's advertised state.
+    if derived_reads != plan.reads {
+        return Err(format!(
+            "read-set mismatch: replay derives {derived_reads:?}, plan claims {:?}",
+            plan.reads
+        ));
+    }
+    let derived_used_global = derived_global_step || !derived_global.is_empty();
+    if derived_used_global != plan.used_global {
+        return Err(format!(
+            "class flag mismatch: replay derives used_global={derived_used_global}, \
+             plan claims {}",
+            plan.used_global
+        ));
+    }
+    let derived_cost =
+        if derived_global.is_empty() { derived_reads.len() } else { scheme.k };
+    if plan.cost(scheme.k) != derived_cost {
+        return Err(format!(
+            "cost mismatch: plan prices {} blocks, replay derives {derived_cost}",
+            plan.cost(scheme.k)
+        ));
+    }
+
+    // Class optimality, both directions: fully local ⟺ the independent
+    // local-only oracle succeeds.
+    let oracle_local = locally_peelable(scheme, &plan.erased);
+    if plan.fully_local() != oracle_local {
+        return Err(format!(
+            "class optimality violated: plan fully_local={}, but a local-only \
+             peeling fixpoint {} the pattern",
+            plan.fully_local(),
+            if oracle_local { "solves" } else { "cannot solve" }
+        ));
+    }
+    Ok(derived_cost)
+}
+
+/// §IV single-failure closed form: the cheapest local equation
+/// containing `b` prices the repair (its survivor count), and blocks on
+/// no local equation cost a full `k`-block global repair.
+pub fn single_failure_cost(scheme: &Scheme, b: usize) -> usize {
+    scheme
+        .local_eqs
+        .iter()
+        .filter(|eq| eq.contains(b))
+        .map(|eq| eq.others(b).count())
+        .min()
+        .unwrap_or(scheme.k)
+}
+
+/// Audit every single-failure plan of a scheme against the closed
+/// forms; returns the number of blocks audited.
+pub fn audit_single_failures(scheme: &Scheme) -> Result<usize, String> {
+    for b in 0..scheme.n() {
+        let plan = plan_single(scheme, b);
+        let derived = audit_plan(scheme, &plan)
+            .map_err(|e| format!("single failure {b}: {e}"))?;
+        let closed = single_failure_cost(scheme, b);
+        if derived != closed {
+            return Err(format!(
+                "single failure {b} ({}): planner cost {derived}, §IV closed form {closed}",
+                scheme.block_name(b)
+            ));
+        }
+    }
+    // CP structure (§IV-C/D): grouped blocks cost their group size, the
+    // local parities min(|g_j|, p), the decomposed global exactly p.
+    if matches!(scheme.kind, SchemeKind::CpAzure | SchemeKind::CpUniform) {
+        let p = scheme.p;
+        for (j, g) in scheme.groups.iter().enumerate() {
+            for &b in g {
+                let got = single_failure_cost(scheme, b);
+                if got != g.len() {
+                    return Err(format!(
+                        "CP group member {b}: cost {got}, expected group size {}",
+                        g.len()
+                    ));
+                }
+            }
+            let lp = scheme.local_parity(j);
+            let got = single_failure_cost(scheme, lp);
+            if got != g.len().min(p) {
+                return Err(format!(
+                    "CP local parity L{}: cost {got}, expected min(|g|, p) = {}",
+                    j + 1,
+                    g.len().min(p)
+                ));
+            }
+        }
+        let gr = scheme.k + scheme.r - 1;
+        let got = single_failure_cost(scheme, gr);
+        if got != p {
+            return Err(format!(
+                "CP decomposed global G{}: cost {got}, expected p = {p}",
+                scheme.r
+            ));
+        }
+    }
+    Ok(scheme.n())
+}
+
+/// The paper's worked repair-cost examples (§IV tables), pinned as
+/// exact theorems over whole plans; returns the number of pins checked.
+pub fn audit_paper_examples() -> Result<usize, String> {
+    // (kind, k, r, p, pattern, expected cost)
+    let pins: &[(SchemeKind, usize, usize, usize, &[usize], usize)] = &[
+        (SchemeKind::CpAzure, 6, 2, 2, &[0], 3),
+        (SchemeKind::CpAzure, 6, 2, 2, &[6], 6),
+        (SchemeKind::CpAzure, 6, 2, 2, &[7], 2),
+        (SchemeKind::CpAzure, 6, 2, 2, &[8], 2),
+        (SchemeKind::CpUniform, 6, 2, 2, &[6], 4),
+        (SchemeKind::CpAzure, 24, 2, 2, &[0, 26], 13),
+        (SchemeKind::AzureLrc, 24, 2, 2, &[0, 26], 24),
+    ];
+    for &(kind, k, r, p, pattern, want) in pins {
+        let scheme = Scheme::new(kind, k, r, p);
+        let plan = plan(&scheme, pattern).ok_or_else(|| {
+            format!("{kind:?} ({k},{r},{p}): no plan for pinned pattern {pattern:?}")
+        })?;
+        let derived = audit_plan(&scheme, &plan)
+            .map_err(|e| format!("{kind:?} ({k},{r},{p}) {pattern:?}: {e}"))?;
+        if derived != want {
+            return Err(format!(
+                "{kind:?} ({k},{r},{p}) {pattern:?}: cost {derived}, paper says {want}"
+            ));
+        }
+    }
+    Ok(pins.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_examples_hold() {
+        audit_paper_examples().unwrap();
+    }
+
+    #[test]
+    fn single_failures_match_closed_forms_for_all_kinds() {
+        for kind in SchemeKind::ALL_LRC {
+            let s = Scheme::new(kind, 12, 2, 2);
+            audit_single_failures(&s).unwrap();
+        }
+    }
+
+    #[test]
+    fn local_oracle_agrees_with_obvious_cases() {
+        let s = Scheme::new(SchemeKind::CpAzure, 6, 2, 2);
+        assert!(locally_peelable(&s, &[0]));
+        assert!(locally_peelable(&s, &[7])); // cascade peels G2
+        assert!(locally_peelable(&s, &[0, 8])); // L1 via cascade, then D1
+        assert!(!locally_peelable(&s, &[6])); // G1 is global-only
+        assert!(!locally_peelable(&s, &[0, 1])); // two holes in one group
+    }
+
+    #[test]
+    fn seeded_violation_mispriced_plan_is_caught() {
+        let s = Scheme::new(SchemeKind::CpAzure, 6, 2, 2);
+        // An extra read inflates the advertised cost: reads.len() no
+        // longer matches the replay.
+        let mut p = plan(&s, &[0]).unwrap();
+        let extra = (0..s.n()).find(|b| !p.reads.contains(b) && *b != 0).unwrap();
+        p.reads.insert(extra);
+        let err = audit_plan(&s, &p).unwrap_err();
+        assert!(err.contains("read-set mismatch"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn seeded_violation_wrong_class_is_caught() {
+        let s = Scheme::new(SchemeKind::CpAzure, 6, 2, 2);
+        // Claiming a local pattern used global repair violates class
+        // optimality (and the flag replay).
+        let mut p = plan(&s, &[0]).unwrap();
+        p.used_global = true;
+        assert!(audit_plan(&s, &p).is_err());
+    }
+
+    #[test]
+    fn seeded_violation_phantom_step_is_caught() {
+        let s = Scheme::new(SchemeKind::CpAzure, 6, 2, 2);
+        let mut p = plan(&s, &[0]).unwrap();
+        // Point the step at an equation that does not contain block 0.
+        let bad_eq = s
+            .all_eqs()
+            .enumerate()
+            .find(|(_, eq)| !eq.contains(0))
+            .map(|(i, _)| i)
+            .unwrap();
+        p.steps[0].eq = bad_eq;
+        let err = audit_plan(&s, &p).unwrap_err();
+        assert!(err.contains("not containing it"), "unexpected error: {err}");
+    }
+}

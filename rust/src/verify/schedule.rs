@@ -1,0 +1,550 @@
+//! Schedule-space model checker (`model-check` feature).
+//!
+//! The repair data path is full of benign-looking nondeterminism: the
+//! pipelined executors fire ops as survivor blocks (or chunks) arrive
+//! in *network* order, and the session scheduler processes
+//! simultaneous virtual-timeline completions in an incidental internal
+//! order. This module explores those orders **exhaustively** on
+//! bounded instances — a DPOR-lite harness where the reduction is
+//! "permute only the genuinely concurrent events" (delivery orders,
+//! simultaneity ties, issue orders) rather than a full state-space
+//! walk — and proves three properties over every explored schedule:
+//!
+//! * **byte identity** — every delivery permutation through
+//!   [`RepairProgram::execute_pipelined`] /
+//!   [`RepairProgram::execute_chunk_pipelined`] reconstructs exactly
+//!   the encoded stripe's erased blocks;
+//! * **conservation** — chunk accounting equals fetch-set bytes, and
+//!   every bounded-session run observes each fetch exactly once and
+//!   each write-back exactly once ([`check_outcome`]);
+//! * **no lost wakeups / deadlock** — an abstract readiness frontier
+//!   with per-task **vector clocks** ([`frontier_replay`]) certifies
+//!   that under every delivery order each op fires exactly once, only
+//!   after all of its operands happened-before it, and none is left
+//!   unfired when the stream drains; the bounded session errors if the
+//!   timeline drains with jobs never issued.
+//!
+//! The session harness runs through the real
+//! [`crate::netsim::SessionSim`] timeline via the
+//! [`crate::cluster::traffic::model`] replica, with the tie order
+//! injected through [`SessionSim::next_simultaneous_batch`].
+//!
+//! [`RepairProgram::execute_pipelined`]: crate::repair::RepairProgram::execute_pipelined
+//! [`RepairProgram::execute_chunk_pipelined`]: crate::repair::RepairProgram::execute_chunk_pipelined
+//! [`SessionSim::next_simultaneous_batch`]: crate::netsim::SessionSim::next_simultaneous_batch
+
+use std::collections::BTreeMap;
+
+use super::AnalysisReport;
+use crate::cluster::traffic::model::{run_bounded_session, ModelJob, ModelOutcome};
+use crate::codec::StripeCodec;
+use crate::codes::{Scheme, SchemeKind};
+use crate::netsim::NetSim;
+use crate::prng::Prng;
+use crate::repair::{
+    BlockChunk, IterChunks, IterStream, RepairProgram, ScratchBuffers, SymOperand,
+    SymbolicProgram,
+};
+
+/// Advance `perm` to the next lexicographic permutation in place;
+/// `false` once the sequence wraps (descending order reached).
+pub fn next_perm(perm: &mut [usize]) -> bool {
+    if perm.len() < 2 {
+        return false;
+    }
+    let mut i = perm.len() - 1;
+    while i > 0 && perm[i - 1] >= perm[i] {
+        i -= 1;
+    }
+    if i == 0 {
+        return false;
+    }
+    let mut j = perm.len() - 1;
+    while perm[j] <= perm[i - 1] {
+        j -= 1;
+    }
+    perm.swap(i - 1, j);
+    perm[i..].reverse();
+    true
+}
+
+/// Replay one delivery order through an abstract readiness frontier of
+/// the pipelined executor, with per-task vector clocks.
+///
+/// Tasks are the `F` block deliveries (in `delivery` order) followed by
+/// the program's ops. An op becomes ready once every operand task has
+/// happened; firing joins the operand clocks and ticks the op's own
+/// component, so `clock[dep] ≤ clock[op]` *with `dep`'s own component
+/// nonzero* is exactly happens-before. Errors on: an op firing while a
+/// true operand has not happened (the hazard `drop_dep` injects), an op
+/// firing twice, or any op left unfired after the stream drains (lost
+/// wakeup / deadlock).
+///
+/// `drop_dep = Some((op, dep_op))` removes one op→op readiness edge —
+/// the seeded-violation hook: the frontier then fires `op` early and
+/// the happens-before check must catch it.
+pub fn frontier_replay(
+    prog: &SymbolicProgram,
+    delivery: &[usize],
+    drop_dep: Option<(usize, usize)>,
+) -> Result<(), String> {
+    let n_deliv = delivery.len();
+    let n_tasks = n_deliv + prog.ops.len();
+    let slot_of: BTreeMap<usize, usize> =
+        delivery.iter().enumerate().map(|(i, &b)| (b, i)).collect();
+    if slot_of.len() != n_deliv {
+        return Err("duplicate block in delivery order".into());
+    }
+    let mut clocks: Vec<Option<Vec<u64>>> = vec![None; n_tasks];
+    let mut fired = vec![false; prog.ops.len()];
+
+    let operand_task = |operand: SymOperand| -> Result<usize, String> {
+        match operand {
+            SymOperand::Fetched(b) => slot_of
+                .get(&b)
+                .copied()
+                .ok_or_else(|| format!("op reads block {b} missing from the delivery order")),
+            SymOperand::Solved(j) => Ok(n_deliv + j),
+        }
+    };
+
+    for slot in 0..n_deliv {
+        let mut vc = vec![0u64; n_tasks];
+        vc[slot] = 1;
+        clocks[slot] = Some(vc);
+        // Fire every newly-ready op, to fixpoint (one delivery can
+        // unlock a chain of dependent ops).
+        loop {
+            let mut progressed = false;
+            for (o, op) in prog.ops.iter().enumerate() {
+                if fired[o] {
+                    continue;
+                }
+                let mut ready = true;
+                for &(operand, _) in &op.terms {
+                    if let SymOperand::Solved(j) = operand {
+                        if drop_dep == Some((o, j)) {
+                            continue; // seeded hazard: edge dropped
+                        }
+                    }
+                    if clocks[operand_task(operand)?].is_none() {
+                        ready = false;
+                        break;
+                    }
+                }
+                if !ready {
+                    continue;
+                }
+                // Fire: join operand clocks, tick our component — and
+                // verify happens-before over the TRUE edge set.
+                let mut vc = vec![0u64; n_tasks];
+                for &(operand, _) in &op.terms {
+                    let t = operand_task(operand)?;
+                    let Some(dep_vc) = &clocks[t] else {
+                        return Err(format!(
+                            "op {o} fired without operand task {t}: happens-before violated \
+                             (lost update hazard)"
+                        ));
+                    };
+                    if dep_vc[t] == 0 {
+                        return Err(format!("operand task {t} has an empty clock"));
+                    }
+                    for (a, &b) in vc.iter_mut().zip(dep_vc) {
+                        *a = (*a).max(b);
+                    }
+                }
+                vc[n_deliv + o] += 1;
+                clocks[n_deliv + o] = Some(vc);
+                fired[o] = true;
+                progressed = true;
+            }
+            if !progressed {
+                break;
+            }
+        }
+    }
+
+    if let Some(o) = fired.iter().position(|&f| !f) {
+        return Err(format!(
+            "op {o} never fired after the stream drained: lost wakeup / deadlock"
+        ));
+    }
+    // Outputs must dominate their op chains (guaranteed by join, but
+    // assert the clocks are well-formed end to end).
+    for &op_idx in &prog.outputs {
+        let vc = clocks[n_deliv + op_idx]
+            .as_ref()
+            .ok_or_else(|| format!("output op {op_idx} has no clock"))?;
+        if vc[n_deliv + op_idx] == 0 {
+            return Err(format!("output op {op_idx} clock missing its own tick"));
+        }
+    }
+    Ok(())
+}
+
+/// Exhaustively permute block-delivery order through the real
+/// [`RepairProgram::execute_pipelined`] executor for one pattern,
+/// asserting byte identity with the erased originals and a clean
+/// [`frontier_replay`] per order. Returns the number of schedules
+/// explored.
+///
+/// [`RepairProgram::execute_pipelined`]: crate::repair::RepairProgram::execute_pipelined
+fn explore_pipelined(
+    scheme: &Scheme,
+    stripe: &[Vec<u8>],
+    erased: &[usize],
+) -> Result<usize, String> {
+    let program = RepairProgram::for_pattern(scheme, erased)
+        .map_err(|e| format!("compile failed: {e}"))?;
+    let sym = program.symbolic_program();
+    let fetch: Vec<usize> = program.fetch().iter().copied().collect();
+    if fetch.len() > 7 {
+        return Err(format!(
+            "fetch set of {} blocks is too wide for exhaustive permutation",
+            fetch.len()
+        ));
+    }
+    let expected: Vec<&[u8]> = erased.iter().map(|&b| stripe[b].as_slice()).collect();
+    let mut scratch = ScratchBuffers::new();
+    let mut perm: Vec<usize> = (0..fetch.len()).collect();
+    let mut explored = 0usize;
+    loop {
+        let order: Vec<usize> = perm.iter().map(|&i| fetch[i]).collect();
+        frontier_replay(&sym, &order, None)
+            .map_err(|e| format!("delivery order {order:?}: {e}"))?;
+        let mut source =
+            IterStream(order.iter().map(|&b| (b, stripe[b].clone())).collect::<Vec<_>>().into_iter());
+        let out = program
+            .execute_pipelined(&mut source, &mut scratch)
+            .map_err(|e| format!("delivery order {order:?}: {e}"))?;
+        if out != expected {
+            return Err(format!(
+                "delivery order {order:?} changed output bytes for pattern {erased:?}"
+            ));
+        }
+        explored += 1;
+        if !next_perm(&mut perm) {
+            return Ok(explored);
+        }
+    }
+}
+
+/// Exhaustively permute **chunk** delivery through
+/// [`RepairProgram::execute_chunk_pipelined`] for one pattern, splitting
+/// each fetched block in two ranges, asserting byte identity plus chunk
+/// and byte conservation in the returned stats. Returns schedules
+/// explored.
+///
+/// [`RepairProgram::execute_chunk_pipelined`]: crate::repair::RepairProgram::execute_chunk_pipelined
+fn explore_chunked(
+    scheme: &Scheme,
+    stripe: &[Vec<u8>],
+    erased: &[usize],
+) -> Result<usize, String> {
+    let program = RepairProgram::for_pattern(scheme, erased)
+        .map_err(|e| format!("compile failed: {e}"))?;
+    let fetch: Vec<usize> = program.fetch().iter().copied().collect();
+    let block_len = stripe[0].len();
+    let half = block_len / 2;
+    // Two ranges per fetched block.
+    let mut pieces: Vec<(usize, usize, usize)> = Vec::new(); // (block, offset, len)
+    for &b in &fetch {
+        pieces.push((b, 0, half));
+        pieces.push((b, half, block_len - half));
+    }
+    if pieces.len() > 6 {
+        return Err(format!(
+            "{} chunks is too wide for exhaustive permutation",
+            pieces.len()
+        ));
+    }
+    let expected: Vec<&[u8]> = erased.iter().map(|&b| stripe[b].as_slice()).collect();
+    let mut scratch = ScratchBuffers::new();
+    let mut perm: Vec<usize> = (0..pieces.len()).collect();
+    let mut explored = 0usize;
+    loop {
+        let chunks: Vec<BlockChunk> = perm
+            .iter()
+            .map(|&i| {
+                let (block, offset, len) = pieces[i];
+                BlockChunk {
+                    block,
+                    offset,
+                    data: stripe[block][offset..offset + len].to_vec(),
+                    block_len,
+                }
+            })
+            .collect();
+        let n_chunks = chunks.len();
+        let mut source = IterChunks(chunks.into_iter());
+        let (out, stats) = program
+            .execute_chunk_pipelined(&mut source, &mut scratch, half.max(1))
+            .map_err(|e| format!("chunk order {perm:?}: {e}"))?;
+        if out != expected {
+            return Err(format!("chunk order {perm:?} changed output bytes"));
+        }
+        if stats.chunks != n_chunks || stats.bytes != (fetch.len() * block_len) as u64 {
+            return Err(format!(
+                "chunk conservation broken: {} chunks / {} bytes delivered, \
+                 expected {n_chunks} / {}",
+                stats.chunks,
+                stats.bytes,
+                fetch.len() * block_len
+            ));
+        }
+        explored += 1;
+        if !next_perm(&mut perm) {
+            return Ok(explored);
+        }
+    }
+}
+
+/// Conservation + happens-before audit of one bounded-session outcome:
+/// every fetch of every job observed exactly once, exactly one
+/// write-back per job, no write-back before its job's last fetch, and
+/// the completion clock equal to the latest event.
+pub fn check_outcome(jobs: &[ModelJob], out: &ModelOutcome) -> Result<(), String> {
+    for (j, job) in jobs.iter().enumerate() {
+        let mut last_fetch = 0.0f64;
+        for f in 0..job.fetches.len() {
+            let hits: Vec<&_> = out
+                .events
+                .iter()
+                .filter(|e| e.job == j && e.fetch == Some(f))
+                .collect();
+            if hits.len() != 1 {
+                return Err(format!(
+                    "job {j} fetch {f} observed {} times (conservation broken)",
+                    hits.len()
+                ));
+            }
+            last_fetch = last_fetch.max(hits[0].finish);
+        }
+        let wbs: Vec<&_> =
+            out.events.iter().filter(|e| e.job == j && e.fetch.is_none()).collect();
+        if wbs.len() != 1 {
+            return Err(format!(
+                "job {j} write-back observed {} times (lost write-back)",
+                wbs.len()
+            ));
+        }
+        if wbs[0].finish < last_fetch - 1e-9 {
+            return Err(format!(
+                "job {j} write-back at {} precedes its last fetch at {last_fetch}: \
+                 happens-before violated",
+                wbs[0].finish
+            ));
+        }
+    }
+    let latest = out.events.iter().fold(0.0f64, |a, e| a.max(e.finish));
+    if (out.completion - latest).abs() > 1e-9 {
+        return Err(format!(
+            "completion clock {} disagrees with latest event {latest}",
+            out.completion
+        ));
+    }
+    Ok(())
+}
+
+/// Outcome equivalence up to float slack: same event sequence per
+/// `(job, fetch)` key with finishes within 1e-9.
+fn same_outcome(a: &ModelOutcome, b: &ModelOutcome) -> bool {
+    let canon = |o: &ModelOutcome| {
+        let mut v: Vec<(usize, Option<usize>, f64)> =
+            o.events.iter().map(|e| (e.job, e.fetch, e.finish)).collect();
+        v.sort_by(|x, y| (x.0, x.1).cmp(&(y.0, y.1)));
+        v
+    };
+    let (ca, cb) = (canon(a), canon(b));
+    ca.len() == cb.len()
+        && ca
+            .iter()
+            .zip(&cb)
+            .all(|(x, y)| x.0 == y.0 && x.1 == y.1 && (x.2 - y.2).abs() <= 1e-9)
+        && (a.completion - b.completion).abs() <= 1e-9
+}
+
+/// The bounded session fixture the checker explores: two identical
+/// two-fetch jobs on a homogeneous net — identical flows complete
+/// simultaneously, so every round produces a genuine simultaneity
+/// batch for the tie permutation to reorder.
+fn session_fixture() -> Vec<ModelJob> {
+    vec![
+        ModelJob { fetches: vec![(1, 1 << 20), (2, 1 << 20)], writeback: (3, 1 << 20) },
+        ModelJob { fetches: vec![(4, 1 << 20), (5, 1 << 20)], writeback: (3, 1 << 20) },
+    ]
+}
+
+/// Exhaust the bounded session's schedule space: both issue orders ×
+/// both admission windows × every tie permutation (24 covers batches up
+/// to four simultaneous completions). Per fixed issue order and window,
+/// every tie order must produce the same outcome; every outcome must
+/// pass [`check_outcome`]; and with the full window the two issue
+/// orders must agree on completion (the jobs are symmetric). Returns
+/// schedules explored.
+pub fn explore_sessions() -> Result<usize, String> {
+    let net = NetSim::homogeneous(6, 10.0, 0.0);
+    let jobs = session_fixture();
+    let mut explored = 0usize;
+    let mut full_window_completions: Vec<f64> = Vec::new();
+    for issue_order in [[0usize, 1], [1, 0]] {
+        for in_flight in [1usize, 2] {
+            let mut baseline: Option<ModelOutcome> = None;
+            for tie in 0..24u64 {
+                let out = run_bounded_session(&net, &jobs, in_flight, &issue_order, tie)
+                    .map_err(|e| {
+                        format!("issue {issue_order:?} window {in_flight} tie {tie}: {e}")
+                    })?;
+                check_outcome(&jobs, &out).map_err(|e| {
+                    format!("issue {issue_order:?} window {in_flight} tie {tie}: {e}")
+                })?;
+                match &baseline {
+                    None => baseline = Some(out),
+                    Some(base) => {
+                        if !same_outcome(base, &out) {
+                            return Err(format!(
+                                "tie order {tie} changed the outcome under issue \
+                                 {issue_order:?} window {in_flight}"
+                            ));
+                        }
+                    }
+                }
+                explored += 1;
+            }
+            if in_flight == 2 {
+                full_window_completions
+                    .push(baseline.expect("explored at least one tie").completion);
+            }
+        }
+    }
+    if let [a, b] = full_window_completions[..] {
+        if (a - b).abs() > 1e-9 {
+            return Err(format!(
+                "issue order changed full-window completion: {a} vs {b} \
+                 for symmetric jobs"
+            ));
+        }
+    }
+    Ok(explored)
+}
+
+/// The pipelined-executor patterns the checker explores on the small
+/// CP-Azure scheme: local, cascaded, dependent-chain and global-decode
+/// repairs, all with fetch sets narrow enough to exhaust.
+const EXEC_PATTERNS: &[&[usize]] = &[&[8], &[0], &[7], &[0, 8], &[6, 7]];
+
+/// Run the whole bounded exploration: every delivery permutation for
+/// each [`EXEC_PATTERNS`] pattern (byte identity + frontier clean),
+/// chunk-order permutations (conservation), and the session
+/// schedule-space sweep.
+pub fn model_check() -> AnalysisReport {
+    let mut report = AnalysisReport::default();
+    let scheme = Scheme::new(SchemeKind::CpAzure, 6, 2, 2);
+    let codec = StripeCodec::new(Scheme::new(SchemeKind::CpAzure, 6, 2, 2));
+    let mut rng = Prng::new(0x5EED_5CED);
+    let data: Vec<Vec<u8>> = (0..scheme.k).map(|_| rng.bytes(8)).collect();
+    let stripe = codec.encode_stripe(&data);
+
+    for pattern in EXEC_PATTERNS {
+        match explore_pipelined(&scheme, &stripe, pattern) {
+            Ok(n) => report.checked += n,
+            Err(e) => report.violations.push(format!("pipelined {pattern:?}: {e}")),
+        }
+    }
+    match explore_chunked(&scheme, &stripe, &[8]) {
+        Ok(n) => report.checked += n,
+        Err(e) => report.violations.push(format!("chunked [8]: {e}")),
+    }
+    match explore_sessions() {
+        Ok(n) => report.checked += n,
+        Err(e) => report.violations.push(format!("session: {e}")),
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn next_perm_enumerates_factorially() {
+        let mut p = vec![0usize, 1, 2, 3];
+        let mut count = 1;
+        while next_perm(&mut p) {
+            count += 1;
+        }
+        assert_eq!(count, 24);
+        assert_eq!(p, vec![3, 2, 1, 0]);
+    }
+
+    #[test]
+    fn bounded_exploration_is_clean() {
+        let report = model_check();
+        assert!(report.violations.is_empty(), "{:?}", report.violations);
+        // 5 exec patterns (≥1 order each) + 24 chunk orders + 96 session
+        // schedules: the sweep actually explored a space.
+        assert!(report.checked > 100, "only {} schedules explored", report.checked);
+    }
+
+    #[test]
+    fn seeded_violation_dropped_readiness_edge_is_caught() {
+        let scheme = Scheme::new(SchemeKind::CpAzure, 6, 2, 2);
+        // [0, 8]: block 0's op consumes the solved L1 — drop that edge
+        // and deliver L1's inputs last, so the op fires early.
+        let program = RepairProgram::for_pattern(&scheme, &[0, 8]).unwrap();
+        let sym = program.symbolic_program();
+        let (op, dep) = sym
+            .ops
+            .iter()
+            .enumerate()
+            .find_map(|(o, op)| {
+                op.terms.iter().find_map(|&(operand, _)| match operand {
+                    SymOperand::Solved(j) => Some((o, j)),
+                    SymOperand::Fetched(_) => None,
+                })
+            })
+            .expect("pattern has a dependent op");
+        let fetch: Vec<usize> = program.fetch().iter().copied().collect();
+        let mut caught = false;
+        let mut perm: Vec<usize> = (0..fetch.len()).collect();
+        loop {
+            let order: Vec<usize> = perm.iter().map(|&i| fetch[i]).collect();
+            if frontier_replay(&sym, &order, Some((op, dep))).is_err() {
+                caught = true;
+                break;
+            }
+            if !next_perm(&mut perm) {
+                break;
+            }
+        }
+        assert!(caught, "dropped edge survived every delivery order");
+    }
+
+    #[test]
+    fn seeded_violation_lost_write_back_is_caught() {
+        let net = NetSim::homogeneous(6, 10.0, 0.0);
+        let jobs = session_fixture();
+        let mut out = run_bounded_session(&net, &jobs, 2, &[0, 1], 0).unwrap();
+        check_outcome(&jobs, &out).unwrap();
+        // Drop job 1's write-back completion from the observed log.
+        let pos = out
+            .events
+            .iter()
+            .position(|e| e.job == 1 && e.fetch.is_none())
+            .expect("job 1 wrote back");
+        out.events.remove(pos);
+        let err = check_outcome(&jobs, &out).unwrap_err();
+        assert!(err.contains("write-back"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn seeded_violation_duplicated_fetch_event_is_caught() {
+        let net = NetSim::homogeneous(6, 10.0, 0.0);
+        let jobs = session_fixture();
+        let mut out = run_bounded_session(&net, &jobs, 1, &[1, 0], 3).unwrap();
+        let dup = out.events[0].clone();
+        out.events.push(dup);
+        let err = check_outcome(&jobs, &out).unwrap_err();
+        assert!(err.contains("conservation"), "unexpected error: {err}");
+    }
+}

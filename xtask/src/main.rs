@@ -1,4 +1,5 @@
-//! Repo-local verification tasks: `cargo xtask lint`.
+//! Repo-local verification tasks: `cargo xtask lint` and
+//! `cargo xtask prove`.
 //!
 //! The lint pass encodes this repository's safety and pinning
 //! invariants as *source-level* checks (documented in VERIFICATION.md):
@@ -23,6 +24,17 @@
 //! 5. **Dependency audit** — the manifests may not grow dependencies
 //!    beyond the committed allowlist (`anyhow`); the `cargo deny`-style
 //!    audit this single-dependency tree actually needs.
+//! 6. **w16 entry-point registry** — every top-level `pub fn` of the
+//!    GF(2^16) surface (`rust/src/gf/w16.rs`) must appear in the
+//!    registry's `W16_ENTRY_POINTS` table with a scalar-pinning test
+//!    that exists, so the ultra-wide-stripe substrate cannot grow an
+//!    unpinned entry point.
+//!
+//! `cargo xtask prove` runs the **proof plane** (VERIFICATION.md
+//! tier 6): the symbolic decodability prover, plan-optimality auditor
+//! and schedule-space model checker that live in the main crate's
+//! `verify` module. xtask stays dependency-free by delegating to
+//! `cargo run --bin repro -- prove` with the `model-check` feature.
 //!
 //! Everything runs on plain `std` over the source text: a
 //! length-preserving comment/string stripper feeds token-level scans,
@@ -40,6 +52,10 @@ const UNSAFE_ALLOWLIST: &[&str] = &["rust/src/gf/", "rust/src/runtime/pjrt.rs"];
 
 /// Path of the machine-readable kernel registry.
 const REGISTRY_PATH: &str = "rust/src/gf/kernel_registry.rs";
+
+/// Path of the GF(2^16) surface covered by the `W16_ENTRY_POINTS`
+/// registry table.
+const W16_PATH: &str = "rust/src/gf/w16.rs";
 
 /// The only crates any manifest in this workspace may depend on.
 const ALLOWED_DEPENDENCIES: &[&str] = &["anyhow"];
@@ -74,8 +90,9 @@ fn main() -> ExitCode {
     let mut args = std::env::args().skip(1);
     match args.next().as_deref() {
         Some("lint") | None => {}
+        Some("prove") => return prove(),
         Some(other) => {
-            eprintln!("unknown xtask command `{other}` (available: lint)");
+            eprintln!("unknown xtask command `{other}` (available: lint, prove)");
             return ExitCode::FAILURE;
         }
     }
@@ -96,6 +113,35 @@ fn main() -> ExitCode {
         }
         eprintln!("xtask lint: {} finding(s)", diags.len());
         ExitCode::FAILURE
+    }
+}
+
+/// `cargo xtask prove`: run the proof plane. The analyses live in the
+/// main crate (`cp_lrc::verify`, std + anyhow only); xtask stays
+/// dependency-free by shelling out to the repro binary with the
+/// `model-check` feature, so the schedule-space checker is compiled in.
+fn prove() -> ExitCode {
+    let cargo = std::env::var("CARGO").unwrap_or_else(|_| "cargo".to_string());
+    let status = std::process::Command::new(cargo)
+        .args([
+            "run",
+            "--release",
+            "--features",
+            "model-check",
+            "--bin",
+            "repro",
+            "--",
+            "prove",
+        ])
+        .current_dir(repo_root())
+        .status();
+    match status {
+        Ok(s) if s.success() => ExitCode::SUCCESS,
+        Ok(_) => ExitCode::FAILURE,
+        Err(e) => {
+            eprintln!("xtask prove: failed to launch cargo: {e}");
+            ExitCode::FAILURE
+        }
     }
 }
 
@@ -143,6 +189,7 @@ fn lint_tree(root: &Path) -> Result<Vec<Diag>, String> {
 
     let mut diags = check_unsafe_boundary(&sources);
     diags.extend(check_kernel_registry(&sources));
+    diags.extend(check_w16_registry(&sources));
     diags.extend(check_bench_schemas(&schemas, &bench_sources));
     diags.extend(check_dependency_audit(&manifests));
     Ok(diags)
@@ -649,6 +696,132 @@ fn check_kernel_registry(sources: &[Source]) -> Vec<Diag> {
 }
 
 // ---------------------------------------------------------------------
+// Check 6: the w16 entry-point registry.
+// ---------------------------------------------------------------------
+
+#[derive(Debug, PartialEq, Eq)]
+struct W16Entry {
+    name: String,
+    pinning_test: String,
+}
+
+/// Parse `GfEntryPoint { name: "...", pinning_test: "..." }` records
+/// out of the registry source.
+fn parse_w16_registry(src: &str) -> Vec<W16Entry> {
+    let field = |chunk: &str, name: &str| -> Option<String> {
+        let at = chunk.find(&format!("{name}:"))?;
+        let rest = &chunk[at..];
+        let q1 = rest.find('"')?;
+        let q2 = rest[q1 + 1..].find('"')?;
+        Some(rest[q1 + 1..q1 + 1 + q2].to_string())
+    };
+    let mut entries = Vec::new();
+    for chunk in src.split("GfEntryPoint {").skip(1) {
+        let (Some(name), Some(pinning_test)) =
+            (field(chunk, "name"), field(chunk, "pinning_test"))
+        else {
+            continue;
+        };
+        entries.push(W16Entry { name, pinning_test });
+    }
+    entries
+}
+
+/// Names of every **top-level** `pub fn` / `pub const fn` in (stripped)
+/// source text — column-zero items only, so trait methods and nested
+/// helpers don't count as entry points.
+fn top_level_pub_fns(stripped: &str) -> Vec<String> {
+    let mut names = Vec::new();
+    for line in stripped.lines() {
+        let rest = if let Some(r) = line.strip_prefix("pub fn ") {
+            r
+        } else if let Some(r) = line.strip_prefix("pub const fn ") {
+            r
+        } else {
+            continue;
+        };
+        let name: String =
+            rest.bytes().take_while(|&c| ident_char(c)).map(char::from).collect();
+        if !name.is_empty() {
+            names.push(name);
+        }
+    }
+    names
+}
+
+/// Check 6: every top-level public GF(2^16) entry point must appear in
+/// the registry's `W16_ENTRY_POINTS` table, every table row must name
+/// an entry point and a pinning test that exist. Mirrors the kernel
+/// registry's existence convention (check 3).
+fn check_w16_registry(sources: &[Source]) -> Vec<Diag> {
+    let mut diags = Vec::new();
+    let Some((_, registry_src)) = sources.iter().find(|(p, _)| p == REGISTRY_PATH) else {
+        // Check 3 already reports the missing registry.
+        return diags;
+    };
+    let Some((_, w16_src)) = sources.iter().find(|(p, _)| p == W16_PATH) else {
+        // No w16 surface in this tree (fixture runs): nothing to cover.
+        return diags;
+    };
+    let registry = parse_w16_registry(registry_src);
+    for (i, e) in registry.iter().enumerate() {
+        if registry[..i].iter().any(|o| o.name == e.name) {
+            diags.push(Diag::new(
+                REGISTRY_PATH,
+                0,
+                format!("duplicate w16 registry entry for `{}`", e.name),
+            ));
+        }
+    }
+
+    let w16_stripped = strip_comments_and_strings(w16_src);
+    let public = top_level_pub_fns(&w16_stripped);
+    let all_stripped: Vec<String> = sources
+        .iter()
+        .filter(|(p, _)| p != REGISTRY_PATH)
+        .map(|(_, s)| strip_comments_and_strings(s))
+        .collect();
+
+    for name in &public {
+        if !registry.iter().any(|e| &e.name == name) {
+            diags.push(Diag::new(
+                W16_PATH,
+                0,
+                format!(
+                    "public GF(2^16) entry point `{name}` is not in {REGISTRY_PATH}'s \
+                     W16_ENTRY_POINTS (register it with its scalar-pinning test)"
+                ),
+            ));
+        }
+    }
+    for e in &registry {
+        if !public.iter().any(|n| n == &e.name) {
+            diags.push(Diag::new(
+                REGISTRY_PATH,
+                0,
+                format!(
+                    "w16 registry entry `{}` names an entry point that does not exist",
+                    e.name
+                ),
+            ));
+            continue;
+        }
+        if !all_stripped.iter().any(|s| has_fn(s, &e.pinning_test)) {
+            diags.push(Diag::new(
+                REGISTRY_PATH,
+                0,
+                format!(
+                    "w16 entry point `{}` declares pinning test `{}` which does not \
+                     exist — the entry point would ship unpinned",
+                    e.name, e.pinning_test
+                ),
+            ));
+        }
+    }
+    diags
+}
+
+// ---------------------------------------------------------------------
 // Check 4: bench schema keys.
 // ---------------------------------------------------------------------
 
@@ -906,6 +1079,67 @@ pub const KERNELS: &[KernelEntry] = &[
         sources[0].1 = sources[0].1.replace("unsafe fn kern_a", "unsafe fn kern_z");
         let diags = check_kernel_registry(&sources);
         assert!(diags.iter().any(|d| d.msg.contains("does not exist")), "{diags:?}");
+    }
+
+    const W16_REGISTRY_FIXTURE: &str = r#"
+pub const W16_ENTRY_POINTS: &[GfEntryPoint] = &[
+    GfEntryPoint { name: "mul16", pinning_test: "mul16_pinned_to_slow" },
+];
+"#;
+
+    fn w16_fixture() -> Vec<Source> {
+        vec![
+            src(
+                "rust/src/gf/w16.rs",
+                "pub fn mul16(a: u16, b: u16) -> u16 {\n    a ^ b\n}\n\n#[cfg(test)]\nmod tests {\n    #[test]\n    fn mul16_pinned_to_slow() {\n    }\n}\n",
+            ),
+            src("rust/src/gf/kernel_registry.rs", W16_REGISTRY_FIXTURE),
+        ]
+    }
+
+    #[test]
+    fn registered_pinned_w16_surface_is_clean() {
+        let diags = check_w16_registry(&w16_fixture());
+        assert!(diags.is_empty(), "{diags:?}");
+    }
+
+    #[test]
+    fn seeded_unregistered_w16_entry_point_is_caught() {
+        let mut sources = w16_fixture();
+        sources[0]
+            .1
+            .push_str("\npub const fn inv16(a: u16) -> u16 {\n    a\n}\n");
+        let diags = check_w16_registry(&sources);
+        assert!(
+            diags.iter().any(|d| d.msg.contains("inv16") && d.msg.contains("not in")),
+            "{diags:?}"
+        );
+    }
+
+    #[test]
+    fn seeded_unpinned_w16_entry_point_is_caught() {
+        let mut sources = w16_fixture();
+        sources[0].1 = sources[0].1.replace("fn mul16_pinned_to_slow", "fn renamed_test");
+        let diags = check_w16_registry(&sources);
+        assert!(diags.iter().any(|d| d.msg.contains("unpinned")), "{diags:?}");
+    }
+
+    #[test]
+    fn seeded_phantom_w16_registry_entry_is_caught() {
+        let mut sources = w16_fixture();
+        sources[0].1 = sources[0].1.replace("pub fn mul16", "pub fn mul16_renamed");
+        let diags = check_w16_registry(&sources);
+        assert!(diags.iter().any(|d| d.msg.contains("does not exist")), "{diags:?}");
+    }
+
+    #[test]
+    fn nested_and_method_fns_are_not_w16_entry_points() {
+        let mut sources = w16_fixture();
+        sources[0].1.push_str(
+            "\npub struct T16;\n\nimpl T16 {\n    pub fn method(&self) -> u16 {\n        0\n    }\n}\n",
+        );
+        let diags = check_w16_registry(&sources);
+        assert!(diags.is_empty(), "column-indented fns are not entry points: {diags:?}");
     }
 
     #[test]
